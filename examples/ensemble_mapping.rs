@@ -1,0 +1,56 @@
+//! Ensemble scenario (paper §V-B2): "placement has more margin due to its
+//! smaller problem size, and running an ensemble of different techniques
+//! on a time limit — then selecting the best final mapping — is
+//! practicable." This example partitions once and races every placement
+//! candidate inside a wall-clock budget.
+//!
+//!     cargo run --release --example ensemble_mapping
+
+use snnmap::coordinator::{ensemble, PartitionerKind};
+use snnmap::hw::NmhConfig;
+use snnmap::runtime::PjrtRuntime;
+use std::time::Duration;
+
+fn main() {
+    let net = snnmap::snn::by_name("allen_v1", 0.05, 11).expect("allen_v1");
+    println!(
+        "{}: {} neurons, {} synapses",
+        net.name,
+        net.graph.num_nodes(),
+        net.graph.num_connections()
+    );
+    let hw = NmhConfig::small().scaled(0.08);
+    let runtime = PjrtRuntime::discover();
+    if runtime.is_some() {
+        println!("engine: PJRT artifacts");
+    }
+
+    let budget = Duration::from_secs(120);
+    let res = ensemble::run(
+        &net.graph,
+        None,
+        hw,
+        PartitionerKind::HyperedgeOverlap,
+        budget,
+        11,
+        runtime.as_ref(),
+    )
+    .expect("ensemble failed");
+
+    println!("\ncandidates (budget {budget:?}):");
+    for (pl, rf, elp, dt) in &res.scoreboard {
+        let marker = if (*pl, *rf) == res.best_combo { "  << winner" } else { "" };
+        println!(
+            "  {:<10} + {:<6}  ELP {:>12.4e}  in {:>6.2}s{marker}",
+            pl.name(),
+            rf.name(),
+            elp,
+            dt.as_secs_f64()
+        );
+    }
+    if res.budget_exhausted {
+        println!("  (budget exhausted before trying every candidate)");
+    }
+    println!();
+    print!("{}", res.best.report());
+}

@@ -1,0 +1,56 @@
+//! Layered-SNN scenario: ANN-derived feedforward networks are the bread
+//! and butter of neuromorphic deployment (paper §II-A). This example maps
+//! a VGG-style x_model with all partitioners and shows how layer-major
+//! order helps sequential partitioning — and where hypergraph methods
+//! still win.
+//!
+//!     cargo run --release --example layered_pipeline
+
+use snnmap::coordinator::{MapperPipeline, PartitionerKind, PlacerKind, RefinerKind};
+use snnmap::hw::NmhConfig;
+use snnmap::metrics::properties::{self, Mean};
+
+fn main() {
+    let net = snnmap::snn::by_name("16k_model", 0.2, 7).expect("16k_model");
+    println!(
+        "{}: {} neurons in {} layers, {} synapses, mean h-edge cardinality {:.1}",
+        net.name,
+        net.graph.num_nodes(),
+        net.layer_ranges.as_ref().map(|r| r.len()).unwrap_or(0),
+        net.graph.num_connections(),
+        net.graph.mean_cardinality()
+    );
+    let hw = NmhConfig::small().scaled(0.08);
+
+    println!(
+        "\n{:<15} {:>7} {:>14} {:>9} {:>9} {:>10}",
+        "partitioner", "parts", "connectivity", "sr_geo", "ELP", "time"
+    );
+    for pk in PartitionerKind::ALL {
+        let t0 = std::time::Instant::now();
+        let res = MapperPipeline::new(hw)
+            .partitioner(pk)
+            .placer(PlacerKind::Hilbert)
+            .refiner(RefinerKind::ForceDirected)
+            .run(&net.graph, net.layer_ranges.as_deref())
+            .expect("mapping failed");
+        let sr_geo = properties::synaptic_reuse(&net.graph, &res.rho, Mean::Geometric);
+        println!(
+            "{:<15} {:>7} {:>14.4e} {:>9.3} {:>9.3e} {:>9.2}s",
+            pk.name(),
+            res.rho.num_parts,
+            res.metrics.connectivity,
+            sr_geo,
+            res.metrics.elp,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    println!(
+        "\nreading the table: neighboring neurons in a conv layer share most of their \
+receptive field,\nso the layer-major order already clusters co-members — sequential \
+partitioning rides that.\nOverlap/hierarchical exploit the same structure explicitly \
+through second-order affinity\nand keep winning when the layout order is less kind \
+(see the cyclic_lsm example)."
+    );
+}

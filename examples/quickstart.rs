@@ -1,0 +1,49 @@
+//! Quickstart: map one SNN onto neuromorphic hardware in ~20 lines.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Generates a small LeNet-derived SNN, maps it with the paper's headline
+//! pipeline (hyperedge-overlap partitioning → spectral placement →
+//! force-directed refinement), and prints the Table I metrics. Uses the
+//! AOT JAX/Pallas artifacts via PJRT when `artifacts/` exists.
+
+use snnmap::prelude::*;
+use snnmap::runtime::PjrtRuntime;
+
+fn main() {
+    // 1. A network: LeNet topology at 25% scale, biological spike rates.
+    let net = snnmap::snn::by_name("lenet", 0.25, 42).expect("suite network");
+    println!(
+        "network: {} — {} neurons, {} axons, {} synapses",
+        net.name,
+        net.graph.num_nodes(),
+        net.graph.num_edges(),
+        net.graph.num_connections()
+    );
+
+    // 2. Hardware: Loihi-like "small" preset, constraints scaled down so
+    //    the example produces a multi-core mapping.
+    let hw = NmhConfig::small().scaled(0.05);
+
+    // 3. The pipeline. Engine: PJRT artifacts when built, else native.
+    let runtime = PjrtRuntime::discover();
+    let result = MapperPipeline::new(hw)
+        .partitioner(PartitionerKind::HyperedgeOverlap)
+        .placer(PlacerKind::Spectral)
+        .refiner(RefinerKind::ForceDirected)
+        .run_with(&net.graph, net.layer_ranges.as_deref(), runtime.as_ref())
+        .expect("mapping failed");
+
+    println!(
+        "engine: {}",
+        if runtime.is_some() { "PJRT (AOT JAX/Pallas artifacts)" } else { "native" }
+    );
+    print!("{}", result.report());
+
+    // 4. The mapping artifacts themselves are plain data:
+    let p0_core = result.placement.coords[0];
+    println!(
+        "partition of neuron 0: {} -> core ({}, {})",
+        result.rho.assign[0], p0_core.0, p0_core.1
+    );
+}

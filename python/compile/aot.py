@@ -1,0 +1,123 @@
+"""AOT compile path: lower the L2 graphs (with L1 Pallas kernels inlined,
+interpret=True) to **HLO text** artifacts consumed by the rust runtime.
+
+HLO *text* — NOT ``lowered.compile()`` / serialized HloModuleProto — is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+the ``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/gen_hlo.py.
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits, per size bucket N in {128, 512, 2048}:
+    spectral_<N>.hlo.txt   (m: f32[N,N], v0: f32[N]) -> (f32[N,2], f32[2])
+    force_<N>.hlo.txt      (w: f32[N,N], coords: f32[N,2]) -> (f32[N,5],)
+plus ``manifest.json`` describing every artifact (shape contract, iteration
+count, kernel block sizes) for the rust loader.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import lap_matmul as lk
+from compile.kernels import manhattan as mk
+
+BUCKETS = (128, 512, 1024, 2048)
+SPECTRAL_ITERS = {128: 300, 512: 400, 1024: 450, 2048: 500}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spectral(n: int, iters: int) -> str:
+    m = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    v0 = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lowered = jax.jit(
+        lambda m_, v0_: model.spectral_embed(m_, v0_, iters=iters)
+    ).lower(m, v0)
+    return to_hlo_text(lowered)
+
+
+def lower_force(n: int) -> str:
+    w = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    c = jax.ShapeDtypeStruct((n, 2), jnp.float32)
+    lowered = jax.jit(lambda w_, c_: (model.force_field(w_, c_),)).lower(w, c)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        type=int,
+        nargs="*",
+        default=list(BUCKETS),
+        help="size buckets to emit (default: 128 512 2048)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "subspace_k": model.SUBSPACE_K,
+        "lap_matmul_block": [lk.BM],
+        "manhattan_block": [mk.BP],
+        "offsets": list(mk.OFFSETS),
+        "artifacts": [],
+    }
+
+    for n in args.buckets:
+        iters = SPECTRAL_ITERS.get(n, 400)
+        path = f"spectral_{n}.hlo.txt"
+        text = lower_spectral(n, iters)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "kind": "spectral",
+                "n": n,
+                "iters": iters,
+                "path": path,
+                "inputs": [["f32", [n, n]], ["f32", [n]]],
+                "outputs": [["f32", [n, 2]], ["f32", [2]]],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars, iters={iters})")
+
+        path = f"force_{n}.hlo.txt"
+        text = lower_force(n)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "kind": "force",
+                "n": n,
+                "path": path,
+                "inputs": [["f32", [n, n]], ["f32", [n, 2]]],
+                "outputs": [["f32", [n, 5]]],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

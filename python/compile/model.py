@@ -1,0 +1,114 @@
+"""L2: JAX compute graphs for the mapping toolchain's numerical hot spots.
+
+Two graphs, both AOT-lowered to HLO text by ``aot.py`` and executed from the
+rust coordinator via PJRT (python is never on the mapping path):
+
+* ``spectral_embed`` — the spectral-placement solver (paper §IV-B2):
+  deflated subspace iteration on the shifted operator ``M = 2I − L̂`` of the
+  partitioned h-graph's normalized Laplacian, returning the two eigenvectors
+  with the smallest non-trivial eigenvalues (Eqs. 8-11). The inner operator
+  application is the L1 Pallas kernel ``lap_matmul``.
+
+* ``force_field`` — batched evaluation of the force-directed refiner's
+  potential (Eq. 12) for every partition under the five candidate offsets,
+  via the L1 Pallas kernel ``manhattan_potentials``.
+
+Conventions shared with the rust side (rust/src/runtime/):
+* Matrices are padded to a size bucket N ∈ {128, 512, 2048}; padding rows
+  and columns of ``m``/``w`` are zero, padding entries of ``v0``/``coords``
+  are zero.
+* ``m`` is already shifted: valid block = 2I − L̂, padding block = 0, so the
+  padding dimensions carry eigenvalue 0 and never contaminate the leading
+  subspace (eigenvalues of M lie in [0, 2] for a normalized Laplacian).
+* ``v0`` is the unit-norm trivial eigenvector D^{1/2}·1 of L̂ (eigenvalue 2
+  of M), deflated explicitly at every iteration.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.lap_matmul import lap_matmul
+from compile.kernels.manhattan import manhattan_potentials
+
+# Subspace width: 2 wanted eigenvectors + 6 guard vectors for faster,
+# better-ordered convergence. Multiple of 8 for TPU lane alignment.
+SUBSPACE_K = 8
+EPS = 1e-12
+
+
+def _init_subspace(n, k):
+    """Deterministic pseudo-random (N, K) start block.
+
+    A fixed sin-hash of the index grid: reproducible across runs, full
+    column rank with probability ~1, and cheap to build in-graph.
+    """
+    i = jax.lax.broadcasted_iota(jnp.float32, (n, k), 0)
+    j = jax.lax.broadcasted_iota(jnp.float32, (n, k), 1)
+    x = jnp.sin(i * 12.9898 + j * 78.233) * 43758.5453
+    return x - jnp.floor(x) - 0.5
+
+
+def _orthonormalize(y, v0):
+    """Modified Gram-Schmidt of the K columns of ``y``, deflating ``v0``.
+
+    ``v0`` is kept fixed (it is already unit norm); every column is first
+    projected out of span(v0), then out of the previously processed
+    columns, then safely normalized (zero columns stay zero instead of
+    exploding).
+    """
+    cols = []
+    k = y.shape[1]
+    for jj in range(k):
+        c = y[:, jj]
+        c = c - v0 * jnp.dot(v0, c)
+        for q in cols:
+            c = c - q * jnp.dot(q, c)
+        norm = jnp.sqrt(jnp.dot(c, c))
+        c = jnp.where(norm > EPS, c / jnp.maximum(norm, EPS), c * 0.0)
+        cols.append(c)
+    return jnp.stack(cols, axis=1)
+
+
+@partial(jax.jit, static_argnames=("iters", "interpret"))
+def spectral_embed(m, v0, *, iters=200, interpret=True):
+    """Two smallest non-trivial eigenvectors of L̂ = 2I − m (valid block).
+
+    Args:
+      m:  (N, N) f32, the shifted operator 2I − L̂, zero in padding.
+      v0: (N,) f32, unit-norm trivial eigenvector (D^{1/2}1 normalized).
+      iters: subspace-iteration count (static; baked into the artifact).
+    Returns:
+      coords: (N, 2) f32 — the two leading deflated eigenvectors of m,
+              i.e. the two smallest non-trivial eigenvectors of L̂; these
+              are the spectral-placement coordinates (Eq. 11).
+      rayleigh: (2,) f32 — their eigenvalue estimates w.r.t. L̂ (= 2 − μ).
+    """
+    n = m.shape[0]
+    q = _orthonormalize(_init_subspace(n, SUBSPACE_K), v0)
+
+    def body(_, q):
+        y = lap_matmul(m, q, interpret=interpret)
+        return _orthonormalize(y, v0)
+
+    q = jax.lax.fori_loop(0, iters, body, q)
+
+    # Rayleigh quotients of the two leading columns under M, mapped back to
+    # eigenvalues of the Laplacian: lambda = 2 - mu.
+    mq = lap_matmul(m, q, interpret=interpret)
+    mu = jnp.sum(q[:, :2] * mq[:, :2], axis=0)
+    return q[:, :2], 2.0 - mu
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def force_field(w, coords, *, interpret=True):
+    """Potentials (Eq. 12) of every partition under 5 candidate offsets.
+
+    Args:
+      w: (N, N) f32 spike-frequency weights w[p, s] (source s → dest p).
+      coords: (N, 2) f32 current core coordinates.
+    Returns:
+      (N, 5) f32 potentials; offsets (0,0), (+1,0), (-1,0), (0,+1), (0,-1).
+    """
+    return manhattan_potentials(w, coords, interpret=interpret)

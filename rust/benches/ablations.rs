@@ -1,0 +1,148 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//!   A1  overlap partitioning: priority queue on/off, node policy on/off
+//!   A2  force refinement: empty-core moves on/off, max(dist,1) clamp
+//!   A3  spectral discretization: heavy-hubs-first vs id order
+//!   A4  synapse pruning threshold sweep (quality-vs-cost tradeoff)
+//!   A5  unicast vs hierarchical-multicast energy per placement scheme
+//!   A6  multi-chip: chip-aware two-level vs chip-oblivious placement
+
+mod common;
+
+use snnmap::coordinator::experiment::hw_for;
+use snnmap::hypergraph::quotient::push_forward;
+use snnmap::mapping::{self, connectivity, overlap::OverlapParams, pruning};
+use snnmap::metrics::multicast;
+use snnmap::multichip::{self, placement::LocalPlacer, MultiChipConfig};
+use snnmap::placement::{eigen, force, hilbert, spectral};
+use snnmap::util::timer::time_once;
+
+fn main() {
+    let net = common::load("16k_rand");
+    let allen = common::load("allen_v1");
+    let g = &net.graph;
+    let hw = hw_for(&net, common::scale());
+
+    // ---- A1: overlap components ----
+    println!("A1. hyperedge-overlap partitioning components (16k_rand)");
+    for (label, p) in [
+        ("full Alg.1", OverlapParams { use_queue: true, select_min_new_axons: true }),
+        ("no queue", OverlapParams { use_queue: false, select_min_new_axons: true }),
+        ("no node policy", OverlapParams { use_queue: true, select_min_new_axons: false }),
+        ("neither", OverlapParams { use_queue: false, select_min_new_axons: false }),
+    ] {
+        let (rho, dt) = time_once(|| mapping::overlap::partition_with_params(g, &hw, p).unwrap());
+        println!(
+            "  {:<16} parts={:<5} connectivity={:.4e}  {:.3}s",
+            label,
+            rho.num_parts,
+            connectivity(g, &rho),
+            dt.as_secs_f64()
+        );
+    }
+
+    // quotient used by the placement ablations
+    let rho = mapping::overlap::partition(g, &hw).unwrap();
+    let gp = push_forward(g, &rho).graph;
+
+    // ---- A2: force refinement components ----
+    println!("\nA2. force-directed refinement components (16k_rand quotient, Hilbert start)");
+    for (label, empty, clamp) in [
+        ("full (paper)", true, true),
+        ("no empty-core moves", false, true),
+        ("no unit clamp", true, false),
+    ] {
+        let mut pl = hilbert::place(&gp, &hw);
+        let params = force::ForceParams {
+            allow_empty_moves: empty,
+            clamp_unit: clamp,
+            ..Default::default()
+        };
+        let (stats, dt) = time_once(|| force::refine(&gp, &hw, &mut pl, params, None));
+        println!(
+            "  {:<20} wl {:.4e} -> {:.4e}  ({} sweeps, {:.2}s)",
+            label,
+            stats.initial_wirelength,
+            stats.final_wirelength,
+            stats.sweeps,
+            dt.as_secs_f64()
+        );
+    }
+
+    // ---- A3: spectral discretization order ----
+    println!("\nA3. spectral discretization visit order (16k_rand quotient)");
+    let prob = eigen::build_laplacian(&gp);
+    let emb = eigen::smallest_nontrivial_eigs(&prob, 400, 8).0;
+    for (label, heavy) in [("heavy-hubs first", true), ("id order", false)] {
+        let pl = spectral::discretize_with(&emb, &prob.wdeg, &hw, heavy);
+        println!("  {:<18} wirelength {:.4e}", label, pl.wirelength(&gp));
+    }
+
+    // ---- A4: pruning sweep ----
+    println!("\nA4. synapse pruning sweep (AllenV1; quality vs mapping cost)");
+    let ahw = hw_for(&allen, common::scale());
+    for frac in [0.0, 0.05, 0.1, 0.2, 0.4] {
+        let (pruned, rep) = pruning::prune_fraction(&allen.graph, frac);
+        let rho = mapping::overlap::partition(&pruned, &ahw).unwrap();
+        println!(
+            "  mass-removed<= {:>4.2}  edges {:>6} -> {:>6}  parts {:>5}  connectivity {:.4e}",
+            rep.mass_removed,
+            rep.edges_before,
+            rep.edges_after,
+            rho.num_parts,
+            connectivity(&pruned, &rho)
+        );
+    }
+
+    // ---- A5: unicast vs multicast ----
+    println!("\nA5. unicast vs hierarchical-multicast energy (16k_rand quotient)");
+    for (label, pl) in [
+        ("hilbert", hilbert::place(&gp, &hw)),
+        ("spectral", spectral::place(&gp, &hw)),
+        ("spectral+force", {
+            let mut p = spectral::place(&gp, &hw);
+            force::refine(&gp, &hw, &mut p, Default::default(), None);
+            p
+        }),
+    ] {
+        let m = multicast::evaluate_multicast(&gp, &pl, &hw);
+        println!(
+            "  {:<16} unicast {:.4e} pJ  multicast {:.4e} pJ  saving {:.2}x  (hpwl bound {:.4e})",
+            label,
+            m.unicast_energy,
+            m.tree_energy,
+            1.0 / m.saving_ratio.max(1e-12),
+            m.hpwl_bound
+        );
+    }
+
+    // ---- A6: multi-chip aware vs oblivious ----
+    println!("\nA6. multi-chip: chip-aware two-level vs chip-oblivious placement");
+    let mut chip = snnmap::hw::NmhConfig::small();
+    chip.width = 16;
+    chip.height = 16;
+    let mc = MultiChipConfig {
+        chip,
+        chips_x: 2,
+        chips_y: 2,
+        off_chip_energy_factor: 10.0,
+        off_chip_latency_factor: 10.0,
+    };
+    if gp.num_nodes() <= mc.num_cores() {
+        let (aware, _) = multichip::placement::place(&gp, &mc, LocalPlacer::Spectral, true).unwrap();
+        let oblivious = hilbert::place(&gp, &mc.global_lattice());
+        let ma = multichip::metrics::evaluate(&gp, &aware, &mc);
+        let mo = multichip::metrics::evaluate(&gp, &oblivious, &mc);
+        println!(
+            "  chip-aware     energy {:.4e}  off-chip hops {:.3e}  boundary traffic {:.3e}",
+            ma.energy, ma.off_chip_hops, ma.boundary_traffic
+        );
+        println!(
+            "  chip-oblivious energy {:.4e}  off-chip hops {:.3e}  boundary traffic {:.3e}",
+            mo.energy, mo.off_chip_hops, mo.boundary_traffic
+        );
+        println!("  energy ratio (oblivious/aware) = {:.2}x", mo.energy / ma.energy);
+    } else {
+        println!("  skipped: {} partitions exceed the 2x2x16x16 array", gp.num_nodes());
+    }
+}

@@ -1,0 +1,50 @@
+//! Shared bench harness helpers (criterion is not in the offline
+//! registry; benches are `harness = false` binaries using util::timer).
+
+#![allow(dead_code)]
+
+use snnmap::snn::{self, Network};
+
+/// Bench scale from `SNNMAP_SCALE` (default keeps `cargo bench` at
+/// minutes, not hours; raise towards 1.0 to approach paper sizes).
+pub fn scale() -> f64 {
+    std::env::var("SNNMAP_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.12)
+}
+
+/// Networks covered by the default bench tier: one per Table III class.
+pub fn bench_suite() -> Vec<&'static str> {
+    match std::env::var("SNNMAP_SUITE").as_deref() {
+        Ok("full") => snn::SUITE.to_vec(),
+        Ok("mid") => vec![
+            "16k_model", "64k_model", "lenet", "alexnet", "vgg11", "mobilenet", "allen_v1",
+            "16k_rand", "64k_rand",
+        ],
+        _ => vec!["16k_model", "lenet", "mobilenet", "allen_v1", "16k_rand"],
+    }
+}
+
+pub fn load(name: &str) -> Network {
+    let net = snn::by_name(name, scale(), 42).unwrap_or_else(|| panic!("unknown network {name}"));
+    eprintln!(
+        "[gen] {:<12} nodes={:<8} h-edges={:<8} connections={:<10} mean|D|={:.1}",
+        net.name,
+        net.graph.num_nodes(),
+        net.graph.num_edges(),
+        net.graph.num_connections(),
+        net.graph.mean_cardinality()
+    );
+    net
+}
+
+/// Hardware config scaled in step with the networks so partition counts
+/// stay representative of the paper's regimes (DESIGN.md §5).
+pub fn hw_for(net: &Network) -> snnmap::hw::NmhConfig {
+    snnmap::coordinator::experiment::hw_for(net, scale())
+}
+
+pub fn hr() {
+    println!("{}", "-".repeat(100));
+}

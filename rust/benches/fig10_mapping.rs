@@ -1,0 +1,111 @@
+//! E5 — Fig. 10: full-mapping performance (energy, latency, congestion,
+//! ELP) and construction time for every partitioning × placement combo.
+
+mod common;
+
+use snnmap::coordinator::experiment::{run_grid, GridSpec};
+use snnmap::coordinator::report::ratio_summary;
+
+fn main() {
+    let scale = common::scale();
+    println!("Fig. 10 — mapping performance across partitioner x placement combos (scale {scale})");
+    common::hr();
+    let mut spec = GridSpec::fig10(scale);
+    spec.networks = common::bench_suite().into_iter().map(String::from).collect();
+    let rows = run_grid(&spec);
+
+    println!(
+        "{:<14} {:<13} {:<16} {:>10.6} {:>11.6} {:>11.6} {:>11.6} {:>10.6} {:>8} {:>8}",
+        "network", "partitioner", "placer+refiner", "energy", "latency", "congestion", "ELP",
+        "cl_geo", "t_part", "t_place"
+    );
+    common::hr();
+    for r in &rows {
+        if let Some(e) = &r.error {
+            println!("{:<14} {:<13} {:<16} FAILED: {e}", r.network, r.partitioner, r.placer);
+            continue;
+        }
+        println!(
+            "{:<14} {:<13} {:<16} {:>10.3e} {:>11.3e} {:>11.3e} {:>11.3e} {:>10.2} {:>8.2} {:>8.2}",
+            r.network,
+            r.partitioner,
+            format!("{}+{}", r.placer, r.refiner),
+            r.energy,
+            r.latency,
+            r.congestion,
+            r.elp,
+            r.cl_geo,
+            r.partition_time.as_secs_f64(),
+            r.placement_time.as_secs_f64()
+        );
+    }
+    common::hr();
+
+    // paper shape summaries (§V-B2)
+    println!("shape checks vs paper:");
+    if let Some(r) = ratio_summary(&rows, "hierarchical", "overlap", |r| r.elp) {
+        println!("  ELP(hierarchical)/ELP(overlap) geomean = {r:.2}  [paper: 0.98x]");
+    }
+    if let Some(r) = ratio_summary(&rows, "overlap", "sequential", |r| r.elp) {
+        println!("  ELP(overlap)/ELP(sequential)   geomean = {r:.2}  [paper: 0.63x]");
+    }
+    // spectral vs hilbert after force refinement
+    let spectral_force: Vec<&_> = rows
+        .iter()
+        .filter(|r| r.placer == "spectral" && r.refiner == "force" && r.error.is_none())
+        .collect();
+    let mut elp_ratio_logs = Vec::new();
+    let mut cong_ratio_logs = Vec::new();
+    for s in &spectral_force {
+        if let Some(h) = rows.iter().find(|r| {
+            r.placer == "hilbert"
+                && r.refiner == "force"
+                && r.network == s.network
+                && r.partitioner == s.partitioner
+                && r.error.is_none()
+        }) {
+            elp_ratio_logs.push((s.elp / h.elp).ln());
+            cong_ratio_logs.push((h.congestion / s.congestion).ln());
+        }
+    }
+    if !elp_ratio_logs.is_empty() {
+        let g = (elp_ratio_logs.iter().sum::<f64>() / elp_ratio_logs.len() as f64).exp();
+        println!("  ELP(spectral+force)/ELP(hilbert+force) geomean = {g:.2}  [paper: 0.96x]");
+        let c = (cong_ratio_logs.iter().sum::<f64>() / cong_ratio_logs.len() as f64).exp();
+        println!("  congestion(hilbert)/congestion(spectral) geomean = {c:.2}  [paper: 0.92x]");
+    }
+    // refinement improvement band
+    let mut impr = Vec::new();
+    for s in rows.iter().filter(|r| r.refiner == "force" && r.error.is_none()) {
+        if let Some(raw) = rows.iter().find(|r| {
+            r.refiner == "none"
+                && r.placer == s.placer
+                && r.network == s.network
+                && r.partitioner == s.partitioner
+                && r.error.is_none()
+        }) {
+            impr.push(s.elp / raw.elp);
+        }
+    }
+    if !impr.is_empty() {
+        let min = impr.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = impr.iter().cloned().fold(0.0, f64::max);
+        println!("  force refinement ELP ratio range = {min:.2}..{max:.2}  [paper: metrics to 0.51-0.87x]");
+    }
+    // mindist speed/quality envelope
+    let mut mindist_ratio = Vec::new();
+    for m in rows.iter().filter(|r| r.placer == "mindist" && r.error.is_none()) {
+        let best = rows
+            .iter()
+            .filter(|r| {
+                r.network == m.network && r.partitioner == m.partitioner && r.error.is_none()
+            })
+            .map(|r| r.elp)
+            .fold(f64::INFINITY, f64::min);
+        mindist_ratio.push(m.elp / best);
+    }
+    if !mindist_ratio.is_empty() {
+        let worst = mindist_ratio.iter().cloned().fold(0.0, f64::max);
+        println!("  mindist ELP within {worst:.2}x of the best combo  [paper: within 2.18x]");
+    }
+}

@@ -1,0 +1,81 @@
+//! E6 — Fig. 11: synaptic reuse / connections locality measures and their
+//! Spearman rank correlation with connectivity / ELP, standardized
+//! per-network (z-score) exactly as §V-C describes.
+//!
+//! Paper result: ρ(SR_geo, connectivity) ≈ −0.86, ρ(CL, ELP) ≈ +0.69.
+
+mod common;
+
+use snnmap::coordinator::experiment::{run_grid, GridSpec};
+use snnmap::metrics::stats::grouped_spearman;
+use std::collections::BTreeMap;
+
+fn main() {
+    let scale = common::scale();
+    println!("Fig. 11 — property measures and correlations (scale {scale})");
+    common::hr();
+    let mut spec = GridSpec::fig10(scale); // full combo grid gives the spread
+    spec.networks = common::bench_suite().into_iter().map(String::from).collect();
+    let rows = run_grid(&spec);
+
+    println!(
+        "{:<14} {:<13} {:<16} {:>9} {:>9} {:>9} {:>9}",
+        "network", "partitioner", "placer+refiner", "sr_arith", "sr_geo", "cl_arith", "cl_geo"
+    );
+    common::hr();
+    for r in rows.iter().filter(|r| r.error.is_none()) {
+        println!(
+            "{:<14} {:<13} {:<16} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
+            r.network,
+            r.partitioner,
+            format!("{}+{}", r.placer, r.refiner),
+            r.sr_arith,
+            r.sr_geo,
+            r.cl_arith,
+            r.cl_geo
+        );
+    }
+    common::hr();
+
+    // group per network, z-score within group, pooled Spearman (paper's method)
+    let mut by_net: BTreeMap<&str, Vec<&_>> = BTreeMap::new();
+    for r in rows.iter().filter(|r| r.error.is_none()) {
+        by_net.entry(r.network.as_str()).or_default().push(r);
+    }
+    let groups_of = |fx: &dyn Fn(&&snnmap::coordinator::experiment::ExperimentRow) -> f64,
+                     fy: &dyn Fn(&&snnmap::coordinator::experiment::ExperimentRow) -> f64|
+     -> Vec<(Vec<f64>, Vec<f64>)> {
+        by_net
+            .values()
+            .map(|rs| (rs.iter().map(fx).collect(), rs.iter().map(fy).collect()))
+            .collect()
+    };
+
+    let sr_conn = grouped_spearman(&groups_of(&|r| r.sr_geo, &|r| r.connectivity));
+    let sr_arith_conn = grouped_spearman(&groups_of(&|r| r.sr_arith, &|r| r.connectivity));
+    let cl_elp = grouped_spearman(&groups_of(&|r| r.cl_geo, &|r| r.elp));
+    let cl_arith_elp = grouped_spearman(&groups_of(&|r| r.cl_arith, &|r| r.elp));
+    let cl_energy = grouped_spearman(&groups_of(&|r| r.cl_geo, &|r| r.energy));
+
+    println!("Spearman rank correlations (per-network z-scored, pooled):");
+    println!(
+        "  rho(SR_geo,  connectivity) = {:>6.3}   [paper: ~ -0.86]",
+        sr_conn.unwrap_or(f64::NAN)
+    );
+    println!(
+        "  rho(SR_arith, connectivity) = {:>6.3}   [paper: diverges from geo]",
+        sr_arith_conn.unwrap_or(f64::NAN)
+    );
+    println!(
+        "  rho(CL_geo,  ELP)          = {:>6.3}   [paper: ~ +0.69]",
+        cl_elp.unwrap_or(f64::NAN)
+    );
+    println!(
+        "  rho(CL_arith, ELP)         = {:>6.3}   [paper: close to geo]",
+        cl_arith_elp.unwrap_or(f64::NAN)
+    );
+    println!(
+        "  rho(CL_geo,  energy)       = {:>6.3}",
+        cl_energy.unwrap_or(f64::NAN)
+    );
+}

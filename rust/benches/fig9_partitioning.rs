@@ -1,0 +1,84 @@
+//! E4 + E8 — Fig. 9: connectivity and execution time of every
+//! partitioning heuristic over the network suite, plus the §V-B1 headline
+//! ratio summaries (overlap vs hierarchical / sequential / EdgeMap).
+
+mod common;
+
+use snnmap::coordinator::experiment::{run_grid, ExperimentRow, GridSpec};
+use snnmap::coordinator::report::ratio_summary;
+use snnmap::coordinator::PartitionerKind;
+
+fn main() {
+    let scale = common::scale();
+    println!("Fig. 9 — partitioning heuristics: connectivity + execution time (scale {scale})");
+    common::hr();
+    let mut spec = GridSpec::fig9(scale);
+    spec.networks = common::bench_suite().into_iter().map(String::from).collect();
+    let rows = run_grid(&spec);
+
+    println!(
+        "{:<14} {:<14} {:>8} {:>14} {:>12} {:>10}",
+        "network", "partitioner", "parts", "connectivity", "sr_geo", "time (s)"
+    );
+    common::hr();
+    for r in &rows {
+        if let Some(e) = &r.error {
+            println!("{:<14} {:<14} FAILED: {e}", r.network, r.partitioner);
+            continue;
+        }
+        println!(
+            "{:<14} {:<14} {:>8} {:>14.4e} {:>12.3} {:>10.3}",
+            r.network,
+            r.partitioner,
+            r.partitions,
+            r.connectivity,
+            r.sr_geo,
+            r.partition_time.as_secs_f64()
+        );
+    }
+    common::hr();
+
+    // §V-B1 headline ratios (geometric means across networks)
+    let conn = |r: &ExperimentRow| r.connectivity;
+    let time = |r: &ExperimentRow| r.partition_time.as_secs_f64().max(1e-6);
+    let pairs = [
+        ("hierarchical", "sequential", "0.47x (paper)"),
+        ("hierarchical", "overlap", "0.95x (paper)"),
+        ("overlap", "sequential", "0.32-0.91x (paper)"),
+        ("edgemap", "overlap", "8.5x worse (paper)"),
+        ("seq-unordered", "sequential", "up to 11.4x worse (paper)"),
+    ];
+    println!("headline connectivity ratios (geomean across networks):");
+    for (a, b, paper) in pairs {
+        if let Some(r) = ratio_summary(&rows, a, b, conn) {
+            println!("  conn({a}) / conn({b}) = {r:.2}   [{paper}]");
+        }
+    }
+    println!("execution-time ratios (geomean):");
+    for (a, b) in [("hierarchical", "overlap"), ("overlap", "seq-unordered")] {
+        if let Some(r) = ratio_summary(&rows, a, b, time) {
+            println!("  time({a}) / time({b}) = {r:.1}");
+        }
+    }
+    // complexity bands (paper: three trends — unordered O(n) at the
+    // bottom; overlap/edgemap/ordered-seq O(e·d) in the middle;
+    // hierarchical O(e·d²) on top). Verified per network:
+    println!("\ncomplexity bands (expect time: seq-unordered <= overlap ~ edgemap <= hierarchical):");
+    let nets: std::collections::BTreeSet<&str> = rows.iter().map(|r| r.network.as_str()).collect();
+    for net in nets {
+        let t = |p: &str| {
+            rows.iter()
+                .find(|r| r.network == net && r.partitioner == p)
+                .map(|r| r.partition_time.as_secs_f64())
+                .unwrap_or(f64::NAN)
+        };
+        println!(
+            "  {:<14} unordered {:>8.3}s | overlap {:>8.3}s | edgemap {:>8.3}s | hierarchical {:>8.3}s",
+            net,
+            t(PartitionerKind::SequentialUnordered.name()),
+            t(PartitionerKind::HyperedgeOverlap.name()),
+            t(PartitionerKind::EdgeMap.name()),
+            t(PartitionerKind::Hierarchical.name()),
+        );
+    }
+}

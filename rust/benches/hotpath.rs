@@ -1,0 +1,129 @@
+//! E10 — hot-path microbenchmarks for the §Perf optimization loop:
+//! overlap partitioning throughput (connections/s), force-refinement
+//! sweep rate, metric-engine throughput, quotient construction, greedy
+//! ordering, and the PJRT-vs-native spectral engine.
+
+mod common;
+
+use snnmap::coordinator::experiment::hw_for;
+use snnmap::hypergraph::quotient::push_forward;
+use snnmap::mapping::{self, sequential::SeqOrder};
+use snnmap::metrics::evaluate;
+use snnmap::placement::{eigen, force, hilbert, spectral};
+use snnmap::runtime::PjrtRuntime;
+use snnmap::util::timer::{bench, time_once};
+use std::time::Duration;
+
+fn main() {
+    let net = common::load("16k_rand");
+    let g = &net.graph;
+    let hw = hw_for(&net, common::scale());
+    let conns = g.num_connections() as f64;
+    let min_t = Duration::from_millis(800);
+    println!("hot-path microbenchmarks ({} nodes, {:.2e} connections)", g.num_nodes(), conns);
+    common::hr();
+
+    // 1. overlap partitioning (the paper's novel hot path)
+    let (rho, st) = bench(2, min_t, || mapping::overlap::partition(g, &hw).unwrap());
+    println!(
+        "overlap partitioning   {:>10.3}s/iter  {:>10.2e} connections/s",
+        st.mean_secs(),
+        conns / st.mean_secs()
+    );
+
+    // 2. greedy ordering (Alg. 2)
+    let (_, st) = bench(2, min_t, || mapping::ordering::greedy_order(g));
+    println!(
+        "greedy ordering        {:>10.3}s/iter  {:>10.2e} connections/s",
+        st.mean_secs(),
+        conns / st.mean_secs()
+    );
+
+    // 3. sequential partitioning over a precomputed order
+    let order = mapping::ordering::greedy_order(g);
+    let (_, st) = bench(2, min_t, || {
+        mapping::sequential::partition_with_order(g, &hw, &order).unwrap()
+    });
+    println!(
+        "sequential (ordered)   {:>10.3}s/iter  {:>10.2e} connections/s",
+        st.mean_secs(),
+        conns / st.mean_secs()
+    );
+    let _ = SeqOrder::Natural;
+
+    // 4. quotient construction
+    let (q, st) = bench(2, min_t, || push_forward(g, &rho));
+    println!(
+        "quotient push-forward  {:>10.3}s/iter  {:>10.2e} connections/s",
+        st.mean_secs(),
+        conns / st.mean_secs()
+    );
+    let gp = q.graph;
+    println!("  quotient: {} partitions, {} h-edges", gp.num_nodes(), gp.num_edges());
+
+    // 5. metric engine
+    let pl = hilbert::place(&gp, &hw);
+    let (m, st) = bench(3, min_t, || evaluate(&gp, &pl, &hw));
+    println!(
+        "metric evaluation      {:>10.3}s/iter  (conn {:.3e}, elp {:.3e})",
+        st.mean_secs(),
+        m.connectivity,
+        m.elp
+    );
+
+    // 6. force-directed refinement (one full run from the Hilbert start)
+    let (stats, dt) = time_once(|| {
+        let mut p = hilbert::place(&gp, &hw);
+        force::refine(&gp, &hw, &mut p, Default::default(), None)
+    });
+    println!(
+        "force refinement       {:>10.3}s total  ({} sweeps, {} swaps, wl {:.3e} -> {:.3e})",
+        dt.as_secs_f64(),
+        stats.sweeps,
+        stats.swaps + stats.moves_to_empty,
+        stats.initial_wirelength,
+        stats.final_wirelength
+    );
+
+    // 7. spectral engines: native vs PJRT artifact
+    let prob = eigen::build_laplacian(&gp);
+    let (_, st) = bench(1, min_t, || {
+        eigen::smallest_nontrivial_eigs(&prob, 400, 8)
+    });
+    println!(
+        "spectral native        {:>10.3}s/iter  (n={}, nnz={})",
+        st.mean_secs(),
+        prob.lap.n,
+        prob.lap.nnz()
+    );
+    match PjrtRuntime::discover() {
+        Some(rt) => {
+            let n = prob.lap.n;
+            if n <= rt.spectral_capacity() {
+                let mut dense = vec![0f32; n * n];
+                for r in 0..n {
+                    for i in prob.lap.row_off[r]..prob.lap.row_off[r + 1] {
+                        dense[r * n + prob.lap.cols[i] as usize] = prob.lap.vals[i] as f32;
+                    }
+                }
+                // first call compiles; time both
+                let (_, compile_t) = time_once(|| rt.spectral_embed(&dense, n, &prob.wdeg).unwrap());
+                let (_, st) = bench(2, min_t, || rt.spectral_embed(&dense, n, &prob.wdeg).unwrap());
+                println!(
+                    "spectral PJRT          {:>10.3}s/iter  (+{:.2}s one-time compile)",
+                    st.mean_secs(),
+                    compile_t.as_secs_f64() - st.mean_secs()
+                );
+            } else {
+                println!("spectral PJRT          skipped: {} partitions > capacity {}", n, rt.spectral_capacity());
+            }
+        }
+        None => println!("spectral PJRT          skipped: artifacts/ not built"),
+    }
+
+    // 8. full spectral placement
+    let (_, st) = bench(1, min_t, || spectral::place(&gp, &hw));
+    println!("spectral placement     {:>10.3}s/iter  (embed + discretize)", st.mean_secs());
+    common::hr();
+    println!("targets (DESIGN.md §8): overlap >= 5e6 conn/s; metrics >= 1e7 synapse-visits/s.");
+}

@@ -1,0 +1,58 @@
+//! E9 — simulator cross-check: the analytic Table I cost model vs the
+//! executable NoC simulator (Poisson spike draws, XY routing) on real
+//! mappings. Expected-energy equality is exact in the limit; congestion
+//! and makespan expose what the expectation model cannot.
+
+mod common;
+
+use snnmap::coordinator::{MapperPipeline, PartitionerKind, PlacerKind, RefinerKind};
+use snnmap::metrics::evaluate;
+use snnmap::sim::{simulate, SimParams};
+use snnmap::util::timer::time_once;
+
+fn main() {
+    println!("Simulator validation — analytic Table I vs executed NoC traffic");
+    common::hr();
+    println!(
+        "{:<14} {:<12} {:>12} {:>12} {:>7} {:>12} {:>12} {:>9}",
+        "network", "pipeline", "E_analytic", "E_sim/step", "ratio", "congestion", "peak router", "sim time"
+    );
+    common::hr();
+    for name in ["lenet", "allen_v1", "16k_rand"] {
+        let net = common::load(name);
+        let hw = common::hw_for(&net);
+        for (pk, label) in [
+            (PartitionerKind::HyperedgeOverlap, "overlap"),
+            (PartitionerKind::Sequential, "sequential"),
+        ] {
+            let res = MapperPipeline::new(hw)
+                .partitioner(pk)
+                .placer(PlacerKind::Spectral)
+                .refiner(RefinerKind::ForceDirected)
+                .run(&net.graph, net.layer_ranges.as_deref())
+                .expect("mapping failed");
+            let analytic = evaluate(&res.gp, &res.placement, &hw);
+            let (sim, dt) = time_once(|| {
+                simulate(
+                    &res.gp,
+                    &res.placement,
+                    &hw,
+                    SimParams { timesteps: 400, seed: 11, poisson_spikes: true },
+                )
+            });
+            println!(
+                "{:<14} {:<12} {:>12.4e} {:>12.4e} {:>7.3} {:>12.3e} {:>12} {:>8.2}s",
+                net.name,
+                label,
+                analytic.energy,
+                sim.energy_per_step(),
+                sim.energy_per_step() / analytic.energy,
+                analytic.congestion,
+                sim.peak_router_load,
+                dt.as_secs_f64()
+            );
+        }
+    }
+    common::hr();
+    println!("expected: ratio -> 1.0 as timesteps grow; peak router load tracks analytic congestion's order of magnitude.");
+}

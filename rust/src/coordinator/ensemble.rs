@@ -1,0 +1,126 @@
+//! Time-budgeted ensemble mapping (paper §V-B2 closing remark: "running
+//! an ensemble of different techniques on a time limit — then selecting
+//! the best final mapping — is practicable").
+//!
+//! Given one partitioning, try several placement pipelines inside a wall
+//! clock budget and keep the mapping with the lowest ELP.
+
+use super::pipeline::{MapperPipeline, MappingResult, PartitionerKind, PlacerKind, RefinerKind};
+use crate::hw::NmhConfig;
+use crate::hypergraph::Hypergraph;
+use crate::mapping::MapError;
+use crate::runtime::PjrtRuntime;
+use std::time::{Duration, Instant};
+
+/// Ensemble outcome: the winner plus the per-candidate scoreboard.
+pub struct EnsembleResult {
+    pub best: MappingResult,
+    pub best_combo: (PlacerKind, RefinerKind),
+    /// (placer, refiner, elp, wall time) per attempted candidate.
+    pub scoreboard: Vec<(PlacerKind, RefinerKind, f64, Duration)>,
+    pub budget_exhausted: bool,
+}
+
+/// Candidate placement pipelines in increasing expected cost.
+pub const CANDIDATES: [(PlacerKind, RefinerKind); 5] = [
+    (PlacerKind::Hilbert, RefinerKind::None),
+    (PlacerKind::MinDistance, RefinerKind::None),
+    (PlacerKind::Spectral, RefinerKind::None),
+    (PlacerKind::Hilbert, RefinerKind::ForceDirected),
+    (PlacerKind::Spectral, RefinerKind::ForceDirected),
+];
+
+/// Run the ensemble: partition once with `partitioner`, then race the
+/// placement candidates until `budget` is spent (the current candidate is
+/// always allowed to finish).
+pub fn run(
+    g: &Hypergraph,
+    layer_ranges: Option<&[(u32, u32)]>,
+    hw: NmhConfig,
+    partitioner: PartitionerKind,
+    budget: Duration,
+    seed: u64,
+    runtime: Option<&PjrtRuntime>,
+) -> Result<EnsembleResult, MapError> {
+    let start = Instant::now();
+    let mut best: Option<(MappingResult, (PlacerKind, RefinerKind))> = None;
+    let mut scoreboard = Vec::new();
+    let mut budget_exhausted = false;
+
+    for &(placer, refiner) in CANDIDATES.iter() {
+        if start.elapsed() > budget && best.is_some() {
+            budget_exhausted = true;
+            break;
+        }
+        let t0 = Instant::now();
+        let res = MapperPipeline::new(hw)
+            .partitioner(partitioner)
+            .placer(placer)
+            .refiner(refiner)
+            .seed(seed)
+            .run_with(g, layer_ranges, runtime)?;
+        let dt = t0.elapsed();
+        scoreboard.push((placer, refiner, res.metrics.elp, dt));
+        let better = best
+            .as_ref()
+            .map(|(b, _)| res.metrics.elp < b.metrics.elp)
+            .unwrap_or(true);
+        if better {
+            best = Some((res, (placer, refiner)));
+        }
+    }
+    let (best, best_combo) = best.expect("at least one candidate always runs");
+    Ok(EnsembleResult {
+        best,
+        best_combo,
+        scoreboard,
+        budget_exhausted,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn;
+
+    #[test]
+    fn picks_minimum_elp() {
+        let net = snn::by_name("lenet", 0.1, 5).unwrap();
+        let hw = NmhConfig::small().scaled(0.05);
+        let res = run(
+            &net.graph,
+            net.layer_ranges.as_deref(),
+            hw,
+            PartitionerKind::Sequential,
+            Duration::from_secs(120),
+            7,
+            None,
+        )
+        .unwrap();
+        assert!(!res.scoreboard.is_empty());
+        let min_elp = res
+            .scoreboard
+            .iter()
+            .map(|&(_, _, elp, _)| elp)
+            .fold(f64::INFINITY, f64::min);
+        assert!((res.best.metrics.elp - min_elp).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiny_budget_still_yields_mapping() {
+        let net = snn::by_name("lenet", 0.1, 5).unwrap();
+        let hw = NmhConfig::small().scaled(0.05);
+        let res = run(
+            &net.graph,
+            net.layer_ranges.as_deref(),
+            hw,
+            PartitionerKind::SequentialUnordered,
+            Duration::ZERO,
+            7,
+            None,
+        )
+        .unwrap();
+        assert!(res.scoreboard.len() >= 1);
+        assert!(res.budget_exhausted || res.scoreboard.len() == CANDIDATES.len());
+    }
+}

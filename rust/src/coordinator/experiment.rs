@@ -1,0 +1,403 @@
+//! Experiment grid runner: reproduces the paper's evaluation sweeps
+//! (Figs. 9-11) over the network suite × algorithm combinations, with
+//! optional thread-parallel execution across networks.
+
+use super::pipeline::{MapperPipeline, PartitionerKind, PlacerKind, RefinerKind};
+use crate::hw::NmhConfig;
+use crate::snn::{self, Network};
+use std::time::Duration;
+
+/// One grid cell result: everything Figs. 9-11 plot.
+#[derive(Debug, Clone)]
+pub struct ExperimentRow {
+    pub network: String,
+    pub nodes: usize,
+    pub connections: usize,
+    pub partitioner: &'static str,
+    pub placer: &'static str,
+    pub refiner: &'static str,
+    pub partitions: usize,
+    pub connectivity: f64,
+    pub energy: f64,
+    pub latency: f64,
+    pub congestion: f64,
+    pub elp: f64,
+    pub sr_arith: f64,
+    pub sr_geo: f64,
+    pub cl_arith: f64,
+    pub cl_geo: f64,
+    pub partition_time: Duration,
+    pub placement_time: Duration,
+    pub error: Option<String>,
+}
+
+impl ExperimentRow {
+    pub const CSV_HEADER: &'static str = "network,nodes,connections,partitioner,placer,refiner,\
+partitions,connectivity,energy,latency,congestion,elp,sr_arith,sr_geo,cl_arith,cl_geo,\
+partition_time_s,placement_time_s,error";
+
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{},{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{}",
+            self.network,
+            self.nodes,
+            self.connections,
+            self.partitioner,
+            self.placer,
+            self.refiner,
+            self.partitions,
+            self.connectivity,
+            self.energy,
+            self.latency,
+            self.congestion,
+            self.elp,
+            self.sr_arith,
+            self.sr_geo,
+            self.cl_arith,
+            self.cl_geo,
+            self.partition_time.as_secs_f64(),
+            self.placement_time.as_secs_f64(),
+            self.error.as_deref().unwrap_or("")
+        )
+    }
+}
+
+/// Grid specification.
+#[derive(Clone)]
+pub struct GridSpec {
+    pub networks: Vec<String>,
+    pub scale: f64,
+    pub seed: u64,
+    pub partitioners: Vec<PartitionerKind>,
+    pub combos: Vec<(PlacerKind, RefinerKind)>,
+    /// Threads across networks (1 = sequential; PJRT engine forces 1).
+    pub threads: usize,
+    /// Per-network hardware override; default = auto by connection count,
+    /// constraints scaled alongside the network so partition counts stay
+    /// representative (DESIGN.md §5).
+    pub hw: Option<NmhConfig>,
+}
+
+impl GridSpec {
+    /// Fig. 9 grid: all partitioners, placement fixed to Hilbert/none
+    /// (partitioning quality is placement-independent).
+    pub fn fig9(scale: f64) -> GridSpec {
+        GridSpec {
+            networks: default_suite(),
+            scale,
+            seed: 42,
+            partitioners: PartitionerKind::ALL.to_vec(),
+            combos: vec![(PlacerKind::Hilbert, RefinerKind::None)],
+            threads: 1,
+            hw: None,
+        }
+    }
+
+    /// Parse a grid from a JSON config document, e.g.
+    ///
+    /// ```json
+    /// {
+    ///   "networks": ["lenet", "16k_rand"],
+    ///   "scale": 0.2,
+    ///   "seed": 7,
+    ///   "partitioners": ["overlap", "hierarchical"],
+    ///   "combos": [["hilbert", "force"], ["spectral", "force"]],
+    ///   "threads": 2,
+    ///   "hw": {"preset": "small", "scale": 0.1}
+    /// }
+    /// ```
+    ///
+    /// Missing fields fall back to the fig9 defaults at the given scale.
+    pub fn from_json(doc: &crate::util::json::Json) -> Result<GridSpec, String> {
+        let scale = doc.get("scale").as_f64().unwrap_or(0.25);
+        let mut spec = GridSpec::fig9(scale);
+        if let Some(nets) = doc.get("networks").as_arr() {
+            spec.networks = nets
+                .iter()
+                .filter_map(|n| n.as_str().map(String::from))
+                .collect();
+        }
+        if let Some(seed) = doc.get("seed").as_f64() {
+            spec.seed = seed as u64;
+        }
+        if let Some(pks) = doc.get("partitioners").as_arr() {
+            spec.partitioners = pks
+                .iter()
+                .map(|p| {
+                    let name = p.as_str().ok_or("partitioner must be a string")?;
+                    PartitionerKind::parse(name).ok_or_else(|| format!("unknown partitioner '{name}'"))
+                })
+                .collect::<Result<_, String>>()?;
+        }
+        if let Some(combos) = doc.get("combos").as_arr() {
+            spec.combos = combos
+                .iter()
+                .map(|c| {
+                    let pair = c.as_arr().ok_or("combo must be [placer, refiner]")?;
+                    if pair.len() != 2 {
+                        return Err("combo must be [placer, refiner]".to_string());
+                    }
+                    let pl = pair[0]
+                        .as_str()
+                        .and_then(PlacerKind::parse)
+                        .ok_or_else(|| format!("bad placer {:?}", pair[0]))?;
+                    let rf = pair[1]
+                        .as_str()
+                        .and_then(RefinerKind::parse)
+                        .ok_or_else(|| format!("bad refiner {:?}", pair[1]))?;
+                    Ok((pl, rf))
+                })
+                .collect::<Result<_, String>>()?;
+        }
+        if let Some(t) = doc.get("threads").as_usize() {
+            spec.threads = t;
+        }
+        let hw_doc = doc.get("hw");
+        if hw_doc.as_obj().is_some() {
+            let preset = hw_doc.get("preset").as_str().unwrap_or("small");
+            let mut hw = NmhConfig::preset(preset)
+                .ok_or_else(|| format!("unknown hw preset '{preset}'"))?;
+            if let Some(f) = hw_doc.get("scale").as_f64() {
+                hw = hw.scaled(f);
+            }
+            spec.hw = Some(hw);
+        }
+        if spec.networks.is_empty() {
+            return Err("config selects no networks".into());
+        }
+        Ok(spec)
+    }
+
+    /// Fig. 10 grid: 3 headline partitioners × all placement combos.
+    pub fn fig10(scale: f64) -> GridSpec {
+        GridSpec {
+            networks: default_suite(),
+            scale,
+            seed: 42,
+            partitioners: vec![
+                PartitionerKind::Hierarchical,
+                PartitionerKind::HyperedgeOverlap,
+                PartitionerKind::Sequential,
+            ],
+            combos: vec![
+                (PlacerKind::Hilbert, RefinerKind::None),
+                (PlacerKind::Spectral, RefinerKind::None),
+                (PlacerKind::Hilbert, RefinerKind::ForceDirected),
+                (PlacerKind::Spectral, RefinerKind::ForceDirected),
+                (PlacerKind::MinDistance, RefinerKind::None),
+            ],
+            threads: 1,
+            hw: None,
+        }
+    }
+}
+
+/// The default (feasible-tier) network subset; big nets join via --scale.
+pub fn default_suite() -> Vec<String> {
+    ["16k_model", "lenet", "allen_v1", "16k_rand"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+/// Hardware for a generated network: preset by connection count, per-core
+/// constraints scaled with the experiment scale.
+pub fn hw_for(net: &Network, scale: f64) -> NmhConfig {
+    NmhConfig::for_connections(net.graph.num_connections()).scaled(scale.min(1.0))
+}
+
+/// Run the grid. Returns rows in deterministic (network-major) order.
+pub fn run_grid(spec: &GridSpec) -> Vec<ExperimentRow> {
+    let jobs: Vec<String> = spec.networks.clone();
+    let threads = spec.threads.max(1).min(jobs.len().max(1));
+    if threads <= 1 {
+        return jobs.iter().flat_map(|n| run_network(spec, n)).collect();
+    }
+    // network-level parallelism with scoped threads
+    let mut results: Vec<Option<Vec<ExperimentRow>>> = vec![None; jobs.len()];
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results_mx = std::sync::Mutex::new(&mut results);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if i >= jobs.len() {
+                    break;
+                }
+                let rows = run_network(spec, &jobs[i]);
+                results_mx.lock().unwrap()[i] = Some(rows);
+            });
+        }
+    });
+    results.into_iter().flatten().flatten().collect()
+}
+
+/// All grid cells of one network.
+fn run_network(spec: &GridSpec, name: &str) -> Vec<ExperimentRow> {
+    let Some(net) = snn::by_name(name, spec.scale, spec.seed) else {
+        return vec![];
+    };
+    let hw = spec.hw.unwrap_or_else(|| hw_for(&net, spec.scale));
+    let mut rows = Vec::new();
+    for &pk in &spec.partitioners {
+        for &(pl, rf) in &spec.combos {
+            let pipeline = MapperPipeline::new(hw)
+                .partitioner(pk)
+                .placer(pl)
+                .refiner(rf)
+                .seed(spec.seed);
+            let row = match pipeline.run(&net.graph, net.layer_ranges.as_deref()) {
+                Ok(res) => ExperimentRow {
+                    network: net.name.clone(),
+                    nodes: net.graph.num_nodes(),
+                    connections: net.graph.num_connections(),
+                    partitioner: pk.name(),
+                    placer: pl.name(),
+                    refiner: rf.name(),
+                    partitions: res.rho.num_parts,
+                    connectivity: res.metrics.connectivity,
+                    energy: res.metrics.energy,
+                    latency: res.metrics.latency,
+                    congestion: res.metrics.congestion,
+                    elp: res.metrics.elp,
+                    sr_arith: res.sr.0,
+                    sr_geo: res.sr.1,
+                    cl_arith: res.cl.0,
+                    cl_geo: res.cl.1,
+                    partition_time: res.partition_time,
+                    placement_time: res.placement_time,
+                    error: None,
+                },
+                Err(e) => ExperimentRow {
+                    network: net.name.clone(),
+                    nodes: net.graph.num_nodes(),
+                    connections: net.graph.num_connections(),
+                    partitioner: pk.name(),
+                    placer: pl.name(),
+                    refiner: rf.name(),
+                    partitions: 0,
+                    connectivity: f64::NAN,
+                    energy: f64::NAN,
+                    latency: f64::NAN,
+                    congestion: f64::NAN,
+                    elp: f64::NAN,
+                    sr_arith: f64::NAN,
+                    sr_geo: f64::NAN,
+                    cl_arith: f64::NAN,
+                    cl_geo: f64::NAN,
+                    partition_time: Duration::ZERO,
+                    placement_time: Duration::ZERO,
+                    error: Some(e.to_string()),
+                },
+            };
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn json_config_roundtrip() {
+        let doc = Json::parse(
+            r#"{
+              "networks": ["lenet"],
+              "scale": 0.1,
+              "seed": 9,
+              "partitioners": ["overlap", "streaming"],
+              "combos": [["hilbert", "none"], ["spectral", "force"]],
+              "threads": 2,
+              "hw": {"preset": "small", "scale": 0.05}
+            }"#,
+        )
+        .unwrap();
+        let spec = GridSpec::from_json(&doc).unwrap();
+        assert_eq!(spec.networks, vec!["lenet"]);
+        assert_eq!(spec.seed, 9);
+        assert_eq!(
+            spec.partitioners,
+            vec![PartitionerKind::HyperedgeOverlap, PartitionerKind::Streaming]
+        );
+        assert_eq!(spec.combos.len(), 2);
+        assert_eq!(spec.threads, 2);
+        assert_eq!(spec.hw.unwrap().c_npc, 51); // 1024 * 0.05
+        // and the grid actually runs
+        let rows = run_grid(&spec);
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.error.is_none()));
+    }
+
+    #[test]
+    fn json_config_rejects_bad_fields() {
+        for bad in [
+            r#"{"networks": [], "scale": 0.1}"#,
+            r#"{"partitioners": ["nope"]}"#,
+            r#"{"combos": [["hilbert"]]}"#,
+            r#"{"hw": {"preset": "huge"}}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(GridSpec::from_json(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn json_config_defaults() {
+        let doc = Json::parse(r#"{"scale": 0.05}"#).unwrap();
+        let spec = GridSpec::from_json(&doc).unwrap();
+        assert_eq!(spec.networks, default_suite());
+        assert!(spec.hw.is_none());
+    }
+
+    fn tiny_spec() -> GridSpec {
+        GridSpec {
+            networks: vec!["lenet".into()],
+            scale: 0.1,
+            seed: 3,
+            partitioners: vec![PartitionerKind::Sequential, PartitionerKind::HyperedgeOverlap],
+            combos: vec![(PlacerKind::Hilbert, RefinerKind::None)],
+            threads: 1,
+            hw: Some(NmhConfig::small().scaled(0.05)),
+        }
+    }
+
+    #[test]
+    fn grid_produces_all_cells() {
+        let rows = run_grid(&tiny_spec());
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert!(r.partitions > 1);
+            assert!(r.elp.is_finite());
+        }
+    }
+
+    #[test]
+    fn csv_rows_parse_back() {
+        let rows = run_grid(&tiny_spec());
+        let header_cols = ExperimentRow::CSV_HEADER.split(',').count();
+        for r in &rows {
+            // trailing empty error field: split counts still match
+            assert_eq!(r.to_csv().split(',').count(), header_cols, "{}", r.to_csv());
+        }
+    }
+
+    #[test]
+    fn threaded_matches_sequential() {
+        let mut spec = tiny_spec();
+        spec.networks = vec!["lenet".into(), "16k_rand".into()];
+        spec.scale = 0.05;
+        let seq = run_grid(&spec);
+        spec.threads = 2;
+        let par = run_grid(&spec);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.network, b.network);
+            assert_eq!(a.partitions, b.partitions);
+            assert!((a.connectivity - b.connectivity).abs() < 1e-9);
+        }
+    }
+}

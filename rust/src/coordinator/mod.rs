@@ -1,0 +1,9 @@
+//! L3 coordinator: the user-facing pipeline, the experiment grid runner,
+//! the time-budgeted ensemble mode, and report emitters.
+
+pub mod ensemble;
+pub mod experiment;
+pub mod pipeline;
+pub mod report;
+
+pub use pipeline::{MapperPipeline, MappingResult, PartitionerKind, PlacerKind, RefinerKind};

@@ -1,0 +1,434 @@
+//! The mapping pipeline: partition → push-forward → place → refine →
+//! evaluate, with pluggable algorithms (Table IV) and numeric engines.
+
+use crate::hw::NmhConfig;
+use crate::hypergraph::quotient::{push_forward, Partitioning};
+use crate::hypergraph::Hypergraph;
+use crate::mapping::{self, MapError};
+use crate::metrics::properties::{self, Mean};
+use crate::metrics::{evaluate, MappingMetrics};
+use crate::placement::force::{self, ForceParams, RefineStats};
+use crate::placement::{hilbert, mindist, spectral, Placement};
+use crate::runtime::PjrtRuntime;
+use std::time::Duration;
+
+/// Partitioning algorithms (paper Table IV + baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionerKind {
+    /// §IV-A1 multilevel coarsening + FM refinement.
+    Hierarchical,
+    /// §IV-A2 — the paper's novel overlap-driven heuristic.
+    HyperedgeOverlap,
+    /// §IV-A3 with ordering (natural for layered nets, Alg. 2 otherwise).
+    Sequential,
+    /// §IV-A3 without ordering (the [7] baseline).
+    SequentialUnordered,
+    /// EdgeMap-style graph-based control [15].
+    EdgeMap,
+    /// One-pass streaming partitioner with lookahead window ([17]-style
+    /// extension, mapping/streaming.rs).
+    Streaming,
+}
+
+impl PartitionerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionerKind::Hierarchical => "hierarchical",
+            PartitionerKind::HyperedgeOverlap => "overlap",
+            PartitionerKind::Sequential => "sequential",
+            PartitionerKind::SequentialUnordered => "seq-unordered",
+            PartitionerKind::EdgeMap => "edgemap",
+            PartitionerKind::Streaming => "streaming",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "hierarchical" | "hier" => PartitionerKind::Hierarchical,
+            "overlap" | "hyperedge-overlap" => PartitionerKind::HyperedgeOverlap,
+            "sequential" | "seq" => PartitionerKind::Sequential,
+            "seq-unordered" | "unordered" => PartitionerKind::SequentialUnordered,
+            "edgemap" => PartitionerKind::EdgeMap,
+            "streaming" | "stream" => PartitionerKind::Streaming,
+            _ => return None,
+        })
+    }
+
+    pub const ALL: [PartitionerKind; 6] = [
+        PartitionerKind::Hierarchical,
+        PartitionerKind::HyperedgeOverlap,
+        PartitionerKind::Sequential,
+        PartitionerKind::SequentialUnordered,
+        PartitionerKind::EdgeMap,
+        PartitionerKind::Streaming,
+    ];
+}
+
+/// Initial/direct placement algorithms (Table IV).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacerKind {
+    /// §IV-B1 Hilbert space-filling curve.
+    Hilbert,
+    /// §IV-B2 spectral embedding (native or PJRT engine).
+    Spectral,
+    /// §IV-C2 minimum-distance direct placement (needs no refiner).
+    MinDistance,
+}
+
+impl PlacerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacerKind::Hilbert => "hilbert",
+            PlacerKind::Spectral => "spectral",
+            PlacerKind::MinDistance => "mindist",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "hilbert" => PlacerKind::Hilbert,
+            "spectral" => PlacerKind::Spectral,
+            "mindist" | "min-distance" => PlacerKind::MinDistance,
+            _ => return None,
+        })
+    }
+
+    pub const ALL: [PlacerKind; 3] =
+        [PlacerKind::Hilbert, PlacerKind::Spectral, PlacerKind::MinDistance];
+}
+
+/// Placement refinement (Table IV).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefinerKind {
+    None,
+    /// §IV-C1 force-directed swap refinement.
+    ForceDirected,
+}
+
+impl RefinerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RefinerKind::None => "none",
+            RefinerKind::ForceDirected => "force",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "none" => RefinerKind::None,
+            "force" | "force-directed" => RefinerKind::ForceDirected,
+            _ => return None,
+        })
+    }
+}
+
+/// A complete mapping outcome.
+pub struct MappingResult {
+    pub rho: Partitioning,
+    /// Quotient h-graph G_P.
+    pub gp: Hypergraph,
+    pub placement: Placement,
+    pub metrics: MappingMetrics,
+    /// Synaptic reuse (arithmetic, geometric) — Eq. 14.
+    pub sr: (f64, f64),
+    /// Connections locality (arithmetic, geometric) — Eq. 15.
+    pub cl: (f64, f64),
+    pub partition_time: Duration,
+    pub placement_time: Duration,
+    pub refine_stats: Option<RefineStats>,
+}
+
+impl MappingResult {
+    /// Human-readable multi-line report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "partitions            {}\n",
+            self.rho.num_parts
+        ));
+        s.push_str(&format!("connectivity (Eq.7)   {:.4e}\n", self.metrics.connectivity));
+        s.push_str(&format!("energy                {:.4e} pJ/step\n", self.metrics.energy));
+        s.push_str(&format!("latency               {:.4e} ns/step\n", self.metrics.latency));
+        s.push_str(&format!("congestion            {:.4e} spikes/core\n", self.metrics.congestion));
+        s.push_str(&format!("ELP                   {:.4e}\n", self.metrics.elp));
+        s.push_str(&format!(
+            "synaptic reuse        arith {:.3} geo {:.3}\n",
+            self.sr.0, self.sr.1
+        ));
+        s.push_str(&format!(
+            "connections locality  arith {:.3} geo {:.3}\n",
+            self.cl.0, self.cl.1
+        ));
+        s.push_str(&format!(
+            "time                  partition {:?} placement {:?}\n",
+            self.partition_time, self.placement_time
+        ));
+        if let Some(rs) = &self.refine_stats {
+            s.push_str(&format!(
+                "refinement            {} sweeps, {} swaps, {} empty-moves, wl {:.3e} -> {:.3e}\n",
+                rs.sweeps, rs.swaps, rs.moves_to_empty, rs.initial_wirelength, rs.final_wirelength
+            ));
+        }
+        s
+    }
+}
+
+/// Configurable mapping pipeline (builder-style).
+pub struct MapperPipeline {
+    pub hw: NmhConfig,
+    pub partitioner: PartitionerKind,
+    pub placer: PlacerKind,
+    pub refiner: RefinerKind,
+    pub force_params: ForceParams,
+    pub hier_params: mapping::hierarchical::HierParams,
+    pub seed: u64,
+}
+
+impl MapperPipeline {
+    pub fn new(hw: NmhConfig) -> Self {
+        MapperPipeline {
+            hw,
+            partitioner: PartitionerKind::HyperedgeOverlap,
+            placer: PlacerKind::Spectral,
+            refiner: RefinerKind::ForceDirected,
+            force_params: ForceParams::default(),
+            hier_params: mapping::hierarchical::HierParams::default(),
+            seed: 42,
+        }
+    }
+
+    pub fn partitioner(mut self, k: PartitionerKind) -> Self {
+        self.partitioner = k;
+        self
+    }
+
+    pub fn placer(mut self, k: PlacerKind) -> Self {
+        self.placer = k;
+        self
+    }
+
+    pub fn refiner(mut self, k: RefinerKind) -> Self {
+        self.refiner = k;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self.hier_params.seed = s;
+        self
+    }
+
+    pub fn force_params(mut self, p: ForceParams) -> Self {
+        self.force_params = p;
+        self
+    }
+
+    /// Run with the native numeric engine.
+    pub fn run(
+        &self,
+        g: &Hypergraph,
+        layer_ranges: Option<&[(u32, u32)]>,
+    ) -> Result<MappingResult, MapError> {
+        self.run_with(g, layer_ranges, None)
+    }
+
+    /// Run; when `runtime` is provided, spectral placement and the
+    /// force-field prefilter execute through the AOT PJRT artifacts.
+    pub fn run_with(
+        &self,
+        g: &Hypergraph,
+        layer_ranges: Option<&[(u32, u32)]>,
+        runtime: Option<&PjrtRuntime>,
+    ) -> Result<MappingResult, MapError> {
+        // ---- partition ----
+        let t0 = std::time::Instant::now();
+        let rho = self.partition(g, layer_ranges)?;
+        let partition_time = t0.elapsed();
+        mapping::validate(g, &rho, &self.hw)?;
+
+        // ---- quotient ----
+        let gp = push_forward(g, &rho).graph;
+
+        // ---- place (+ refine) ----
+        let t1 = std::time::Instant::now();
+        let (mut placement, mut refine_stats) = match self.placer {
+            PlacerKind::Hilbert => (hilbert::place(&gp, &self.hw), None),
+            PlacerKind::MinDistance => (mindist::place(&gp, &self.hw), None),
+            PlacerKind::Spectral => {
+                let pl = match runtime {
+                    Some(rt) => spectral::place_with_engine(
+                        &gp,
+                        &self.hw,
+                        &crate::runtime::SpectralEngine { runtime: rt },
+                    ),
+                    None => spectral::place(&gp, &self.hw),
+                };
+                (pl, None)
+            }
+        };
+        if self.refiner == RefinerKind::ForceDirected && self.placer != PlacerKind::MinDistance {
+            // Open a PJRT force-field session once (weight matrix stays
+            // resident); each sweep's batch evaluation then only ships the
+            // (N, 2) coordinates.
+            let session = runtime
+                .filter(|rt| gp.num_nodes() <= rt.force_capacity())
+                .and_then(|rt| {
+                    let w = crate::runtime::dense_flow_matrix(&gp);
+                    rt.force_session(&w, gp.num_nodes()).ok()
+                });
+            let batch = session
+                .as_ref()
+                .map(|s| move |coords: &[(u16, u16)]| s.eval(coords).ok());
+            let stats = match &batch {
+                Some(b) => force::refine(&gp, &self.hw, &mut placement, self.force_params, Some(b)),
+                None => force::refine(&gp, &self.hw, &mut placement, self.force_params, None),
+            };
+            refine_stats = Some(stats);
+        }
+        let placement_time = t1.elapsed();
+        placement
+            .validate(&self.hw)
+            .map_err(MapError::ConstraintViolated)?;
+
+        // ---- evaluate ----
+        let metrics = evaluate(&gp, &placement, &self.hw);
+        let sr = (
+            properties::synaptic_reuse(g, &rho, Mean::Arithmetic),
+            properties::synaptic_reuse(g, &rho, Mean::Geometric),
+        );
+        let cl = (
+            properties::connections_locality(&gp, &placement, &self.hw, Mean::Arithmetic),
+            properties::connections_locality(&gp, &placement, &self.hw, Mean::Geometric),
+        );
+
+        Ok(MappingResult {
+            rho,
+            gp,
+            placement,
+            metrics,
+            sr,
+            cl,
+            partition_time,
+            placement_time,
+            refine_stats,
+        })
+    }
+
+    fn partition(
+        &self,
+        g: &Hypergraph,
+        layer_ranges: Option<&[(u32, u32)]>,
+    ) -> Result<Partitioning, MapError> {
+        use mapping::sequential::SeqOrder;
+        match self.partitioner {
+            PartitionerKind::Hierarchical => {
+                mapping::hierarchical::partition(g, &self.hw, self.hier_params)
+            }
+            PartitionerKind::HyperedgeOverlap => mapping::overlap::partition(g, &self.hw),
+            PartitionerKind::Sequential => {
+                // layered nets: natural ids are already layer-major
+                let order = if layer_ranges.is_some() { SeqOrder::Natural } else { SeqOrder::Greedy };
+                mapping::sequential::partition(g, &self.hw, order)
+            }
+            PartitionerKind::SequentialUnordered => {
+                mapping::sequential::partition(g, &self.hw, SeqOrder::Natural)
+            }
+            PartitionerKind::EdgeMap => mapping::edgemap::partition(g, &self.hw),
+            PartitionerKind::Streaming => {
+                mapping::streaming::partition(g, &self.hw, Default::default())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::snn;
+
+    fn small_net() -> snn::Network {
+        snn::by_name("lenet", 0.12, 3).unwrap()
+    }
+
+    fn small_hw() -> NmhConfig {
+        NmhConfig::small().scaled(0.05) // force multiple partitions
+    }
+
+    #[test]
+    fn full_pipeline_all_partitioners() {
+        let net = small_net();
+        for pk in PartitionerKind::ALL {
+            let res = MapperPipeline::new(small_hw())
+                .partitioner(pk)
+                .placer(PlacerKind::Hilbert)
+                .refiner(RefinerKind::None)
+                .run(&net.graph, net.layer_ranges.as_deref())
+                .unwrap_or_else(|e| panic!("{}: {e}", pk.name()));
+            assert!(res.rho.num_parts >= 1, "{}", pk.name());
+            assert!(res.metrics.energy > 0.0);
+            assert!(res.sr.0 >= 1.0, "{} reuse {}", pk.name(), res.sr.0);
+        }
+    }
+
+    #[test]
+    fn full_pipeline_all_placers() {
+        let net = small_net();
+        for pl in PlacerKind::ALL {
+            let res = MapperPipeline::new(small_hw())
+                .partitioner(PartitionerKind::Sequential)
+                .placer(pl)
+                .refiner(RefinerKind::None)
+                .run(&net.graph, net.layer_ranges.as_deref())
+                .unwrap_or_else(|e| panic!("{}: {e}", pl.name()));
+            res.placement.validate(&small_hw()).unwrap();
+            assert!(res.metrics.elp > 0.0);
+        }
+    }
+
+    #[test]
+    fn force_refinement_improves_or_preserves() {
+        let net = small_net();
+        let base = MapperPipeline::new(small_hw())
+            .partitioner(PartitionerKind::HyperedgeOverlap)
+            .placer(PlacerKind::Hilbert)
+            .refiner(RefinerKind::None)
+            .run(&net.graph, None)
+            .unwrap();
+        let refined = MapperPipeline::new(small_hw())
+            .partitioner(PartitionerKind::HyperedgeOverlap)
+            .placer(PlacerKind::Hilbert)
+            .refiner(RefinerKind::ForceDirected)
+            .run(&net.graph, None)
+            .unwrap();
+        assert!(refined.metrics.wirelength <= base.metrics.wirelength + 1e-9);
+        let rs = refined.refine_stats.unwrap();
+        assert!(rs.final_wirelength <= rs.initial_wirelength + 1e-9);
+    }
+
+    #[test]
+    fn kind_parsing_roundtrip() {
+        for pk in PartitionerKind::ALL {
+            assert_eq!(PartitionerKind::parse(pk.name()), Some(pk));
+        }
+        for pl in PlacerKind::ALL {
+            assert_eq!(PlacerKind::parse(pl.name()), Some(pl));
+        }
+        assert_eq!(RefinerKind::parse("force"), Some(RefinerKind::ForceDirected));
+        assert_eq!(PartitionerKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn report_contains_key_metrics() {
+        let net = small_net();
+        let res = MapperPipeline::new(small_hw())
+            .partitioner(PartitionerKind::Sequential)
+            .placer(PlacerKind::Hilbert)
+            .refiner(RefinerKind::None)
+            .run(&net.graph, net.layer_ranges.as_deref())
+            .unwrap();
+        let rep = res.report();
+        for key in ["partitions", "connectivity", "energy", "ELP", "synaptic reuse"] {
+            assert!(rep.contains(key), "missing {key} in report");
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Report emission: CSV files, markdown tables and the per-figure summary
+//! statistics quoted in EXPERIMENTS.md.
+
+use super::experiment::ExperimentRow;
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+
+/// Write rows as CSV.
+pub fn write_csv(rows: &[ExperimentRow], path: &Path) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", ExperimentRow::CSV_HEADER)?;
+    for r in rows {
+        writeln!(f, "{}", r.to_csv())?;
+    }
+    f.flush()
+}
+
+/// Render rows as a GitHub-markdown table (the EXPERIMENTS.md format).
+pub fn to_markdown(rows: &[ExperimentRow]) -> String {
+    let mut s = String::new();
+    s.push_str("| network | partitioner | placer+refiner | parts | connectivity | energy (pJ) | latency (ns) | congestion | ELP | t_part (s) | t_place (s) |\n");
+    s.push_str("|---|---|---|---|---|---|---|---|---|---|---|\n");
+    for r in rows {
+        s.push_str(&format!(
+            "| {} | {} | {}+{} | {} | {:.3e} | {:.3e} | {:.3e} | {:.3e} | {:.3e} | {:.2} | {:.2} |\n",
+            r.network,
+            r.partitioner,
+            r.placer,
+            r.refiner,
+            r.partitions,
+            r.connectivity,
+            r.energy,
+            r.latency,
+            r.congestion,
+            r.elp,
+            r.partition_time.as_secs_f64(),
+            r.placement_time.as_secs_f64(),
+        ));
+    }
+    s
+}
+
+/// JSON dump of the rows (machine-readable archive of a run).
+pub fn to_json(rows: &[ExperimentRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("network", Json::Str(r.network.clone())),
+                    ("nodes", Json::Num(r.nodes as f64)),
+                    ("connections", Json::Num(r.connections as f64)),
+                    ("partitioner", Json::Str(r.partitioner.into())),
+                    ("placer", Json::Str(r.placer.into())),
+                    ("refiner", Json::Str(r.refiner.into())),
+                    ("partitions", Json::Num(r.partitions as f64)),
+                    ("connectivity", Json::Num(r.connectivity)),
+                    ("energy", Json::Num(r.energy)),
+                    ("latency", Json::Num(r.latency)),
+                    ("congestion", Json::Num(r.congestion)),
+                    ("elp", Json::Num(r.elp)),
+                    ("sr_arith", Json::Num(r.sr_arith)),
+                    ("sr_geo", Json::Num(r.sr_geo)),
+                    ("cl_arith", Json::Num(r.cl_arith)),
+                    ("cl_geo", Json::Num(r.cl_geo)),
+                    ("partition_time_s", Json::Num(r.partition_time.as_secs_f64())),
+                    ("placement_time_s", Json::Num(r.placement_time.as_secs_f64())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Geometric-mean ratio of `metric` between two partitioners across
+/// common (network, placer, refiner) cells — the §V-B headline numbers
+/// ("overlap reaches 0.52-1.46× of hierarchical", "EdgeMap 8.5× worse").
+pub fn ratio_summary(
+    rows: &[ExperimentRow],
+    partitioner_a: &str,
+    partitioner_b: &str,
+    metric: impl Fn(&ExperimentRow) -> f64,
+) -> Option<f64> {
+    let mut logs = Vec::new();
+    for a in rows.iter().filter(|r| r.partitioner == partitioner_a && r.error.is_none()) {
+        if let Some(b) = rows.iter().find(|r| {
+            r.partitioner == partitioner_b
+                && r.network == a.network
+                && r.placer == a.placer
+                && r.refiner == a.refiner
+                && r.error.is_none()
+        }) {
+            let (ma, mb) = (metric(a), metric(b));
+            if ma > 0.0 && mb > 0.0 && ma.is_finite() && mb.is_finite() {
+                logs.push((ma / mb).ln());
+            }
+        }
+    }
+    if logs.is_empty() {
+        None
+    } else {
+        Some((logs.iter().sum::<f64>() / logs.len() as f64).exp())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn row(net: &str, pk: &'static str, conn: f64) -> ExperimentRow {
+        ExperimentRow {
+            network: net.into(),
+            nodes: 10,
+            connections: 20,
+            partitioner: pk,
+            placer: "hilbert",
+            refiner: "none",
+            partitions: 2,
+            connectivity: conn,
+            energy: 1.0,
+            latency: 2.0,
+            congestion: 3.0,
+            elp: 2.0,
+            sr_arith: 1.5,
+            sr_geo: 1.2,
+            cl_arith: 4.0,
+            cl_geo: 3.0,
+            partition_time: Duration::from_millis(10),
+            placement_time: Duration::from_millis(5),
+            error: None,
+        }
+    }
+
+    #[test]
+    fn ratio_summary_geomean() {
+        let rows = vec![
+            row("a", "overlap", 2.0),
+            row("a", "hierarchical", 1.0),
+            row("b", "overlap", 8.0),
+            row("b", "hierarchical", 1.0),
+        ];
+        // ratios 2 and 8 -> geomean 4
+        let r = ratio_summary(&rows, "overlap", "hierarchical", |r| r.connectivity).unwrap();
+        assert!((r - 4.0).abs() < 1e-9);
+        assert!(ratio_summary(&rows, "overlap", "missing", |r| r.connectivity).is_none());
+    }
+
+    #[test]
+    fn markdown_and_json_render() {
+        let rows = vec![row("a", "overlap", 2.0)];
+        let md = to_markdown(&rows);
+        assert!(md.contains("| a | overlap |"));
+        let js = to_json(&rows).to_string();
+        assert!(js.contains("\"network\":\"a\""));
+    }
+
+    #[test]
+    fn csv_writes_file() {
+        let rows = vec![row("a", "overlap", 2.0)];
+        let dir = std::env::temp_dir().join("snnmap_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rows.csv");
+        write_csv(&rows, &p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("network,"));
+        assert_eq!(text.lines().count(), 2);
+    }
+}

@@ -1,0 +1,185 @@
+//! Neuromorphic hardware model (paper §II-B, Eq. 2 and Table II).
+//!
+//! A chip is a 2D lattice of cores; each core accepts at most `c_npc`
+//! neurons, `c_apc` distinct inbound axons (h-edges), and `c_spc` total
+//! inbound synapses (connections). Spike movement costs come from Intel
+//! Loihi measurements ("small") and from [7] ("large").
+
+/// Per-hop router/wire energy and latency (Table II left).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NocCosts {
+    /// Energy for a spike's routing, pJ.
+    pub e_r: f64,
+    /// Latency for a spike's routing, ns.
+    pub l_r: f64,
+    /// Energy for a spike's transmission between two cores, pJ.
+    pub e_t: f64,
+    /// Latency for a spike's transmission between two cores, ns.
+    pub l_t: f64,
+}
+
+impl NocCosts {
+    /// Loihi-derived reference costs (paper Table II).
+    pub const fn reference() -> Self {
+        NocCosts {
+            e_r: 1.7,
+            l_r: 2.1,
+            e_t: 3.5,
+            l_t: 5.3,
+        }
+    }
+}
+
+/// Hardware configuration: lattice dimensions + per-core constraints.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NmhConfig {
+    /// Lattice width (cores).
+    pub width: usize,
+    /// Lattice height (cores).
+    pub height: usize,
+    /// Max neurons per core.
+    pub c_npc: usize,
+    /// Max distinct inbound axons (h-edges) per core.
+    pub c_apc: usize,
+    /// Max inbound synapses (connections) per core.
+    pub c_spc: usize,
+    /// Spike-movement cost model.
+    pub costs: NocCosts,
+}
+
+impl NmhConfig {
+    /// "small" preset — Loihi-like (Table II).
+    pub const fn small() -> Self {
+        NmhConfig {
+            width: 64,
+            height: 64,
+            c_npc: 1024,
+            c_apc: 4096,
+            c_spc: 16384,
+            costs: NocCosts::reference(),
+        }
+    }
+
+    /// "large" preset — [7]-like (Table II).
+    pub const fn large() -> Self {
+        NmhConfig {
+            width: 64,
+            height: 64,
+            c_npc: 4096,
+            c_apc: 65536,
+            c_spc: 262144,
+            costs: NocCosts::reference(),
+        }
+    }
+
+    /// Parse a preset by name.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "small" => Some(Self::small()),
+            "large" => Some(Self::large()),
+            _ => None,
+        }
+    }
+
+    /// The paper's rule of thumb: "small" up to 2^26 connections, then
+    /// "large" (bigger models exceed 4096 inbound axons per neuron group).
+    pub fn for_connections(connections: usize) -> Self {
+        if connections <= 1 << 26 {
+            Self::small()
+        } else {
+            Self::large()
+        }
+    }
+
+    /// Total number of cores |H|.
+    #[inline]
+    pub fn num_cores(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// Core coordinate from linear index (row-major).
+    #[inline]
+    pub fn coord(&self, idx: usize) -> (u16, u16) {
+        debug_assert!(idx < self.num_cores());
+        ((idx % self.width) as u16, (idx / self.width) as u16)
+    }
+
+    /// Linear index from coordinate.
+    #[inline]
+    pub fn index(&self, x: u16, y: u16) -> usize {
+        debug_assert!((x as usize) < self.width && (y as usize) < self.height);
+        y as usize * self.width + x as usize
+    }
+
+    /// Is `(x, y)` inside the lattice?
+    #[inline]
+    pub fn contains(&self, x: i32, y: i32) -> bool {
+        x >= 0 && y >= 0 && (x as usize) < self.width && (y as usize) < self.height
+    }
+
+    /// Manhattan distance between two cores.
+    #[inline]
+    pub fn manhattan(a: (u16, u16), b: (u16, u16)) -> u32 {
+        (a.0 as i32 - b.0 as i32).unsigned_abs() + (a.1 as i32 - b.1 as i32).unsigned_abs()
+    }
+
+    /// Scale per-core constraints by `f` (for scaled-down experiments that
+    /// keep partition counts representative; see DESIGN.md §5).
+    pub fn scaled(&self, f: f64) -> Self {
+        let mut c = *self;
+        c.c_npc = ((self.c_npc as f64 * f) as usize).max(1);
+        c.c_apc = ((self.c_apc as f64 * f) as usize).max(1);
+        c.c_spc = ((self.c_spc as f64 * f) as usize).max(1);
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table2() {
+        let s = NmhConfig::small();
+        assert_eq!((s.c_npc, s.c_apc, s.c_spc), (1024, 4096, 16384));
+        assert_eq!((s.width, s.height), (64, 64));
+        let l = NmhConfig::large();
+        assert_eq!((l.c_npc, l.c_apc, l.c_spc), (4096, 65536, 262144));
+        let c = NocCosts::reference();
+        assert_eq!((c.e_r, c.l_r, c.e_t, c.l_t), (1.7, 2.1, 3.5, 5.3));
+    }
+
+    #[test]
+    fn preset_lookup_and_threshold() {
+        assert_eq!(NmhConfig::preset("small"), Some(NmhConfig::small()));
+        assert_eq!(NmhConfig::preset("nope"), None);
+        assert_eq!(NmhConfig::for_connections(1 << 20), NmhConfig::small());
+        assert_eq!(NmhConfig::for_connections((1 << 26) + 1), NmhConfig::large());
+    }
+
+    #[test]
+    fn coord_index_roundtrip() {
+        let c = NmhConfig::small();
+        for idx in [0, 1, 63, 64, 4095] {
+            let (x, y) = c.coord(idx);
+            assert_eq!(c.index(x, y), idx);
+        }
+        assert!(c.contains(0, 0) && c.contains(63, 63));
+        assert!(!c.contains(-1, 0) && !c.contains(64, 0));
+    }
+
+    #[test]
+    fn manhattan_distance() {
+        assert_eq!(NmhConfig::manhattan((0, 0), (3, 4)), 7);
+        assert_eq!(NmhConfig::manhattan((5, 5), (5, 5)), 0);
+        assert_eq!(NmhConfig::manhattan((10, 2), (2, 10)), 16);
+    }
+
+    #[test]
+    fn scaling_clamps_to_one() {
+        let c = NmhConfig::small().scaled(1e-9);
+        assert_eq!((c.c_npc, c.c_apc, c.c_spc), (1, 1, 1));
+        let c = NmhConfig::small().scaled(0.5);
+        assert_eq!(c.c_npc, 512);
+    }
+}

@@ -1,0 +1,184 @@
+//! Incremental hypergraph construction.
+//!
+//! The builder accepts h-edges in any order, sorts/dedups destination sets,
+//! drops empty h-edges, and assembles the CSR payload plus both auxiliary
+//! node indices in two linear passes.
+
+use super::{EdgeId, Hypergraph, NodeId};
+
+/// Builder for [`Hypergraph`].
+#[derive(Debug, Default)]
+pub struct HypergraphBuilder {
+    n_nodes: usize,
+    sources: Vec<NodeId>,
+    dst_off: Vec<usize>,
+    dsts: Vec<NodeId>,
+    weights: Vec<f32>,
+}
+
+impl HypergraphBuilder {
+    /// Start a builder over `n_nodes` nodes (ids `0..n_nodes`).
+    pub fn new(n_nodes: usize) -> Self {
+        HypergraphBuilder {
+            n_nodes,
+            sources: Vec::new(),
+            dst_off: vec![0],
+            dsts: Vec::new(),
+            weights: Vec::new(),
+        }
+    }
+
+    /// Reserve capacity for `edges` h-edges totalling `connections`
+    /// destinations (avoids reallocation churn on large generators).
+    pub fn reserve(&mut self, edges: usize, connections: usize) {
+        self.sources.reserve(edges);
+        self.dst_off.reserve(edges);
+        self.weights.reserve(edges);
+        self.dsts.reserve(connections);
+    }
+
+    /// Add the h-edge `(source, dsts)` with spike frequency `weight`.
+    /// Destinations are sorted and deduplicated; empty destination sets are
+    /// dropped (an axon reaching no neuron transmits nothing).
+    pub fn add_edge(&mut self, source: NodeId, mut dsts: Vec<NodeId>, weight: f32) {
+        dsts.sort_unstable();
+        dsts.dedup();
+        self.add_edge_sorted(source, &dsts, weight);
+    }
+
+    /// Add an h-edge whose destination slice is already sorted + unique.
+    pub fn add_edge_sorted(&mut self, source: NodeId, dsts: &[NodeId], weight: f32) {
+        debug_assert!(dsts.windows(2).all(|w| w[0] < w[1]), "dsts must be sorted unique");
+        if dsts.is_empty() {
+            return;
+        }
+        debug_assert!((source as usize) < self.n_nodes);
+        debug_assert!(weight.is_finite() && weight >= 0.0);
+        self.sources.push(source);
+        self.dsts.extend_from_slice(dsts);
+        self.dst_off.push(self.dsts.len());
+        self.weights.push(weight);
+    }
+
+    /// Number of h-edges added so far.
+    pub fn num_edges(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Finalize: build the inbound/outbound CSR indices.
+    pub fn build(self) -> Hypergraph {
+        let n = self.n_nodes;
+        let e = self.sources.len();
+
+        // Outbound: counting sort of edge ids by source.
+        let mut out_off = vec![0usize; n + 1];
+        for &s in &self.sources {
+            out_off[s as usize + 1] += 1;
+        }
+        for i in 0..n {
+            out_off[i + 1] += out_off[i];
+        }
+        let mut out_edges = vec![0 as EdgeId; e];
+        let mut cursor = out_off.clone();
+        for (eid, &s) in self.sources.iter().enumerate() {
+            out_edges[cursor[s as usize]] = eid as EdgeId;
+            cursor[s as usize] += 1;
+        }
+
+        // Inbound: counting sort of edge ids by destination membership.
+        let mut in_off = vec![0usize; n + 1];
+        for &d in &self.dsts {
+            in_off[d as usize + 1] += 1;
+        }
+        for i in 0..n {
+            in_off[i + 1] += in_off[i];
+        }
+        let mut in_edges = vec![0 as EdgeId; self.dsts.len()];
+        let mut cursor = in_off.clone();
+        for eid in 0..e {
+            for &d in &self.dsts[self.dst_off[eid]..self.dst_off[eid + 1]] {
+                in_edges[cursor[d as usize]] = eid as EdgeId;
+                cursor[d as usize] += 1;
+            }
+        }
+
+        Hypergraph {
+            n_nodes: n,
+            sources: self.sources,
+            dst_off: self.dst_off,
+            dsts: self.dsts,
+            weights: self.weights,
+            in_off,
+            in_edges,
+            out_off,
+            out_edges,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedups_and_sorts_destinations() {
+        let mut b = HypergraphBuilder::new(5);
+        b.add_edge(0, vec![3, 1, 3, 2, 1], 1.0);
+        let g = b.build();
+        assert_eq!(g.dsts(0), &[1, 2, 3]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn drops_empty_edges() {
+        let mut b = HypergraphBuilder::new(3);
+        b.add_edge(0, vec![], 1.0);
+        b.add_edge(1, vec![2], 1.0);
+        let g = b.build();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.source(0), 1);
+    }
+
+    #[test]
+    fn indices_sorted_within_node() {
+        // inbound/outbound edge lists come out in ascending edge id order
+        let mut b = HypergraphBuilder::new(4);
+        b.add_edge(0, vec![3], 1.0);
+        b.add_edge(1, vec![3], 1.0);
+        b.add_edge(2, vec![3], 1.0);
+        let g = b.build();
+        assert_eq!(g.inbound(3), &[0, 1, 2]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn multi_outbound_allowed() {
+        // quotient graphs have several h-edges per source
+        let mut b = HypergraphBuilder::new(3);
+        b.add_edge(0, vec![1], 1.0);
+        b.add_edge(0, vec![2], 2.0);
+        let g = b.build();
+        assert_eq!(g.outbound(0), &[0, 1]);
+        assert!(!g.is_single_axon());
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn large_counting_sort_consistency() {
+        let mut b = HypergraphBuilder::new(1000);
+        let mut rng = crate::util::rng::Pcg64::seeded(42);
+        for s in 0..1000u32 {
+            let k = rng.range(1, 8);
+            let dsts: Vec<u32> = (0..k).map(|_| rng.below(1000) as u32).collect();
+            b.add_edge(s, dsts, rng.next_f32() + 0.01);
+        }
+        let g = b.build();
+        g.validate().unwrap();
+        // spot-check inbound symmetry
+        for e in g.edge_ids() {
+            for &d in g.dsts(e) {
+                assert!(g.inbound(d).contains(&e));
+            }
+        }
+    }
+}

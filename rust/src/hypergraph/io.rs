@@ -1,0 +1,213 @@
+//! H-graph (de)serialization.
+//!
+//! Binary format `SNNHG1` (little-endian): header counts, then the flat
+//! CSR arrays. Node indices are rebuilt on load (cheaper to recompute than
+//! to store). A human-readable text format (one h-edge per line:
+//! `src w d1 d2 ...`) supports tests, fixtures and interchange with the
+//! paper's planned open-source benchmark hypergraphs.
+
+use super::{Hypergraph, HypergraphBuilder};
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"SNNHG1";
+
+/// Write `g` to `path` in the binary format.
+pub fn save_binary(g: &Hypergraph, path: &Path) -> io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    write_u64(&mut w, g.num_nodes() as u64)?;
+    write_u64(&mut w, g.num_edges() as u64)?;
+    write_u64(&mut w, g.num_connections() as u64)?;
+    for &s in &g.sources {
+        write_u32(&mut w, s)?;
+    }
+    for &o in &g.dst_off {
+        write_u64(&mut w, o as u64)?;
+    }
+    for &d in &g.dsts {
+        write_u32(&mut w, d)?;
+    }
+    for &x in &g.weights {
+        write_u32(&mut w, x.to_bits())?;
+    }
+    w.flush()
+}
+
+/// Load a binary h-graph from `path`.
+pub fn load_binary(path: &Path) -> io::Result<Hypergraph> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 6];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let n = read_u64(&mut r)? as usize;
+    let e = read_u64(&mut r)? as usize;
+    let c = read_u64(&mut r)? as usize;
+    let mut sources = Vec::with_capacity(e);
+    for _ in 0..e {
+        sources.push(read_u32(&mut r)?);
+    }
+    let mut dst_off = Vec::with_capacity(e + 1);
+    for _ in 0..=e {
+        dst_off.push(read_u64(&mut r)? as usize);
+    }
+    let mut dsts = Vec::with_capacity(c);
+    for _ in 0..c {
+        dsts.push(read_u32(&mut r)?);
+    }
+    let mut weights = Vec::with_capacity(e);
+    for _ in 0..e {
+        weights.push(f32::from_bits(read_u32(&mut r)?));
+    }
+    // Rebuild through the builder to regenerate node indices and validate.
+    let mut b = HypergraphBuilder::new(n);
+    b.reserve(e, c);
+    for i in 0..e {
+        let slice = &dsts[dst_off[i]..dst_off[i + 1]];
+        b.add_edge_sorted(sources[i], slice, weights[i]);
+    }
+    let g = b.build();
+    g.validate()
+        .map_err(|m| io::Error::new(io::ErrorKind::InvalidData, m))?;
+    Ok(g)
+}
+
+/// Write the text format: first line `n`, then one line per h-edge.
+pub fn save_text(g: &Hypergraph, path: &Path) -> io::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "{}", g.num_nodes())?;
+    for e in g.edge_ids() {
+        write!(w, "{} {}", g.source(e), g.weight(e))?;
+        for &d in g.dsts(e) {
+            write!(w, " {}", d)?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()
+}
+
+/// Load the text format.
+pub fn load_text(path: &Path) -> io::Result<Hypergraph> {
+    let f = std::fs::File::open(path)?;
+    let r = BufReader::new(f);
+    let mut lines = r.lines();
+    let n: usize = lines
+        .next()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "empty file"))??
+        .trim()
+        .parse()
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad node count"))?;
+    let mut b = HypergraphBuilder::new(n);
+    for line in lines {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let bad = || io::Error::new(io::ErrorKind::InvalidData, "bad edge line");
+        let src: u32 = it.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
+        let w: f32 = it.next().ok_or_else(bad)?.parse().map_err(|_| bad())?;
+        let dsts: Result<Vec<u32>, _> = it.map(|t| t.parse::<u32>()).collect();
+        let dsts = dsts.map_err(|_| bad())?;
+        b.add_edge(src, dsts, w);
+    }
+    Ok(b.build())
+}
+
+fn write_u32<W: Write>(w: &mut W, x: u32) -> io::Result<()> {
+    w.write_all(&x.to_le_bytes())
+}
+fn write_u64<W: Write>(w: &mut W, x: u64) -> io::Result<()> {
+    w.write_all(&x.to_le_bytes())
+}
+fn read_u32<R: Read>(r: &mut R) -> io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+fn read_u64<R: Read>(r: &mut R) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_graph(seed: u64) -> Hypergraph {
+        let mut rng = Pcg64::seeded(seed);
+        let n = 200;
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            if rng.bernoulli(0.9) {
+                let k = rng.range(1, 10);
+                let dsts: Vec<u32> = (0..k).map(|_| rng.below(n) as u32).collect();
+                b.add_edge(s, dsts, rng.next_f32() * 2.0 + 0.001);
+            }
+        }
+        b.build()
+    }
+
+    fn graphs_equal(a: &Hypergraph, b: &Hypergraph) -> bool {
+        a.num_nodes() == b.num_nodes()
+            && a.sources == b.sources
+            && a.dst_off == b.dst_off
+            && a.dsts == b.dsts
+            && a.weights == b.weights
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = random_graph(11);
+        let dir = std::env::temp_dir().join("snnmap_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.hg");
+        save_binary(&g, &p).unwrap();
+        let g2 = load_binary(&p).unwrap();
+        assert!(graphs_equal(&g, &g2));
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let g = random_graph(13);
+        let dir = std::env::temp_dir().join("snnmap_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.txt");
+        save_text(&g, &p).unwrap();
+        let g2 = load_text(&p).unwrap();
+        assert_eq!(g.num_nodes(), g2.num_nodes());
+        assert_eq!(g.num_edges(), g2.num_edges());
+        assert_eq!(g.dsts, g2.dsts);
+        for e in g.edge_ids() {
+            assert!((g.weight(e) - g2.weight(e)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("snnmap_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.hg");
+        std::fs::write(&p, b"NOTMAGIC").unwrap();
+        assert!(load_binary(&p).is_err());
+    }
+
+    #[test]
+    fn text_skips_comments_and_blanks() {
+        let dir = std::env::temp_dir().join("snnmap_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("comments.txt");
+        std::fs::write(&p, "3\n# comment\n\n0 1.5 1 2\n").unwrap();
+        let g = load_text(&p).unwrap();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.dsts(0), &[1, 2]);
+    }
+}

@@ -1,0 +1,244 @@
+//! Directed single-source hypergraph (paper §II-A, Eq. 1).
+//!
+//! A SNN is modeled as `G_S = (N, E_S, w_S)` where every h-edge
+//! `e = (s, D)` bundles one neuron's axon: source `s`, destination set `D`,
+//! and a spike-frequency weight. For SNN graphs there is exactly one
+//! outbound h-edge per neuron; the quotient (partitioned) h-graph `G_P`
+//! (see [`quotient`]) relaxes this to arbitrarily many.
+//!
+//! Storage is flat CSR: h-edges own contiguous destination slices, and two
+//! auxiliary CSR indices give O(1) access to a node's inbound h-edge set
+//! and outbound h-edge list — the exact data layout the paper's §IV
+//! algorithms assume ("two auxiliary indices provide constant-time access
+//! to the set of h-edges inbound to a node and to its outbound h-edge").
+
+pub mod builder;
+pub mod io;
+pub mod quotient;
+pub mod stats;
+
+pub use builder::HypergraphBuilder;
+
+/// Node identifier (consecutive integers from 0).
+pub type NodeId = u32;
+/// H-edge identifier (consecutive integers from 0).
+pub type EdgeId = u32;
+
+/// Immutable directed single-source hypergraph in CSR form.
+#[derive(Clone, Debug, Default)]
+pub struct Hypergraph {
+    pub(crate) n_nodes: usize,
+    /// Source node of each h-edge.
+    pub(crate) sources: Vec<NodeId>,
+    /// Destination CSR offsets: edge `e` owns `dsts[dst_off[e]..dst_off[e+1]]`.
+    pub(crate) dst_off: Vec<usize>,
+    pub(crate) dsts: Vec<NodeId>,
+    /// Spike-frequency weight of each h-edge.
+    pub(crate) weights: Vec<f32>,
+    /// Inbound index: node `n` is a destination of `in_edges[in_off[n]..in_off[n+1]]`.
+    pub(crate) in_off: Vec<usize>,
+    pub(crate) in_edges: Vec<EdgeId>,
+    /// Outbound index: node `n` sources `out_edges[out_off[n]..out_off[n+1]]`.
+    pub(crate) out_off: Vec<usize>,
+    pub(crate) out_edges: Vec<EdgeId>,
+}
+
+impl Hypergraph {
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    /// Number of h-edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Total connection (synapse) count: Σ_e |D_e|.
+    #[inline]
+    pub fn num_connections(&self) -> usize {
+        self.dsts.len()
+    }
+
+    /// Mean h-edge cardinality `d` (paper Table III column).
+    pub fn mean_cardinality(&self) -> f64 {
+        if self.num_edges() == 0 {
+            0.0
+        } else {
+            self.num_connections() as f64 / self.num_edges() as f64
+        }
+    }
+
+    /// Source node of h-edge `e`.
+    #[inline]
+    pub fn source(&self, e: EdgeId) -> NodeId {
+        self.sources[e as usize]
+    }
+
+    /// Destination slice of h-edge `e`.
+    #[inline]
+    pub fn dsts(&self, e: EdgeId) -> &[NodeId] {
+        &self.dsts[self.dst_off[e as usize]..self.dst_off[e as usize + 1]]
+    }
+
+    /// Cardinality |D| of h-edge `e`.
+    #[inline]
+    pub fn cardinality(&self, e: EdgeId) -> usize {
+        self.dst_off[e as usize + 1] - self.dst_off[e as usize]
+    }
+
+    /// Spike-frequency weight of h-edge `e`.
+    #[inline]
+    pub fn weight(&self, e: EdgeId) -> f32 {
+        self.weights[e as usize]
+    }
+
+    /// H-edges having node `n` among their destinations (the node's
+    /// distinct inbound axons).
+    #[inline]
+    pub fn inbound(&self, n: NodeId) -> &[EdgeId] {
+        &self.in_edges[self.in_off[n as usize]..self.in_off[n as usize + 1]]
+    }
+
+    /// H-edges sourced at node `n`. For SNN graphs this has length <= 1
+    /// (one axon per neuron); quotient graphs may have many.
+    #[inline]
+    pub fn outbound(&self, n: NodeId) -> &[EdgeId] {
+        &self.out_edges[self.out_off[n as usize]..self.out_off[n as usize + 1]]
+    }
+
+    /// The single outbound h-edge of an SNN neuron, if any.
+    #[inline]
+    pub fn axon(&self, n: NodeId) -> Option<EdgeId> {
+        let o = self.outbound(n);
+        debug_assert!(o.len() <= 1, "axon() called on a multi-outbound h-graph");
+        o.first().copied()
+    }
+
+    /// Iterator over all h-edge ids.
+    pub fn edge_ids(&self) -> impl Iterator<Item = EdgeId> + '_ {
+        (0..self.num_edges() as u32).map(|e| e as EdgeId)
+    }
+
+    /// Iterator over all node ids.
+    pub fn node_ids(&self) -> impl Iterator<Item = NodeId> + '_ {
+        (0..self.n_nodes as u32).map(|n| n as NodeId)
+    }
+
+    /// True iff every node has at most one outbound h-edge (SNN property).
+    pub fn is_single_axon(&self) -> bool {
+        (0..self.n_nodes).all(|n| self.out_off[n + 1] - self.out_off[n] <= 1)
+    }
+
+    /// Total inbound spike-frequency weight of a node.
+    pub fn inbound_weight(&self, n: NodeId) -> f64 {
+        self.inbound(n).iter().map(|&e| self.weight(e) as f64).sum()
+    }
+
+    /// Bytes of payload held (diagnostic).
+    pub fn memory_bytes(&self) -> usize {
+        self.sources.len() * 4
+            + self.dst_off.len() * 8
+            + self.dsts.len() * 4
+            + self.weights.len() * 4
+            + self.in_off.len() * 8
+            + self.in_edges.len() * 4
+            + self.out_off.len() * 8
+            + self.out_edges.len() * 4
+    }
+
+    /// Structural sanity check used by tests and after deserialization.
+    pub fn validate(&self) -> Result<(), String> {
+        let e = self.num_edges();
+        if self.dst_off.len() != e + 1 || self.weights.len() != e {
+            return Err("offset/weight array length mismatch".into());
+        }
+        if *self.dst_off.last().unwrap_or(&0) != self.dsts.len() {
+            return Err("dst_off does not cover dsts".into());
+        }
+        if self.in_off.len() != self.n_nodes + 1 || self.out_off.len() != self.n_nodes + 1 {
+            return Err("node index length mismatch".into());
+        }
+        for w in 0..e {
+            if self.dst_off[w] > self.dst_off[w + 1] {
+                return Err(format!("dst_off not monotone at {w}"));
+            }
+            if !self.weights[w].is_finite() || self.weights[w] < 0.0 {
+                return Err(format!("bad weight on edge {w}"));
+            }
+        }
+        let nn = self.n_nodes as u32;
+        if self.sources.iter().any(|&s| s >= nn) || self.dsts.iter().any(|&d| d >= nn) {
+            return Err("node id out of range".into());
+        }
+        // Inbound index must exactly mirror destination membership.
+        let mut in_count = vec![0usize; self.n_nodes];
+        for eid in 0..e {
+            let mut seen_prev = None;
+            for &d in self.dsts(eid as EdgeId) {
+                // destinations must be sorted & unique within an h-edge
+                if let Some(p) = seen_prev {
+                    if d <= p {
+                        return Err(format!("edge {eid} destinations unsorted/dup"));
+                    }
+                }
+                seen_prev = Some(d);
+                in_count[d as usize] += 1;
+            }
+        }
+        for n in 0..self.n_nodes {
+            if in_count[n] != self.in_off[n + 1] - self.in_off[n] {
+                return Err(format!("inbound index wrong at node {n}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny() -> Hypergraph {
+        // 4 nodes: 0 -> {1,2}, 1 -> {2,3}, 2 -> {3}
+        let mut b = HypergraphBuilder::new(4);
+        b.add_edge(0, vec![1, 2], 1.0);
+        b.add_edge(1, vec![2, 3], 2.0);
+        b.add_edge(2, vec![3], 0.5);
+        b.build()
+    }
+
+    #[test]
+    fn accessors() {
+        let g = tiny();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.num_connections(), 5);
+        assert_eq!(g.source(0), 0);
+        assert_eq!(g.dsts(1), &[2, 3]);
+        assert_eq!(g.weight(2), 0.5);
+        assert_eq!(g.cardinality(0), 2);
+        assert!((g.mean_cardinality() - 5.0 / 3.0).abs() < 1e-12);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn inbound_outbound_indices() {
+        let g = tiny();
+        assert_eq!(g.inbound(0), &[] as &[EdgeId]);
+        assert_eq!(g.inbound(2), &[0, 1]);
+        assert_eq!(g.inbound(3), &[1, 2]);
+        assert_eq!(g.axon(0), Some(0));
+        assert_eq!(g.axon(3), None);
+        assert!(g.is_single_axon());
+    }
+
+    #[test]
+    fn inbound_weight_sums() {
+        let g = tiny();
+        assert!((g.inbound_weight(3) - 2.5).abs() < 1e-6);
+        assert!((g.inbound_weight(0) - 0.0).abs() < 1e-12);
+    }
+}

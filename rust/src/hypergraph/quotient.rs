@@ -1,0 +1,194 @@
+//! Partition push-forward: `G_P` from `G_S` and ρ (paper §III, Eq. 3).
+//!
+//! Every h-edge `(s, D)` maps to `(ρ(s), {ρ(d) | d ∈ D})`; h-edges with
+//! identical source and destination set are then merged by summing their
+//! weights ("we may subsequently merge h-edges with identical source and
+//! destinations by adding together their weights").
+
+use super::{EdgeId, Hypergraph, HypergraphBuilder, NodeId};
+use std::collections::HashMap;
+
+/// A partitioning ρ: N → P plus its cardinality.
+#[derive(Clone, Debug)]
+pub struct Partitioning {
+    /// `assign[n]` = partition of node n.
+    pub assign: Vec<u32>,
+    /// Number of partitions |P|.
+    pub num_parts: usize,
+}
+
+impl Partitioning {
+    pub fn new(assign: Vec<u32>, num_parts: usize) -> Self {
+        debug_assert!(assign.iter().all(|&p| (p as usize) < num_parts));
+        Partitioning { assign, num_parts }
+    }
+
+    /// Identity partitioning (each node its own partition) — useful for
+    /// treating an unpartitioned graph uniformly in the metric engine.
+    pub fn identity(n: usize) -> Self {
+        Partitioning {
+            assign: (0..n as u32).collect(),
+            num_parts: n,
+        }
+    }
+
+    /// Partition sizes |ρ^{-1}(p)|.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.num_parts];
+        for &p in &self.assign {
+            s[p as usize] += 1;
+        }
+        s
+    }
+
+    /// Renumber partitions to drop empty ids (keeps relative order).
+    pub fn compacted(mut self) -> Self {
+        let sizes = self.sizes();
+        let mut remap = vec![u32::MAX; self.num_parts];
+        let mut next = 0u32;
+        for (p, &sz) in sizes.iter().enumerate() {
+            if sz > 0 {
+                remap[p] = next;
+                next += 1;
+            }
+        }
+        for p in self.assign.iter_mut() {
+            *p = remap[*p as usize];
+        }
+        self.num_parts = next as usize;
+        self
+    }
+}
+
+/// Result of the push-forward: the quotient h-graph and, for bookkeeping,
+/// the mapping from quotient h-edge to the original h-edges it merged.
+pub struct Quotient {
+    pub graph: Hypergraph,
+    /// For each quotient h-edge, the original edge ids folded into it.
+    pub merged_from: Vec<Vec<EdgeId>>,
+}
+
+/// Push `g` forward through `rho` (Eq. 3), merging duplicate h-edges.
+///
+/// Self-loops are preserved when a partition sends spikes to itself
+/// (intra-partition traffic is later priced at zero distance by the
+/// metric engine, matching core-internal replication).
+pub fn push_forward(g: &Hypergraph, rho: &Partitioning) -> Quotient {
+    assert_eq!(g.num_nodes(), rho.assign.len());
+    let mut builder = HypergraphBuilder::new(rho.num_parts);
+    builder.reserve(g.num_edges(), g.num_edges() * 2);
+
+    // Key: (source partition, destination partition set) -> quotient edge.
+    let mut merge: HashMap<(u32, Vec<NodeId>), usize> = HashMap::new();
+    let mut weights: Vec<f32> = Vec::new();
+    let mut keys: Vec<(u32, Vec<NodeId>)> = Vec::new();
+    let mut merged_from: Vec<Vec<EdgeId>> = Vec::new();
+
+    let mut dset: Vec<NodeId> = Vec::new();
+    for e in g.edge_ids() {
+        let ps = rho.assign[g.source(e) as usize];
+        dset.clear();
+        dset.extend(g.dsts(e).iter().map(|&d| rho.assign[d as usize]));
+        dset.sort_unstable();
+        dset.dedup();
+        let key = (ps, dset.clone());
+        match merge.get(&key) {
+            Some(&idx) => {
+                weights[idx] += g.weight(e);
+                merged_from[idx].push(e);
+            }
+            None => {
+                let idx = weights.len();
+                merge.insert(key.clone(), idx);
+                keys.push(key);
+                weights.push(g.weight(e));
+                merged_from.push(vec![e]);
+            }
+        }
+    }
+
+    for (idx, (ps, dset)) in keys.iter().enumerate() {
+        builder.add_edge_sorted(*ps, dset, weights[idx]);
+    }
+    Quotient {
+        graph: builder.build(),
+        merged_from,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> Hypergraph {
+        // 6 nodes in a chain, unit weights: i -> {i+1}
+        let mut b = HypergraphBuilder::new(6);
+        for i in 0..5u32 {
+            b.add_edge(i, vec![i + 1], 1.0);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn identity_partitioning_is_isomorphic() {
+        let g = chain();
+        let q = push_forward(&g, &Partitioning::identity(6));
+        assert_eq!(q.graph.num_nodes(), 6);
+        assert_eq!(q.graph.num_edges(), 5);
+        assert_eq!(q.graph.num_connections(), 5);
+    }
+
+    #[test]
+    fn merges_identical_edges_and_sums_weights() {
+        // two sources in the same partition hitting the same partition set
+        let mut b = HypergraphBuilder::new(4);
+        b.add_edge(0, vec![2, 3], 1.5);
+        b.add_edge(1, vec![2, 3], 2.5);
+        let g = b.build();
+        // rho: {0,1} -> 0, {2,3} -> 1
+        let rho = Partitioning::new(vec![0, 0, 1, 1], 2);
+        let q = push_forward(&g, &rho);
+        assert_eq!(q.graph.num_edges(), 1);
+        assert!((q.graph.weight(0) - 4.0).abs() < 1e-6);
+        assert_eq!(q.graph.dsts(0), &[1]);
+        assert_eq!(q.merged_from[0], vec![0, 1]);
+    }
+
+    #[test]
+    fn distinct_dst_sets_stay_separate() {
+        let mut b = HypergraphBuilder::new(4);
+        b.add_edge(0, vec![2], 1.0);
+        b.add_edge(1, vec![3], 1.0);
+        let g = b.build();
+        let rho = Partitioning::new(vec![0, 0, 1, 2], 3);
+        let q = push_forward(&g, &rho);
+        assert_eq!(q.graph.num_edges(), 2);
+    }
+
+    #[test]
+    fn weight_is_conserved() {
+        let g = chain();
+        let rho = Partitioning::new(vec![0, 0, 1, 1, 2, 2], 3);
+        let q = push_forward(&g, &rho);
+        let orig: f64 = g.edge_ids().map(|e| g.weight(e) as f64).sum();
+        let quot: f64 = q.graph.edge_ids().map(|e| q.graph.weight(e) as f64).sum();
+        assert!((orig - quot).abs() < 1e-6);
+    }
+
+    #[test]
+    fn self_loops_preserved() {
+        let g = chain();
+        let rho = Partitioning::new(vec![0; 6], 1);
+        let q = push_forward(&g, &rho);
+        assert_eq!(q.graph.num_edges(), 1); // all edges merge to 0 -> {0}
+        assert_eq!(q.graph.dsts(0), &[0]);
+        assert!((q.graph.weight(0) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn compacted_drops_empty_partitions() {
+        let p = Partitioning::new(vec![0, 2, 2], 4).compacted();
+        assert_eq!(p.num_parts, 2);
+        assert_eq!(p.assign, vec![0, 1, 1]);
+    }
+}

@@ -1,0 +1,246 @@
+//! Structural statistics of h-graphs (paper Fig. 8): average path length
+//! and mean h-edge overlap — the small-world evidence motivating synaptic
+//! reuse — plus degree/cardinality summaries used by Table III.
+
+use super::{EdgeId, Hypergraph, NodeId};
+use crate::util::rng::Pcg64;
+use std::collections::VecDeque;
+
+/// Summary row matching Table III.
+#[derive(Debug, Clone)]
+pub struct GraphSummary {
+    pub nodes: usize,
+    pub edges: usize,
+    pub connections: usize,
+    pub mean_cardinality: f64,
+    pub max_cardinality: usize,
+    pub max_inbound: usize,
+}
+
+pub fn summarize(g: &Hypergraph) -> GraphSummary {
+    GraphSummary {
+        nodes: g.num_nodes(),
+        edges: g.num_edges(),
+        connections: g.num_connections(),
+        mean_cardinality: g.mean_cardinality(),
+        max_cardinality: g.edge_ids().map(|e| g.cardinality(e)).max().unwrap_or(0),
+        max_inbound: g.node_ids().map(|n| g.inbound(n).len()).max().unwrap_or(0),
+    }
+}
+
+/// Average shortest-path length estimated by BFS from `samples` random
+/// source nodes over the *undirected star expansion* (spikes travel
+/// source→destination, but path length in Fig. 8 measures topological
+/// proximity, so we symmetrize). Unreachable pairs are skipped.
+pub fn avg_path_length(g: &Hypergraph, samples: usize, seed: u64) -> f64 {
+    if g.num_nodes() == 0 {
+        return 0.0;
+    }
+    let mut rng = Pcg64::new(seed, 101);
+    let mut total = 0u64;
+    let mut count = 0u64;
+    let mut dist = vec![u32::MAX; g.num_nodes()];
+    let mut queue = VecDeque::new();
+
+    for _ in 0..samples {
+        let start = rng.below(g.num_nodes()) as NodeId;
+        dist.iter_mut().for_each(|d| *d = u32::MAX);
+        dist[start as usize] = 0;
+        queue.clear();
+        queue.push_back(start);
+        while let Some(u) = queue.pop_front() {
+            let du = dist[u as usize];
+            // forward: u's axon(s) reach their destinations
+            for &e in g.outbound(u) {
+                for &v in g.dsts(e) {
+                    if dist[v as usize] == u32::MAX {
+                        dist[v as usize] = du + 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            // backward: sources of u's inbound h-edges
+            for &e in g.inbound(u) {
+                let v = g.source(e);
+                if dist[v as usize] == u32::MAX {
+                    dist[v as usize] = du + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        for (v, &d) in dist.iter().enumerate() {
+            if d != u32::MAX && v != start as usize {
+                total += d as u64;
+                count += 1;
+            }
+        }
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total as f64 / count as f64
+    }
+}
+
+/// Mean h-edge overlap (Fig. 8 companion measure): for sampled h-edges,
+/// the mean Jaccard similarity of destination sets with a co-incident
+/// h-edge (one sharing at least one destination node). This captures how
+/// often "any pair of h-edges tends to overlap", i.e. the raw material for
+/// synaptic reuse.
+pub fn mean_hedge_overlap(g: &Hypergraph, samples: usize, seed: u64) -> f64 {
+    if g.num_edges() < 2 {
+        return 0.0;
+    }
+    let mut rng = Pcg64::new(seed, 103);
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for _ in 0..samples {
+        let e1 = rng.below(g.num_edges()) as EdgeId;
+        let d1 = g.dsts(e1);
+        if d1.is_empty() {
+            continue;
+        }
+        // pick a co-incident edge through a random shared destination
+        let pivot = d1[rng.below(d1.len())];
+        let inb = g.inbound(pivot);
+        if inb.len() < 2 {
+            continue;
+        }
+        let e2 = loop {
+            let c = inb[rng.below(inb.len())];
+            if c != e1 {
+                break c;
+            }
+        };
+        total += jaccard_sorted(d1, g.dsts(e2));
+        count += 1;
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f64
+    }
+}
+
+/// Jaccard similarity of two sorted unique slices.
+pub fn jaccard_sorted(a: &[NodeId], b: &[NodeId]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 0.0;
+    }
+    let mut i = 0;
+    let mut j = 0;
+    let mut inter = 0usize;
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    inter as f64 / (a.len() + b.len() - inter) as f64
+}
+
+/// Size of the intersection of two sorted unique slices.
+pub fn intersection_size(a: &[NodeId], b: &[NodeId]) -> usize {
+    let mut i = 0;
+    let mut j = 0;
+    let mut inter = 0usize;
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    inter
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    #[test]
+    fn jaccard_basics() {
+        assert!((jaccard_sorted(&[1, 2, 3], &[2, 3, 4]) - 0.5).abs() < 1e-12);
+        assert_eq!(jaccard_sorted(&[1], &[2]), 0.0);
+        assert_eq!(jaccard_sorted(&[], &[]), 0.0);
+        assert!((jaccard_sorted(&[5, 9], &[5, 9]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn intersection_counts() {
+        assert_eq!(intersection_size(&[1, 3, 5], &[2, 3, 5, 7]), 2);
+        assert_eq!(intersection_size(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn path_length_on_chain() {
+        // chain of 5: exact mean shortest path over all ordered pairs = 2.0
+        let mut b = HypergraphBuilder::new(5);
+        for i in 0..4u32 {
+            b.add_edge(i, vec![i + 1], 1.0);
+        }
+        let g = b.build();
+        // sample every node many times -> converges to exact value
+        let apl = avg_path_length(&g, 200, 7);
+        assert!((apl - 2.0).abs() < 0.15, "apl={apl}");
+    }
+
+    #[test]
+    fn path_length_on_clique_is_one() {
+        let mut b = HypergraphBuilder::new(6);
+        for i in 0..6u32 {
+            let dsts: Vec<u32> = (0..6).filter(|&j| j != i).collect();
+            b.add_edge(i, dsts, 1.0);
+        }
+        let g = b.build();
+        let apl = avg_path_length(&g, 50, 1);
+        assert!((apl - 1.0).abs() < 1e-9, "apl={apl}");
+    }
+
+    #[test]
+    fn overlap_full_on_identical_axons() {
+        // all sources hit the same destination set -> overlap 1
+        let mut b = HypergraphBuilder::new(8);
+        for i in 0..4u32 {
+            b.add_edge(i, vec![4, 5, 6, 7], 1.0);
+        }
+        let g = b.build();
+        let ov = mean_hedge_overlap(&g, 200, 3);
+        assert!((ov - 1.0).abs() < 1e-9, "ov={ov}");
+    }
+
+    #[test]
+    fn overlap_zero_when_disjoint() {
+        let mut b = HypergraphBuilder::new(9);
+        b.add_edge(0, vec![3, 4], 1.0);
+        b.add_edge(1, vec![5, 6], 1.0);
+        b.add_edge(2, vec![7, 8], 1.0);
+        let g = b.build();
+        // no two h-edges share a destination -> sampler never finds a pair
+        assert_eq!(mean_hedge_overlap(&g, 100, 5), 0.0);
+    }
+
+    #[test]
+    fn summary_row() {
+        let mut b = HypergraphBuilder::new(4);
+        b.add_edge(0, vec![1, 2, 3], 1.0);
+        b.add_edge(1, vec![2], 1.0);
+        let g = b.build();
+        let s = summarize(&g);
+        assert_eq!(s.nodes, 4);
+        assert_eq!(s.edges, 2);
+        assert_eq!(s.connections, 4);
+        assert_eq!(s.max_cardinality, 3);
+        assert_eq!(s.max_inbound, 2); // node 2
+    }
+}

@@ -1,0 +1,54 @@
+//! # snnmap — hypergraph-based SNN→neuromorphic-hardware mapping
+//!
+//! A production-style implementation of *"A Case for Hypergraphs to Model
+//! and Map SNNs on Neuromorphic Hardware"* (Ronzani & Silvano): SNNs are
+//! modeled as directed single-source hypergraphs; mapping = constrained
+//! hypergraph **partitioning** (neurons → virtual cores) followed by
+//! **placement** (virtual cores → the 2D NoC lattice), driven by
+//! second-order affinity (synaptic reuse) and first-order affinity
+//! (connections locality).
+//!
+//! Architecture (three layers, see DESIGN.md):
+//! * this crate (L3) owns the whole mapping path: h-graph model,
+//!   partitioners, placers, metric engine, NoC simulator, experiments;
+//! * numerical hot spots (the spectral-placement eigensolver and batched
+//!   force-field evaluation) are AOT-compiled JAX/Pallas artifacts
+//!   executed through PJRT by [`runtime`], with native fallbacks.
+//!
+//! Quick tour:
+//! ```no_run
+//! use snnmap::prelude::*;
+//! let net = snnmap::snn::by_name("lenet", 0.25, 42).unwrap();
+//! let hw = NmhConfig::small();
+//! let mapping = MapperPipeline::new(hw)
+//!     .partitioner(PartitionerKind::HyperedgeOverlap)
+//!     .placer(PlacerKind::Spectral)
+//!     .refiner(RefinerKind::ForceDirected)
+//!     .run(&net.graph, net.layer_ranges.as_deref())
+//!     .expect("mapping failed");
+//! println!("{}", mapping.report());
+//! ```
+
+pub mod coordinator;
+pub mod hw;
+pub mod hypergraph;
+pub mod mapping;
+pub mod metrics;
+pub mod multichip;
+pub mod placement;
+pub mod runtime;
+pub mod sim;
+pub mod snn;
+pub mod util;
+
+/// Common imports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::coordinator::pipeline::{
+        MapperPipeline, MappingResult, PartitionerKind, PlacerKind, RefinerKind,
+    };
+    pub use crate::hw::{NmhConfig, NocCosts};
+    pub use crate::hypergraph::quotient::{push_forward, Partitioning};
+    pub use crate::hypergraph::{Hypergraph, HypergraphBuilder};
+    pub use crate::metrics::MappingMetrics;
+    pub use crate::placement::Placement;
+}

@@ -1,0 +1,188 @@
+//! EdgeMap-style partitioning (paper §V-A control experiment, after [15]).
+//!
+//! A node-centric, *graph*-based greedy scheme: nodes are visited
+//! sequentially and each is placed into the open partition that currently
+//! minimizes its cut connections — equivalently, maximizes the total
+//! spike-frequency weight of its direct (first-order) connections to nodes
+//! already inside. This deliberately ignores hyperedge co-membership, so
+//! it serves as the paper's control for how much second-order affinity
+//! actually buys.
+
+use super::{ConstraintTracker, MapError};
+use crate::hw::NmhConfig;
+use crate::hypergraph::quotient::Partitioning;
+use crate::hypergraph::Hypergraph;
+use std::collections::HashMap;
+
+/// Maximum open partitions scanned per node (EdgeMap keeps all partitions
+/// candidates; we bound the scan to the ones the node actually connects
+/// to, plus the latest-opened partition as fallback).
+pub fn partition(g: &Hypergraph, hw: &NmhConfig) -> Result<Partitioning, MapError> {
+    let n = g.num_nodes();
+    let mut assign = vec![u32::MAX; n];
+    // One tracker per open partition is too heavy; track per-partition
+    // counters + axon stamps in one structure per partition id.
+    let mut parts: Vec<PartState> = Vec::new();
+
+    let mut conn_weight: HashMap<u32, f64> = HashMap::new();
+    for u in 0..n as u32 {
+        // direct-connection weight to each partition (graph view:
+        // source->destination edges only)
+        conn_weight.clear();
+        for &e in g.inbound(u) {
+            let s = g.source(e);
+            if assign[s as usize] != u32::MAX {
+                *conn_weight.entry(assign[s as usize]).or_insert(0.0) += g.weight(e) as f64;
+            }
+        }
+        for &e in g.outbound(u) {
+            let w = g.weight(e) as f64;
+            for &d in g.dsts(e) {
+                if assign[d as usize] != u32::MAX {
+                    *conn_weight.entry(assign[d as usize]).or_insert(0.0) += w;
+                }
+            }
+        }
+        let mut cands: Vec<(u32, f64)> = conn_weight.iter().map(|(&p, &w)| (p, w)).collect();
+        cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        // fallback: the most recently opened partition
+        if let Some(last) = parts.len().checked_sub(1) {
+            if !cands.iter().any(|&(p, _)| p as usize == last) {
+                cands.push((last as u32, 0.0));
+            }
+        }
+
+        let mut placed = false;
+        for (p, _) in cands {
+            if parts[p as usize].fits(g, hw, u) {
+                parts[p as usize].add(g, u);
+                assign[u as usize] = p;
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            // open a new partition
+            let mut st = PartState::new(g.num_edges());
+            if !st.fits(g, hw, u) {
+                // node infeasible even alone
+                let t = ConstraintTracker::new(g, hw);
+                t.node_feasible(u)?;
+                return Err(MapError::ConstraintViolated(format!(
+                    "node {u} rejected by empty partition"
+                )));
+            }
+            st.add(g, u);
+            parts.push(st);
+            assign[u as usize] = (parts.len() - 1) as u32;
+            if parts.len() > hw.num_cores() {
+                return Err(MapError::TooManyPartitions {
+                    got: parts.len(),
+                    limit: hw.num_cores(),
+                });
+            }
+        }
+    }
+    Ok(Partitioning::new(assign, parts.len()))
+}
+
+/// Constraint state of one open partition.
+struct PartState {
+    npc: usize,
+    spc: usize,
+    apc: usize,
+    /// membership bitmap over edges (which axons this partition receives)
+    axon: Vec<bool>,
+}
+
+impl PartState {
+    fn new(num_edges: usize) -> Self {
+        PartState {
+            npc: 0,
+            spc: 0,
+            apc: 0,
+            axon: vec![false; num_edges],
+        }
+    }
+
+    fn fits(&self, g: &Hypergraph, hw: &NmhConfig, u: u32) -> bool {
+        let inb = g.inbound(u);
+        if self.npc + 1 > hw.c_npc || self.spc + inb.len() > hw.c_spc {
+            return false;
+        }
+        let new_axons = inb.iter().filter(|&&e| !self.axon[e as usize]).count();
+        self.apc + new_axons <= hw.c_apc
+    }
+
+    fn add(&mut self, g: &Hypergraph, u: u32) {
+        self.npc += 1;
+        self.spc += g.inbound(u).len();
+        for &e in g.inbound(u) {
+            if !self.axon[e as usize] {
+                self.axon[e as usize] = true;
+                self.apc += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::validate;
+    use crate::hypergraph::HypergraphBuilder;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn chain_stays_contiguous() {
+        let mut b = HypergraphBuilder::new(12);
+        for i in 0..11u32 {
+            b.add_edge(i, vec![i + 1], 1.0);
+        }
+        let g = b.build();
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 4;
+        let rho = partition(&g, &hw).unwrap();
+        validate(&g, &rho, &hw).unwrap();
+        assert_eq!(rho.num_parts, 3);
+        // consecutive nodes mostly share partitions (first-order affinity)
+        let same = (0..11).filter(|&i| rho.assign[i] == rho.assign[i + 1]).count();
+        assert!(same >= 9, "same={same}");
+    }
+
+    #[test]
+    fn random_graph_valid() {
+        let mut rng = Pcg64::seeded(8);
+        let n = 300;
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            let dsts: Vec<u32> = (0..rng.range(2, 10))
+                .map(|_| rng.below(n) as u32)
+                .filter(|&d| d != s)
+                .collect();
+            if !dsts.is_empty() {
+                b.add_edge(s, dsts, rng.next_f32() + 0.01);
+            }
+        }
+        let g = b.build();
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 24;
+        hw.c_apc = 200;
+        let rho = partition(&g, &hw).unwrap();
+        validate(&g, &rho, &hw).unwrap();
+        assert!(rho.assign.iter().all(|&p| p != u32::MAX));
+    }
+
+    #[test]
+    fn prefers_connected_partition() {
+        // 0,1 tightly connected; 2 far; node 3 connects to 0 strongly
+        let mut b = HypergraphBuilder::new(4);
+        b.add_edge(0, vec![1, 3], 5.0);
+        b.add_edge(2, vec![3], 0.1);
+        let g = b.build();
+        let hw = NmhConfig::small();
+        let rho = partition(&g, &hw).unwrap();
+        // everything fits one partition under default constraints
+        assert_eq!(rho.num_parts, 1);
+    }
+}

@@ -1,0 +1,346 @@
+//! Constrained hypergraph partitioning (paper §IV-A).
+//!
+//! All partitioners produce a [`Partitioning`] (ρ: N → P) that must
+//! satisfy the NMH per-core constraints (Eqs. 4-6) and the partition-count
+//! limit |P| ≤ |H|. The quality objective is the weighted connectivity
+//! (λ-style) metric of Eq. 7, computed on the quotient h-graph.
+
+pub mod edgemap;
+pub mod hierarchical;
+pub mod ordering;
+pub mod overlap;
+pub mod pruning;
+pub mod sequential;
+pub mod streaming;
+
+use crate::hw::NmhConfig;
+use crate::hypergraph::quotient::Partitioning;
+use crate::hypergraph::{EdgeId, Hypergraph};
+use std::collections::HashSet;
+
+/// Partitioning failure modes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MapError {
+    /// A single neuron exceeds per-core constraints on its own.
+    NodeUnmappable { node: u32, reason: String },
+    /// More partitions than hardware cores.
+    TooManyPartitions { got: usize, limit: usize },
+    /// Constraint violated by a produced partitioning (validation).
+    ConstraintViolated(String),
+}
+
+impl std::fmt::Display for MapError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MapError::NodeUnmappable { node, reason } => {
+                write!(f, "node {node} cannot fit any core: {reason}")
+            }
+            MapError::TooManyPartitions { got, limit } => {
+                write!(f, "{got} partitions exceed the {limit}-core lattice")
+            }
+            MapError::ConstraintViolated(m) => write!(f, "constraint violated: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for MapError {}
+
+/// Weighted connectivity of a partitioned h-graph (Eq. 7):
+/// `Conn(G_P) = Σ_e w_P(e) · |D_e|` — each h-edge pays its weight once per
+/// connected destination partition. Computed directly on `G_S` + ρ without
+/// materializing the quotient.
+pub fn connectivity(g: &Hypergraph, rho: &Partitioning) -> f64 {
+    let mut seen: Vec<u32> = Vec::new();
+    let mut stamp = vec![u32::MAX; rho.num_parts];
+    let mut total = 0.0f64;
+    for e in g.edge_ids() {
+        seen.clear();
+        for &d in g.dsts(e) {
+            let p = rho.assign[d as usize];
+            if stamp[p as usize] != e {
+                stamp[p as usize] = e;
+                seen.push(p);
+            }
+        }
+        total += g.weight(e) as f64 * seen.len() as f64;
+    }
+    total
+}
+
+/// External connectivity variant: destination partitions *other than* the
+/// source's (spikes that actually leave the core). Reported alongside
+/// Eq. 7 in diagnostics.
+pub fn external_connectivity(g: &Hypergraph, rho: &Partitioning) -> f64 {
+    let mut stamp = vec![u32::MAX; rho.num_parts];
+    let mut total = 0.0f64;
+    for e in g.edge_ids() {
+        let ps = rho.assign[g.source(e) as usize];
+        let mut count = 0usize;
+        for &d in g.dsts(e) {
+            let p = rho.assign[d as usize];
+            if p != ps && stamp[p as usize] != e {
+                stamp[p as usize] = e;
+                count += 1;
+            }
+        }
+        total += g.weight(e) as f64 * count as f64;
+    }
+    total
+}
+
+/// Validate a partitioning against the hardware constraints
+/// (Eqs. 4, 5, 6 and the |P| ≤ |H| bound).
+pub fn validate(g: &Hypergraph, rho: &Partitioning, hw: &NmhConfig) -> Result<(), MapError> {
+    if rho.assign.len() != g.num_nodes() {
+        return Err(MapError::ConstraintViolated(format!(
+            "assignment covers {} of {} nodes",
+            rho.assign.len(),
+            g.num_nodes()
+        )));
+    }
+    if rho.num_parts > hw.num_cores() {
+        return Err(MapError::TooManyPartitions {
+            got: rho.num_parts,
+            limit: hw.num_cores(),
+        });
+    }
+    // Eq. 4: nodes per partition.
+    let sizes = rho.sizes();
+    if let Some((p, &sz)) = sizes.iter().enumerate().find(|(_, &s)| s > hw.c_npc) {
+        return Err(MapError::ConstraintViolated(format!(
+            "partition {p} holds {sz} > C_npc={} nodes",
+            hw.c_npc
+        )));
+    }
+    // Eq. 6: inbound synapses (connections) per partition.
+    let mut syn = vec![0usize; rho.num_parts];
+    for e in g.edge_ids() {
+        for &d in g.dsts(e) {
+            syn[rho.assign[d as usize] as usize] += 1;
+        }
+    }
+    if let Some((p, &s)) = syn.iter().enumerate().find(|(_, &s)| s > hw.c_spc) {
+        return Err(MapError::ConstraintViolated(format!(
+            "partition {p} receives {s} > C_spc={} synapses",
+            hw.c_spc
+        )));
+    }
+    // Eq. 5: distinct inbound h-edges (axons) per partition.
+    let mut axons: Vec<HashSet<EdgeId>> = vec![HashSet::new(); rho.num_parts];
+    for e in g.edge_ids() {
+        let mut last = u32::MAX;
+        for &d in g.dsts(e) {
+            let p = rho.assign[d as usize];
+            if p != last {
+                axons[p as usize].insert(e);
+                last = p;
+            }
+        }
+    }
+    if let Some((p, a)) = axons.iter().enumerate().find(|(_, a)| a.len() > hw.c_apc) {
+        return Err(MapError::ConstraintViolated(format!(
+            "partition {p} sees {} > C_apc={} distinct axons",
+            a.len(),
+            hw.c_apc
+        )));
+    }
+    Ok(())
+}
+
+/// Incremental per-partition constraint bookkeeping shared by the greedy
+/// partitioners: tracks node count, synapse count and the distinct
+/// inbound-axon set of the partition under construction.
+pub struct ConstraintTracker<'a> {
+    g: &'a Hypergraph,
+    hw: &'a NmhConfig,
+    /// nodes in current partition
+    pub npc: usize,
+    /// synapses (inbound connections) in current partition
+    pub spc: usize,
+    /// stamp[e] == epoch  <=>  h-edge e is in the current partition's axon set
+    stamp: Vec<u32>,
+    epoch: u32,
+    /// |axon set|
+    pub apc: usize,
+}
+
+impl<'a> ConstraintTracker<'a> {
+    pub fn new(g: &'a Hypergraph, hw: &'a NmhConfig) -> Self {
+        ConstraintTracker {
+            g,
+            hw,
+            npc: 0,
+            spc: 0,
+            stamp: vec![0; g.num_edges()],
+            epoch: 1,
+            apc: 0,
+        }
+    }
+
+    /// Distinct inbound axons node `n` would add to the current partition.
+    #[inline]
+    pub fn new_axons(&self, n: u32) -> usize {
+        self.g
+            .inbound(n)
+            .iter()
+            .filter(|&&e| self.stamp[e as usize] != self.epoch)
+            .count()
+    }
+
+    /// Is h-edge `e` already in the current partition's axon set?
+    #[inline]
+    pub fn has_axon(&self, e: EdgeId) -> bool {
+        self.stamp[e as usize] == self.epoch
+    }
+
+    /// Would adding node `n` keep the current partition feasible?
+    pub fn fits(&self, n: u32) -> bool {
+        let inb = self.g.inbound(n).len();
+        self.npc + 1 <= self.hw.c_npc
+            && self.spc + inb <= self.hw.c_spc
+            && self.apc + self.new_axons(n) <= self.hw.c_apc
+    }
+
+    /// A single node must fit an empty core, else the graph is unmappable.
+    pub fn node_feasible(&self, n: u32) -> Result<(), MapError> {
+        let inb = self.g.inbound(n).len();
+        if inb > self.hw.c_spc {
+            return Err(MapError::NodeUnmappable {
+                node: n,
+                reason: format!("{inb} inbound synapses > C_spc={}", self.hw.c_spc),
+            });
+        }
+        if inb > self.hw.c_apc {
+            return Err(MapError::NodeUnmappable {
+                node: n,
+                reason: format!("{inb} inbound axons > C_apc={}", self.hw.c_apc),
+            });
+        }
+        Ok(())
+    }
+
+    /// Add node `n` to the current partition, updating all counters.
+    pub fn add(&mut self, n: u32) {
+        self.npc += 1;
+        self.spc += self.g.inbound(n).len();
+        for &e in self.g.inbound(n) {
+            if self.stamp[e as usize] != self.epoch {
+                self.stamp[e as usize] = self.epoch;
+                self.apc += 1;
+            }
+        }
+    }
+
+    /// Close the current partition and start a fresh one.
+    pub fn reset(&mut self) {
+        self.npc = 0;
+        self.spc = 0;
+        self.apc = 0;
+        self.epoch += 1;
+        if self.epoch == u32::MAX {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.epoch = 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    fn star() -> Hypergraph {
+        // node 0 feeds 1..=4 (one h-edge); node 1 feeds {2, 3}
+        let mut b = HypergraphBuilder::new(5);
+        b.add_edge(0, vec![1, 2, 3, 4], 2.0);
+        b.add_edge(1, vec![2, 3], 1.0);
+        b.build()
+    }
+
+    #[test]
+    fn connectivity_eq7_counts_distinct_partitions() {
+        let g = star();
+        // everything together: each edge touches exactly 1 partition
+        let one = Partitioning::new(vec![0; 5], 1);
+        assert!((connectivity(&g, &one) - (2.0 + 1.0)).abs() < 1e-9);
+        // split {0,1} | {2,3} | {4}: edge0 dsts {1,2,3,4} -> parts {0,1,2} = 3
+        // edge1 dsts {2,3} -> parts {1} = 1
+        let rho = Partitioning::new(vec![0, 0, 1, 1, 2], 3);
+        assert!((connectivity(&g, &rho) - (2.0 * 3.0 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn external_connectivity_excludes_source_partition() {
+        let g = star();
+        let rho = Partitioning::new(vec![0, 0, 1, 1, 2], 3);
+        // edge0 src part 0, external dsts {1,2} -> 2; edge1 src part 0, dst {1} -> 1
+        assert!((external_connectivity(&g, &rho) - (2.0 * 2.0 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_catches_each_constraint() {
+        let g = star();
+        let mut hw = NmhConfig::small();
+        let rho = Partitioning::new(vec![0; 5], 1);
+        assert!(validate(&g, &rho, &hw).is_ok());
+
+        hw.c_npc = 4;
+        assert!(matches!(
+            validate(&g, &rho, &hw),
+            Err(MapError::ConstraintViolated(_))
+        ));
+    }
+
+    #[test]
+    fn validate_synapse_and_axon_limits() {
+        let g = star();
+        let rho = Partitioning::new(vec![0; 5], 1);
+        let mut hw = NmhConfig::small();
+        hw.c_spc = 5; // 6 synapses total inbound
+        let err = validate(&g, &rho, &hw).unwrap_err();
+        assert!(matches!(err, MapError::ConstraintViolated(ref m) if m.contains("C_spc")));
+        let mut hw = NmhConfig::small();
+        hw.c_apc = 1; // partition 0 sees 2 distinct axons
+        let err = validate(&g, &rho, &hw).unwrap_err();
+        assert!(matches!(err, MapError::ConstraintViolated(ref m) if m.contains("C_apc")));
+    }
+
+    #[test]
+    fn validate_partition_count() {
+        let g = star();
+        let mut hw = NmhConfig::small();
+        hw.width = 1;
+        hw.height = 2;
+        let rho = Partitioning::new(vec![0, 1, 2, 0, 1], 3);
+        assert!(matches!(
+            validate(&g, &rho, &hw),
+            Err(MapError::TooManyPartitions { got: 3, limit: 2 })
+        ));
+    }
+
+    #[test]
+    fn tracker_matches_validate() {
+        let g = star();
+        let hw = NmhConfig::small();
+        let mut t = ConstraintTracker::new(&g, &hw);
+        assert!(t.fits(2));
+        t.add(2); // inbound = {e0, e1}
+        assert_eq!((t.npc, t.spc, t.apc), (1, 2, 2));
+        t.add(3); // same inbound set -> apc unchanged (synaptic reuse!)
+        assert_eq!((t.npc, t.spc, t.apc), (2, 4, 2));
+        assert_eq!(t.new_axons(4), 0); // e0 already present
+        t.reset();
+        assert_eq!((t.npc, t.spc, t.apc), (0, 0, 0));
+        assert_eq!(t.new_axons(2), 2);
+    }
+
+    #[test]
+    fn tracker_node_feasibility() {
+        let g = star();
+        let mut hw = NmhConfig::small();
+        hw.c_spc = 1;
+        let t = ConstraintTracker::new(&g, &hw);
+        assert!(t.node_feasible(4).is_ok()); // 1 inbound
+        assert!(t.node_feasible(2).is_err()); // 2 inbound > 1
+    }
+}

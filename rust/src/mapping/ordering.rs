@@ -1,0 +1,271 @@
+//! Node orderings (paper Alg. 2 + the queue-based Kahn variant).
+//!
+//! Sequential partitioning, the Hilbert placement and minimum-distance
+//! placement all consume a linear order of nodes. For layered SNNs the
+//! natural (layer-major) order already has locality; for arbitrary
+//! h-graphs the paper introduces a greedy frequency-accumulation order
+//! (Alg. 2) and, for acyclic quotient graphs, weighted Kahn topological
+//! ordering.
+
+use crate::hypergraph::Hypergraph;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+/// Max-heap entry with lazy invalidation.
+#[derive(PartialEq)]
+struct Entry {
+    prio: f64,
+    node: u32,
+}
+
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // max-heap by priority; tie-break by node id for determinism
+        self.prio
+            .partial_cmp(&other.prio)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.node.cmp(&self.node))
+    }
+}
+
+/// Greedy nodes ordering (Alg. 2).
+///
+/// An addressable priority queue accumulates, per node, the total spike
+/// frequency of connections from already-ordered nodes; the next node is
+/// the highest-priority unordered one, falling back to minimum-inbound
+/// nodes when the queue is exhausted. Produces an order with high local
+/// synaptic reuse in O(e·d·log n).
+pub fn greedy_order(g: &Hypergraph) -> Vec<u32> {
+    let n = g.num_nodes();
+    let mut order = Vec::with_capacity(n);
+    let mut prio = vec![0.0f64; n];
+    let mut placed = vec![false; n];
+    let mut heap: BinaryHeap<Entry> = BinaryHeap::new();
+
+    // Nodes sorted by inbound-set size: the fallback source (line 12) and
+    // the +inf seeding of minimum-inbound nodes (lines 6-7).
+    let mut by_inbound: Vec<u32> = (0..n as u32).collect();
+    by_inbound.sort_by_key(|&m| (g.inbound(m).len(), m));
+    let min_inbound = by_inbound
+        .first()
+        .map(|&m| g.inbound(m).len())
+        .unwrap_or(0);
+    for &m in by_inbound.iter().take_while(|&&m| g.inbound(m).len() == min_inbound) {
+        prio[m as usize] = f64::INFINITY;
+        heap.push(Entry { prio: f64::INFINITY, node: m });
+    }
+    let mut fallback_cursor = 0usize;
+
+    while order.len() < n {
+        // pop from queue (skipping stale/placed entries)…
+        let next = loop {
+            match heap.pop() {
+                Some(Entry { prio: p, node }) => {
+                    if placed[node as usize] || prio[node as usize] != p || p <= 0.0 {
+                        continue;
+                    }
+                    break Some(node);
+                }
+                None => break None,
+            }
+        };
+        // …or fall back to the next min-inbound unplaced node.
+        let node = next.unwrap_or_else(|| {
+            while placed[by_inbound[fallback_cursor] as usize] {
+                fallback_cursor += 1;
+            }
+            by_inbound[fallback_cursor]
+        });
+
+        placed[node as usize] = true;
+        order.push(node);
+        // propagate frequency to destinations (lines 14-15)
+        for &e in g.outbound(node) {
+            let w = g.weight(e) as f64;
+            for &m in g.dsts(e) {
+                if !placed[m as usize] {
+                    let p = &mut prio[m as usize];
+                    if p.is_finite() {
+                        *p += w;
+                        heap.push(Entry { prio: *p, node: m });
+                    }
+                }
+            }
+        }
+    }
+    order
+}
+
+/// Weighted queue-based Kahn topological order (§IV-B1): roots first; each
+/// node's outgoing h-edges are processed in decreasing weight order before
+/// newly freed nodes enter the FIFO. Returns None on cyclic graphs.
+pub fn kahn_order(g: &Hypergraph) -> Option<Vec<u32>> {
+    let n = g.num_nodes();
+    let mut indeg = vec![0usize; n];
+    for e in g.edge_ids() {
+        for &d in g.dsts(e) {
+            // self-loops in quotient graphs don't constrain the order
+            if d != g.source(e) {
+                indeg[d as usize] += 1;
+            }
+        }
+    }
+    let mut queue: VecDeque<u32> =
+        (0..n as u32).filter(|&v| indeg[v as usize] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    let mut out_edges: Vec<u32> = Vec::new();
+    while let Some(u) = queue.pop_front() {
+        order.push(u);
+        out_edges.clear();
+        out_edges.extend_from_slice(g.outbound(u));
+        out_edges.sort_by(|&a, &b| {
+            g.weight(b)
+                .partial_cmp(&g.weight(a))
+                .unwrap_or(Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        for &e in &out_edges {
+            for &d in g.dsts(e) {
+                if d != u {
+                    indeg[d as usize] -= 1;
+                    if indeg[d as usize] == 0 {
+                        queue.push_back(d);
+                    }
+                }
+            }
+        }
+    }
+    (order.len() == n).then_some(order)
+}
+
+/// Order for an arbitrary h-graph: Kahn when acyclic, else greedy (the
+/// dispatch rule used throughout §IV).
+pub fn auto_order(g: &Hypergraph) -> Vec<u32> {
+    kahn_order(g).unwrap_or_else(|| greedy_order(g))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+    use crate::util::rng::Pcg64;
+
+    fn is_permutation(order: &[u32], n: usize) -> bool {
+        let mut seen = vec![false; n];
+        for &x in order {
+            if seen[x as usize] {
+                return false;
+            }
+            seen[x as usize] = true;
+        }
+        order.len() == n
+    }
+
+    #[test]
+    fn greedy_order_chain_follows_edges() {
+        let mut b = HypergraphBuilder::new(5);
+        for i in 0..4u32 {
+            b.add_edge(i, vec![i + 1], 1.0);
+        }
+        let g = b.build();
+        let order = greedy_order(&g);
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn greedy_order_prefers_heavier_connection() {
+        // 0 feeds 1 (w=1) and 2 (w=10) with separate h-edges? single axon:
+        // use two sources: 0 -> {1} w=1 ; 3 -> {2} w=10; both roots.
+        let mut b = HypergraphBuilder::new(4);
+        b.add_edge(0, vec![1], 1.0);
+        b.add_edge(3, vec![2], 10.0);
+        let g = b.build();
+        let order = greedy_order(&g);
+        assert!(is_permutation(&order, 4));
+        // after roots 0 and 3 are placed, node 2 (prio 10) precedes node 1
+        let pos = |x: u32| order.iter().position(|&v| v == x).unwrap();
+        assert!(pos(2) < pos(1));
+    }
+
+    #[test]
+    fn greedy_order_handles_cycles() {
+        let mut b = HypergraphBuilder::new(3);
+        b.add_edge(0, vec![1], 1.0);
+        b.add_edge(1, vec![2], 1.0);
+        b.add_edge(2, vec![0], 1.0);
+        let g = b.build();
+        let order = greedy_order(&g);
+        assert!(is_permutation(&order, 3));
+    }
+
+    #[test]
+    fn greedy_order_random_graphs_complete() {
+        let mut rng = Pcg64::seeded(17);
+        for trial in 0..5 {
+            let n = 300;
+            let mut b = HypergraphBuilder::new(n);
+            for s in 0..n as u32 {
+                if rng.bernoulli(0.8) {
+                    let k = rng.range(1, 12);
+                    let dsts: Vec<u32> = (0..k).map(|_| rng.below(n) as u32).collect();
+                    b.add_edge(s, dsts, rng.next_f32() + 1e-3);
+                }
+            }
+            let g = b.build();
+            let order = greedy_order(&g);
+            assert!(is_permutation(&order, n), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn kahn_respects_topology() {
+        let mut b = HypergraphBuilder::new(6);
+        b.add_edge(0, vec![2, 3], 1.0);
+        b.add_edge(1, vec![3], 5.0);
+        b.add_edge(2, vec![4], 1.0);
+        b.add_edge(3, vec![4, 5], 1.0);
+        let g = b.build();
+        let order = kahn_order(&g).unwrap();
+        assert!(is_permutation(&order, 6));
+        let pos = |x: u32| order.iter().position(|&v| v == x).unwrap();
+        assert!(pos(0) < pos(2) && pos(0) < pos(3));
+        assert!(pos(3) < pos(4) && pos(3) < pos(5));
+    }
+
+    #[test]
+    fn kahn_rejects_cycles_and_tolerates_self_loops() {
+        let mut b = HypergraphBuilder::new(2);
+        b.add_edge(0, vec![1], 1.0);
+        b.add_edge(1, vec![0], 1.0);
+        assert!(kahn_order(&b.build()).is_none());
+
+        let mut b = HypergraphBuilder::new(2);
+        b.add_edge(0, vec![0, 1], 1.0); // quotient-style self-loop
+        let g = b.build();
+        assert_eq!(kahn_order(&g), Some(vec![0, 1]));
+    }
+
+    #[test]
+    fn auto_order_dispatch() {
+        // acyclic -> kahn result
+        let mut b = HypergraphBuilder::new(3);
+        b.add_edge(0, vec![1], 1.0);
+        b.add_edge(1, vec![2], 1.0);
+        let g = b.build();
+        assert_eq!(auto_order(&g), kahn_order(&g).unwrap());
+        // cyclic -> still a permutation
+        let mut b = HypergraphBuilder::new(3);
+        b.add_edge(0, vec![1], 1.0);
+        b.add_edge(1, vec![0, 2], 1.0);
+        b.add_edge(2, vec![0], 1.0);
+        let g = b.build();
+        assert!(is_permutation(&auto_order(&g), 3));
+    }
+}

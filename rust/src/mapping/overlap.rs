@@ -1,0 +1,422 @@
+//! Hyperedge-overlap partitioning — the paper's novel greedy heuristic
+//! (§IV-A2, Algorithm 1).
+//!
+//! Builds partitions one at a time by sweeping h-edges: the next h-edge is
+//! the one whose nodes exhibit the highest (spike-frequency-weighted)
+//! co-membership with the partition under construction — an incremental
+//! proxy of second-order affinity. Within an h-edge, nodes are assigned in
+//! the order that introduces the fewest new inbound axons to the partition
+//! (lexicographic tie-break on largest inbound set), which directly
+//! maximizes synaptic reuse while snug-fitting constraints.
+//!
+//! Complexity O(e·d·log d): each node's connections are visited once; the
+//! priority queue is a lazy max-heap flushed per partition via an epoch
+//! stamp (O(1) flush).
+
+use super::{ConstraintTracker, MapError};
+use crate::hw::NmhConfig;
+use crate::hypergraph::quotient::Partitioning;
+use crate::hypergraph::{EdgeId, Hypergraph};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Heap entry for the h-edge priority queue, with lazy invalidation.
+struct EdgeEntry {
+    prio: f64,
+    edge: EdgeId,
+    epoch: u32,
+}
+
+impl PartialEq for EdgeEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.prio == other.prio && self.edge == other.edge
+    }
+}
+impl Eq for EdgeEntry {}
+impl PartialOrd for EdgeEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for EdgeEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.prio
+            .partial_cmp(&other.prio)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.edge.cmp(&self.edge))
+    }
+}
+
+/// Candidate-node scoreboard for the inner argmin^lex selection:
+/// (new inbound axons ascending, inbound-set size descending, id).
+#[derive(PartialEq, Eq, PartialOrd, Ord, Clone, Copy)]
+struct NodeKey {
+    new_axons: u32,
+    neg_inbound: i64,
+    node: u32,
+}
+
+/// Ablation knobs (benches/ablations.rs): Algorithm 1 with pieces off.
+#[derive(Clone, Copy, Debug)]
+pub struct OverlapParams {
+    /// Use the co-membership priority queue to pick the next h-edge
+    /// (lines 13-14). Off = pure descending-size order — isolates how
+    /// much the dynamic second-order-affinity ordering buys.
+    pub use_queue: bool,
+    /// Use the argmin^lex node selection (line 21). Off = h-edge
+    /// destination order — isolates the snug-fit node policy.
+    pub select_min_new_axons: bool,
+}
+
+impl Default for OverlapParams {
+    fn default() -> Self {
+        OverlapParams { use_queue: true, select_min_new_axons: true }
+    }
+}
+
+/// Partition `g` by hyperedge overlap (Algorithm 1).
+pub fn partition(g: &Hypergraph, hw: &NmhConfig) -> Result<Partitioning, MapError> {
+    partition_with_params(g, hw, OverlapParams::default())
+}
+
+/// Algorithm 1 with ablation parameters.
+pub fn partition_with_params(
+    g: &Hypergraph,
+    hw: &NmhConfig,
+    params: OverlapParams,
+) -> Result<Partitioning, MapError> {
+    let e_total = g.num_edges();
+    let mut assign = vec![u32::MAX; g.num_nodes()];
+    let mut tracker = ConstraintTracker::new(g, hw);
+
+    // size(e) = remaining (unassigned destinations + source) count; the
+    // denominator of the queue's occurrences/size ratio (Alg. 1 line 6).
+    let mut size: Vec<u32> = g
+        .edge_ids()
+        .map(|e| g.cardinality(e) as u32 + 1)
+        .collect();
+    // pq(e): co-membership ratio of edge e w.r.t. the current partition.
+    let mut pq: Vec<f64> = vec![0.0; e_total];
+    // queue epoch of an edge's pq value (flush = bump partition epoch)
+    let mut pq_epoch: Vec<u32> = vec![0; e_total];
+    let mut epoch = 0u32;
+
+    let mut seen = vec![false; e_total];
+    let mut seen_count = 0usize;
+
+    // Outer fallback: edges sorted by descending connection count (line 8).
+    let mut sorted: Vec<EdgeId> = g.edge_ids().collect();
+    sorted.sort_by_key(|&e| std::cmp::Reverse(size[e as usize]));
+    let mut sorted_cursor = 0usize;
+
+    let mut heap: BinaryHeap<EdgeEntry> = BinaryHeap::new();
+    let mut part = 0u32;
+
+    // Scratch for the inner node-selection scoreboard.
+    let mut cand: std::collections::BTreeSet<NodeKey> = std::collections::BTreeSet::new();
+    let mut cand_key: std::collections::HashMap<u32, NodeKey> = std::collections::HashMap::new();
+
+    while seen_count < e_total {
+        // ---- pick the next h-edge (lines 13-16) ----
+        let e = if !params.use_queue { None } else { loop {
+            match heap.peek() {
+                Some(entry) => {
+                    let stale = seen[entry.edge as usize]
+                        || entry.epoch != epoch
+                        || {
+                            let cur = pq[entry.edge as usize] * g.weight(entry.edge) as f64;
+                            (cur - entry.prio).abs() > 1e-12
+                        };
+                    if stale {
+                        heap.pop();
+                        continue;
+                    }
+                    break Some(heap.pop().unwrap().edge);
+                }
+                None => break None,
+            }
+        } };
+        let e = match e {
+            Some(e) => e,
+            None => {
+                while seen[sorted[sorted_cursor] as usize] {
+                    sorted_cursor += 1;
+                }
+                sorted[sorted_cursor]
+            }
+        };
+        seen[e as usize] = true;
+        seen_count += 1;
+
+        // ---- collect assignable nodes of e (lines 18-19) ----
+        cand.clear();
+        cand_key.clear();
+        let s = g.source(e);
+        let sel_min = params.select_min_new_axons;
+        let push_cand = |n: u32,
+                             cand: &mut std::collections::BTreeSet<NodeKey>,
+                             cand_key: &mut std::collections::HashMap<u32, NodeKey>,
+                             tracker: &ConstraintTracker| {
+            if assign[n as usize] == u32::MAX && !cand_key.contains_key(&n) {
+                let key = if sel_min {
+                    NodeKey {
+                        new_axons: tracker.new_axons(n) as u32,
+                        neg_inbound: -(g.inbound(n).len() as i64),
+                        node: n,
+                    }
+                } else {
+                    NodeKey { new_axons: 0, neg_inbound: 0, node: n }
+                };
+                cand.insert(key);
+                cand_key.insert(n, key);
+            }
+        };
+        for &d in g.dsts(e) {
+            push_cand(d, &mut cand, &mut cand_key, &tracker);
+        }
+        if g.inbound(s).is_empty() {
+            // input nodes are free of inbound axons: co-locate with dsts
+            push_cand(s, &mut cand, &mut cand_key, &tracker);
+        }
+
+        // ---- assign nodes (lines 20-33) ----
+        while let Some(&key) = cand.iter().next() {
+            let n = key.node;
+            // key.new_axons may be stale only w.r.t. *reductions* (axons
+            // added to the partition since insertion); recompute cheaply
+            // and reinsert if it improved.
+            let fresh = if params.select_min_new_axons { tracker.new_axons(n) as u32 } else { 0 };
+            if fresh != key.new_axons {
+                cand.remove(&key);
+                let nk = NodeKey { new_axons: fresh, ..key };
+                cand.insert(nk);
+                cand_key.insert(n, nk);
+                continue;
+            }
+
+            if !tracker.fits(n) {
+                if tracker.npc == 0 {
+                    tracker.node_feasible(n)?;
+                    return Err(MapError::ConstraintViolated(format!(
+                        "node {n} rejected by empty partition"
+                    )));
+                }
+                // close partition: flush queue (epoch bump), open next
+                epoch += 1;
+                heap.clear();
+                tracker.reset();
+                part += 1;
+                if part as usize >= hw.num_cores() {
+                    return Err(MapError::TooManyPartitions {
+                        got: part as usize + 1,
+                        limit: hw.num_cores(),
+                    });
+                }
+                // candidate axon-counts all reset: rebuild the scoreboard
+                let nodes: Vec<u32> = cand_key.keys().copied().collect();
+                cand.clear();
+                cand_key.clear();
+                for m in nodes {
+                    let k = if params.select_min_new_axons {
+                        NodeKey {
+                            new_axons: tracker.new_axons(m) as u32,
+                            neg_inbound: -(g.inbound(m).len() as i64),
+                            node: m,
+                        }
+                    } else {
+                        NodeKey { new_axons: 0, neg_inbound: 0, node: m }
+                    };
+                    cand.insert(k);
+                    cand_key.insert(m, k);
+                }
+                continue;
+            }
+
+            // assign n to the current partition (lines 28-30)
+            cand.remove(&key);
+            cand_key.remove(&n);
+            tracker.add(n);
+            assign[n as usize] = part;
+
+            // update the h-edge queue (lines 31-33): every unseen h-edge
+            // touching n gains an occurrence and loses a remaining slot
+            let mut touch = |c: EdgeId, heap: &mut BinaryHeap<EdgeEntry>| {
+                if seen[c as usize] {
+                    return;
+                }
+                let ci = c as usize;
+                if pq_epoch[ci] != epoch {
+                    pq[ci] = 0.0;
+                    pq_epoch[ci] = epoch;
+                }
+                let sz = size[ci] as f64;
+                if sz > 1.0 {
+                    pq[ci] = (pq[ci] * sz + 1.0) / (sz - 1.0);
+                } else {
+                    pq[ci] = 0.0; // fully assigned edge: no pull left
+                }
+                size[ci] = size[ci].saturating_sub(1);
+                if pq[ci] > 0.0 {
+                    heap.push(EdgeEntry {
+                        prio: pq[ci] * g.weight(c) as f64,
+                        edge: c,
+                        epoch,
+                    });
+                }
+            };
+            for &c in g.inbound(n) {
+                touch(c, &mut heap);
+            }
+            for &c in g.outbound(n) {
+                touch(c, &mut heap);
+            }
+        }
+    }
+
+    // Nodes untouched by any h-edge (isolated or sink-only components
+    // whose h-edges never listed them): sweep them into open partitions.
+    for n in 0..g.num_nodes() as u32 {
+        if assign[n as usize] == u32::MAX {
+            if !tracker.fits(n) {
+                tracker.node_feasible(n)?;
+                tracker.reset();
+                part += 1;
+                if part as usize >= hw.num_cores() {
+                    return Err(MapError::TooManyPartitions {
+                        got: part as usize + 1,
+                        limit: hw.num_cores(),
+                    });
+                }
+            }
+            tracker.add(n);
+            assign[n as usize] = part;
+        }
+    }
+
+    Ok(Partitioning::new(assign, part as usize + 1).compacted())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+    use crate::mapping::{connectivity, validate};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn groups_overlapping_listeners() {
+        // two axons with identical destination sets + one disjoint axon:
+        // overlap partitioning must co-locate the shared listeners
+        let mut b = HypergraphBuilder::new(12);
+        b.add_edge(0, vec![3, 4, 5, 6], 1.0);
+        b.add_edge(1, vec![3, 4, 5, 6], 1.0);
+        b.add_edge(2, vec![7, 8, 9, 10], 1.0);
+        let g = b.build();
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 6;
+        let rho = partition(&g, &hw, ).unwrap();
+        validate(&g, &rho, &hw).unwrap();
+        // listeners of the twin axons all share one partition
+        let p = rho.assign[3];
+        assert!(
+            [4, 5, 6].iter().all(|&n| rho.assign[n as usize] == p),
+            "assign={:?}",
+            rho.assign
+        );
+    }
+
+    #[test]
+    fn connectivity_not_worse_than_unordered_sequential() {
+        let mut rng = Pcg64::seeded(23);
+        let n = 400;
+        // random overlapping-clusters topology
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            let center = rng.below(n) as i64;
+            let dsts: Vec<u32> = (0..rng.range(4, 12))
+                .map(|_| {
+                    ((center + rng.range(0, 20) as i64 - 10).rem_euclid(n as i64)) as u32
+                })
+                .filter(|&d| d != s)
+                .collect();
+            if !dsts.is_empty() {
+                b.add_edge(s, dsts, rng.next_f32() + 0.01);
+            }
+        }
+        let g = b.build();
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 32;
+        let ov = partition(&g, &hw).unwrap();
+        validate(&g, &ov, &hw).unwrap();
+        let seq =
+            crate::mapping::sequential::partition(&g, &hw, crate::mapping::sequential::SeqOrder::Natural)
+                .unwrap();
+        let c_ov = connectivity(&g, &ov);
+        let c_seq = connectivity(&g, &seq);
+        assert!(
+            c_ov <= c_seq * 1.05,
+            "overlap {c_ov} should not lose to unordered sequential {c_seq}"
+        );
+    }
+
+    #[test]
+    fn all_nodes_assigned_even_isolated() {
+        let mut b = HypergraphBuilder::new(6);
+        b.add_edge(0, vec![1], 1.0);
+        // nodes 2..=5 isolated
+        let g = b.build();
+        let hw = NmhConfig::small();
+        let rho = partition(&g, &hw).unwrap();
+        assert!(rho.assign.iter().all(|&p| p != u32::MAX));
+        validate(&g, &rho, &hw).unwrap();
+    }
+
+    #[test]
+    fn input_nodes_colocated_with_listeners() {
+        // node 0 has no inbound: Alg. 1 line 19 pulls it into the
+        // partition of its destinations
+        let mut b = HypergraphBuilder::new(5);
+        b.add_edge(0, vec![1, 2, 3, 4], 1.0);
+        b.add_edge(1, vec![2], 1.0);
+        let g = b.build();
+        let hw = NmhConfig::small();
+        let rho = partition(&g, &hw).unwrap();
+        assert_eq!(rho.num_parts, 1);
+        assert_eq!(rho.assign[0], rho.assign[1]);
+    }
+
+    #[test]
+    fn honors_tight_constraints() {
+        let mut rng = Pcg64::seeded(31);
+        let n = 200;
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            let dsts: Vec<u32> = (0..8).map(|_| rng.below(n) as u32).filter(|&d| d != s).collect();
+            b.add_edge(s, dsts, rng.next_f32() + 0.01);
+        }
+        let g = b.build();
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 10;
+        hw.c_apc = 60;
+        hw.c_spc = 70;
+        let rho = partition(&g, &hw).unwrap();
+        validate(&g, &rho, &hw).unwrap();
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Pcg64::seeded(37);
+        let n = 150;
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            let dsts: Vec<u32> = (0..6).map(|_| rng.below(n) as u32).filter(|&d| d != s).collect();
+            b.add_edge(s, dsts, rng.next_f32() + 0.01);
+        }
+        let g = b.build();
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 16;
+        let a = partition(&g, &hw).unwrap();
+        let b2 = partition(&g, &hw).unwrap();
+        assert_eq!(a.assign, b2.assign);
+    }
+}

@@ -1,0 +1,153 @@
+//! Synapse pruning preprocessing (after Xiao et al. [16], who combine
+//! hierarchical mapping with pruning).
+//!
+//! Drops the weakest connections before partitioning: either every h-edge
+//! whose spike frequency falls below an absolute threshold, or the
+//! weakest fraction of total spike mass. Pruning trades model fidelity
+//! for mapping cost — fewer synapses per core (C_spc headroom), fewer
+//! distinct axons (C_apc headroom), fewer partitions, shorter wires. The
+//! ablation bench sweeps the threshold to expose the tradeoff curve.
+
+use crate::hypergraph::{Hypergraph, HypergraphBuilder};
+
+/// Pruning report: what was removed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PruneReport {
+    pub edges_before: usize,
+    pub edges_after: usize,
+    pub connections_before: usize,
+    pub connections_after: usize,
+    /// Fraction of total spike-frequency mass removed.
+    pub mass_removed: f64,
+}
+
+/// Remove h-edges with spike frequency below `threshold`.
+/// (An axon's spikes all share its frequency, so pruning is edge-level:
+/// per-synapse pruning would break the single-source h-edge invariant.)
+pub fn prune_below(g: &Hypergraph, threshold: f32) -> (Hypergraph, PruneReport) {
+    let total_mass: f64 = g.edge_ids().map(|e| g.weight(e) as f64).sum();
+    let mut b = HypergraphBuilder::new(g.num_nodes());
+    let mut kept_mass = 0.0f64;
+    for e in g.edge_ids() {
+        if g.weight(e) >= threshold {
+            kept_mass += g.weight(e) as f64;
+            b.add_edge_sorted(g.source(e), g.dsts(e), g.weight(e));
+        }
+    }
+    let pruned = b.build();
+    let report = PruneReport {
+        edges_before: g.num_edges(),
+        edges_after: pruned.num_edges(),
+        connections_before: g.num_connections(),
+        connections_after: pruned.num_connections(),
+        mass_removed: if total_mass > 0.0 { 1.0 - kept_mass / total_mass } else { 0.0 },
+    };
+    (pruned, report)
+}
+
+/// Remove the weakest h-edges totalling at most `fraction` of the spike
+/// mass (0.0 = no-op, approaching 1.0 = drop almost everything).
+pub fn prune_fraction(g: &Hypergraph, fraction: f64) -> (Hypergraph, PruneReport) {
+    assert!((0.0..1.0).contains(&fraction), "fraction must be in [0, 1)");
+    if g.num_edges() == 0 || fraction == 0.0 {
+        let report = PruneReport {
+            edges_before: g.num_edges(),
+            edges_after: g.num_edges(),
+            connections_before: g.num_connections(),
+            connections_after: g.num_connections(),
+            mass_removed: 0.0,
+        };
+        return (g.clone(), report);
+    }
+    let mut weights: Vec<f32> = g.edge_ids().map(|e| g.weight(e)).collect();
+    weights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total: f64 = weights.iter().map(|&w| w as f64).sum();
+    let budget = total * fraction;
+    let mut acc = 0.0f64;
+    let mut threshold = 0.0f32;
+    for &w in &weights {
+        if acc + w as f64 > budget {
+            break;
+        }
+        acc += w as f64;
+        threshold = w;
+    }
+    // prune strictly-below-or-equal the threshold weight but never the
+    // whole graph: bump by the smallest representable step
+    prune_below(g, f32::from_bits(threshold.to_bits() + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    fn weighted() -> Hypergraph {
+        let mut b = HypergraphBuilder::new(6);
+        b.add_edge(0, vec![1, 2], 0.1);
+        b.add_edge(1, vec![2, 3], 0.5);
+        b.add_edge(2, vec![3, 4], 1.0);
+        b.add_edge(3, vec![4, 5], 2.0);
+        b.build()
+    }
+
+    #[test]
+    fn prune_below_threshold() {
+        let g = weighted();
+        let (p, r) = prune_below(&g, 0.6);
+        assert_eq!(p.num_edges(), 2); // 1.0 and 2.0 survive
+        assert_eq!(r.edges_before, 4);
+        assert_eq!(r.edges_after, 2);
+        assert_eq!(r.connections_after, 4);
+        assert!((r.mass_removed - 0.6 / 3.6).abs() < 1e-6);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn prune_zero_threshold_is_noop() {
+        let g = weighted();
+        let (p, r) = prune_below(&g, 0.0);
+        assert_eq!(p.num_edges(), g.num_edges());
+        assert_eq!(r.mass_removed, 0.0);
+    }
+
+    #[test]
+    fn prune_fraction_respects_budget() {
+        let g = weighted();
+        // 10% of mass (0.36): only the 0.1 edge fits the budget
+        let (p, r) = prune_fraction(&g, 0.1);
+        assert_eq!(p.num_edges(), 3);
+        assert!(r.mass_removed <= 0.1 + 1e-9, "removed {}", r.mass_removed);
+        // 50% of mass (1.8): 0.1 + 0.5 + 1.0 = 1.6 fits
+        let (p, r) = prune_fraction(&g, 0.5);
+        assert_eq!(p.num_edges(), 1);
+        assert!(r.mass_removed <= 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn prune_fraction_zero_is_noop() {
+        let g = weighted();
+        let (p, r) = prune_fraction(&g, 0.0);
+        assert_eq!(p.num_edges(), 4);
+        assert_eq!(r.mass_removed, 0.0);
+    }
+
+    #[test]
+    fn pruning_reduces_mapping_cost() {
+        use crate::mapping::{connectivity, overlap};
+        let mut rng = crate::util::rng::Pcg64::seeded(9);
+        let n = 300;
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            let dsts: Vec<u32> = (0..8).map(|_| rng.below(n) as u32).filter(|&d| d != s).collect();
+            b.add_edge(s, dsts, rng.lognormal_median_cv(0.23, 1.58) as f32);
+        }
+        let g = b.build();
+        let (pruned, _) = prune_fraction(&g, 0.3);
+        let mut hw = crate::hw::NmhConfig::small();
+        hw.c_npc = 32;
+        let full = overlap::partition(&g, &hw).unwrap();
+        let less = overlap::partition(&pruned, &hw).unwrap();
+        assert!(connectivity(&pruned, &less) < connectivity(&g, &full));
+    }
+}

@@ -1,0 +1,187 @@
+//! Streaming hypergraph partitioning (after the streaming partitioners of
+//! [17] / Fernandez-Musoles [20]).
+//!
+//! Nodes arrive in a single pass (any order); a bounded lookahead buffer
+//! re-ranks the next assignment by second-order affinity to the *open*
+//! partition, and each node is placed greedily into the open partition or
+//! — when it would not fit or shows zero affinity — parked until the
+//! partition rolls over. This is the O(n) regime of sequential
+//! partitioning with a small constant-factor quality recovery, trading
+//! the global ordering pass (Alg. 2) for a window: the natural choice
+//! when the SNN streams from disk and can't be indexed up front.
+
+use super::{ConstraintTracker, MapError};
+use crate::hw::NmhConfig;
+use crate::hypergraph::quotient::Partitioning;
+use crate::hypergraph::Hypergraph;
+
+/// Streaming parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamParams {
+    /// Lookahead buffer capacity (nodes held for re-ranking).
+    pub window: usize,
+}
+
+impl Default for StreamParams {
+    fn default() -> Self {
+        StreamParams { window: 256 }
+    }
+}
+
+/// Partition `g` with a single streaming pass + lookahead window.
+pub fn partition(
+    g: &Hypergraph,
+    hw: &NmhConfig,
+    params: StreamParams,
+) -> Result<Partitioning, MapError> {
+    let n = g.num_nodes();
+    let mut assign = vec![u32::MAX; n];
+    let mut tracker = ConstraintTracker::new(g, hw);
+    let mut part = 0u32;
+
+    // the stream + window
+    let mut next_id = 0u32;
+    let mut window: Vec<u32> = Vec::with_capacity(params.window);
+
+    let fill_window = |window: &mut Vec<u32>, next_id: &mut u32| {
+        while window.len() < params.window && (*next_id as usize) < n {
+            window.push(*next_id);
+            *next_id += 1;
+        }
+    };
+    fill_window(&mut window, &mut next_id);
+
+    while !window.is_empty() {
+        // rank the window by affinity to the current partition: count of
+        // inbound axons already present (synaptic reuse now), tie-break by
+        // fewest new axons.
+        let mut best_idx = 0usize;
+        let mut best_key = (usize::MAX, usize::MAX, u32::MAX);
+        for (i, &v) in window.iter().enumerate() {
+            let new_ax = tracker.new_axons(v);
+            let shared = g.inbound(v).len() - new_ax;
+            // prefer max shared, then min new axons, then id (stable)
+            let key = (usize::MAX - shared, new_ax, v);
+            if key < best_key {
+                best_key = key;
+                best_idx = i;
+            }
+        }
+        let v = window.swap_remove(best_idx);
+
+        if !tracker.fits(v) {
+            if tracker.npc == 0 {
+                tracker.node_feasible(v)?;
+                return Err(MapError::ConstraintViolated(format!(
+                    "node {v} rejected by empty partition"
+                )));
+            }
+            // roll over to a fresh partition and retry v there
+            tracker.reset();
+            part += 1;
+            if part as usize >= hw.num_cores() {
+                return Err(MapError::TooManyPartitions {
+                    got: part as usize + 1,
+                    limit: hw.num_cores(),
+                });
+            }
+            window.push(v);
+            continue;
+        }
+        tracker.add(v);
+        assign[v as usize] = part;
+        fill_window(&mut window, &mut next_id);
+    }
+
+    Ok(Partitioning::new(assign, part as usize + 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+    use crate::mapping::{connectivity, sequential, validate};
+    use crate::util::rng::Pcg64;
+
+    fn shuffled_clusters(k: usize, size: usize, seed: u64) -> Hypergraph {
+        // clustered topology with node ids shuffled: streaming must use
+        // affinity, not id order, to group co-members
+        let n = k * size;
+        let mut rng = Pcg64::seeded(seed);
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut perm);
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n {
+            let c = s / size;
+            let dsts: Vec<u32> = (0..6)
+                .map(|_| perm[c * size + rng.below(size)])
+                .filter(|&d| d != perm[s])
+                .collect();
+            if !dsts.is_empty() {
+                b.add_edge(perm[s], dsts, rng.next_f32() + 0.01);
+            }
+        }
+        b.build()
+    }
+
+    fn hw(npc: usize) -> NmhConfig {
+        let mut hw = NmhConfig::small();
+        hw.c_npc = npc;
+        hw
+    }
+
+    #[test]
+    fn valid_total_assignment() {
+        let g = shuffled_clusters(4, 50, 1);
+        let hw = hw(50);
+        let rho = partition(&g, &hw, StreamParams::default()).unwrap();
+        validate(&g, &rho, &hw).unwrap();
+        assert!(rho.assign.iter().all(|&p| p != u32::MAX));
+    }
+
+    #[test]
+    fn window_beats_windowless_on_shuffled_input() {
+        let g = shuffled_clusters(6, 40, 3);
+        let hw = hw(40);
+        let streamed = partition(&g, &hw, StreamParams { window: 256 }).unwrap();
+        let no_window = partition(&g, &hw, StreamParams { window: 1 }).unwrap();
+        let cs = connectivity(&g, &streamed);
+        let cn = connectivity(&g, &no_window);
+        assert!(cs <= cn, "window {cs} vs windowless {cn}");
+    }
+
+    #[test]
+    fn window_one_equals_unordered_sequential() {
+        // degenerate window = pure arrival order = sequential unordered
+        let g = shuffled_clusters(3, 30, 5);
+        let hw = hw(30);
+        let streamed = partition(&g, &hw, StreamParams { window: 1 }).unwrap();
+        let seq = sequential::partition(&g, &hw, sequential::SeqOrder::Natural).unwrap();
+        assert_eq!(streamed.assign, seq.assign);
+    }
+
+    #[test]
+    fn respects_constraints_under_pressure() {
+        let g = shuffled_clusters(4, 40, 7);
+        let mut hwc = hw(16);
+        hwc.c_apc = 64;
+        hwc.c_spc = 200;
+        let rho = partition(&g, &hwc, StreamParams::default()).unwrap();
+        validate(&g, &rho, &hwc).unwrap();
+    }
+
+    #[test]
+    fn unmappable_node_detected() {
+        let mut b = HypergraphBuilder::new(6);
+        for s in 0..5u32 {
+            b.add_edge(s, vec![5], 1.0);
+        }
+        let g = b.build();
+        let mut hwc = hw(8);
+        hwc.c_apc = 2; // node 5 has 5 inbound axons
+        assert!(matches!(
+            partition(&g, &hwc, StreamParams::default()),
+            Err(MapError::NodeUnmappable { node: 5, .. })
+        ));
+    }
+}

@@ -1,0 +1,190 @@
+//! Table I cost model.
+//!
+//! For every quotient h-edge copy (source partition s → destination
+//! partition d, spike frequency w):
+//!   energy  += w · (‖γ(s)−γ(d)‖ · (E_R + E_T) + E_R)
+//!   latency += w · (‖γ(s)−γ(d)‖ · (L_R + L_T) + L_R)
+//! Congestion is the maximum expected per-core traffic under random
+//! shortest-path routing: max_h Σ_{(s,d)} w · τ(h, γ(s), γ(d)).
+//!
+//! Spike replication is inherent: the quotient graph has already collapsed
+//! per-neuron destinations into distinct partitions, so each core pays for
+//! at most one copy per axon — the correction hypergraphs bring over [7]'s
+//! edge-wise accounting (§III-B).
+
+use super::tau::{rect, tau, Binomial};
+use crate::hw::NmhConfig;
+use crate::hypergraph::Hypergraph;
+use crate::placement::Placement;
+
+/// Evaluated mapping metrics (Table I + compound indicators).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MappingMetrics {
+    /// Total spike-movement energy, pJ per timestep (expected).
+    pub energy: f64,
+    /// Total spike-movement latency, ns per timestep (expected, serial).
+    pub latency: f64,
+    /// Max expected per-core traffic (spikes/timestep through a router).
+    pub congestion: f64,
+    /// Energy-Latency Product (paper's compound indicator).
+    pub elp: f64,
+    /// Eq. 7 connectivity of the partitioning.
+    pub connectivity: f64,
+    /// Weighted Manhattan wirelength (refiners' objective).
+    pub wirelength: f64,
+    pub num_partitions: usize,
+    /// Mean spike hop distance (wirelength / total copies weight).
+    pub mean_hops: f64,
+}
+
+impl MappingMetrics {
+    pub fn to_row(&self) -> String {
+        format!(
+            "energy={:.4e}pJ latency={:.4e}ns congestion={:.4e} elp={:.4e} conn={:.4e} parts={}",
+            self.energy, self.latency, self.congestion, self.elp, self.connectivity,
+            self.num_partitions
+        )
+    }
+}
+
+/// Evaluate a complete mapping: quotient h-graph `gp` + placement γ.
+pub fn evaluate(gp: &Hypergraph, placement: &Placement, hw: &NmhConfig) -> MappingMetrics {
+    assert_eq!(gp.num_nodes(), placement.len());
+    let costs = hw.costs;
+    let mut energy = 0.0f64;
+    let mut latency = 0.0f64;
+    let mut wirelength = 0.0f64;
+    let mut copies_weight = 0.0f64;
+    let mut connectivity = 0.0f64;
+
+    // Aggregate directed partition-pair flows for the congestion pass.
+    let mut flows: std::collections::HashMap<(u32, u32), f64> = std::collections::HashMap::new();
+
+    for e in gp.edge_ids() {
+        let s = gp.source(e);
+        let w = gp.weight(e) as f64;
+        let sc = placement.coords[s as usize];
+        connectivity += w * gp.cardinality(e) as f64;
+        for &d in gp.dsts(e) {
+            let dc = placement.coords[d as usize];
+            let dist = NmhConfig::manhattan(sc, dc) as f64;
+            energy += w * (dist * (costs.e_r + costs.e_t) + costs.e_r);
+            latency += w * (dist * (costs.l_r + costs.l_t) + costs.l_r);
+            wirelength += w * dist;
+            copies_weight += w;
+            if d != s {
+                *flows.entry((s, d)).or_insert(0.0) += w;
+            }
+        }
+    }
+
+    // Congestion: expected traffic per core under random shortest paths.
+    let bin = Binomial::for_lattice(hw.width, hw.height);
+    let mut core_traffic = vec![0.0f64; hw.num_cores()];
+    for (&(s, d), &w) in flows.iter() {
+        let sc = placement.coords[s as usize];
+        let dc = placement.coords[d as usize];
+        for h in rect(sc, dc) {
+            let t = tau(&bin, h, sc, dc);
+            if t > 0.0 {
+                core_traffic[hw.index(h.0, h.1)] += w * t;
+            }
+        }
+    }
+    let congestion = core_traffic.iter().cloned().fold(0.0, f64::max);
+
+    MappingMetrics {
+        energy,
+        latency,
+        congestion,
+        elp: energy * latency,
+        connectivity,
+        wirelength,
+        num_partitions: gp.num_nodes(),
+        mean_hops: if copies_weight > 0.0 { wirelength / copies_weight } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    fn hw() -> NmhConfig {
+        NmhConfig::small()
+    }
+
+    #[test]
+    fn hand_computed_two_partitions() {
+        // one h-edge: partition 0 -> {1}, w = 2, distance 3
+        let mut b = HypergraphBuilder::new(2);
+        b.add_edge(0, vec![1], 2.0);
+        let gp = b.build();
+        let pl = Placement { coords: vec![(0, 0), (3, 0)] };
+        let m = evaluate(&gp, &pl, &hw());
+        let c = hw().costs;
+        assert!((m.energy - 2.0 * (3.0 * (c.e_r + c.e_t) + c.e_r)).abs() < 1e-9);
+        assert!((m.latency - 2.0 * (3.0 * (c.l_r + c.l_t) + c.l_r)).abs() < 1e-9);
+        assert!((m.elp - m.energy * m.latency).abs() < 1e-9);
+        assert!((m.wirelength - 6.0).abs() < 1e-9);
+        assert!((m.mean_hops - 3.0).abs() < 1e-9);
+        // all 2 units of traffic pass through every core of the line
+        assert!((m.congestion - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn colocated_destination_costs_router_only() {
+        // self-delivery inside a core: distance 0 still pays one E_R
+        let mut b = HypergraphBuilder::new(1);
+        b.add_edge(0, vec![0], 1.0);
+        let gp = b.build();
+        let pl = Placement { coords: vec![(5, 5)] };
+        let m = evaluate(&gp, &pl, &hw());
+        assert!((m.energy - hw().costs.e_r).abs() < 1e-9);
+        assert_eq!(m.congestion, 0.0); // no inter-core flow
+    }
+
+    #[test]
+    fn replication_cheaper_than_split() {
+        // h-edge reaching 4 neurons: in one partition = 1 copy; in 4 = 4
+        let mut merged_b = HypergraphBuilder::new(2);
+        merged_b.add_edge(0, vec![1], 1.0); // quotient with all dsts merged
+        let merged = merged_b.build();
+        let mut split_b = HypergraphBuilder::new(5);
+        split_b.add_edge(0, vec![1, 2, 3, 4], 1.0); // 4 separate partitions
+        let split = split_b.build();
+        let pm = Placement { coords: vec![(0, 0), (1, 0)] };
+        let ps = Placement {
+            coords: vec![(0, 0), (1, 0), (1, 1), (2, 0), (2, 1)],
+        };
+        let m_merged = evaluate(&merged, &pm, &hw());
+        let m_split = evaluate(&split, &ps, &hw());
+        assert!(m_merged.energy < m_split.energy / 2.0);
+    }
+
+    #[test]
+    fn congestion_peaks_between_hot_pair() {
+        // heavy flow between (0,0) and (10,0) dominates a light side flow
+        let mut b = HypergraphBuilder::new(4);
+        b.add_edge(0, vec![1], 10.0);
+        b.add_edge(2, vec![3], 0.1);
+        let gp = b.build();
+        let pl = Placement {
+            coords: vec![(0, 0), (10, 0), (0, 20), (1, 20)],
+        };
+        let m = evaluate(&gp, &pl, &hw());
+        // single-row route: all 10 units cross every core in the row
+        assert!((m.congestion - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn energy_decreases_with_distance() {
+        let mut b = HypergraphBuilder::new(2);
+        b.add_edge(0, vec![1], 1.0);
+        let gp = b.build();
+        let near = evaluate(&gp, &Placement { coords: vec![(0, 0), (1, 0)] }, &hw());
+        let far = evaluate(&gp, &Placement { coords: vec![(0, 0), (20, 20)] }, &hw());
+        assert!(near.energy < far.energy);
+        assert!(near.elp < far.elp);
+    }
+}

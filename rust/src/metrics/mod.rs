@@ -1,0 +1,12 @@
+//! Post-layout mapping performance metrics (paper Table I, adapted to
+//! hypergraphs from [7]): energy, latency, interconnect congestion, the
+//! Energy-Latency Product compound indicator, plus the §V-C property
+//! measures (synaptic reuse, connections locality) and rank statistics.
+
+pub mod cost;
+pub mod multicast;
+pub mod properties;
+pub mod stats;
+pub mod tau;
+
+pub use cost::{evaluate, MappingMetrics};

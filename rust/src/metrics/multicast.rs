@@ -1,0 +1,177 @@
+//! Hierarchical-multicast cost model (paper §III-A: connections locality
+//! "seamlessly creates an opportunity for the hierarchical multicasting
+//! of spikes, on architectures that implement such a feature [4]").
+//!
+//! Under unicast (Table I), an h-edge pays per destination core. A
+//! multicast NoC instead forwards one copy along a distribution tree. We
+//! approximate the rectilinear Steiner tree with Prim's minimum spanning
+//! tree under Manhattan distance (a ≤1.5x overestimate of RSMT), and also
+//! report the half-perimeter lower bound. The tighter an h-edge's
+//! locality (Eq. 15), the bigger the multicast saving — this model makes
+//! that argument quantitative.
+
+use crate::hw::NmhConfig;
+use crate::hypergraph::Hypergraph;
+use crate::placement::Placement;
+
+/// Multicast evaluation of one mapping.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MulticastMetrics {
+    /// Σ_e w(e) · MST length of {γ(s)} ∪ γ(D) — links traversed per step.
+    pub tree_energy: f64,
+    /// Unicast link traversals for the same mapping (Σ_e w Σ_d dist).
+    pub unicast_energy: f64,
+    /// Σ_e w(e) · HPWL(e): the multicast lower bound.
+    pub hpwl_bound: f64,
+    /// tree_energy / unicast_energy (≤ 1; lower = multicast helps more).
+    pub saving_ratio: f64,
+}
+
+/// Evaluate multicast vs unicast spike movement for a placed mapping.
+/// Energies are in pJ using the Table II per-hop constants.
+pub fn evaluate_multicast(gp: &Hypergraph, placement: &Placement, hw: &NmhConfig) -> MulticastMetrics {
+    let per_hop = hw.costs.e_r + hw.costs.e_t;
+    let mut m = MulticastMetrics::default();
+    let mut pts: Vec<(u16, u16)> = Vec::new();
+    for e in gp.edge_ids() {
+        let w = gp.weight(e) as f64;
+        let s = placement.coords[gp.source(e) as usize];
+        pts.clear();
+        pts.push(s);
+        let mut unicast = 0.0;
+        for &d in gp.dsts(e) {
+            let c = placement.coords[d as usize];
+            unicast += NmhConfig::manhattan(s, c) as f64;
+            if !pts.contains(&c) {
+                pts.push(c);
+            }
+        }
+        m.unicast_energy += w * unicast * per_hop;
+        m.tree_energy += w * mst_length(&pts) as f64 * per_hop;
+        m.hpwl_bound += w * hpwl(&pts) as f64 * per_hop;
+    }
+    m.saving_ratio = if m.unicast_energy > 0.0 {
+        m.tree_energy / m.unicast_energy
+    } else {
+        1.0
+    };
+    m
+}
+
+/// Manhattan-metric minimum spanning tree length (Prim, O(k²)).
+pub fn mst_length(pts: &[(u16, u16)]) -> u64 {
+    let k = pts.len();
+    if k <= 1 {
+        return 0;
+    }
+    let mut in_tree = vec![false; k];
+    let mut best = vec![u32::MAX; k];
+    in_tree[0] = true;
+    for j in 1..k {
+        best[j] = NmhConfig::manhattan(pts[0], pts[j]);
+    }
+    let mut total = 0u64;
+    for _ in 1..k {
+        let mut pick = usize::MAX;
+        let mut pick_d = u32::MAX;
+        for j in 0..k {
+            if !in_tree[j] && best[j] < pick_d {
+                pick_d = best[j];
+                pick = j;
+            }
+        }
+        total += pick_d as u64;
+        in_tree[pick] = true;
+        for j in 0..k {
+            if !in_tree[j] {
+                let d = NmhConfig::manhattan(pts[pick], pts[j]);
+                if d < best[j] {
+                    best[j] = d;
+                }
+            }
+        }
+    }
+    total
+}
+
+/// Half-perimeter wirelength of the bounding box — the classic lower
+/// bound on any rectilinear Steiner tree spanning `pts`.
+pub fn hpwl(pts: &[(u16, u16)]) -> u32 {
+    if pts.len() <= 1 {
+        return 0;
+    }
+    let (mut x0, mut x1, mut y0, mut y1) = (u16::MAX, 0u16, u16::MAX, 0u16);
+    for &(x, y) in pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    (x1 - x0) as u32 + (y1 - y0) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    #[test]
+    fn mst_simple_shapes() {
+        assert_eq!(mst_length(&[(0, 0)]), 0);
+        assert_eq!(mst_length(&[(0, 0), (3, 0)]), 3);
+        // L-shape: (0,0)-(3,0)-(3,4) = 3 + 4
+        assert_eq!(mst_length(&[(0, 0), (3, 0), (3, 4)]), 7);
+        // square corners, side 2: any spanning tree = 3 sides = 6
+        assert_eq!(mst_length(&[(0, 0), (2, 0), (0, 2), (2, 2)]), 6);
+    }
+
+    #[test]
+    fn hpwl_lower_bounds_mst() {
+        let mut rng = crate::util::rng::Pcg64::seeded(3);
+        for _ in 0..200 {
+            let k = rng.range(2, 10);
+            let pts: Vec<(u16, u16)> =
+                (0..k).map(|_| (rng.below(30) as u16, rng.below(30) as u16)).collect();
+            assert!(hpwl(&pts) as u64 <= mst_length(&pts), "pts={pts:?}");
+        }
+    }
+
+    #[test]
+    fn multicast_never_worse_than_unicast() {
+        let mut rng = crate::util::rng::Pcg64::seeded(5);
+        let n = 40;
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            let dsts: Vec<u32> = (0..5).map(|_| rng.below(n) as u32).filter(|&d| d != s).collect();
+            if !dsts.is_empty() {
+                b.add_edge(s, dsts, rng.next_f32() + 0.01);
+            }
+        }
+        let gp = b.build();
+        let hw = NmhConfig::small();
+        let pl = crate::placement::hilbert::place(&gp, &hw);
+        let m = evaluate_multicast(&gp, &pl, &hw);
+        assert!(m.tree_energy <= m.unicast_energy + 1e-9);
+        assert!(m.hpwl_bound <= m.tree_energy + 1e-9);
+        assert!(m.saving_ratio <= 1.0 && m.saving_ratio > 0.0);
+    }
+
+    #[test]
+    fn tight_locality_saves_more() {
+        // one h-edge to 4 dsts: clustered vs scattered placements
+        let mut b = HypergraphBuilder::new(5);
+        b.add_edge(0, vec![1, 2, 3, 4], 1.0);
+        let gp = b.build();
+        let hw = NmhConfig::small();
+        let near = Placement {
+            coords: vec![(10, 10), (11, 10), (10, 11), (11, 11), (12, 10)],
+        };
+        let far = Placement {
+            coords: vec![(0, 0), (60, 0), (0, 60), (60, 60), (30, 30)],
+        };
+        let mn = evaluate_multicast(&gp, &near, &hw);
+        let mf = evaluate_multicast(&gp, &far, &hw);
+        // scattered destinations benefit less (trunk sharing is minimal)
+        assert!(mn.saving_ratio < mf.saving_ratio);
+    }
+}

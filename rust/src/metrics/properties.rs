@@ -1,0 +1,312 @@
+//! Mapping-property measures (paper §V-C): synaptic reuse SR (Eq. 14) and
+//! connections locality CL (Eq. 15), each reported with arithmetic and
+//! geometric means — the quantities whose Spearman correlation with
+//! connectivity/ELP Fig. 11 establishes.
+
+use crate::hw::NmhConfig;
+use crate::hypergraph::quotient::Partitioning;
+use crate::hypergraph::Hypergraph;
+use crate::placement::Placement;
+use crate::util::{geometric_mean, mean};
+
+/// Aggregation used over per-partition / per-h-edge values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mean {
+    Arithmetic,
+    Geometric,
+    Max,
+}
+
+/// Synaptic reuse (Eq. 14): per partition, total inbound synapses over
+/// distinct inbound axons — how many times each received spike is reused
+/// inside the core. ≥ 1; higher is better.
+pub fn synaptic_reuse(g: &Hypergraph, rho: &Partitioning, agg: Mean) -> f64 {
+    let ratios = synaptic_reuse_per_partition(g, rho);
+    match agg {
+        Mean::Arithmetic => mean(&ratios),
+        Mean::Geometric => geometric_mean(&ratios, 1e-12),
+        Mean::Max => ratios.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// The per-partition reuse ratios behind Eq. 14 (empty partitions and
+/// partitions with no inbound axons are skipped).
+pub fn synaptic_reuse_per_partition(g: &Hypergraph, rho: &Partitioning) -> Vec<f64> {
+    let p = rho.num_parts;
+    let mut synapses = vec![0u64; p];
+    let mut axons = vec![0u64; p];
+    let mut stamp = vec![u32::MAX; p];
+    for e in g.edge_ids() {
+        for &d in g.dsts(e) {
+            let pd = rho.assign[d as usize] as usize;
+            synapses[pd] += 1;
+            if stamp[pd] != e {
+                stamp[pd] = e;
+                axons[pd] += 1;
+            }
+        }
+    }
+    (0..p)
+        .filter(|&i| axons[i] > 0)
+        .map(|i| synapses[i] as f64 / axons[i] as f64)
+        .collect()
+}
+
+/// Connections locality (Eq. 15): per quotient h-edge, the number of
+/// lattice points enclosed by the convex hull of the cores it connects
+/// (source + destinations). Lower is better (tighter footprint).
+pub fn connections_locality(
+    gp: &Hypergraph,
+    placement: &Placement,
+    hw: &NmhConfig,
+    agg: Mean,
+) -> f64 {
+    let vals = locality_per_hedge(gp, placement, hw);
+    match agg {
+        Mean::Arithmetic => mean(&vals),
+        Mean::Geometric => geometric_mean(&vals, 1e-12),
+        Mean::Max => vals.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+/// Per-h-edge hull footprints behind Eq. 15.
+pub fn locality_per_hedge(gp: &Hypergraph, placement: &Placement, _hw: &NmhConfig) -> Vec<f64> {
+    let mut out = Vec::with_capacity(gp.num_edges());
+    let mut pts: Vec<(i64, i64)> = Vec::new();
+    for e in gp.edge_ids() {
+        pts.clear();
+        let s = placement.coords[gp.source(e) as usize];
+        pts.push((s.0 as i64, s.1 as i64));
+        for &d in gp.dsts(e) {
+            let c = placement.coords[d as usize];
+            pts.push((c.0 as i64, c.1 as i64));
+        }
+        pts.sort_unstable();
+        pts.dedup();
+        out.push(lattice_points_in_hull(&pts) as f64);
+    }
+    out
+}
+
+/// Number of integer lattice points inside (or on) the convex hull of
+/// `pts` (pre-sorted, deduplicated). Handles degenerate hulls: a single
+/// point counts 1; a segment counts gcd(Δx, Δy) + 1.
+pub fn lattice_points_in_hull(pts: &[(i64, i64)]) -> usize {
+    match pts.len() {
+        0 => return 0,
+        1 => return 1,
+        _ => {}
+    }
+    let hull = convex_hull(pts);
+    if hull.len() == 1 {
+        return 1;
+    }
+    if hull.len() == 2 {
+        // collinear input: the hull is the longest segment; count every
+        // lattice point on any input point's segment span — all inputs are
+        // collinear so points on the extreme segment cover them
+        let (a, b) = (hull[0], hull[1]);
+        return (gcd((b.0 - a.0).abs(), (b.1 - a.1).abs()) + 1) as usize;
+    }
+    // Interior + boundary count by Pick-style scanline: for each y in the
+    // bbox, intersect the polygon with the horizontal line and count the
+    // integer x in [xmin_y, xmax_y].
+    let ymin = hull.iter().map(|p| p.1).min().unwrap();
+    let ymax = hull.iter().map(|p| p.1).max().unwrap();
+    let mut count = 0usize;
+    for y in ymin..=ymax {
+        let mut xlo = f64::INFINITY;
+        let mut xhi = f64::NEG_INFINITY;
+        let n = hull.len();
+        for i in 0..n {
+            let a = hull[i];
+            let b = hull[(i + 1) % n];
+            let (y0, y1) = (a.1.min(b.1), a.1.max(b.1));
+            if y < y0 || y > y1 {
+                continue;
+            }
+            if a.1 == b.1 {
+                // horizontal edge on this scanline
+                xlo = xlo.min(a.0.min(b.0) as f64);
+                xhi = xhi.max(a.0.max(b.0) as f64);
+            } else {
+                let t = (y - a.1) as f64 / (b.1 - a.1) as f64;
+                let x = a.0 as f64 + t * (b.0 - a.0) as f64;
+                xlo = xlo.min(x);
+                xhi = xhi.max(x);
+            }
+        }
+        if xlo.is_finite() && xhi >= xlo {
+            let lo = (xlo - 1e-9).ceil() as i64;
+            let hi = (xhi + 1e-9).floor() as i64;
+            if hi >= lo {
+                count += (hi - lo + 1) as usize;
+            }
+        }
+    }
+    count
+}
+
+/// Andrew's monotone-chain convex hull (returns CCW, no duplicate last
+/// point; collinear inputs collapse to the 2 extreme points).
+pub fn convex_hull(pts: &[(i64, i64)]) -> Vec<(i64, i64)> {
+    let n = pts.len();
+    if n <= 2 {
+        return pts.to_vec();
+    }
+    let cross = |o: (i64, i64), a: (i64, i64), b: (i64, i64)| -> i64 {
+        (a.0 - o.0) * (b.1 - o.1) - (a.1 - o.1) * (b.0 - o.0)
+    };
+    let mut hull: Vec<(i64, i64)> = Vec::with_capacity(2 * n);
+    for &p in pts.iter() {
+        while hull.len() >= 2 && cross(hull[hull.len() - 2], hull[hull.len() - 1], p) <= 0 {
+            hull.pop();
+        }
+        hull.push(p);
+    }
+    let lower_len = hull.len() + 1;
+    for &p in pts.iter().rev() {
+        while hull.len() >= lower_len && cross(hull[hull.len() - 2], hull[hull.len() - 1], p) <= 0 {
+            hull.pop();
+        }
+        hull.push(p);
+    }
+    hull.pop();
+    if hull.is_empty() {
+        // all points identical (dedup'd earlier, but be safe)
+        return vec![pts[0]];
+    }
+    // collinear inputs produce a degenerate 2-point chain repeated: dedup
+    hull.dedup();
+    if hull.len() > 2 {
+        hull
+    } else {
+        hull
+    }
+}
+
+fn gcd(a: i64, b: i64) -> i64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    #[test]
+    fn reuse_reflects_colocation() {
+        // one axon to 4 neurons: together = 4 synapses / 1 axon = 4
+        let mut b = HypergraphBuilder::new(5);
+        b.add_edge(0, vec![1, 2, 3, 4], 1.0);
+        let g = b.build();
+        let together = Partitioning::new(vec![0, 1, 1, 1, 1], 2);
+        let split = Partitioning::new(vec![0, 1, 2, 3, 4], 5);
+        assert!(
+            (synaptic_reuse(&g, &together, Mean::Arithmetic) - 4.0).abs() < 1e-9
+        );
+        assert!((synaptic_reuse(&g, &split, Mean::Arithmetic) - 1.0).abs() < 1e-9);
+        assert!((synaptic_reuse(&g, &together, Mean::Max) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn geometric_mean_penalizes_uneven_reuse() {
+        // partition A reuse 4, partition B reuse 1:
+        // arith = 2.5, geo = 2 — geo punishes the low-overlap partition
+        let mut b = HypergraphBuilder::new(7);
+        b.add_edge(0, vec![1, 2, 3, 4], 1.0);
+        b.add_edge(5, vec![6], 1.0);
+        let g = b.build();
+        let rho = Partitioning::new(vec![0, 1, 1, 1, 1, 0, 2], 3);
+        let a = synaptic_reuse(&g, &rho, Mean::Arithmetic);
+        let ge = synaptic_reuse(&g, &rho, Mean::Geometric);
+        assert!((a - 2.5).abs() < 1e-9, "a={a}");
+        assert!((ge - 2.0).abs() < 1e-9, "geo={ge}");
+    }
+
+    #[test]
+    fn hull_counts_simple_shapes() {
+        // unit square: 4 lattice points
+        assert_eq!(
+            lattice_points_in_hull(&[(0, 0), (0, 1), (1, 0), (1, 1)]),
+            4
+        );
+        // 2x2 square: 9
+        assert_eq!(lattice_points_in_hull(&[(0, 0), (0, 2), (2, 0), (2, 2)]), 9);
+        // single point
+        assert_eq!(lattice_points_in_hull(&[(3, 3)]), 1);
+        // horizontal segment 0..4
+        assert_eq!(lattice_points_in_hull(&[(0, 0), (2, 0), (4, 0)]), 5);
+        // diagonal segment (0,0)-(3,3): 4 points
+        assert_eq!(lattice_points_in_hull(&[(0, 0), (3, 3)]), 4);
+        // right triangle (0,0),(2,0),(0,2): 6 points
+        assert_eq!(lattice_points_in_hull(&[(0, 0), (2, 0), (0, 2)]), 6);
+    }
+
+    #[test]
+    fn hull_matches_bruteforce_on_random_sets() {
+        let mut rng = crate::util::rng::Pcg64::seeded(6);
+        for _ in 0..50 {
+            let k = rng.range(3, 8);
+            let mut pts: Vec<(i64, i64)> = (0..k)
+                .map(|_| (rng.below(10) as i64, rng.below(10) as i64))
+                .collect();
+            pts.sort_unstable();
+            pts.dedup();
+            let got = lattice_points_in_hull(&pts);
+            // brute force: point-in-hull test over the bbox
+            let hull = convex_hull(&pts);
+            let want = brute_count(&hull, &pts);
+            assert_eq!(got, want, "pts={pts:?}");
+        }
+    }
+
+    fn brute_count(hull: &[(i64, i64)], pts: &[(i64, i64)]) -> usize {
+        if hull.len() == 1 {
+            return 1;
+        }
+        if hull.len() == 2 {
+            return (super::gcd(
+                (hull[1].0 - hull[0].0).abs(),
+                (hull[1].1 - hull[0].1).abs(),
+            ) + 1) as usize;
+        }
+        let xmin = pts.iter().map(|p| p.0).min().unwrap();
+        let xmax = pts.iter().map(|p| p.0).max().unwrap();
+        let ymin = pts.iter().map(|p| p.1).min().unwrap();
+        let ymax = pts.iter().map(|p| p.1).max().unwrap();
+        let mut count = 0;
+        for x in xmin..=xmax {
+            for y in ymin..=ymax {
+                // inside CCW hull: all cross products >= 0
+                let inside = (0..hull.len()).all(|i| {
+                    let a = hull[i];
+                    let b = hull[(i + 1) % hull.len()];
+                    (b.0 - a.0) * (y - a.1) - (b.1 - a.1) * (x - a.0) >= 0
+                });
+                if inside {
+                    count += 1;
+                }
+            }
+        }
+        count
+    }
+
+    #[test]
+    fn locality_tight_vs_spread() {
+        let mut b = HypergraphBuilder::new(4);
+        b.add_edge(0, vec![1, 2, 3], 1.0);
+        let gp = b.build();
+        let hw = crate::hw::NmhConfig::small();
+        let tight = Placement { coords: vec![(0, 0), (1, 0), (0, 1), (1, 1)] };
+        let spread = Placement { coords: vec![(0, 0), (20, 0), (0, 20), (20, 20)] };
+        let cl_tight = connections_locality(&gp, &tight, &hw, Mean::Arithmetic);
+        let cl_spread = connections_locality(&gp, &spread, &hw, Mean::Arithmetic);
+        assert!((cl_tight - 4.0).abs() < 1e-9);
+        assert!(cl_spread > 100.0, "spread CL {cl_spread}");
+    }
+}

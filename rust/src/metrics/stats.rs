@@ -1,0 +1,138 @@
+//! Rank statistics for Fig. 11: Spearman's ρ over z-score-standardized
+//! per-network samples (the paper standardizes both metrics per h-graph
+//! because quality/property scales differ wildly across networks).
+
+/// Spearman rank correlation coefficient of paired samples.
+/// Returns None for fewer than 2 pairs or zero variance.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> Option<f64> {
+    assert_eq!(xs.len(), ys.len());
+    if xs.len() < 2 {
+        return None;
+    }
+    let rx = ranks(xs);
+    let ry = ranks(ys);
+    pearson(&rx, &ry)
+}
+
+/// Pearson correlation of two equal-length samples.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> Option<f64> {
+    let n = xs.len() as f64;
+    if xs.len() < 2 {
+        return None;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return None;
+    }
+    Some(sxy / (sxx * syy).sqrt())
+}
+
+/// Fractional ranks (average rank for ties), 1-based.
+pub fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0;
+        for &k in &idx[i..=j] {
+            out[k] = avg_rank;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Z-score standardization (mean 0, sd 1); constant samples map to 0.
+pub fn zscore(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return vec![];
+    }
+    let m = xs.iter().sum::<f64>() / n;
+    let sd = (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n).sqrt();
+    if sd <= 0.0 {
+        return vec![0.0; xs.len()];
+    }
+    xs.iter().map(|x| (x - m) / sd).collect()
+}
+
+/// Pool per-group samples with per-group standardization, then compute
+/// Spearman on the pooled standardized values (the Fig. 11 methodology).
+pub fn grouped_spearman(groups: &[(Vec<f64>, Vec<f64>)]) -> Option<f64> {
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for (gx, gy) in groups {
+        xs.extend(zscore(gx));
+        ys.extend(zscore(gy));
+    }
+    spearman(&xs, &ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_with_ties() {
+        let r = ranks(&[10.0, 20.0, 20.0, 30.0]);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn spearman_perfect_monotone() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let inc = [10.0, 20.0, 25.0, 100.0];
+        let dec = [5.0, 4.0, 3.0, -10.0];
+        assert!((spearman(&xs, &inc).unwrap() - 1.0).abs() < 1e-12);
+        assert!((spearman(&xs, &dec).unwrap() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_independent_near_zero() {
+        let mut rng = crate::util::rng::Pcg64::seeded(2);
+        let xs: Vec<f64> = (0..2000).map(|_| rng.next_f64()).collect();
+        let ys: Vec<f64> = (0..2000).map(|_| rng.next_f64()).collect();
+        let rho = spearman(&xs, &ys).unwrap();
+        assert!(rho.abs() < 0.06, "rho={rho}");
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(spearman(&[1.0], &[2.0]).is_none());
+        assert!(spearman(&[1.0, 1.0], &[2.0, 3.0]).is_none()); // zero variance
+        assert_eq!(zscore(&[5.0, 5.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn zscore_moments() {
+        let z = zscore(&[1.0, 2.0, 3.0, 4.0]);
+        let m: f64 = z.iter().sum::<f64>() / 4.0;
+        let v: f64 = z.iter().map(|x| x * x).sum::<f64>() / 4.0;
+        assert!(m.abs() < 1e-12 && (v - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grouped_standardization_removes_scale() {
+        // group A has values 100x group B, but within-group the relation
+        // is identical: pooled spearman stays ~1
+        let a = (vec![100.0, 200.0, 300.0], vec![1000.0, 2000.0, 3000.0]);
+        let b = (vec![1.0, 2.0, 3.0], vec![10.0, 20.0, 30.0]);
+        let rho = grouped_spearman(&[a, b]).unwrap();
+        assert!(rho > 0.95, "rho={rho}");
+    }
+}

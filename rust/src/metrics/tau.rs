@@ -1,0 +1,152 @@
+//! τ(h, h_s, h_d): probability of a spike being routed through core `h`
+//! when travelling from `h_s` to `h_d` (Table I, after [7]).
+//!
+//! Model: the NoC delivers along a uniformly random monotone (shortest)
+//! lattice path inside Rect(h_s, h_d). The probability of passing through
+//! `h` is then
+//!
+//! ```text
+//! τ = C(a1+b1, a1) · C(a2+b2, a2) / C(A+B, A)
+//! ```
+//!
+//! with (a1,b1) the |Δx|,|Δy| from h_s to h, (a2,b2) from h to h_d, and
+//! (A,B) from h_s to h_d; τ = 0 outside the rectangle.
+
+/// Pascal-triangle binomial table C(n, k) for n ≤ MAX_N (f64; the largest
+/// needed value C(126,63) ≈ 4.5e36 is exactly representable ratios-wise).
+pub struct Binomial {
+    max_n: usize,
+    table: Vec<f64>,
+}
+
+impl Binomial {
+    /// Table covering paths across a `width` × `height` lattice.
+    pub fn for_lattice(width: usize, height: usize) -> Self {
+        let max_n = width + height; // |Δx|+|Δy| ≤ (w-1)+(h-1) < w+h
+        let mut table = vec![0.0f64; (max_n + 1) * (max_n + 1)];
+        for n in 0..=max_n {
+            table[n * (max_n + 1)] = 1.0;
+            for k in 1..=n {
+                let prev = (n - 1) * (max_n + 1);
+                table[n * (max_n + 1) + k] =
+                    table[prev + k - 1] + if k <= n - 1 { table[prev + k] } else { 0.0 };
+            }
+        }
+        Binomial { max_n, table }
+    }
+
+    #[inline]
+    pub fn c(&self, n: usize, k: usize) -> f64 {
+        debug_assert!(n <= self.max_n && k <= n, "C({n},{k}) out of table");
+        self.table[n * (self.max_n + 1) + k]
+    }
+}
+
+/// τ(h, h_s, h_d) under uniform random shortest-path routing.
+pub fn tau(bin: &Binomial, h: (u16, u16), hs: (u16, u16), hd: (u16, u16)) -> f64 {
+    let (hx, hy) = (h.0 as i32, h.1 as i32);
+    let (sx, sy) = (hs.0 as i32, hs.1 as i32);
+    let (dx, dy) = (hd.0 as i32, hd.1 as i32);
+    // h must lie in the closed rectangle spanned by hs, hd
+    if hx < sx.min(dx) || hx > sx.max(dx) || hy < sy.min(dy) || hy > sy.max(dy) {
+        return 0.0;
+    }
+    let a1 = (hx - sx).unsigned_abs() as usize;
+    let b1 = (hy - sy).unsigned_abs() as usize;
+    let a2 = (dx - hx).unsigned_abs() as usize;
+    let b2 = (dy - hy).unsigned_abs() as usize;
+    let a = (dx - sx).unsigned_abs() as usize;
+    let b = (dy - sy).unsigned_abs() as usize;
+    let total = bin.c(a + b, a);
+    if total == 0.0 {
+        return 0.0;
+    }
+    bin.c(a1 + b1, a1) * bin.c(a2 + b2, a2) / total
+}
+
+/// Iterate the closed rectangle Rect(h1, h2) (Table I).
+pub fn rect(h1: (u16, u16), h2: (u16, u16)) -> impl Iterator<Item = (u16, u16)> {
+    let x0 = h1.0.min(h2.0);
+    let x1 = h1.0.max(h2.0);
+    let y0 = h1.1.min(h2.1);
+    let y1 = h1.1.max(h2.1);
+    (y0..=y1).flat_map(move |y| (x0..=x1).map(move |x| (x, y)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bin() -> Binomial {
+        Binomial::for_lattice(64, 64)
+    }
+
+    #[test]
+    fn binomial_values() {
+        let b = bin();
+        assert_eq!(b.c(0, 0), 1.0);
+        assert_eq!(b.c(5, 2), 10.0);
+        assert_eq!(b.c(10, 0), 1.0);
+        assert_eq!(b.c(10, 10), 1.0);
+        assert_eq!(b.c(6, 3), 20.0);
+    }
+
+    #[test]
+    fn tau_endpoints_are_certain() {
+        let b = bin();
+        let hs = (2, 3);
+        let hd = (7, 9);
+        assert!((tau(&b, hs, hs, hd) - 1.0).abs() < 1e-12);
+        assert!((tau(&b, hd, hs, hd) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tau_zero_outside_rect() {
+        let b = bin();
+        assert_eq!(tau(&b, (0, 0), (2, 2), (5, 5)), 0.0);
+        assert_eq!(tau(&b, (6, 2), (2, 2), (5, 5)), 0.0);
+    }
+
+    #[test]
+    fn tau_antidiagonal_slices_sum_to_one() {
+        // every shortest path crosses each "anti-diagonal" of the rect
+        // exactly once: Σ_{h: dist(hs,h)=t} τ(h) = 1 for each t
+        let b = bin();
+        let hs = (1u16, 2u16);
+        let hd = (6u16, 8u16);
+        let total_dist = 5 + 6;
+        for t in 0..=total_dist {
+            let mut sum = 0.0;
+            for h in rect(hs, hd) {
+                let d = (h.0 as i32 - hs.0 as i32).abs() + (h.1 as i32 - hs.1 as i32).abs();
+                if d == t {
+                    sum += tau(&b, h, hs, hd);
+                }
+            }
+            assert!((sum - 1.0).abs() < 1e-9, "slice t={t} sums to {sum}");
+        }
+    }
+
+    #[test]
+    fn tau_symmetric_under_reversal() {
+        let b = bin();
+        let hs = (3, 1);
+        let hd = (9, 7);
+        for h in rect(hs, hd) {
+            let fwd = tau(&b, h, hs, hd);
+            let back = tau(&b, h, hd, hs);
+            assert!((fwd - back).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn degenerate_line_route() {
+        let b = bin();
+        // same row: every rect cell is on the single path
+        for x in 2..=6u16 {
+            assert!((tau(&b, (x, 4), (2, 4), (6, 4)) - 1.0).abs() < 1e-12);
+        }
+        // same cell
+        assert!((tau(&b, (5, 5), (5, 5), (5, 5)) - 1.0).abs() < 1e-12);
+    }
+}

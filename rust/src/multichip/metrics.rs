@@ -1,0 +1,102 @@
+//! Multi-chip cost model: Table I generalized with per-hop-class costs.
+//!
+//! A spike copy's route (XY) decomposes into on-chip hops and
+//! boundary-crossing hops; the latter are scaled by the off-chip factors.
+
+use super::MultiChipConfig;
+use crate::hw::NmhConfig;
+use crate::hypergraph::Hypergraph;
+use crate::placement::Placement;
+
+/// Multi-chip mapping metrics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MultiChipMetrics {
+    pub energy: f64,
+    pub latency: f64,
+    pub elp: f64,
+    /// Total spike-frequency weight crossing chip boundaries per step.
+    pub boundary_traffic: f64,
+    /// On-chip hop count (weighted).
+    pub on_chip_hops: f64,
+    /// Off-chip hop count (weighted).
+    pub off_chip_hops: f64,
+}
+
+/// Evaluate a placed quotient h-graph on the chip array.
+pub fn evaluate(gp: &Hypergraph, placement: &Placement, mc: &MultiChipConfig) -> MultiChipMetrics {
+    let costs = mc.chip.costs;
+    let mut m = MultiChipMetrics::default();
+    for e in gp.edge_ids() {
+        let w = gp.weight(e) as f64;
+        let s = placement.coords[gp.source(e) as usize];
+        for &d in gp.dsts(e) {
+            let c = placement.coords[d as usize];
+            let dist = NmhConfig::manhattan(s, c) as f64;
+            let crossings = mc.boundary_crossings(s, c) as f64;
+            let on_chip = dist - crossings;
+            m.on_chip_hops += w * on_chip;
+            m.off_chip_hops += w * crossings;
+            if crossings > 0.0 {
+                m.boundary_traffic += w;
+            }
+            m.energy += w
+                * (on_chip * (costs.e_r + costs.e_t)
+                    + crossings * (costs.e_r + costs.e_t) * mc.off_chip_energy_factor
+                    + costs.e_r);
+            m.latency += w
+                * (on_chip * (costs.l_r + costs.l_t)
+                    + crossings * (costs.l_r + costs.l_t) * mc.off_chip_latency_factor
+                    + costs.l_r);
+        }
+    }
+    m.elp = m.energy * m.latency;
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    #[test]
+    fn on_chip_route_matches_single_chip_model() {
+        let mc = MultiChipConfig::quad_small();
+        let mut b = HypergraphBuilder::new(2);
+        b.add_edge(0, vec![1], 2.0);
+        let gp = b.build();
+        let pl = Placement { coords: vec![(0, 0), (3, 0)] };
+        let m = evaluate(&gp, &pl, &mc);
+        let single = crate::metrics::evaluate(&gp, &pl, &mc.chip);
+        assert!((m.energy - single.energy).abs() < 1e-9);
+        assert_eq!(m.off_chip_hops, 0.0);
+    }
+
+    #[test]
+    fn boundary_crossing_pays_the_factor() {
+        let mc = MultiChipConfig::quad_small();
+        let mut b = HypergraphBuilder::new(2);
+        b.add_edge(0, vec![1], 1.0);
+        let gp = b.build();
+        // (63,0) -> (64,0): one hop, crossing the chip boundary
+        let pl = Placement { coords: vec![(63, 0), (64, 0)] };
+        let m = evaluate(&gp, &pl, &mc);
+        let c = mc.chip.costs;
+        let want = (c.e_r + c.e_t) * 10.0 + c.e_r;
+        assert!((m.energy - want).abs() < 1e-9, "{} vs {want}", m.energy);
+        assert_eq!(m.off_chip_hops, 1.0);
+        assert_eq!(m.boundary_traffic, 1.0);
+    }
+
+    #[test]
+    fn mixed_route_decomposes() {
+        let mc = MultiChipConfig::quad_small();
+        let mut b = HypergraphBuilder::new(2);
+        b.add_edge(0, vec![1], 1.0);
+        let gp = b.build();
+        // (60,0) -> (70, 5): dist = 10 + 5 = 15, crossings = 1
+        let pl = Placement { coords: vec![(60, 0), (70, 5)] };
+        let m = evaluate(&gp, &pl, &mc);
+        assert_eq!(m.on_chip_hops, 14.0);
+        assert_eq!(m.off_chip_hops, 1.0);
+    }
+}

@@ -1,0 +1,97 @@
+//! Multi-chip mapping extension (paper §VI future work: "the multi-chip
+//! generalization of the mapping problem").
+//!
+//! NMH systems scale by tiling chips into a higher-order mesh (§II-B);
+//! off-chip links are slower and costlier than the on-chip NoC. This
+//! module models a `chips_x × chips_y` array of identical chips as one
+//! global lattice whose hop costs depend on whether a hop crosses a chip
+//! boundary, and provides a **chip-aware two-level placement**: the
+//! quotient h-graph is first partitioned across chips (minimizing
+//! boundary-crossing weight with the same overlap heuristics used for
+//! cores), then each chip's share is placed locally.
+
+pub mod metrics;
+pub mod placement;
+
+use crate::hw::NmhConfig;
+
+/// A 2D array of identical chips.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MultiChipConfig {
+    /// Per-chip lattice + per-core constraints + on-chip hop costs.
+    pub chip: NmhConfig,
+    pub chips_x: usize,
+    pub chips_y: usize,
+    /// Energy multiplier for a hop crossing a chip boundary.
+    pub off_chip_energy_factor: f64,
+    /// Latency multiplier for a boundary-crossing hop.
+    pub off_chip_latency_factor: f64,
+}
+
+impl MultiChipConfig {
+    /// A 2x2 array of "small" chips with 10x costlier off-chip hops
+    /// (SerDes-class penalty).
+    pub fn quad_small() -> Self {
+        MultiChipConfig {
+            chip: NmhConfig::small(),
+            chips_x: 2,
+            chips_y: 2,
+            off_chip_energy_factor: 10.0,
+            off_chip_latency_factor: 10.0,
+        }
+    }
+
+    /// The global lattice seen by placement: all chips tiled.
+    pub fn global_lattice(&self) -> NmhConfig {
+        let mut hw = self.chip;
+        hw.width = self.chip.width * self.chips_x;
+        hw.height = self.chip.height * self.chips_y;
+        hw
+    }
+
+    /// Total core count across chips.
+    pub fn num_cores(&self) -> usize {
+        self.global_lattice().num_cores()
+    }
+
+    /// Chip index of a global coordinate.
+    #[inline]
+    pub fn chip_of(&self, c: (u16, u16)) -> (u16, u16) {
+        (
+            c.0 / self.chip.width as u16,
+            c.1 / self.chip.height as u16,
+        )
+    }
+
+    /// Number of chip-boundary crossings on an XY route between two
+    /// global coordinates (x-boundaries crossed + y-boundaries crossed).
+    pub fn boundary_crossings(&self, a: (u16, u16), b: (u16, u16)) -> u32 {
+        let (ca, cb) = (self.chip_of(a), self.chip_of(b));
+        (ca.0 as i32 - cb.0 as i32).unsigned_abs() + (ca.1 as i32 - cb.1 as i32).unsigned_abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_lattice_dimensions() {
+        let mc = MultiChipConfig::quad_small();
+        let g = mc.global_lattice();
+        assert_eq!((g.width, g.height), (128, 128));
+        assert_eq!(mc.num_cores(), 128 * 128);
+    }
+
+    #[test]
+    fn chip_of_and_crossings() {
+        let mc = MultiChipConfig::quad_small();
+        assert_eq!(mc.chip_of((0, 0)), (0, 0));
+        assert_eq!(mc.chip_of((63, 63)), (0, 0));
+        assert_eq!(mc.chip_of((64, 0)), (1, 0));
+        assert_eq!(mc.chip_of((127, 127)), (1, 1));
+        assert_eq!(mc.boundary_crossings((0, 0), (63, 63)), 0);
+        assert_eq!(mc.boundary_crossings((63, 0), (64, 0)), 1);
+        assert_eq!(mc.boundary_crossings((0, 0), (127, 127)), 2);
+    }
+}

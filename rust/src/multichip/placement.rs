@@ -1,0 +1,258 @@
+//! Chip-aware two-level placement.
+//!
+//! Level 1: assign quotient-graph partitions to chips by running the
+//! hyperedge-overlap partitioner *again* on the quotient h-graph, with
+//! per-"core" capacity = cores-per-chip and the chip count as the lattice
+//! bound — exactly the paper's insight recursing one level up: chips
+//! replicate spikes too (one copy per chip), so chip assignment is the
+//! same synaptic-reuse problem.
+//!
+//! Level 2: within each chip, place its partitions with the spectral or
+//! Hilbert scheme on the chip-local lattice, then translate into global
+//! coordinates.
+
+use super::MultiChipConfig;
+use crate::hypergraph::quotient::Partitioning;
+use crate::hypergraph::{Hypergraph, HypergraphBuilder};
+use crate::mapping::{self, MapError};
+use crate::placement::{force, hilbert, spectral, Placement};
+
+/// Local placement flavor for level 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocalPlacer {
+    Hilbert,
+    Spectral,
+}
+
+/// Chip-aware placement of a quotient h-graph onto the chip array.
+/// Returns the global placement plus the chip assignment.
+pub fn place(
+    gp: &Hypergraph,
+    mc: &MultiChipConfig,
+    local: LocalPlacer,
+    refine_local: bool,
+) -> Result<(Placement, Partitioning), MapError> {
+    let p = gp.num_nodes();
+    if p > mc.num_cores() {
+        return Err(MapError::TooManyPartitions { got: p, limit: mc.num_cores() });
+    }
+    // ---- level 1: partitions -> chips (overlap heuristic, recursed) ----
+    // Two candidate fill targets, judged by actual boundary-cut weight:
+    // * packed  (c_npc = cores/chip): as few chips as possible — optimal
+    //   when the whole workload fits one chip (zero off-chip traffic);
+    // * balanced (c_npc ≈ p/chips): keeps the overlap heuristic aligned
+    //   with community boundaries when the workload must span chips.
+    let chips = mc.chips_x * mc.chips_y;
+    let level1 = |target: usize| -> Result<Partitioning, MapError> {
+        let mut chip_hw = mc.chip;
+        chip_hw.c_npc = target;
+        chip_hw.c_apc = usize::MAX >> 1; // chip-level axon queues are off-chip
+        chip_hw.c_spc = usize::MAX >> 1; //   links, modeled by cost not capacity
+        chip_hw.width = mc.chips_x;
+        chip_hw.height = mc.chips_y;
+        let rho = mapping::overlap::partition(gp, &chip_hw)?;
+        Ok(balance_chips(gp, rho, chips, mc.chip.num_cores()))
+    };
+    let packed = level1(mc.chip.num_cores())?;
+    let balanced = level1(crate::util::div_ceil(p, chips).clamp(1, mc.chip.num_cores()))?;
+    let chip_assign = if boundary_cut(gp, &packed) <= boundary_cut(gp, &balanced) {
+        packed
+    } else {
+        balanced
+    };
+
+    // ---- level 2: per-chip local placement ----
+    let mut coords = vec![(u16::MAX, u16::MAX); p];
+    for chip in 0..chips {
+        let members: Vec<u32> =
+            (0..p as u32).filter(|&v| chip_assign.assign[v as usize] == chip as u32).collect();
+        if members.is_empty() {
+            continue;
+        }
+        // induced sub-h-graph over this chip's partitions
+        let mut local_id = vec![u32::MAX; p];
+        for (i, &v) in members.iter().enumerate() {
+            local_id[v as usize] = i as u32;
+        }
+        let mut b = HypergraphBuilder::new(members.len());
+        let mut dsts: Vec<u32> = Vec::new();
+        for e in gp.edge_ids() {
+            let ls = local_id[gp.source(e) as usize];
+            if ls == u32::MAX {
+                continue;
+            }
+            dsts.clear();
+            dsts.extend(
+                gp.dsts(e).iter().filter_map(|&d| {
+                    let l = local_id[d as usize];
+                    (l != u32::MAX).then_some(l)
+                }),
+            );
+            if !dsts.is_empty() {
+                b.add_edge(ls, std::mem::take(&mut dsts), gp.weight(e));
+                dsts = Vec::new();
+            }
+        }
+        let sub = b.build();
+        let mut pl = match local {
+            LocalPlacer::Hilbert => hilbert::place(&sub, &mc.chip),
+            LocalPlacer::Spectral => spectral::place(&sub, &mc.chip),
+        };
+        if refine_local {
+            force::refine(&sub, &mc.chip, &mut pl, Default::default(), None);
+        }
+        // translate into global coordinates
+        let ox = (chip % mc.chips_x) as u16 * mc.chip.width as u16;
+        let oy = (chip / mc.chips_x) as u16 * mc.chip.height as u16;
+        for (i, &v) in members.iter().enumerate() {
+            let (x, y) = pl.coords[i];
+            coords[v as usize] = (x + ox, y + oy);
+        }
+    }
+    let placement = Placement { coords };
+    placement
+        .validate(&mc.global_lattice())
+        .map_err(MapError::ConstraintViolated)?;
+    Ok((placement, chip_assign))
+}
+
+/// Spike-frequency weight crossing chip groups (the level-1 objective).
+fn boundary_cut(gp: &Hypergraph, rho: &Partitioning) -> f64 {
+    let mut cut = 0.0;
+    for e in gp.edge_ids() {
+        let s = rho.assign[gp.source(e) as usize];
+        if gp.dsts(e).iter().any(|&d| rho.assign[d as usize] != s) {
+            cut += gp.weight(e) as f64;
+        }
+    }
+    cut
+}
+
+/// The chip-level partitioner may open fewer groups than chips or
+/// overfill one: rebalance greedily by spilling the lowest-affinity
+/// members of overfull chips into the emptiest chip.
+fn balance_chips(
+    gp: &Hypergraph,
+    rho: Partitioning,
+    chips: usize,
+    capacity: usize,
+) -> Partitioning {
+    let mut assign = rho.assign;
+    let mut load = vec![0usize; chips];
+    for &c in &assign {
+        load[c as usize] += 1;
+    }
+    loop {
+        let Some(over) = (0..chips).find(|&c| load[c] > capacity) else { break };
+        let under = (0..chips).min_by_key(|&c| load[c]).unwrap();
+        // spill the member with the least inbound weight (cheapest to move)
+        let victim = (0..assign.len() as u32)
+            .filter(|&v| assign[v as usize] == over as u32)
+            .min_by(|&a, &b| {
+                gp.inbound_weight(a)
+                    .partial_cmp(&gp.inbound_weight(b))
+                    .unwrap()
+            })
+            .expect("overfull chip has members");
+        assign[victim as usize] = under as u32;
+        load[over] -= 1;
+        load[under] += 1;
+    }
+    Partitioning::new(assign, chips)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::NmhConfig;
+    use crate::multichip::metrics::evaluate;
+    use crate::util::rng::Pcg64;
+
+    fn clustered_quotient(k: usize, size: usize, seed: u64) -> Hypergraph {
+        let n = k * size;
+        let mut rng = Pcg64::seeded(seed);
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            let c = s as usize / size;
+            let dsts: Vec<u32> = (0..4)
+                .map(|_| (c * size + rng.below(size)) as u32)
+                .filter(|&d| d != s)
+                .collect();
+            if !dsts.is_empty() {
+                b.add_edge(s, dsts, rng.next_f32() + 0.1);
+            }
+        }
+        b.build()
+    }
+
+    fn tiny_array() -> MultiChipConfig {
+        let mut chip = NmhConfig::small();
+        chip.width = 8;
+        chip.height = 8;
+        MultiChipConfig {
+            chip,
+            chips_x: 2,
+            chips_y: 2,
+            off_chip_energy_factor: 10.0,
+            off_chip_latency_factor: 10.0,
+        }
+    }
+
+    #[test]
+    fn placement_valid_and_within_chips() {
+        let gp = clustered_quotient(4, 30, 3);
+        let mc = tiny_array();
+        let (pl, chips) = place(&gp, &mc, LocalPlacer::Hilbert, false).unwrap();
+        pl.validate(&mc.global_lattice()).unwrap();
+        // every node's global coordinate must land on its assigned chip
+        for v in 0..gp.num_nodes() {
+            let chip = chips.assign[v];
+            let got = mc.chip_of(pl.coords[v]);
+            assert_eq!((got.1 as usize * mc.chips_x + got.0 as usize) as u32, chip);
+        }
+    }
+
+    #[test]
+    fn chip_aware_beats_chip_oblivious_on_clusters() {
+        // 4 clusters on 4 chips: chip-aware placement should keep each
+        // cluster on one chip; a global Hilbert walk will split them
+        let gp = clustered_quotient(4, 40, 7);
+        let mc = tiny_array();
+        let (aware, _) = place(&gp, &mc, LocalPlacer::Hilbert, true).unwrap();
+        let oblivious = hilbert::place(&gp, &mc.global_lattice());
+        let ma = evaluate(&gp, &aware, &mc);
+        let mo = evaluate(&gp, &oblivious, &mc);
+        assert!(
+            ma.off_chip_hops < mo.off_chip_hops,
+            "aware {} vs oblivious {}",
+            ma.off_chip_hops,
+            mo.off_chip_hops
+        );
+        assert!(ma.energy < mo.energy);
+    }
+
+    #[test]
+    fn respects_chip_capacity() {
+        // more partitions than one chip can hold: must spread
+        let gp = clustered_quotient(1, 100, 9); // one giant cluster
+        let mc = tiny_array(); // 64 cores per chip
+        let (pl, chips) = place(&gp, &mc, LocalPlacer::Hilbert, false).unwrap();
+        pl.validate(&mc.global_lattice()).unwrap();
+        let mut load = vec![0usize; 4];
+        for &c in &chips.assign {
+            load[c as usize] += 1;
+        }
+        assert!(load.iter().all(|&l| l <= 64), "load={load:?}");
+        assert!(load.iter().filter(|&&l| l > 0).count() >= 2);
+    }
+
+    #[test]
+    fn too_many_partitions_rejected() {
+        let gp = clustered_quotient(1, 300, 1);
+        let mc = tiny_array(); // 256 cores total
+        assert!(matches!(
+            place(&gp, &mc, LocalPlacer::Hilbert, false),
+            Err(MapError::TooManyPartitions { .. })
+        ));
+    }
+}

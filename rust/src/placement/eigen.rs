@@ -1,0 +1,330 @@
+//! Native spectral engine: normalized hypergraph Laplacian (Eq. 8) +
+//! deflated subspace iteration for its two smallest non-trivial eigenpairs
+//! (Eqs. 9-11).
+//!
+//! This mirrors the AOT JAX/Pallas artifact (python/compile/model.py) —
+//! the same shifted-operator iteration on M = 2I − L̂ — but over a sparse
+//! CSR operator, so it serves both as the fallback engine when artifacts
+//! are unavailable and as the cross-check oracle in tests.
+
+use crate::hypergraph::Hypergraph;
+use std::collections::HashMap;
+
+/// Sparse symmetric matrix in CSR form.
+pub struct SparseSym {
+    pub n: usize,
+    pub row_off: Vec<usize>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl SparseSym {
+    /// y = A x
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        for r in 0..self.n {
+            let mut acc = 0.0;
+            for i in self.row_off[r]..self.row_off[r + 1] {
+                acc += self.vals[i] * x[self.cols[i] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+}
+
+/// The spectral problem for a quotient h-graph: normalized Laplacian in
+/// sparse form plus its trivial null vector.
+pub struct LaplacianProblem {
+    /// L̂ (normalized Laplacian), sparse.
+    pub lap: SparseSym,
+    /// Unit-norm trivial eigenvector D^{1/2}·1 (zero where wdeg = 0).
+    pub null_vec: Vec<f64>,
+    /// Weighted degree of each node (Eq. 8 wdeg).
+    pub wdeg: Vec<f64>,
+}
+
+/// Build the normalized hypergraph Laplacian by exploding each h-edge
+/// into pairwise connections over {s} ∪ D (Eq. 8's clique model, with
+/// Zhou et al.'s cardinality normalization [21] — each h-edge's weight is
+/// split as w(e)/δ(e) over its member pairs, including the self term —
+/// which makes L̂ PSD with spectrum in [0, 1] and exact null vector
+/// D^{1/2}·1, the contract the subspace-iteration engines assume).
+pub fn build_laplacian(gp: &Hypergraph) -> LaplacianProblem {
+    let n = gp.num_nodes();
+    // Pairwise affinity accumulation. Clique explosion is O(Σ|D|²) — fine
+    // at partition scale (|P| ≤ 4096 by the lattice bound).
+    let mut pair: HashMap<(u32, u32), f64> = HashMap::new();
+    let mut diag_aff = vec![0.0f64; n]; // A_ii = Σ_{e∋i} w(e)/δ(e)
+    let mut wdeg = vec![0.0f64; n]; // d_v(i) = Σ_{e∋i} w(e)  (Eq. 8 wdeg)
+    let mut members: Vec<u32> = Vec::new();
+    for e in gp.edge_ids() {
+        let w = gp.weight(e) as f64;
+        members.clear();
+        members.push(gp.source(e));
+        members.extend_from_slice(gp.dsts(e));
+        members.sort_unstable();
+        members.dedup();
+        let share = w / members.len() as f64;
+        for i in 0..members.len() {
+            wdeg[members[i] as usize] += w;
+            diag_aff[members[i] as usize] += share;
+            for j in (i + 1)..members.len() {
+                *pair.entry((members[i], members[j])).or_insert(0.0) += share;
+            }
+        }
+    }
+
+    // assemble CSR of L = I - D^{-1/2} A D^{-1/2}
+    let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+    for (&(a, b), &w) in pair.iter() {
+        let den = (wdeg[a as usize] * wdeg[b as usize]).sqrt();
+        if den <= 0.0 {
+            continue;
+        }
+        let v = -w / den;
+        rows[a as usize].push((b, v));
+        rows[b as usize].push((a, v));
+    }
+    let mut row_off = Vec::with_capacity(n + 1);
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    row_off.push(0);
+    for (r, row) in rows.iter_mut().enumerate() {
+        let diag = if wdeg[r] > 0.0 { 1.0 - diag_aff[r] / wdeg[r] } else { 1.0 };
+        row.push((r as u32, diag));
+        row.sort_by_key(|&(c, _)| c);
+        for &(c, v) in row.iter() {
+            cols.push(c);
+            vals.push(v);
+        }
+        row_off.push(cols.len());
+    }
+
+    let mut null_vec: Vec<f64> = wdeg.iter().map(|&d| d.max(0.0).sqrt()).collect();
+    let norm = null_vec.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        null_vec.iter_mut().for_each(|x| *x /= norm);
+    }
+    LaplacianProblem {
+        lap: SparseSym { n, row_off, cols, vals },
+        null_vec,
+        wdeg,
+    }
+}
+
+/// Deflated subspace iteration on M = 2I − L̂. Returns the two leading
+/// deflated eigenvectors of M = two smallest non-trivial eigenvectors of
+/// L̂, plus their Rayleigh quotients w.r.t. L̂.
+pub fn smallest_nontrivial_eigs(
+    prob: &LaplacianProblem,
+    iters: usize,
+    subspace: usize,
+) -> (Vec<[f64; 2]>, [f64; 2]) {
+    let n = prob.lap.n;
+    let k = subspace.max(2);
+    // deterministic sin-hash init (same spirit as the AOT artifact)
+    let mut q: Vec<Vec<f64>> = (0..k)
+        .map(|j| {
+            (0..n)
+                .map(|i| {
+                    let x = ((i as f64) * 12.9898 + (j as f64) * 78.233).sin() * 43758.5453;
+                    x - x.floor() - 0.5
+                })
+                .collect()
+        })
+        .collect();
+    orthonormalize(&mut q, &prob.null_vec);
+
+    let mut y = vec![0.0f64; n];
+    for _ in 0..iters {
+        for col in q.iter_mut() {
+            // y = M col = 2 col - L col
+            prob.lap.matvec(col, &mut y);
+            for i in 0..n {
+                col[i] = 2.0 * col[i] - y[i];
+            }
+        }
+        orthonormalize(&mut q, &prob.null_vec);
+    }
+
+    // Rayleigh quotients under L̂ for the two leading columns.
+    let mut lam = [0.0f64; 2];
+    for (c, l) in lam.iter_mut().enumerate() {
+        prob.lap.matvec(&q[c], &mut y);
+        *l = dot(&q[c], &y);
+    }
+    let coords: Vec<[f64; 2]> = (0..n).map(|i| [q[0][i], q[1][i]]).collect();
+    (coords, lam)
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Modified Gram–Schmidt with fixed deflation vector.
+fn orthonormalize(q: &mut [Vec<f64>], v0: &[f64]) {
+    let k = q.len();
+    for j in 0..k {
+        let (done, rest) = q.split_at_mut(j);
+        let c = &mut rest[0];
+        let pv = dot(v0, c);
+        for i in 0..c.len() {
+            c[i] -= v0[i] * pv;
+        }
+        for prev in done.iter() {
+            let p = dot(prev, c);
+            for i in 0..c.len() {
+                c[i] -= prev[i] * p;
+            }
+        }
+        let norm = dot(c, c).sqrt();
+        if norm > 1e-12 {
+            c.iter_mut().for_each(|x| *x /= norm);
+        } else {
+            c.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    fn two_cliques() -> Hypergraph {
+        // two 4-cliques bridged by one weak edge
+        let mut b = HypergraphBuilder::new(8);
+        for i in 0..4u32 {
+            let dsts: Vec<u32> = (0..4).filter(|&j| j != i).collect();
+            b.add_edge(i, dsts, 2.0);
+        }
+        for i in 4..8u32 {
+            let dsts: Vec<u32> = (4..8).filter(|&j| j != i).collect();
+            b.add_edge(i, dsts, 2.0);
+        }
+        b.add_edge(3, vec![4], 0.05);
+        b.build()
+    }
+
+    #[test]
+    fn laplacian_rows_structure() {
+        let g = two_cliques();
+        let prob = build_laplacian(&g);
+        assert_eq!(prob.lap.n, 8);
+        // diagonal is 1 - A_ii/d_v(i), strictly inside (0, 1)
+        for r in 0..8 {
+            let mut diag = None;
+            for i in prob.lap.row_off[r]..prob.lap.row_off[r + 1] {
+                if prob.lap.cols[i] as usize == r {
+                    diag = Some(prob.lap.vals[i]);
+                }
+            }
+            let d = diag.unwrap();
+            assert!(d > 0.0 && d < 1.0, "row {r} diag {d}");
+        }
+    }
+
+    #[test]
+    fn null_vector_in_kernel() {
+        let g = two_cliques();
+        let prob = build_laplacian(&g);
+        let mut y = vec![0.0; 8];
+        prob.lap.matvec(&prob.null_vec, &mut y);
+        let resid: f64 = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(resid < 1e-9, "‖L v0‖ = {resid}");
+    }
+
+    #[test]
+    fn fiedler_separates_cliques() {
+        let g = two_cliques();
+        let prob = build_laplacian(&g);
+        let (coords, lam) = smallest_nontrivial_eigs(&prob, 500, 6);
+        assert!(lam[0] > 1e-6 && lam[0] <= lam[1] + 1e-6, "lam={lam:?}");
+        // Fiedler component signs split the cliques
+        let s0: f64 = coords[0][0].signum();
+        for i in 0..4 {
+            assert_eq!(coords[i][0].signum(), s0, "node {i}");
+        }
+        for i in 4..8 {
+            assert_eq!(coords[i][0].signum(), -s0, "node {i}");
+        }
+    }
+
+    #[test]
+    fn eigenvalues_match_dense_reference() {
+        // small random graph: compare to a dense Jacobi eigensolver
+        let mut rng = crate::util::rng::Pcg64::seeded(10);
+        let n = 16;
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            let dsts: Vec<u32> = (0..3)
+                .map(|_| rng.below(n) as u32)
+                .filter(|&d| d != s)
+                .collect();
+            if !dsts.is_empty() {
+                b.add_edge(s, dsts, rng.next_f32() + 0.1);
+            }
+        }
+        let g = b.build();
+        let prob = build_laplacian(&g);
+        // dense copy
+        let mut dense = vec![vec![0.0f64; n]; n];
+        for r in 0..n {
+            for i in prob.lap.row_off[r]..prob.lap.row_off[r + 1] {
+                dense[r][prob.lap.cols[i] as usize] = prob.lap.vals[i];
+            }
+        }
+        let evals = jacobi_eigenvalues(dense);
+        let mut nontrivial: Vec<f64> = evals.into_iter().filter(|&l| l > 1e-8).collect();
+        nontrivial.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (_, lam) = smallest_nontrivial_eigs(&prob, 800, 8);
+        let mut got = [lam[0], lam[1]];
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((got[0] - nontrivial[0]).abs() < 1e-3, "{got:?} vs {nontrivial:?}");
+        assert!((got[1] - nontrivial[1]).abs() < 1e-2, "{got:?} vs {nontrivial:?}");
+    }
+
+    /// Cyclic Jacobi rotations — O(n³) but test-only.
+    fn jacobi_eigenvalues(mut a: Vec<Vec<f64>>) -> Vec<f64> {
+        let n = a.len();
+        for _sweep in 0..100 {
+            let mut off = 0.0;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    off += a[i][j] * a[i][j];
+                }
+            }
+            if off < 1e-20 {
+                break;
+            }
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    if a[p][q].abs() < 1e-15 {
+                        continue;
+                    }
+                    let theta = (a[q][q] - a[p][p]) / (2.0 * a[p][q]);
+                    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    for k in 0..n {
+                        let akp = a[k][p];
+                        let akq = a[k][q];
+                        a[k][p] = c * akp - s * akq;
+                        a[k][q] = s * akp + c * akq;
+                    }
+                    for k in 0..n {
+                        let apk = a[p][k];
+                        let aqk = a[q][k];
+                        a[p][k] = c * apk - s * aqk;
+                        a[q][k] = s * apk + c * aqk;
+                    }
+                }
+            }
+        }
+        (0..n).map(|i| a[i][i]).collect()
+    }
+}

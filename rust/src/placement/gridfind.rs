@@ -1,0 +1,201 @@
+//! Nearest-free-core search over the lattice.
+//!
+//! The spectral placement discretizes a continuous embedding onto integer
+//! cores without collisions; the paper uses a KD-tree over available grid
+//! points. On a bounded lattice an expanding-ring search is exact and
+//! allocation-free: scan Chebyshev rings outward, track the best Euclidean
+//! candidate, and stop once the ring radius exceeds the best distance
+//! (Euclidean ≥ Chebyshev guarantees optimality).
+
+use crate::hw::NmhConfig;
+
+/// Occupancy-tracking nearest-free-core finder.
+pub struct GridFinder {
+    width: i32,
+    height: i32,
+    used: Vec<bool>,
+    free_count: usize,
+}
+
+impl GridFinder {
+    pub fn new(hw: &NmhConfig) -> Self {
+        GridFinder {
+            width: hw.width as i32,
+            height: hw.height as i32,
+            used: vec![false; hw.num_cores()],
+            free_count: hw.num_cores(),
+        }
+    }
+
+    #[inline]
+    fn idx(&self, x: i32, y: i32) -> usize {
+        (y * self.width + x) as usize
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free_count
+    }
+
+    pub fn is_used(&self, x: u16, y: u16) -> bool {
+        self.used[self.idx(x as i32, y as i32)]
+    }
+
+    /// Mark a core as occupied (panics if already taken).
+    pub fn take(&mut self, x: u16, y: u16) {
+        let i = self.idx(x as i32, y as i32);
+        assert!(!self.used[i], "core ({x},{y}) taken twice");
+        self.used[i] = true;
+        self.free_count -= 1;
+    }
+
+    /// Release a core.
+    pub fn release(&mut self, x: u16, y: u16) {
+        let i = self.idx(x as i32, y as i32);
+        assert!(self.used[i], "core ({x},{y}) not taken");
+        self.used[i] = false;
+        self.free_count += 1;
+    }
+
+    /// Claim the free core nearest (Euclidean) to the continuous target
+    /// `(tx, ty)`; ties broken towards smaller (y, x). Returns None when
+    /// the lattice is full.
+    pub fn take_nearest(&mut self, tx: f64, ty: f64) -> Option<(u16, u16)> {
+        if self.free_count == 0 {
+            return None;
+        }
+        let cx = (tx.round() as i32).clamp(0, self.width - 1);
+        let cy = (ty.round() as i32).clamp(0, self.height - 1);
+        let mut best: Option<(f64, i32, i32)> = None;
+        let max_ring = self.width.max(self.height);
+        for r in 0..=max_ring {
+            if let Some((bd, _, _)) = best {
+                // any cell on ring r is at Euclidean distance >= r - 1 from
+                // the (possibly off-center) target; stop when provably done
+                if bd <= (r - 1).max(0) as f64 {
+                    break;
+                }
+            }
+            let (x0, x1) = (cx - r, cx + r);
+            let (y0, y1) = (cy - r, cy + r);
+            let visit = |x: i32, y: i32, best: &mut Option<(f64, i32, i32)>| {
+                if x < 0 || y < 0 || x >= self.width || y >= self.height {
+                    return;
+                }
+                if self.used[(y * self.width + x) as usize] {
+                    return;
+                }
+                let dx = x as f64 - tx;
+                let dy = y as f64 - ty;
+                let d = (dx * dx + dy * dy).sqrt();
+                let better = match *best {
+                    None => true,
+                    Some((bd, bx, by)) => {
+                        d < bd - 1e-12 || ((d - bd).abs() <= 1e-12 && (y, x) < (by, bx))
+                    }
+                };
+                if better {
+                    *best = Some((d, x, y));
+                }
+            };
+            if r == 0 {
+                visit(cx, cy, &mut best);
+            } else {
+                for x in x0..=x1 {
+                    visit(x, y0, &mut best);
+                    visit(x, y1, &mut best);
+                }
+                for y in (y0 + 1)..y1 {
+                    visit(x0, y, &mut best);
+                    visit(x1, y, &mut best);
+                }
+            }
+        }
+        let (_, x, y) = best?;
+        self.take(x as u16, y as u16);
+        Some((x as u16, y as u16))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw8() -> NmhConfig {
+        let mut hw = NmhConfig::small();
+        hw.width = 8;
+        hw.height = 8;
+        hw
+    }
+
+    #[test]
+    fn takes_exact_cell_when_free() {
+        let hw = hw8();
+        let mut gf = GridFinder::new(&hw);
+        assert_eq!(gf.take_nearest(3.2, 4.1), Some((3, 4)));
+        assert!(gf.is_used(3, 4));
+    }
+
+    #[test]
+    fn falls_to_nearest_when_occupied() {
+        let hw = hw8();
+        let mut gf = GridFinder::new(&hw);
+        gf.take(3, 4);
+        let got = gf.take_nearest(3.0, 4.0).unwrap();
+        assert_eq!(NmhConfig::manhattan(got, (3, 4)), 1);
+    }
+
+    #[test]
+    fn nearest_matches_bruteforce() {
+        let hw = hw8();
+        let mut rng = crate::util::rng::Pcg64::seeded(4);
+        let mut gf = GridFinder::new(&hw);
+        let mut used = vec![false; 64];
+        for _ in 0..60 {
+            let tx = rng.next_f64() * 7.0;
+            let ty = rng.next_f64() * 7.0;
+            // brute-force best
+            let mut want: Option<(f64, i32, i32)> = None;
+            for y in 0..8i32 {
+                for x in 0..8i32 {
+                    if used[(y * 8 + x) as usize] {
+                        continue;
+                    }
+                    let d = ((x as f64 - tx).powi(2) + (y as f64 - ty).powi(2)).sqrt();
+                    let better = match want {
+                        None => true,
+                        Some((bd, bx, by)) => {
+                            d < bd - 1e-12 || ((d - bd).abs() <= 1e-12 && (y, x) < (by, bx))
+                        }
+                    };
+                    if better {
+                        want = Some((d, x, y));
+                    }
+                }
+            }
+            let got = gf.take_nearest(tx, ty).unwrap();
+            let (_, wx, wy) = want.unwrap();
+            assert_eq!(got, (wx as u16, wy as u16), "target ({tx},{ty})");
+            used[(wy * 8 + wx) as usize] = true;
+        }
+    }
+
+    #[test]
+    fn exhausts_lattice() {
+        let hw = hw8();
+        let mut gf = GridFinder::new(&hw);
+        for _ in 0..64 {
+            assert!(gf.take_nearest(4.0, 4.0).is_some());
+        }
+        assert_eq!(gf.take_nearest(4.0, 4.0), None);
+        assert_eq!(gf.free_count(), 0);
+    }
+
+    #[test]
+    fn release_reopens() {
+        let hw = hw8();
+        let mut gf = GridFinder::new(&hw);
+        gf.take(0, 0);
+        gf.release(0, 0);
+        assert_eq!(gf.take_nearest(0.0, 0.0), Some((0, 0)));
+    }
+}

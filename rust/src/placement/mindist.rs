@@ -1,0 +1,235 @@
+//! Minimum-distance placement (paper §IV-C2, TrueNorth's scheme [11],
+//! generalized + improved).
+//!
+//! Input partitions (no inbound h-edges) are spread evenly over a centered
+//! sub-grid; every other partition is then placed — in topological order
+//! when the quotient is acyclic, else Alg. 2's greedy order — on the core
+//! minimizing its total spike-frequency-weighted Manhattan distance to
+//! already-placed connected partitions. Candidate cores are restricted to
+//! the frontier around the occupied region (the paper's scalability
+//! improvement over scanning all |H| cores).
+
+use super::{PartitionAdjacency, Placement};
+use crate::hw::NmhConfig;
+use crate::hypergraph::Hypergraph;
+use crate::mapping::ordering;
+use std::collections::BTreeSet;
+
+/// Minimum-distance placement of the quotient h-graph `gp`.
+pub fn place(gp: &Hypergraph, hw: &NmhConfig) -> Placement {
+    let n = gp.num_nodes();
+    assert!(n <= hw.num_cores(), "more partitions than cores");
+    if n == 0 {
+        return Placement { coords: vec![] };
+    }
+    let adj = PartitionAdjacency::build(gp);
+    let order = ordering::auto_order(gp);
+
+    // Input partitions: no inbound h-edges.
+    let inputs: Vec<u32> = (0..n as u32).filter(|&p| gp.inbound(p).is_empty()).collect();
+
+    let mut coords = vec![(u16::MAX, u16::MAX); n];
+    let mut used = vec![false; hw.num_cores()];
+    // frontier: empty cores adjacent to used cores
+    let mut frontier: BTreeSet<usize> = BTreeSet::new();
+
+    // --- spread input partitions over a centered, evenly spaced grid ---
+    let spread = spread_grid(inputs.len().max(1), hw);
+    for (i, &p) in inputs.iter().enumerate() {
+        let (x, y) = spread[i];
+        place_one(p, (x, y), hw, &mut coords, &mut used, &mut frontier);
+    }
+    // networks with no pure input partition: seed the first node centrally
+    if inputs.is_empty() {
+        let p = order[0];
+        let c = ((hw.width / 2) as u16, (hw.height / 2) as u16);
+        place_one(p, c, hw, &mut coords, &mut used, &mut frontier);
+    }
+
+    // --- main sweep ---
+    for &p in &order {
+        if coords[p as usize] != (u16::MAX, u16::MAX) {
+            continue;
+        }
+        // total weighted distance to placed neighbors from candidate c
+        let neighbors: Vec<(u32, f64)> = adj.adj[p as usize]
+            .iter()
+            .filter(|&&(q, _)| coords[q as usize] != (u16::MAX, u16::MAX))
+            .copied()
+            .collect();
+        let best = if neighbors.is_empty() {
+            // unconnected to anything placed: any frontier core works;
+            // pick the first (deterministic)
+            frontier.iter().next().copied()
+        } else {
+            let mut best: Option<(f64, usize)> = None;
+            for &cell in frontier.iter() {
+                let (x, y) = hw.coord(cell);
+                let mut cost = 0.0;
+                for &(q, w) in &neighbors {
+                    cost += w * NmhConfig::manhattan((x, y), coords[q as usize]) as f64;
+                }
+                if best.map(|(bc, bcell)| (cost, cell) < (bc, bcell)).unwrap_or(true) {
+                    best = Some((cost, cell));
+                }
+            }
+            best.map(|(_, cell)| cell)
+        };
+        let cell = best.unwrap_or_else(|| {
+            // frontier exhausted (isolated islands): first free core
+            used.iter().position(|&u| !u).expect("lattice full")
+        });
+        let (x, y) = hw.coord(cell);
+        place_one(p, (x, y), hw, &mut coords, &mut used, &mut frontier);
+    }
+
+    Placement { coords }
+}
+
+/// Claim `c` for partition `p` and update the frontier.
+fn place_one(
+    p: u32,
+    c: (u16, u16),
+    hw: &NmhConfig,
+    coords: &mut [(u16, u16)],
+    used: &mut [bool],
+    frontier: &mut BTreeSet<usize>,
+) {
+    let idx = hw.index(c.0, c.1);
+    debug_assert!(!used[idx]);
+    used[idx] = true;
+    coords[p as usize] = c;
+    frontier.remove(&idx);
+    for (dx, dy) in [(1i32, 0i32), (-1, 0), (0, 1), (0, -1)] {
+        let nx = c.0 as i32 + dx;
+        let ny = c.1 as i32 + dy;
+        if hw.contains(nx, ny) {
+            let ni = hw.index(nx as u16, ny as u16);
+            if !used[ni] {
+                frontier.insert(ni);
+            }
+        }
+    }
+}
+
+/// Evenly spaced k positions on a centered sub-grid (the TrueNorth input
+/// spreading rule: "spread out as much as possible while remaining
+/// centered and evenly spaced between themselves and the borders").
+fn spread_grid(k: usize, hw: &NmhConfig) -> Vec<(u16, u16)> {
+    let cols = (k as f64).sqrt().ceil() as usize;
+    let rows = crate::util::div_ceil(k, cols);
+    let mut out = Vec::with_capacity(k);
+    for i in 0..k {
+        let r = i / cols;
+        let c = i % cols;
+        // fractional positions (c+1)/(cols+1), (r+1)/(rows+1) of the lattice
+        let x = ((c + 1) as f64 / (cols + 1) as f64 * hw.width as f64).round() as i64;
+        let y = ((r + 1) as f64 / (rows + 1) as f64 * hw.height as f64).round() as i64;
+        let x = x.clamp(0, hw.width as i64 - 1) as u16;
+        let y = y.clamp(0, hw.height as i64 - 1) as u16;
+        out.push((x, y));
+    }
+    // de-collide (tiny lattices): nudge duplicates to free cells
+    let mut seen = std::collections::HashSet::new();
+    let mut gf = super::gridfind::GridFinder::new(hw);
+    for c in out.iter_mut() {
+        if !seen.insert(*c) || gf.is_used(c.0, c.1) {
+            *c = gf.take_nearest(c.0 as f64, c.1 as f64).expect("lattice full");
+        } else {
+            gf.take(c.0, c.1);
+        }
+        seen.insert(*c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    fn layered_quotient() -> Hypergraph {
+        // 2 inputs -> 4 mids -> 2 outs
+        let mut b = HypergraphBuilder::new(8);
+        b.add_edge(0, vec![2, 3], 1.0);
+        b.add_edge(1, vec![4, 5], 1.0);
+        b.add_edge(2, vec![6], 2.0);
+        b.add_edge(3, vec![6], 1.0);
+        b.add_edge(4, vec![7], 2.0);
+        b.add_edge(5, vec![7], 1.0);
+        b.build()
+    }
+
+    #[test]
+    fn valid_and_all_placed() {
+        let gp = layered_quotient();
+        let hw = NmhConfig::small();
+        let pl = place(&gp, &hw);
+        pl.validate(&hw).unwrap();
+        assert_eq!(pl.len(), 8);
+    }
+
+    #[test]
+    fn children_land_near_parents() {
+        let gp = layered_quotient();
+        let hw = NmhConfig::small();
+        let pl = place(&gp, &hw);
+        // mid partitions sit close to their input
+        for (parent, child) in [(0u32, 2u32), (1, 4)] {
+            let d = NmhConfig::manhattan(pl.coords[parent as usize], pl.coords[child as usize]);
+            assert!(d <= 3, "partition {child} at distance {d} from {parent}");
+        }
+    }
+
+    #[test]
+    fn inputs_spread_apart() {
+        let gp = layered_quotient();
+        let hw = NmhConfig::small();
+        let pl = place(&gp, &hw);
+        let d = NmhConfig::manhattan(pl.coords[0], pl.coords[1]);
+        assert!(d >= 10, "inputs should spread, got distance {d}");
+    }
+
+    #[test]
+    fn cyclic_quotient_still_places() {
+        let mut b = HypergraphBuilder::new(5);
+        for i in 0..5u32 {
+            b.add_edge(i, vec![(i + 1) % 5], 1.0);
+        }
+        let gp = b.build();
+        let hw = NmhConfig::small();
+        let pl = place(&gp, &hw);
+        pl.validate(&hw).unwrap();
+        // ring should stay tight
+        assert!(pl.wirelength(&gp) <= 10.0, "wl={}", pl.wirelength(&gp));
+    }
+
+    #[test]
+    fn spread_grid_even_and_centered() {
+        let hw = NmhConfig::small();
+        let pts = spread_grid(4, &hw);
+        assert_eq!(pts.len(), 4);
+        // 2x2 arrangement at thirds of the lattice: x in {21,43}, y likewise
+        for &(x, y) in &pts {
+            assert!(x > 10 && x < 54, "x={x}");
+            assert!(y > 10 && y < 54, "y={y}");
+        }
+        let set: std::collections::HashSet<_> = pts.iter().collect();
+        assert_eq!(set.len(), 4);
+    }
+
+    #[test]
+    fn full_tiny_lattice() {
+        let mut hw = NmhConfig::small();
+        hw.width = 3;
+        hw.height = 3;
+        let mut b = HypergraphBuilder::new(9);
+        for i in 0..8u32 {
+            b.add_edge(i, vec![i + 1], 1.0);
+        }
+        let gp = b.build();
+        let pl = place(&gp, &hw);
+        pl.validate(&hw).unwrap();
+        assert_eq!(pl.len(), 9);
+    }
+}

@@ -1,0 +1,199 @@
+//! Placement: γ — the injective assignment of partitions to lattice cores
+//! (paper §III, §IV-B/C).
+//!
+//! * [`hilbert`] — discrete Hilbert space-filling-curve initial placement.
+//! * [`spectral`] — Laplacian-eigenmode initial placement (the paper's
+//!   proposal), with native or PJRT eigensolver engines.
+//! * [`force`] — force-directed refinement (potential Eq. 12 / Eq. 13).
+//! * [`mindist`] — TrueNorth-style minimum-distance direct placement.
+
+pub mod eigen;
+pub mod force;
+pub mod gridfind;
+pub mod hilbert;
+pub mod mindist;
+pub mod spectral;
+
+use crate::hw::NmhConfig;
+use crate::hypergraph::Hypergraph;
+use std::collections::HashMap;
+
+/// A placement γ: partitions → core coordinates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    /// `coords[p]` = (x, y) of partition p's core.
+    pub coords: Vec<(u16, u16)>,
+}
+
+impl Placement {
+    /// Injectivity + bounds check.
+    pub fn validate(&self, hw: &NmhConfig) -> Result<(), String> {
+        let mut used = vec![false; hw.num_cores()];
+        for (p, &(x, y)) in self.coords.iter().enumerate() {
+            if !hw.contains(x as i32, y as i32) {
+                return Err(format!("partition {p} at ({x},{y}) outside lattice"));
+            }
+            let idx = hw.index(x, y);
+            if used[idx] {
+                return Err(format!("core ({x},{y}) assigned twice"));
+            }
+            used[idx] = true;
+        }
+        Ok(())
+    }
+
+    /// Total spike-frequency-weighted Manhattan wirelength over a
+    /// partitioned h-graph: Σ_e Σ_d w(e)·‖γ(s)−γ(d)‖ — the quantity both
+    /// refiners descend (before the per-spike router constants of Tab. I).
+    pub fn wirelength(&self, gp: &Hypergraph) -> f64 {
+        let mut total = 0.0;
+        for e in gp.edge_ids() {
+            let s = self.coords[gp.source(e) as usize];
+            let w = gp.weight(e) as f64;
+            for &d in gp.dsts(e) {
+                total += w * NmhConfig::manhattan(s, self.coords[d as usize]) as f64;
+            }
+        }
+        total
+    }
+
+    /// Number of partitions placed.
+    pub fn len(&self) -> usize {
+        self.coords.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.coords.is_empty()
+    }
+}
+
+/// Symmetric partition-to-partition weight adjacency used by the refiners:
+/// `adj[p]` = list of (q, w) with `w` the total spike frequency of h-edges
+/// linking p and q in either direction (source→dest pairs of the quotient
+/// graph; self-pairs excluded — their clamped distance is constant).
+pub struct PartitionAdjacency {
+    pub adj: Vec<Vec<(u32, f64)>>,
+    /// total adjacent weight per partition (wdeg in Eq. 8's sense,
+    /// restricted to source-destination pairs)
+    pub wdeg: Vec<f64>,
+}
+
+impl PartitionAdjacency {
+    /// Build from a quotient h-graph (pairs = (source, each destination)).
+    pub fn build(gp: &Hypergraph) -> Self {
+        let n = gp.num_nodes();
+        let mut map: HashMap<(u32, u32), f64> = HashMap::new();
+        for e in gp.edge_ids() {
+            let s = gp.source(e);
+            let w = gp.weight(e) as f64;
+            for &d in gp.dsts(e) {
+                if d == s {
+                    continue;
+                }
+                let key = if s < d { (s, d) } else { (d, s) };
+                *map.entry(key).or_insert(0.0) += w;
+            }
+        }
+        let mut adj = vec![Vec::new(); n];
+        let mut wdeg = vec![0.0; n];
+        for ((a, b), w) in map {
+            adj[a as usize].push((b, w));
+            adj[b as usize].push((a, w));
+            wdeg[a as usize] += w;
+            wdeg[b as usize] += w;
+        }
+        for l in adj.iter_mut() {
+            l.sort_by_key(|&(q, _)| q);
+        }
+        PartitionAdjacency { adj, wdeg }
+    }
+
+    pub fn len(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adj.is_empty()
+    }
+
+    /// Potential of partition p at position `c` (Eq. 12 with the paper's
+    /// max(‖·‖, 1) clamp), counting both inbound and outbound pulls.
+    pub fn potential_at(&self, p: u32, c: (i32, i32), coords: &[(u16, u16)]) -> f64 {
+        let mut pot = 0.0;
+        for &(q, w) in &self.adj[p as usize] {
+            let qc = coords[q as usize];
+            let dist = (c.0 - qc.0 as i32).abs() + (c.1 - qc.1 as i32).abs();
+            pot += w * (dist.max(1)) as f64;
+        }
+        pot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    fn quotient_like() -> Hypergraph {
+        // partitions: 0 -> {1,2} (w 2), 1 -> {2} (w 1), 2 -> {0} (w .5)
+        let mut b = HypergraphBuilder::new(3);
+        b.add_edge(0, vec![1, 2], 2.0);
+        b.add_edge(1, vec![2], 1.0);
+        b.add_edge(2, vec![0], 0.5);
+        b.build()
+    }
+
+    #[test]
+    fn placement_validation() {
+        let hw = NmhConfig::small();
+        let good = Placement { coords: vec![(0, 0), (1, 0), (0, 1)] };
+        good.validate(&hw).unwrap();
+        let dup = Placement { coords: vec![(0, 0), (0, 0)] };
+        assert!(dup.validate(&hw).is_err());
+        let oob = Placement { coords: vec![(64, 0)] };
+        assert!(oob.validate(&hw).is_err());
+    }
+
+    #[test]
+    fn wirelength_hand_computed() {
+        let gp = quotient_like();
+        let pl = Placement { coords: vec![(0, 0), (1, 0), (2, 0)] };
+        // e0: 2*(d(0,1)+d(0,2)) = 2*(1+2)=6 ; e1: 1*d(1,2)=1 ; e2: .5*d(2,0)=1
+        assert!((pl.wirelength(&gp) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adjacency_symmetric_and_aggregated() {
+        let gp = quotient_like();
+        let adj = PartitionAdjacency::build(&gp);
+        // pair (0,1): w 2 ; pair (0,2): w 2 + 0.5 ; pair (1,2): w 1
+        let get = |a: usize, b: u32| {
+            adj.adj[a].iter().find(|&&(q, _)| q == b).map(|&(_, w)| w).unwrap()
+        };
+        assert!((get(0, 1) - 2.0).abs() < 1e-9);
+        assert!((get(0, 2) - 2.5).abs() < 1e-9);
+        assert!((get(1, 0) - 2.0).abs() < 1e-9);
+        assert!((get(2, 1) - 1.0).abs() < 1e-9);
+        assert!((adj.wdeg[0] - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn potential_clamps_colocation() {
+        let gp = quotient_like();
+        let adj = PartitionAdjacency::build(&gp);
+        let coords = vec![(0, 0), (0, 0), (5, 0)];
+        // p0 at (0,0): to q1 dist 0 -> clamped 1 (w 2) ; to q2 dist 5 (w 2.5)
+        let pot = adj.potential_at(0, (0, 0), &coords);
+        assert!((pot - (2.0 * 1.0 + 2.5 * 5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn self_loops_excluded() {
+        let mut b = HypergraphBuilder::new(2);
+        b.add_edge(0, vec![0, 1], 3.0);
+        let gp = b.build();
+        let adj = PartitionAdjacency::build(&gp);
+        assert_eq!(adj.adj[0].len(), 1); // only (0,1), no self pair
+        assert!((adj.adj[0][0].1 - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,237 @@
+//! Spectral initial placement (paper §IV-B2).
+//!
+//! 1. Build the normalized hypergraph Laplacian of the partitioned h-graph
+//!    (Eq. 8, clique explosion of h-edges).
+//! 2. Compute the two eigenvectors with the smallest non-zero eigenvalues
+//!    (Eq. 9) — via the AOT JAX/Pallas artifact through PJRT when an
+//!    engine is supplied, else the native sparse subspace iteration.
+//! 3. Normalize the 2D embedding (Eq. 11) into the unit square, scale it
+//!    onto a compact, nearly-square, centered lattice region with enough
+//!    points to host all partitions, and discretize each partition to the
+//!    nearest unoccupied core — visiting nodes in descending total spike
+//!    frequency so heavy hubs keep their ideal spots.
+
+use super::eigen::{self, LaplacianProblem};
+use super::gridfind::GridFinder;
+use super::Placement;
+use crate::hw::NmhConfig;
+use crate::hypergraph::Hypergraph;
+
+/// Eigensolver engine: continuous 2D embedding of the quotient h-graph.
+/// Implemented natively here and by `runtime::SpectralEngine` over PJRT.
+pub trait EmbeddingEngine {
+    /// Return one [x, y] pair per partition (need not be normalized).
+    fn embed(&self, prob: &LaplacianProblem) -> Vec<[f64; 2]>;
+}
+
+/// Native engine: sparse deflated subspace iteration (placement/eigen.rs).
+pub struct NativeEigen {
+    pub iters: usize,
+    pub subspace: usize,
+}
+
+impl Default for NativeEigen {
+    fn default() -> Self {
+        NativeEigen { iters: 400, subspace: 8 }
+    }
+}
+
+impl EmbeddingEngine for NativeEigen {
+    fn embed(&self, prob: &LaplacianProblem) -> Vec<[f64; 2]> {
+        eigen::smallest_nontrivial_eigs(prob, self.iters, self.subspace).0
+    }
+}
+
+/// Spectral placement with an explicit engine.
+pub fn place_with_engine(
+    gp: &Hypergraph,
+    hw: &NmhConfig,
+    engine: &dyn EmbeddingEngine,
+) -> Placement {
+    let n = gp.num_nodes();
+    assert!(n <= hw.num_cores(), "more partitions than cores");
+    if n == 0 {
+        return Placement { coords: vec![] };
+    }
+    if n == 1 {
+        return Placement { coords: vec![((hw.width / 2) as u16, (hw.height / 2) as u16)] };
+    }
+    let prob = eigen::build_laplacian(gp);
+    let embedding = engine.embed(&prob);
+    discretize(&embedding, &prob.wdeg, hw)
+}
+
+/// Spectral placement with the native engine.
+pub fn place(gp: &Hypergraph, hw: &NmhConfig) -> Placement {
+    place_with_engine(gp, hw, &NativeEigen::default())
+}
+
+/// Normalize, scale and collision-free discretize a continuous embedding.
+pub fn discretize(embedding: &[[f64; 2]], wdeg: &[f64], hw: &NmhConfig) -> Placement {
+    discretize_with(embedding, wdeg, hw, true)
+}
+
+/// Discretization with the heavy-hubs-first visit order as an ablation
+/// knob (off = node-id order; heavy partitions may get bumped off their
+/// ideal spots by light ones).
+pub fn discretize_with(
+    embedding: &[[f64; 2]],
+    wdeg: &[f64],
+    hw: &NmhConfig,
+    heavy_first: bool,
+) -> Placement {
+    let n = embedding.len();
+    // bounding box -> unit square (degenerate axes collapse to 0.5)
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &[x, y] in embedding {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+
+    // compact nearly-square region with >= n lattice points, clamped to
+    // the lattice, centered
+    let side = (n as f64).sqrt().ceil() as usize;
+    let rw = side.clamp(1, hw.width);
+    let rh = crate::util::div_ceil(n, rw).clamp(1, hw.height);
+    let x0 = (hw.width - rw) as f64 / 2.0;
+    let y0 = (hw.height - rh) as f64 / 2.0;
+
+    // visit heavy partitions first (descending total spike frequency)
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    if heavy_first {
+        order.sort_by(|&a, &b| {
+            wdeg[b as usize]
+                .partial_cmp(&wdeg[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+    }
+
+    let mut gf = GridFinder::new(hw);
+    let mut coords = vec![(0u16, 0u16); n];
+    for &p in &order {
+        let [ex, ey] = embedding[p as usize];
+        let tx = x0 + (ex - xmin) / xspan * (rw.saturating_sub(1)) as f64;
+        let ty = y0 + (ey - ymin) / yspan * (rh.saturating_sub(1)) as f64;
+        coords[p as usize] = gf
+            .take_nearest(tx, ty)
+            .expect("lattice has >= n cores by the assert above");
+    }
+    Placement { coords }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    fn two_communities(n_half: usize) -> Hypergraph {
+        let n = n_half * 2;
+        let mut rng = crate::util::rng::Pcg64::seeded(77);
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            let home = (s as usize) / n_half;
+            let mut dsts: Vec<u32> = (0..3)
+                .map(|_| (home * n_half + rng.below(n_half)) as u32)
+                .filter(|&d| d != s)
+                .collect();
+            if rng.bernoulli(0.05) {
+                dsts.push(rng.below(n) as u32);
+            }
+            dsts.retain(|&d| d != s);
+            if !dsts.is_empty() {
+                b.add_edge(s, dsts, 1.0);
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn placement_is_valid_and_compact() {
+        let gp = two_communities(18);
+        let hw = NmhConfig::small();
+        let pl = place(&gp, &hw);
+        pl.validate(&hw).unwrap();
+        // compact: 36 partitions should fit within a small centered box
+        let (mut xmin, mut xmax) = (u16::MAX, 0u16);
+        for &(x, _) in &pl.coords {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+        }
+        assert!((xmax - xmin) as usize <= 12, "spread {xmin}..{xmax}");
+    }
+
+    #[test]
+    fn communities_stay_spatially_separated() {
+        let gp = two_communities(18);
+        let hw = NmhConfig::small();
+        let pl = place(&gp, &hw);
+        // mean intra-community distance < mean inter-community distance
+        let mut intra = (0.0, 0usize);
+        let mut inter = (0.0, 0usize);
+        for a in 0..36 {
+            for b in (a + 1)..36 {
+                let d = NmhConfig::manhattan(pl.coords[a], pl.coords[b]) as f64;
+                if (a < 18) == (b < 18) {
+                    intra = (intra.0 + d, intra.1 + 1);
+                } else {
+                    inter = (inter.0 + d, inter.1 + 1);
+                }
+            }
+        }
+        let intra = intra.0 / intra.1 as f64;
+        let inter = inter.0 / inter.1 as f64;
+        assert!(
+            intra < inter * 0.85,
+            "intra {intra} should be well below inter {inter}"
+        );
+    }
+
+    #[test]
+    fn beats_random_placement_on_wirelength() {
+        let gp = two_communities(25);
+        let hw = NmhConfig::small();
+        let pl = place(&gp, &hw);
+        // random baseline
+        let mut rng = crate::util::rng::Pcg64::seeded(5);
+        let mut cells: Vec<usize> = (0..hw.num_cores()).collect();
+        rng.shuffle(&mut cells);
+        let rand_pl = Placement {
+            coords: (0..50)
+                .map(|i| {
+                    let (x, y) = hw.coord(cells[i]);
+                    (x, y)
+                })
+                .collect(),
+        };
+        assert!(pl.wirelength(&gp) < rand_pl.wirelength(&gp) * 0.6);
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        let hw = NmhConfig::small();
+        let empty = HypergraphBuilder::new(0).build();
+        assert_eq!(place(&empty, &hw).len(), 0);
+        let mut b = HypergraphBuilder::new(1);
+        b.add_edge(0, vec![0], 1.0);
+        let single = b.build();
+        let pl = place(&single, &hw);
+        assert_eq!(pl.len(), 1);
+        pl.validate(&hw).unwrap();
+    }
+
+    #[test]
+    fn discretize_no_collisions_under_duplicates() {
+        // identical embedding coordinates must still place injectively
+        let emb = vec![[0.5, 0.5]; 9];
+        let wdeg = vec![1.0; 9];
+        let hw = NmhConfig::small();
+        let pl = discretize(&emb, &wdeg, &hw);
+        pl.validate(&hw).unwrap();
+    }
+}

@@ -1,0 +1,134 @@
+//! Artifact discovery: locate `artifacts/` (or `$SNNMAP_ARTIFACTS`), parse
+//! `manifest.json`, and resolve the right size bucket for a problem.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact as described by the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub kind: String,
+    /// padded problem size (square matrices are n x n)
+    pub n: usize,
+    /// spectral only: baked-in subspace iteration count
+    pub iters: Option<usize>,
+    pub path: PathBuf,
+}
+
+/// Parsed manifest + base directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub subspace_k: usize,
+}
+
+impl Manifest {
+    /// Load the manifest from `dir` (must contain manifest.json).
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| format!("bad manifest: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts").as_arr().unwrap_or(&[]) {
+            artifacts.push(ArtifactSpec {
+                kind: a.get("kind").as_str().unwrap_or("").to_string(),
+                n: a.get("n").as_usize().unwrap_or(0),
+                iters: a.get("iters").as_usize(),
+                path: dir.join(a.get("path").as_str().unwrap_or("")),
+            });
+        }
+        if artifacts.is_empty() {
+            return Err("manifest lists no artifacts".into());
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            subspace_k: v.get("subspace_k").as_usize().unwrap_or(8),
+        })
+    }
+
+    /// Locate the artifacts directory: `$SNNMAP_ARTIFACTS`, `./artifacts`,
+    /// or `../artifacts` relative to the executable.
+    pub fn discover() -> Option<Manifest> {
+        let mut candidates: Vec<PathBuf> = Vec::new();
+        if let Ok(env) = std::env::var("SNNMAP_ARTIFACTS") {
+            candidates.push(PathBuf::from(env));
+        }
+        candidates.push(PathBuf::from("artifacts"));
+        if let Ok(exe) = std::env::current_exe() {
+            for anc in exe.ancestors().take(5) {
+                candidates.push(anc.join("artifacts"));
+            }
+        }
+        candidates
+            .into_iter()
+            .find(|c| c.join("manifest.json").is_file())
+            .and_then(|dir| Manifest::load(&dir).ok())
+    }
+
+    /// Smallest bucket of `kind` with n >= `need`.
+    pub fn bucket(&self, kind: &str, need: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.n >= need)
+            .min_by_key(|a| a.n)
+    }
+
+    /// Largest available bucket of `kind` (the capacity ceiling).
+    pub fn max_bucket(&self, kind: &str) -> Option<usize> {
+        self.artifacts.iter().filter(|a| a.kind == kind).map(|a| a.n).max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","subspace_k":8,
+                "artifacts":[
+                  {"kind":"spectral","n":128,"iters":300,"path":"spectral_128.hlo.txt"},
+                  {"kind":"spectral","n":512,"iters":400,"path":"spectral_512.hlo.txt"},
+                  {"kind":"force","n":128,"path":"force_128.hlo.txt"}
+                ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_buckets() {
+        let dir = std::env::temp_dir().join("snnmap_manifest_test");
+        fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.subspace_k, 8);
+        assert_eq!(m.bucket("spectral", 100).unwrap().n, 128);
+        assert_eq!(m.bucket("spectral", 129).unwrap().n, 512);
+        assert_eq!(m.bucket("spectral", 513), None);
+        assert_eq!(m.bucket("force", 64).unwrap().n, 128);
+        assert_eq!(m.max_bucket("spectral"), Some(512));
+        assert_eq!(m.bucket("spectral", 128).unwrap().iters, Some(300));
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent/nowhere")).is_err());
+    }
+
+    #[test]
+    fn real_repo_manifest_if_present() {
+        // integration sanity when artifacts/ exists in the repo
+        if let Some(m) = Manifest::discover() {
+            assert!(m.bucket("spectral", 64).is_some());
+            assert!(m.bucket("force", 64).is_some());
+            for a in &m.artifacts {
+                assert!(a.path.is_file(), "{} missing", a.path.display());
+            }
+        }
+    }
+}

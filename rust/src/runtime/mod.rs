@@ -1,0 +1,101 @@
+//! PJRT runtime: loads and executes the AOT JAX/Pallas artifacts
+//! (HLO text → compile once → run from the mapping path).
+//!
+//! * [`artifacts`] — manifest discovery and size-bucket resolution.
+//! * [`pjrt`] — the compiled-executable cache and buffer marshalling.
+//! * [`SpectralEngine`] — adapts the runtime to the placement layer's
+//!   [`EmbeddingEngine`](crate::placement::spectral::EmbeddingEngine)
+//!   trait so spectral placement can run through XLA.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::Manifest;
+pub use pjrt::PjrtRuntime;
+
+use crate::placement::eigen::LaplacianProblem;
+use crate::placement::spectral::EmbeddingEngine;
+
+/// PJRT-backed embedding engine for spectral placement.
+///
+/// Densifies the sparse Laplacian into the artifact's shape contract and
+/// runs the AOT subspace iteration; falls back to the native engine when
+/// the problem exceeds every bucket.
+pub struct SpectralEngine<'a> {
+    pub runtime: &'a PjrtRuntime,
+}
+
+impl EmbeddingEngine for SpectralEngine<'_> {
+    fn embed(&self, prob: &LaplacianProblem) -> Vec<[f64; 2]> {
+        let n = prob.lap.n;
+        if n > self.runtime.spectral_capacity() {
+            // out of artifact range: native fallback
+            return crate::placement::spectral::NativeEigen::default().embed(prob);
+        }
+        // densify CSR -> row-major dense
+        let mut dense = vec![0f32; n * n];
+        for r in 0..n {
+            for i in prob.lap.row_off[r]..prob.lap.row_off[r + 1] {
+                dense[r * n + prob.lap.cols[i] as usize] = prob.lap.vals[i] as f32;
+            }
+        }
+        match self.runtime.spectral_embed(&dense, n, &prob.wdeg) {
+            Ok((coords, _)) => coords,
+            Err(e) => {
+                eprintln!("[runtime] PJRT spectral failed ({e:#}); using native engine");
+                crate::placement::spectral::NativeEigen::default().embed(prob)
+            }
+        }
+    }
+}
+
+/// Build the dense *symmetric* partition-pair weight matrix the force
+/// artifact consumes: `w[p*n + q]` = total spike frequency exchanged
+/// between p and q in either direction. Symmetric because the refiner's
+/// potential counts both inbound and outbound pulls (the gradient of the
+/// total Eq. 12 system potential) — matching
+/// [`PartitionAdjacency::potential_at`](crate::placement::PartitionAdjacency::potential_at).
+pub fn dense_flow_matrix(gp: &crate::hypergraph::Hypergraph) -> Vec<f32> {
+    let n = gp.num_nodes();
+    let mut w = vec![0f32; n * n];
+    for e in gp.edge_ids() {
+        let s = gp.source(e) as usize;
+        let wt = gp.weight(e);
+        for &d in gp.dsts(e) {
+            if d as usize != s {
+                w[d as usize * n + s] += wt;
+                w[s * n + d as usize] += wt;
+            }
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    #[test]
+    fn dense_flow_matrix_symmetric() {
+        let mut b = HypergraphBuilder::new(3);
+        b.add_edge(0, vec![1, 2], 2.0);
+        b.add_edge(1, vec![1, 2], 1.0); // self-delivery 1->1 excluded
+        let gp = b.build();
+        let w = dense_flow_matrix(&gp);
+        assert_eq!(w.len(), 9);
+        assert_eq!(w[1 * 3 + 0], 2.0); // pair (0,1)
+        assert_eq!(w[0 * 3 + 1], 2.0);
+        assert_eq!(w[2 * 3 + 0], 2.0);
+        assert_eq!(w[2 * 3 + 1], 1.0);
+        assert_eq!(w[1 * 3 + 2], 1.0);
+        assert_eq!(w[1 * 3 + 1], 0.0); // self excluded
+        // matches PartitionAdjacency aggregation
+        let adj = crate::placement::PartitionAdjacency::build(&gp);
+        for (p, list) in adj.adj.iter().enumerate() {
+            for &(q, wt) in list {
+                assert!((w[p * 3 + q as usize] as f64 - wt).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! NoC spike-traffic simulator substrate.
+//!
+//! The paper (like [7]) scores mappings with the *analytic* Table I model.
+//! This module provides the executable counterpart: a discrete-timestep
+//! simulator that draws spikes per h-edge, routes each copy over the 2D
+//! mesh with dimension-ordered (XY) routing, and accounts energy, per-link
+//! and per-router traffic, and makespan latency. It validates the analytic
+//! metrics (expected simulated energy equals Table I energy exactly) and
+//! exposes congestion behaviour an expectation model can't (hot links,
+//! tail timesteps).
+
+pub mod noc;
+
+pub use noc::{simulate, SimParams, SimReport};

@@ -1,0 +1,253 @@
+//! Allen-V1-like cortical network generator (DESIGN.md §5 substitution for
+//! the Billeh et al. mouse primary-visual-cortex model [38]).
+//!
+//! The generated network reproduces the structural features the mapping
+//! problem interacts with: laminar populations (L1, L2/3, L4, L5, L6 with
+//! excitatory/inhibitory splits at biological proportions), a
+//! population-pair connection-probability matrix, distance-dependent
+//! connectivity over the cortical sheet, and log-normal firing rates. The
+//! result is cyclic, small-world, and heavy on hyperedge overlap — the row
+//! profile of Table III's "Allen V1" entry.
+
+use crate::hypergraph::{Hypergraph, HypergraphBuilder};
+use crate::snn::random::SpatialIndex;
+use crate::snn::spikefreq;
+use crate::util::rng::Pcg64;
+
+/// A laminar population.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Population {
+    pub name: &'static str,
+    /// Fraction of total neurons.
+    pub fraction: f64,
+    pub excitatory: bool,
+}
+
+/// Laminar composition approximating Billeh et al.'s V1 column.
+pub const POPULATIONS: [Population; 9] = [
+    Population { name: "L1i", fraction: 0.02, excitatory: false },
+    Population { name: "L23e", fraction: 0.26, excitatory: true },
+    Population { name: "L23i", fraction: 0.04, excitatory: false },
+    Population { name: "L4e", fraction: 0.24, excitatory: true },
+    Population { name: "L4i", fraction: 0.05, excitatory: false },
+    Population { name: "L5e", fraction: 0.13, excitatory: true },
+    Population { name: "L5i", fraction: 0.03, excitatory: false },
+    Population { name: "L6e", fraction: 0.19, excitatory: true },
+    Population { name: "L6i", fraction: 0.04, excitatory: false },
+];
+
+/// Base connection probability between populations (pre row, post column),
+/// a coarse rendering of the V1 laminar circuit: feedforward
+/// L4→L2/3→L5→L6, feedback L6→L4, dense local inhibition.
+#[rustfmt::skip]
+pub const CONN_PROB: [[f64; 9]; 9] = [
+    // to:  L1i   L23e  L23i  L4e   L4i   L5e   L5i   L6e   L6i   (from:)
+    [0.04, 0.02, 0.04, 0.00, 0.00, 0.00, 0.00, 0.00, 0.00], // L1i
+    [0.01, 0.16, 0.14, 0.01, 0.01, 0.09, 0.05, 0.02, 0.01], // L23e
+    [0.02, 0.19, 0.16, 0.01, 0.01, 0.03, 0.02, 0.01, 0.01], // L23i
+    [0.01, 0.14, 0.08, 0.09, 0.11, 0.05, 0.03, 0.03, 0.01], // L4e
+    [0.01, 0.09, 0.06, 0.15, 0.13, 0.02, 0.01, 0.01, 0.01], // L4i
+    [0.00, 0.03, 0.02, 0.01, 0.01, 0.14, 0.11, 0.06, 0.02], // L5e
+    [0.00, 0.02, 0.02, 0.01, 0.01, 0.17, 0.13, 0.02, 0.01], // L5i
+    [0.00, 0.02, 0.01, 0.07, 0.03, 0.04, 0.02, 0.12, 0.10], // L6e
+    [0.00, 0.01, 0.01, 0.03, 0.02, 0.02, 0.01, 0.14, 0.11], // L6i
+];
+
+/// Parameters of the generator.
+#[derive(Clone, Copy, Debug)]
+pub struct AllenParams {
+    pub nodes: usize,
+    /// Mean out-degree (h-edge cardinality) across the network.
+    pub mean_cardinality: f64,
+    /// Spatial decay length over the cortical sheet (unit square).
+    pub decay: f64,
+    pub seed: u64,
+}
+
+impl Default for AllenParams {
+    fn default() -> Self {
+        AllenParams {
+            nodes: 20_000,
+            mean_cardinality: 300.0,
+            decay: 0.06,
+            seed: 7,
+        }
+    }
+}
+
+/// Generated V1-like network: graph + per-node population labels + sheet
+/// coordinates.
+pub struct AllenSnn {
+    pub graph: Hypergraph,
+    pub population: Vec<u8>,
+    pub coords: Vec<(f32, f32)>,
+}
+
+/// Build the network.
+///
+/// Out-degree of a neuron scales with its population's total outgoing
+/// probability mass so the network-wide mean matches `mean_cardinality`;
+/// targets are drawn population-first (CONN_PROB row), then spatially via
+/// exponential distance decay within the chosen population.
+pub fn build(params: AllenParams) -> AllenSnn {
+    let AllenParams { nodes, mean_cardinality, decay, seed } = params;
+    assert!(nodes >= 100, "need at least 100 neurons");
+    let mut rng = Pcg64::new(seed, 13);
+
+    // Assign population ranges.
+    let mut population = Vec::with_capacity(nodes);
+    let mut pop_ranges: Vec<(u32, u32)> = Vec::with_capacity(POPULATIONS.len());
+    {
+        let mut base = 0usize;
+        for (pi, p) in POPULATIONS.iter().enumerate() {
+            let count = if pi + 1 == POPULATIONS.len() {
+                nodes - base
+            } else {
+                ((p.fraction * nodes as f64).round() as usize).min(nodes - base)
+            };
+            pop_ranges.push((base as u32, (base + count) as u32));
+            population.extend(std::iter::repeat(pi as u8).take(count));
+            base += count;
+        }
+        assert_eq!(population.len(), nodes);
+    }
+
+    // Cortical-sheet coordinates, one spatial index per population.
+    let coords: Vec<(f32, f32)> = (0..nodes)
+        .map(|_| (rng.next_f32(), rng.next_f32()))
+        .collect();
+    let pop_index: Vec<SpatialIndex> = pop_ranges
+        .iter()
+        .map(|&(lo, hi)| {
+            SpatialIndex::new(coords[lo as usize..hi as usize].to_vec())
+        })
+        .collect();
+
+    // Per-population outgoing probability mass -> out-degree budget.
+    let row_mass: Vec<f64> = CONN_PROB
+        .iter()
+        .enumerate()
+        .map(|(pre, row)| {
+            row.iter()
+                .zip(pop_ranges.iter())
+                .map(|(p, &(lo, hi))| p * (hi - lo) as f64)
+                .sum::<f64>()
+                * (pop_ranges[pre].1 - pop_ranges[pre].0) as f64
+        })
+        .collect();
+    let total_mass: f64 = row_mass.iter().sum();
+    let target_total = mean_cardinality * nodes as f64;
+
+    let mut b = HypergraphBuilder::new(nodes);
+    b.reserve(nodes, target_total as usize);
+    let mut dsts: Vec<u32> = Vec::new();
+    for s in 0..nodes as u32 {
+        let pre = population[s as usize] as usize;
+        let (plo, phi) = pop_ranges[pre];
+        let pre_size = (phi - plo) as f64;
+        // expected out-degree for this neuron
+        let mean_k = target_total * row_mass[pre] / (total_mass * pre_size * (phi > plo) as u8 as f64).max(1e-12);
+        let k = rng.poisson(mean_k).min(nodes - 1);
+        if k == 0 {
+            continue;
+        }
+        // split k over destination populations ~ CONN_PROB row mass
+        let weights: Vec<f64> = CONN_PROB[pre]
+            .iter()
+            .zip(pop_ranges.iter())
+            .map(|(p, &(lo, hi))| p * (hi - lo) as f64)
+            .collect();
+        let (x, y) = coords[s as usize];
+        dsts.clear();
+        for _ in 0..k {
+            let Some(post) = rng.weighted_index(&weights) else { break };
+            let (lo, hi) = pop_ranges[post];
+            if hi - lo < 2 {
+                continue;
+            }
+            let exclude = if post == pre { s - plo } else { u32::MAX };
+            let local = pop_index[post].sample_decay(x, y, decay, exclude, &mut rng);
+            dsts.push(lo + local);
+        }
+        if dsts.is_empty() {
+            continue;
+        }
+        let freq = rng.lognormal_median_cv(spikefreq::BIO_MEDIAN, spikefreq::BIO_CV) as f32;
+        b.add_edge(s, dsts.clone(), freq);
+    }
+
+    AllenSnn {
+        graph: b.build(),
+        population,
+        coords,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> AllenSnn {
+        build(AllenParams {
+            nodes: 3000,
+            mean_cardinality: 40.0,
+            decay: 0.08,
+            seed: 5,
+        })
+    }
+
+    #[test]
+    fn population_fractions_sum_to_one() {
+        let total: f64 = POPULATIONS.iter().map(|p| p.fraction).sum();
+        assert!((total - 1.0).abs() < 1e-9, "fractions sum {total}");
+    }
+
+    #[test]
+    fn structure_valid_and_sized() {
+        let snn = small();
+        let g = &snn.graph;
+        g.validate().unwrap();
+        assert_eq!(g.num_nodes(), 3000);
+        assert!(g.is_single_axon());
+        let mc = g.mean_cardinality();
+        assert!(mc > 20.0 && mc < 60.0, "mean cardinality {mc}");
+    }
+
+    #[test]
+    fn population_labels_cover_all_nodes() {
+        let snn = small();
+        assert_eq!(snn.population.len(), 3000);
+        // all nine populations are non-empty at this size
+        let mut seen = [false; 9];
+        for &p in &snn.population {
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "missing population: {seen:?}");
+    }
+
+    #[test]
+    fn l23e_projects_mostly_locally_and_to_l5() {
+        let snn = small();
+        let g = &snn.graph;
+        // count destination populations of L2/3e axons
+        let mut by_pop = [0usize; 9];
+        for e in g.edge_ids() {
+            if snn.population[g.source(e) as usize] == 1 {
+                for &d in g.dsts(e) {
+                    by_pop[snn.population[d as usize] as usize] += 1;
+                }
+            }
+        }
+        // recurrent L2/3e must dominate L4e backprojection (0.16 vs 0.01)
+        assert!(by_pop[1] > by_pop[3] * 3, "by_pop={by_pop:?}");
+        // L5e projection present
+        assert!(by_pop[5] > 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = small().graph;
+        let b = small().graph;
+        assert_eq!(a.dsts, b.dsts);
+    }
+}

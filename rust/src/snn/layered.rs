@@ -1,0 +1,400 @@
+//! Layered (ANN-derived) SNN generator.
+//!
+//! Reproduces the topology class of the paper's feedforward suite: CNNs
+//! converted to SNNs neuron-per-neuron, where each neuron's single axon
+//! (h-edge) fans out to every neuron whose receptive field covers it in
+//! the next layer. This is exactly the "transposed" view of a conv: a
+//! source at (y, x, ci) feeds all (oy, ox, co) with
+//! `oy*stride - pad <= y < oy*stride - pad + k`.
+//!
+//! Supported layers: Input, Conv2d, DepthwiseConv2d, AvgPool, GlobalAvgPool
+//! and Dense — enough to express the paper's x_models (VGG-like stacks),
+//! LeNet, AlexNet, VGG11 and MobileNetV1 (see [`super::models`]).
+
+use crate::hypergraph::{Hypergraph, HypergraphBuilder};
+use crate::snn::spikefreq;
+use crate::util::rng::Pcg64;
+
+/// One layer of a feedforward architecture.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Layer {
+    /// Input feature map (h, w, c). Must be the first layer.
+    Input { h: usize, w: usize, c: usize },
+    /// Standard convolution, `same`-style explicit padding.
+    Conv { out_c: usize, k: usize, stride: usize, pad: usize },
+    /// Depthwise convolution (channel-wise, channel count preserved).
+    DepthwiseConv { k: usize, stride: usize, pad: usize },
+    /// Average pooling (channel count preserved).
+    AvgPool { k: usize, stride: usize },
+    /// Global average pooling: (h, w, c) -> (1, 1, c).
+    GlobalAvgPool,
+    /// Fully-connected layer.
+    Dense { units: usize },
+}
+
+/// Shape of a feature map.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Shape {
+    pub fn numel(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// Output shape of `layer` applied to `input`.
+pub fn out_shape(input: Shape, layer: &Layer) -> Shape {
+    match *layer {
+        Layer::Input { h, w, c } => Shape { h, w, c },
+        Layer::Conv { out_c, k, stride, pad } => Shape {
+            h: conv_dim(input.h, k, stride, pad),
+            w: conv_dim(input.w, k, stride, pad),
+            c: out_c,
+        },
+        Layer::DepthwiseConv { k, stride, pad } => Shape {
+            h: conv_dim(input.h, k, stride, pad),
+            w: conv_dim(input.w, k, stride, pad),
+            c: input.c,
+        },
+        Layer::AvgPool { k, stride } => Shape {
+            h: conv_dim(input.h, k, stride, 0),
+            w: conv_dim(input.w, k, stride, 0),
+            c: input.c,
+        },
+        Layer::GlobalAvgPool => Shape { h: 1, w: 1, c: input.c },
+        Layer::Dense { units } => Shape { h: 1, w: 1, c: units },
+    }
+}
+
+fn conv_dim(n: usize, k: usize, stride: usize, pad: usize) -> usize {
+    assert!(n + 2 * pad >= k, "kernel larger than padded input");
+    (n + 2 * pad - k) / stride + 1
+}
+
+/// Trainable parameter count of `layer` on `input` (used to size the
+/// paper's x_models, which are named by parameter count).
+pub fn param_count(input: Shape, layer: &Layer) -> usize {
+    match *layer {
+        Layer::Input { .. } | Layer::AvgPool { .. } | Layer::GlobalAvgPool => 0,
+        Layer::Conv { out_c, k, .. } => k * k * input.c * out_c + out_c,
+        Layer::DepthwiseConv { k, .. } => k * k * input.c + input.c,
+        Layer::Dense { units } => input.numel() * units + units,
+    }
+}
+
+/// Clamp layer hyper-parameters so the stack stays valid at any scale:
+/// kernels never exceed the (padded) input extent and pooling never runs
+/// on a 1-pixel map. Used by the named-model builders, whose `scale` knob
+/// can shrink feature maps below the canonical kernel sizes.
+pub fn sanitize(layers: &[Layer]) -> Vec<Layer> {
+    let mut out = Vec::with_capacity(layers.len());
+    let mut shape = Shape { h: 0, w: 0, c: 0 };
+    for (i, layer) in layers.iter().enumerate() {
+        let mut l = *layer;
+        if i > 0 {
+            let extent = shape.h.min(shape.w);
+            match &mut l {
+                Layer::Conv { k, stride, pad, .. } | Layer::DepthwiseConv { k, stride, pad } => {
+                    if *k > extent + 2 * *pad {
+                        *k = extent.max(1);
+                        *pad = 0;
+                    }
+                    *stride = (*stride).min(*k);
+                }
+                Layer::AvgPool { k, stride } => {
+                    if *k > extent {
+                        *k = extent.max(1);
+                    }
+                    *stride = (*stride).min(*k).max(1);
+                }
+                _ => {}
+            }
+        }
+        shape = out_shape(shape, &l);
+        out.push(l);
+    }
+    out
+}
+
+/// A generated layered SNN: topology + per-axon spike frequencies + layer
+/// boundaries (node-id ranges), which sequential partitioning exploits.
+pub struct LayeredSnn {
+    pub graph: Hypergraph,
+    /// Node-id range `[start, end)` of each layer, input first.
+    pub layer_ranges: Vec<(u32, u32)>,
+    pub shapes: Vec<Shape>,
+    pub params: usize,
+}
+
+/// Generate the SNN h-graph of `layers`.
+///
+/// Every neuron of layer i gets one h-edge covering its targets in layer
+/// i+1; the last layer's neurons emit no h-edges. Spike frequencies are
+/// sampled from the biological log-normal fit (DESIGN.md §5 substitution
+/// for dataset-measured rates).
+pub fn build(layers: &[Layer], seed: u64) -> LayeredSnn {
+    assert!(matches!(layers.first(), Some(Layer::Input { .. })), "first layer must be Input");
+    let layers = sanitize(layers);
+    let layers = layers.as_slice();
+    // Pass 1: shapes, node counts, parameter count.
+    let mut shapes: Vec<Shape> = Vec::with_capacity(layers.len());
+    let mut params = 0usize;
+    for (i, layer) in layers.iter().enumerate() {
+        let input = if i == 0 { Shape { h: 0, w: 0, c: 0 } } else { shapes[i - 1] };
+        if i > 0 {
+            params += param_count(input, layer);
+        }
+        shapes.push(out_shape(input, layer));
+    }
+    let mut layer_ranges = Vec::with_capacity(layers.len());
+    let mut base = 0u32;
+    for s in &shapes {
+        let n = s.numel() as u32;
+        layer_ranges.push((base, base + n));
+        base += n;
+    }
+    let total_nodes = base as usize;
+
+    let mut rng = Pcg64::new(seed, 7);
+    let mut b = HypergraphBuilder::new(total_nodes);
+
+    // Pass 2: emit h-edges layer by layer.
+    let mut dsts: Vec<u32> = Vec::new();
+    for li in 0..layers.len() - 1 {
+        let in_shape = shapes[li];
+        let out_sh = shapes[li + 1];
+        let (src_base, _) = layer_ranges[li];
+        let (dst_base, _) = layer_ranges[li + 1];
+        let next = layers[li + 1];
+
+        for y in 0..in_shape.h {
+            for x in 0..in_shape.w {
+                // Spatial fan-out is channel-independent: compute the
+                // output-coordinate window once per (y, x).
+                let window = spatial_window(y, x, &next, out_sh);
+                for ci in 0..in_shape.c {
+                    let src = src_base + node_index(in_shape, y, x, ci);
+                    dsts.clear();
+                    match next {
+                        Layer::Dense { units } => {
+                            for u in 0..units as u32 {
+                                dsts.push(dst_base + u);
+                            }
+                        }
+                        Layer::GlobalAvgPool => {
+                            dsts.push(dst_base + ci as u32);
+                        }
+                        Layer::Conv { out_c, .. } => {
+                            for &(oy, ox) in &window {
+                                for co in 0..out_c {
+                                    dsts.push(dst_base + node_index(out_sh, oy, ox, co));
+                                }
+                            }
+                        }
+                        Layer::DepthwiseConv { .. } | Layer::AvgPool { .. } => {
+                            for &(oy, ox) in &window {
+                                dsts.push(dst_base + node_index(out_sh, oy, ox, ci));
+                            }
+                        }
+                        Layer::Input { .. } => unreachable!("Input after first layer"),
+                    }
+                    let freq = rng.lognormal_median_cv(
+                        spikefreq::BIO_MEDIAN,
+                        spikefreq::BIO_CV,
+                    ) as f32;
+                    b.add_edge(src, std::mem::take(&mut dsts), freq);
+                    dsts = Vec::new();
+                }
+            }
+        }
+    }
+
+    LayeredSnn {
+        graph: b.build(),
+        layer_ranges,
+        shapes,
+        params,
+    }
+}
+
+/// Row-major node index inside a feature map: (y, x, c) with c fastest.
+#[inline]
+fn node_index(s: Shape, y: usize, x: usize, c: usize) -> u32 {
+    ((y * s.w + x) * s.c + c) as u32
+}
+
+/// Output spatial coordinates whose receptive field covers input (y, x).
+fn spatial_window(y: usize, x: usize, layer: &Layer, out_sh: Shape) -> Vec<(usize, usize)> {
+    let (k, stride, pad) = match *layer {
+        Layer::Conv { k, stride, pad, .. } | Layer::DepthwiseConv { k, stride, pad } => {
+            (k, stride, pad)
+        }
+        Layer::AvgPool { k, stride } => (k, stride, 0),
+        _ => return vec![(0, 0); 1], // dense/global handled separately
+    };
+    let mut out = Vec::new();
+    let oy_range = covering_range(y, k, stride, pad, out_sh.h);
+    let ox_range = covering_range(x, k, stride, pad, out_sh.w);
+    for oy in oy_range {
+        for ox in ox_range.clone() {
+            out.push((oy, ox));
+        }
+    }
+    out
+}
+
+/// All output indices `o` with `o*stride - pad <= v < o*stride - pad + k`,
+/// clamped to [0, limit).
+fn covering_range(v: usize, k: usize, stride: usize, pad: usize, limit: usize) -> std::ops::Range<usize> {
+    let v = v as i64;
+    let k = k as i64;
+    let stride = stride as i64;
+    let pad = pad as i64;
+    // o >= (v + pad - k + 1) / stride  (ceil),  o <= (v + pad) / stride (floor)
+    let lo = (v + pad - k + 1).div_euclid(stride).max(0);
+    let lo = lo + if lo * stride < v + pad - k + 1 { 1 } else { 0 };
+    let hi = (v + pad).div_euclid(stride);
+    let lo = lo.clamp(0, limit as i64) as usize;
+    let hi = (hi + 1).clamp(0, limit as i64) as usize;
+    lo..hi.max(lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_compose() {
+        let input = Shape { h: 32, w: 32, c: 3 };
+        let conv = Layer::Conv { out_c: 8, k: 3, stride: 1, pad: 1 };
+        assert_eq!(out_shape(input, &conv), Shape { h: 32, w: 32, c: 8 });
+        let pool = Layer::AvgPool { k: 2, stride: 2 };
+        assert_eq!(out_shape(input, &pool), Shape { h: 16, w: 16, c: 3 });
+        let dw = Layer::DepthwiseConv { k: 3, stride: 2, pad: 1 };
+        assert_eq!(out_shape(input, &dw), Shape { h: 16, w: 16, c: 3 });
+        assert_eq!(out_shape(input, &Layer::GlobalAvgPool), Shape { h: 1, w: 1, c: 3 });
+        assert_eq!(
+            out_shape(input, &Layer::Dense { units: 10 }),
+            Shape { h: 1, w: 1, c: 10 }
+        );
+    }
+
+    #[test]
+    fn param_counts_standard() {
+        let input = Shape { h: 8, w: 8, c: 3 };
+        assert_eq!(
+            param_count(input, &Layer::Conv { out_c: 16, k: 3, stride: 1, pad: 1 }),
+            3 * 3 * 3 * 16 + 16
+        );
+        assert_eq!(param_count(input, &Layer::Dense { units: 10 }), 8 * 8 * 3 * 10 + 10);
+        assert_eq!(param_count(input, &Layer::AvgPool { k: 2, stride: 2 }), 0);
+    }
+
+    #[test]
+    fn covering_range_matches_bruteforce() {
+        for &(k, stride, pad, in_n) in
+            &[(3usize, 1usize, 1usize, 8usize), (5, 2, 2, 16), (2, 2, 0, 8), (3, 2, 1, 7), (1, 1, 0, 4)]
+        {
+            let out_n = conv_dim(in_n, k, stride, pad);
+            for v in 0..in_n {
+                let got: Vec<usize> = covering_range(v, k, stride, pad, out_n).collect();
+                let want: Vec<usize> = (0..out_n)
+                    .filter(|&o| {
+                        let lo = o as i64 * stride as i64 - pad as i64;
+                        (v as i64) >= lo && (v as i64) < lo + k as i64
+                    })
+                    .collect();
+                assert_eq!(got, want, "k={k} s={stride} p={pad} v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_chain_connects_fully() {
+        let layers = [
+            Layer::Input { h: 1, w: 1, c: 4 },
+            Layer::Dense { units: 3 },
+            Layer::Dense { units: 2 },
+        ];
+        let snn = build(&layers, 1);
+        let g = &snn.graph;
+        assert_eq!(g.num_nodes(), 4 + 3 + 2);
+        assert_eq!(g.num_edges(), 4 + 3); // last layer emits nothing
+        assert_eq!(g.num_connections(), 4 * 3 + 3 * 2);
+        // input node 0 feeds all of layer 1
+        assert_eq!(g.dsts(0), &[4, 5, 6]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn conv_fanout_matches_kernel_size() {
+        // 4x4x1 input, 3x3 conv stride 1 pad 1, 2 out channels:
+        // interior pixel covered by 9 outputs x 2 channels = 18 dsts
+        let layers = [
+            Layer::Input { h: 4, w: 4, c: 1 },
+            Layer::Conv { out_c: 2, k: 3, stride: 1, pad: 1 },
+        ];
+        let snn = build(&layers, 2);
+        let g = &snn.graph;
+        // interior source (1,1)
+        let src = 1 * 4 + 1;
+        assert_eq!(g.cardinality(g.axon(src as u32).unwrap()), 18);
+        // corner source (0,0): covered by outputs (0..2, 0..2) -> 4 x 2 = 8
+        assert_eq!(g.cardinality(g.axon(0).unwrap()), 8);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn depthwise_preserves_channel() {
+        let layers = [
+            Layer::Input { h: 4, w: 4, c: 3 },
+            Layer::DepthwiseConv { k: 3, stride: 1, pad: 1 },
+        ];
+        let snn = build(&layers, 3);
+        let g = &snn.graph;
+        // source channel 1 at (1,1): all destinations have channel 1
+        let src = (1 * 4 + 1) * 3 + 1;
+        let out_base = 48;
+        for &d in g.dsts(g.axon(src as u32).unwrap()) {
+            assert_eq!((d - out_base) % 3, 1);
+        }
+    }
+
+    #[test]
+    fn neighbors_share_receptive_targets() {
+        // the overlap property Fig. 8 relies on: adjacent pixels' h-edges overlap
+        let layers = [
+            Layer::Input { h: 8, w: 8, c: 1 },
+            Layer::Conv { out_c: 4, k: 3, stride: 1, pad: 1 },
+        ];
+        let snn = build(&layers, 4);
+        let g = &snn.graph;
+        let a = g.dsts(g.axon((3 * 8 + 3) as u32).unwrap());
+        let b = g.dsts(g.axon((3 * 8 + 4) as u32).unwrap());
+        let inter = crate::hypergraph::stats::intersection_size(a, b);
+        assert!(inter > 0, "adjacent receptive fields must overlap");
+    }
+
+    #[test]
+    fn layer_ranges_partition_nodes() {
+        let layers = [
+            Layer::Input { h: 6, w: 6, c: 2 },
+            Layer::Conv { out_c: 4, k: 3, stride: 1, pad: 1 },
+            Layer::AvgPool { k: 2, stride: 2 },
+            Layer::GlobalAvgPool,
+            Layer::Dense { units: 10 },
+        ];
+        let snn = build(&layers, 5);
+        let mut expect = 0u32;
+        for (lo, hi) in &snn.layer_ranges {
+            assert_eq!(*lo, expect);
+            expect = *hi;
+        }
+        assert_eq!(expect as usize, snn.graph.num_nodes());
+        assert_eq!(snn.shapes.last().unwrap().numel(), 10);
+    }
+}

@@ -1,0 +1,17 @@
+//! SNN generators: the paper's evaluation-suite networks (Table III).
+//!
+//! * [`layered`] — ANN-derived feedforward topologies (receptive-field
+//!   expansion of conv/pool/dense layers).
+//! * [`models`] — named architectures: x_models, LeNet, AlexNet, VGG11,
+//!   MobileNetV1, x_rand, Allen-V1-like.
+//! * [`random`] — LSM-style cyclic generator with distance-decay wiring.
+//! * [`allen`] — laminar cortical-column generator (Billeh-style).
+//! * [`spikefreq`] — log-normal spike-frequency engine + fitting (Fig. 7).
+
+pub mod allen;
+pub mod layered;
+pub mod models;
+pub mod random;
+pub mod spikefreq;
+
+pub use models::{by_name, Category, Network, SUITE};

@@ -1,0 +1,307 @@
+//! Named network architectures of the paper's evaluation suite
+//! (Table III), each with a `scale` knob that shrinks channel counts /
+//! node counts so the full experiment grid stays laptop-feasible
+//! (DESIGN.md §5). `scale = 1.0` approximates the paper's sizes.
+
+use super::allen::{self, AllenParams};
+use super::layered::{self, Layer, LayeredSnn};
+use super::random::{self, RandomSnnParams};
+use crate::hypergraph::Hypergraph;
+
+/// Topology class of a network (Table III grouping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Category {
+    Feedforward,
+    Layered,
+    Cyclic,
+}
+
+/// A generated network plus the metadata experiments need.
+pub struct Network {
+    pub name: String,
+    pub category: Category,
+    pub graph: Hypergraph,
+    /// Layer node-id ranges when the network is layered (enables the
+    /// paper's "natural order" sequential partitioning).
+    pub layer_ranges: Option<Vec<(u32, u32)>>,
+    pub params: usize,
+}
+
+impl Network {
+    fn from_layered(name: &str, snn: LayeredSnn) -> Network {
+        Network {
+            name: name.to_string(),
+            category: if name.ends_with("_model") {
+                Category::Feedforward
+            } else {
+                Category::Layered
+            },
+            layer_ranges: Some(snn.layer_ranges),
+            params: snn.params,
+            graph: snn.graph,
+        }
+    }
+}
+
+fn sc(c: usize, scale: f64) -> usize {
+    ((c as f64 * scale).round() as usize).max(1)
+}
+
+fn sd(c: usize, scale: f64) -> usize {
+    // resolution scaling: shrink by sqrt(scale) so node counts scale ~ scale
+    ((c as f64 * scale.sqrt()).round() as usize).max(4)
+}
+
+/// The paper's custom "x_model": VGG-like 2-conv blocks with channel
+/// doubling until the parameter target is reached, then GAP + dense head.
+pub fn x_model(param_target: usize, scale: f64, seed: u64) -> Network {
+    let mut layers = vec![Layer::Input { h: sd(32, scale), w: sd(32, scale), c: 3 }];
+    let mut c = 16usize;
+    let mut params = 0usize;
+    let mut shape = layered::out_shape(
+        layered::Shape { h: 0, w: 0, c: 0 },
+        &layers[0],
+    );
+    while params < param_target {
+        for _ in 0..2 {
+            let conv = Layer::Conv { out_c: c, k: 3, stride: 1, pad: 1 };
+            params += layered::param_count(shape, &conv);
+            shape = layered::out_shape(shape, &conv);
+            layers.push(conv);
+            if params >= param_target {
+                break;
+            }
+        }
+        if shape.h >= 8 && params < param_target {
+            let pool = Layer::AvgPool { k: 2, stride: 2 };
+            shape = layered::out_shape(shape, &pool);
+            layers.push(pool);
+        }
+        c = (c * 2).min(512);
+    }
+    layers.push(Layer::GlobalAvgPool);
+    layers.push(Layer::Dense { units: 10 });
+    let name = match param_target {
+        x if x >= 1_000_000 => "1M_model".to_string(),
+        x => format!("{}k_model", x / 1000),
+    };
+    Network::from_layered(&name, layered::build(&layers, seed))
+}
+
+/// LeNet-5 on 32x32x3 (CIFAR10 variant used by the paper).
+pub fn lenet(scale: f64, seed: u64) -> Network {
+    let layers = [
+        Layer::Input { h: sd(32, scale), w: sd(32, scale), c: 3 },
+        Layer::Conv { out_c: sc(6, scale), k: 5, stride: 1, pad: 0 },
+        Layer::AvgPool { k: 2, stride: 2 },
+        Layer::Conv { out_c: sc(16, scale), k: 5, stride: 1, pad: 0 },
+        Layer::AvgPool { k: 2, stride: 2 },
+        Layer::Dense { units: sc(120, scale) },
+        Layer::Dense { units: sc(84, scale) },
+        Layer::Dense { units: 10 },
+    ];
+    Network::from_layered("LeNet", layered::build(&layers, seed))
+}
+
+/// AlexNet adapted to CIFAR10 (the common 32x32 adaptation).
+pub fn alexnet(scale: f64, seed: u64) -> Network {
+    let layers = [
+        Layer::Input { h: sd(32, scale), w: sd(32, scale), c: 3 },
+        Layer::Conv { out_c: sc(64, scale), k: 3, stride: 1, pad: 1 },
+        Layer::AvgPool { k: 2, stride: 2 },
+        Layer::Conv { out_c: sc(192, scale), k: 3, stride: 1, pad: 1 },
+        Layer::AvgPool { k: 2, stride: 2 },
+        Layer::Conv { out_c: sc(384, scale), k: 3, stride: 1, pad: 1 },
+        Layer::Conv { out_c: sc(256, scale), k: 3, stride: 1, pad: 1 },
+        Layer::Conv { out_c: sc(256, scale), k: 3, stride: 1, pad: 1 },
+        Layer::AvgPool { k: 2, stride: 2 },
+        Layer::Dense { units: sc(1024, scale) },
+        Layer::Dense { units: sc(512, scale) },
+        Layer::Dense { units: 10 },
+    ];
+    Network::from_layered("AlexNet", layered::build(&layers, seed))
+}
+
+/// VGG11 on CIFAR10.
+pub fn vgg11(scale: f64, seed: u64) -> Network {
+    let layers = [
+        Layer::Input { h: sd(32, scale), w: sd(32, scale), c: 3 },
+        Layer::Conv { out_c: sc(64, scale), k: 3, stride: 1, pad: 1 },
+        Layer::AvgPool { k: 2, stride: 2 },
+        Layer::Conv { out_c: sc(128, scale), k: 3, stride: 1, pad: 1 },
+        Layer::AvgPool { k: 2, stride: 2 },
+        Layer::Conv { out_c: sc(256, scale), k: 3, stride: 1, pad: 1 },
+        Layer::Conv { out_c: sc(256, scale), k: 3, stride: 1, pad: 1 },
+        Layer::AvgPool { k: 2, stride: 2 },
+        Layer::Conv { out_c: sc(512, scale), k: 3, stride: 1, pad: 1 },
+        Layer::Conv { out_c: sc(512, scale), k: 3, stride: 1, pad: 1 },
+        Layer::AvgPool { k: 2, stride: 2 },
+        Layer::Conv { out_c: sc(512, scale), k: 3, stride: 1, pad: 1 },
+        Layer::Conv { out_c: sc(512, scale), k: 3, stride: 1, pad: 1 },
+        Layer::Dense { units: sc(512, scale) },
+        Layer::Dense { units: 10 },
+    ];
+    Network::from_layered("VGG11", layered::build(&layers, seed))
+}
+
+/// MobileNetV1 (depthwise-separable stacks). The paper runs it at
+/// ImageNet resolution (6.9M nodes); scale shrinks both resolution and
+/// width.
+pub fn mobilenet_v1(scale: f64, seed: u64) -> Network {
+    let mut layers = vec![
+        Layer::Input { h: sd(64, scale), w: sd(64, scale), c: 3 },
+        Layer::Conv { out_c: sc(32, scale), k: 3, stride: 2, pad: 1 },
+    ];
+    // (out_c, stride) of each depthwise-separable block
+    let blocks = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for &(out_c, stride) in &blocks {
+        layers.push(Layer::DepthwiseConv { k: 3, stride, pad: 1 });
+        layers.push(Layer::Conv { out_c: sc(out_c, scale), k: 1, stride: 1, pad: 0 });
+    }
+    layers.push(Layer::GlobalAvgPool);
+    layers.push(Layer::Dense { units: 100 });
+    Network::from_layered("MobileNetV1", layered::build(&layers, seed))
+}
+
+/// The paper's x_rand LSM-style networks.
+pub fn x_rand(nodes: usize, mean_cardinality: f64, seed: u64) -> Network {
+    let snn = random::build(RandomSnnParams {
+        nodes,
+        mean_cardinality,
+        decay: 0.08,
+        seed,
+    });
+    let name = format!("{}k_rand", nodes / 1024);
+    Network {
+        name,
+        category: Category::Cyclic,
+        graph: snn.graph,
+        layer_ranges: None,
+        params: 0,
+    }
+}
+
+/// Allen-V1-like biological network.
+pub fn allen_v1(nodes: usize, mean_cardinality: f64, seed: u64) -> Network {
+    let snn = allen::build(AllenParams {
+        nodes,
+        mean_cardinality,
+        decay: 0.06,
+        seed,
+    });
+    Network {
+        name: "AllenV1".to_string(),
+        category: Category::Cyclic,
+        graph: snn.graph,
+        layer_ranges: None,
+        params: 0,
+    }
+}
+
+/// Build a network of the evaluation suite by name.
+///
+/// `scale` shrinks the paper-size networks; the experiment defaults in
+/// coordinator/ pick per-name scales that keep the grid tractable.
+pub fn by_name(name: &str, scale: f64, seed: u64) -> Option<Network> {
+    Some(match name {
+        "16k_model" => x_model(16_000, scale, seed),
+        "64k_model" => x_model(64_000, scale, seed),
+        "256k_model" => x_model(256_000, scale, seed),
+        "1M_model" => x_model(1_000_000, scale, seed),
+        "lenet" => lenet(scale, seed),
+        "alexnet" => alexnet(scale, seed),
+        "vgg11" => vgg11(scale, seed),
+        "mobilenet" => mobilenet_v1(scale, seed),
+        "allen_v1" => allen_v1(((231_000 as f64) * scale) as usize, 300.0 * scale.min(1.0), seed),
+        "16k_rand" => x_rand(((1 << 14) as f64 * scale) as usize, 128.0 * scale.min(1.0), seed),
+        "64k_rand" => x_rand(((1 << 16) as f64 * scale) as usize, 192.0 * scale.min(1.0), seed),
+        "256k_rand" => x_rand(((1 << 18) as f64 * scale) as usize, 256.0 * scale.min(1.0), seed),
+        _ => return None,
+    })
+}
+
+/// All evaluation-suite names in Table III order.
+pub const SUITE: [&str; 12] = [
+    "16k_model",
+    "64k_model",
+    "256k_model",
+    "1M_model",
+    "lenet",
+    "alexnet",
+    "vgg11",
+    "mobilenet",
+    "allen_v1",
+    "16k_rand",
+    "64k_rand",
+    "256k_rand",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x_model_hits_param_target() {
+        let net = x_model(16_000, 1.0, 1);
+        assert!(net.params >= 16_000, "params={}", net.params);
+        assert!(net.params < 64_000, "params={}", net.params);
+        assert_eq!(net.name, "16k_model");
+        assert_eq!(net.category, Category::Feedforward);
+        net.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn lenet_structure() {
+        let net = lenet(1.0, 1);
+        assert_eq!(net.category, Category::Layered);
+        let g = &net.graph;
+        g.validate().unwrap();
+        // paper: 14k nodes, 875k connections at full scale — same ballpark
+        assert!(g.num_nodes() > 8_000 && g.num_nodes() < 25_000, "n={}", g.num_nodes());
+        assert!(
+            g.num_connections() > 300_000 && g.num_connections() < 2_000_000,
+            "c={}",
+            g.num_connections()
+        );
+        assert!(net.layer_ranges.is_some());
+    }
+
+    #[test]
+    fn mobilenet_depthwise_cardinality_low() {
+        // MobileNet is the paper's low-overlap outlier: depthwise layers
+        // give much smaller mean h-edge cardinality than dense convs
+        let mb = mobilenet_v1(0.25, 1);
+        let vg = vgg11(0.25, 1);
+        assert!(mb.graph.mean_cardinality() < vg.graph.mean_cardinality());
+    }
+
+    #[test]
+    fn by_name_all_suite_small() {
+        for name in ["lenet", "16k_rand"] {
+            let net = by_name(name, 0.1, 3).unwrap();
+            net.graph.validate().unwrap();
+            assert!(net.graph.num_nodes() > 0);
+        }
+        assert!(by_name("unknown", 1.0, 0).is_none());
+    }
+
+    #[test]
+    fn scaling_shrinks() {
+        let big = lenet(1.0, 1);
+        let small = lenet(0.25, 1);
+        assert!(small.graph.num_nodes() < big.graph.num_nodes());
+        assert!(small.graph.num_connections() < big.graph.num_connections());
+    }
+}

@@ -1,0 +1,290 @@
+//! Cyclic / biologically-inspired random SNN generator (paper §V-A).
+//!
+//! Reproduces the paper's "x_rand" construction: nodes dropped uniformly
+//! in the unit square; each node's out-degree drawn from
+//! Poisson(mean cardinality); destinations sampled with probability
+//! decaying exponentially in Euclidean distance; spike frequencies from
+//! LogNormal(median 0.23, CV 1.58) [39]. The result is a dense, strongly
+//! connected, liquid-state-machine-like topology — the paper's designed
+//! "spike in difficulty" for mapping algorithms.
+
+use crate::hypergraph::{Hypergraph, HypergraphBuilder};
+use crate::snn::spikefreq;
+use crate::util::rng::Pcg64;
+
+/// Parameters of the x_rand construction.
+#[derive(Clone, Copy, Debug)]
+pub struct RandomSnnParams {
+    pub nodes: usize,
+    /// Mean h-edge cardinality (Poisson mean of out-degree).
+    pub mean_cardinality: f64,
+    /// Exponential decay length of connection probability (unit square).
+    pub decay: f64,
+    pub seed: u64,
+}
+
+impl Default for RandomSnnParams {
+    fn default() -> Self {
+        RandomSnnParams {
+            nodes: 1 << 14,
+            mean_cardinality: 128.0,
+            decay: 0.08,
+            seed: 1,
+        }
+    }
+}
+
+/// Uniform spatial grid over the unit square for distance-decay sampling.
+/// Shared by this generator and the Allen-V1-like model.
+pub struct SpatialIndex {
+    cells: usize,
+    /// node ids bucketed per cell, CSR
+    cell_off: Vec<usize>,
+    cell_nodes: Vec<u32>,
+    pub coords: Vec<(f32, f32)>,
+}
+
+impl SpatialIndex {
+    /// Build over `coords`; cell count scales with sqrt(n) for O(1)
+    /// expected occupancy per cell row.
+    pub fn new(coords: Vec<(f32, f32)>) -> Self {
+        let n = coords.len();
+        let cells = ((n as f64).sqrt() as usize).clamp(1, 512);
+        let mut count = vec![0usize; cells * cells + 1];
+        let cell_of = |x: f32, y: f32| -> usize {
+            let cx = ((x * cells as f32) as usize).min(cells - 1);
+            let cy = ((y * cells as f32) as usize).min(cells - 1);
+            cy * cells + cx
+        };
+        for &(x, y) in &coords {
+            count[cell_of(x, y) + 1] += 1;
+        }
+        for i in 0..cells * cells {
+            count[i + 1] += count[i];
+        }
+        let mut cell_nodes = vec![0u32; n];
+        let mut cursor = count.clone();
+        for (i, &(x, y)) in coords.iter().enumerate() {
+            let c = cell_of(x, y);
+            cell_nodes[cursor[c]] = i as u32;
+            cursor[c] += 1;
+        }
+        SpatialIndex {
+            cells,
+            cell_off: count,
+            cell_nodes,
+            coords,
+        }
+    }
+
+    /// Sample one node id with probability ~ exp(-dist((x,y), node)/decay),
+    /// excluding `exclude`. Rejection sampling: propose a radius from the
+    /// exponential kernel, a uniform angle, then snap to a node near the
+    /// proposed point; falls back to uniform after `max_tries`.
+    pub fn sample_decay(
+        &self,
+        x: f32,
+        y: f32,
+        decay: f64,
+        exclude: u32,
+        rng: &mut Pcg64,
+    ) -> u32 {
+        let n = self.coords.len();
+        debug_assert!(n > 1);
+        for _ in 0..32 {
+            // radial proposal: distance Exp(1/decay), uniform angle
+            let r = rng.exponential(1.0 / decay) as f32;
+            let theta = (rng.next_f64() * 2.0 * std::f64::consts::PI) as f32;
+            let px = x + r * theta.cos();
+            let py = y + r * theta.sin();
+            if !(0.0..1.0).contains(&px) || !(0.0..1.0).contains(&py) {
+                continue;
+            }
+            // nearest-occupied-cell lookup around the proposal
+            let cx = ((px * self.cells as f32) as usize).min(self.cells - 1);
+            let cy = ((py * self.cells as f32) as usize).min(self.cells - 1);
+            for ring in 0..3usize {
+                let mut candidates: Option<u32> = None;
+                let mut seen = 0usize;
+                for dy in -(ring as i32)..=(ring as i32) {
+                    for dx in -(ring as i32)..=(ring as i32) {
+                        if dx.abs().max(dy.abs()) != ring as i32 {
+                            continue;
+                        }
+                        let ux = cx as i32 + dx;
+                        let uy = cy as i32 + dy;
+                        if ux < 0 || uy < 0 || ux >= self.cells as i32 || uy >= self.cells as i32
+                        {
+                            continue;
+                        }
+                        let cell = uy as usize * self.cells + ux as usize;
+                        let nodes =
+                            &self.cell_nodes[self.cell_off[cell]..self.cell_off[cell + 1]];
+                        for &cand in nodes {
+                            if cand == exclude {
+                                continue;
+                            }
+                            seen += 1;
+                            // reservoir sample one uniform candidate in ring
+                            if rng.below(seen) == 0 {
+                                candidates = Some(cand);
+                            }
+                        }
+                    }
+                }
+                if let Some(c) = candidates {
+                    return c;
+                }
+            }
+        }
+        // fallback: uniform (keeps the generator total)
+        loop {
+            let c = rng.below(n) as u32;
+            if c != exclude {
+                return c;
+            }
+        }
+    }
+}
+
+/// A generated random SNN with node coordinates (kept for diagnostics and
+/// for the Allen-style generator's population labels).
+pub struct RandomSnn {
+    pub graph: Hypergraph,
+    pub coords: Vec<(f32, f32)>,
+}
+
+/// Build an x_rand network.
+pub fn build(params: RandomSnnParams) -> RandomSnn {
+    let RandomSnnParams { nodes, mean_cardinality, decay, seed } = params;
+    assert!(nodes > 1);
+    let mut rng = Pcg64::new(seed, 11);
+    let coords: Vec<(f32, f32)> = (0..nodes)
+        .map(|_| (rng.next_f32(), rng.next_f32()))
+        .collect();
+    let index = SpatialIndex::new(coords.clone());
+
+    let mut b = HypergraphBuilder::new(nodes);
+    b.reserve(nodes, (nodes as f64 * mean_cardinality) as usize);
+    let mut dsts: Vec<u32> = Vec::new();
+    for s in 0..nodes as u32 {
+        let k = rng.poisson(mean_cardinality).min(nodes - 1);
+        if k == 0 {
+            continue;
+        }
+        let (x, y) = coords[s as usize];
+        dsts.clear();
+        for _ in 0..k {
+            dsts.push(index.sample_decay(x, y, decay, s, &mut rng));
+        }
+        let freq = rng.lognormal_median_cv(spikefreq::BIO_MEDIAN, spikefreq::BIO_CV) as f32;
+        b.add_edge(s, dsts.clone(), freq);
+    }
+    RandomSnn {
+        graph: b.build(),
+        coords,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> RandomSnn {
+        build(RandomSnnParams {
+            nodes: 2000,
+            mean_cardinality: 16.0,
+            decay: 0.08,
+            seed: 42,
+        })
+    }
+
+    #[test]
+    fn respects_size_parameters() {
+        let snn = small();
+        let g = &snn.graph;
+        g.validate().unwrap();
+        assert_eq!(g.num_nodes(), 2000);
+        // Poisson(16) with dedup: mean cardinality close to 16 but <= it
+        let mc = g.mean_cardinality();
+        assert!(mc > 10.0 && mc <= 16.5, "mean cardinality {mc}");
+        assert!(g.is_single_axon());
+    }
+
+    #[test]
+    fn connections_are_local() {
+        // mean connection distance must be far below the uniform-pair
+        // expectation (~0.52 for the unit square)
+        let snn = small();
+        let g = &snn.graph;
+        let mut total = 0.0;
+        let mut count = 0usize;
+        for e in g.edge_ids() {
+            let (sx, sy) = snn.coords[g.source(e) as usize];
+            for &d in g.dsts(e) {
+                let (dx, dy) = snn.coords[d as usize];
+                total += (((sx - dx).powi(2) + (sy - dy).powi(2)) as f64).sqrt();
+                count += 1;
+            }
+        }
+        let mean_dist = total / count as f64;
+        assert!(mean_dist < 0.25, "mean connection distance {mean_dist}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = small().graph;
+        let b = small().graph;
+        assert_eq!(a.dsts, b.dsts);
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn no_self_loops() {
+        let snn = small();
+        let g = &snn.graph;
+        for e in g.edge_ids() {
+            assert!(!g.dsts(e).contains(&g.source(e)));
+        }
+    }
+
+    #[test]
+    fn is_cyclic_topology() {
+        // recurrent networks must contain at least one directed cycle;
+        // check via Kahn: not all nodes can be topologically ordered
+        let snn = small();
+        let g = &snn.graph;
+        let mut indeg = vec![0usize; g.num_nodes()];
+        for e in g.edge_ids() {
+            for &d in g.dsts(e) {
+                indeg[d as usize] += 1;
+            }
+        }
+        let mut queue: Vec<u32> =
+            (0..g.num_nodes() as u32).filter(|&n| indeg[n as usize] == 0).collect();
+        let mut seen = 0;
+        while let Some(u) = queue.pop() {
+            seen += 1;
+            for &e in g.outbound(u) {
+                for &d in g.dsts(e) {
+                    indeg[d as usize] -= 1;
+                    if indeg[d as usize] == 0 {
+                        queue.push(d);
+                    }
+                }
+            }
+        }
+        assert!(seen < g.num_nodes(), "expected a cyclic topology");
+    }
+
+    #[test]
+    fn spatial_index_sampling_excludes_self() {
+        let coords: Vec<(f32, f32)> = vec![(0.1, 0.1), (0.11, 0.1), (0.9, 0.9)];
+        let idx = SpatialIndex::new(coords);
+        let mut rng = Pcg64::seeded(3);
+        for _ in 0..100 {
+            let s = idx.sample_decay(0.1, 0.1, 0.05, 0, &mut rng);
+            assert_ne!(s, 0);
+        }
+    }
+}

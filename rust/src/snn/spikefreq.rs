@@ -1,0 +1,151 @@
+//! Spike-frequency engine (paper §V-A, Fig. 7).
+//!
+//! The paper measures per-axon spike rates with SNNToolBox on a slice of
+//! each dataset and observes that *all* of its networks — ANN-derived and
+//! biological — fit a log-normal distribution; its random networks sample
+//! from LogNormal(median 0.23, CV 1.58) per biological evidence [39].
+//! We use the same parametric model for every generated network
+//! (substitution documented in DESIGN.md §5), and provide the inverse:
+//! fitting a log-normal to observed frequencies by log-moments, which
+//! regenerates Fig. 7's fitted curves.
+
+use crate::util::rng::Pcg64;
+
+/// Fig. 7 / [39] reference parameters.
+pub const BIO_MEDIAN: f64 = 0.23;
+pub const BIO_CV: f64 = 1.58;
+
+/// Sample `n` spike frequencies from LogNormal(median, cv).
+pub fn sample_lognormal(n: usize, median: f64, cv: f64, rng: &mut Pcg64) -> Vec<f32> {
+    (0..n)
+        .map(|_| rng.lognormal_median_cv(median, cv) as f32)
+        .collect()
+}
+
+/// Sample with the biological reference parameters.
+pub fn sample_bio(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+    sample_lognormal(n, BIO_MEDIAN, BIO_CV, rng)
+}
+
+/// Log-normal fit of observed frequencies (log-moment estimator).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LogNormalFit {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl LogNormalFit {
+    /// Median of the fitted distribution.
+    pub fn median(&self) -> f64 {
+        self.mu.exp()
+    }
+
+    /// Coefficient of variation of the fitted distribution.
+    pub fn cv(&self) -> f64 {
+        ((self.sigma * self.sigma).exp() - 1.0).sqrt()
+    }
+
+    /// Probability density at `x`.
+    pub fn pdf(&self, x: f64) -> f64 {
+        if x <= 0.0 {
+            return 0.0;
+        }
+        let z = (x.ln() - self.mu) / self.sigma;
+        (-0.5 * z * z).exp() / (x * self.sigma * (2.0 * std::f64::consts::PI).sqrt())
+    }
+}
+
+/// Fit LogNormal(mu, sigma) to strictly-positive samples by log-moments.
+/// Returns None when fewer than 2 positive samples exist.
+pub fn fit_lognormal(samples: &[f32]) -> Option<LogNormalFit> {
+    let logs: Vec<f64> = samples
+        .iter()
+        .filter(|&&x| x > 0.0)
+        .map(|&x| (x as f64).ln())
+        .collect();
+    if logs.len() < 2 {
+        return None;
+    }
+    let n = logs.len() as f64;
+    let mu = logs.iter().sum::<f64>() / n;
+    let var = logs.iter().map(|l| (l - mu) * (l - mu)).sum::<f64>() / n;
+    Some(LogNormalFit {
+        mu,
+        sigma: var.sqrt(),
+    })
+}
+
+/// Histogram of frequencies for Fig. 7 rendering: `bins` equal-width bins
+/// over [0, max]; returns (bin_centers, normalized_density).
+pub fn histogram(samples: &[f32], bins: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(bins > 0);
+    let max = samples.iter().cloned().fold(0.0f32, f32::max).max(1e-9) as f64;
+    let width = max / bins as f64;
+    let mut counts = vec![0usize; bins];
+    for &s in samples {
+        let b = ((s as f64 / width) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    let total = samples.len().max(1) as f64;
+    let centers = (0..bins).map(|b| (b as f64 + 0.5) * width).collect();
+    let density = counts
+        .iter()
+        .map(|&c| c as f64 / (total * width))
+        .collect();
+    (centers, density)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_recovers_parameters() {
+        let mut rng = Pcg64::seeded(42);
+        let xs = sample_bio(100_000, &mut rng);
+        let fit = fit_lognormal(&xs).unwrap();
+        assert!((fit.median() - BIO_MEDIAN).abs() < 0.01, "median={}", fit.median());
+        assert!((fit.cv() - BIO_CV).abs() < 0.08, "cv={}", fit.cv());
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_input() {
+        assert!(fit_lognormal(&[]).is_none());
+        assert!(fit_lognormal(&[1.0]).is_none());
+        assert!(fit_lognormal(&[0.0, 0.0]).is_none());
+        assert!(fit_lognormal(&[1.0, 2.0]).is_some());
+    }
+
+    #[test]
+    fn pdf_integrates_to_one() {
+        let fit = LogNormalFit { mu: -1.47, sigma: 1.0 };
+        // trapezoid integration over a wide support
+        let mut integral = 0.0;
+        let dx = 0.001;
+        let mut x = dx;
+        while x < 50.0 {
+            integral += fit.pdf(x) * dx;
+            x += dx;
+        }
+        assert!((integral - 1.0).abs() < 0.01, "integral={integral}");
+        assert_eq!(fit.pdf(-1.0), 0.0);
+        assert_eq!(fit.pdf(0.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_density_normalized() {
+        let mut rng = Pcg64::seeded(1);
+        let xs = sample_bio(50_000, &mut rng);
+        let (centers, density) = histogram(&xs, 50);
+        assert_eq!(centers.len(), 50);
+        let width = centers[1] - centers[0];
+        let mass: f64 = density.iter().map(|d| d * width).sum();
+        assert!((mass - 1.0).abs() < 1e-9, "mass={mass}");
+    }
+
+    #[test]
+    fn samples_positive() {
+        let mut rng = Pcg64::seeded(2);
+        assert!(sample_bio(10_000, &mut rng).iter().all(|&x| x > 0.0));
+    }
+}

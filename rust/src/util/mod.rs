@@ -1,0 +1,58 @@
+//! Utility substrate: the offline registry ships no rand/serde/clap, so the
+//! toolchain carries its own deterministic RNG, JSON codec, CLI parser and
+//! timing helpers. All are fully unit-tested and dependency-free.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod timer;
+
+/// Integer ceiling division.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Arithmetic mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Geometric mean of a slice of positive values; zeros are clamped to
+/// `floor` so a single empty bucket doesn't annihilate the statistic
+/// (matches the paper's use of geometric means over per-partition ratios).
+pub fn geometric_mean(xs: &[f64], floor: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let log_sum: f64 = xs.iter().map(|&x| x.max(floor).ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_basics() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 1024), 1);
+        assert_eq!(div_ceil(0, 7), 0);
+    }
+
+    #[test]
+    fn mean_and_geo_mean() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-12);
+        let g = geometric_mean(&[1.0, 4.0], 1e-12);
+        assert!((g - 2.0).abs() < 1e-12);
+        // floor keeps zeros from collapsing the product
+        let g = geometric_mean(&[0.0, 4.0], 1.0);
+        assert!((g - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,320 @@
+//! Deterministic PRNG + sampling distributions.
+//!
+//! PCG64 (O'Neill's PCG-XSL-RR 128/64) — small state, excellent statistical
+//! quality, fully reproducible across platforms. Distributions implemented
+//! on top: uniform, normal (Box–Muller), log-normal parameterized the way
+//! the paper specifies spike frequencies (median + coefficient of
+//! variation), Poisson (Knuth / PTRS for large mean), exponential, and
+//! weighted index sampling.
+
+/// PCG-XSL-RR 128/64 generator.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+    /// Cached second normal variate from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+            spare_normal: None,
+        };
+        rng.state = rng.inc.wrapping_add(seed as u128);
+        rng.next_u64();
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Convenience: stream 0.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, bound) — Lemire's unbiased method.
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let bound = bound as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut lo = m as u64;
+        if lo < bound {
+            let threshold = bound.wrapping_neg() % bound;
+            while lo < threshold {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Bernoulli draw.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (caches the spare variate).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.spare_normal = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    /// Log-normal sample given the *median* and *coefficient of variation*
+    /// of the distribution — the paper's Fig. 7 parameterization
+    /// (median 0.23, CV 1.58 for biological spike frequencies).
+    ///
+    /// For LogNormal(mu, sigma): median = e^mu, CV = sqrt(e^{sigma^2} - 1).
+    pub fn lognormal_median_cv(&mut self, median: f64, cv: f64) -> f64 {
+        let mu = median.ln();
+        let sigma = (cv * cv + 1.0).ln().sqrt();
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Poisson sample. Knuth's product method for small means, normal
+    /// approximation (clamped at 0) beyond 30 where Knuth underflows.
+    pub fn poisson(&mut self, mean: f64) -> usize {
+        if mean <= 0.0 {
+            return 0;
+        }
+        if mean < 30.0 {
+            let l = (-mean).exp();
+            let mut k = 0usize;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            // Normal approximation with continuity correction.
+            let x = mean + mean.sqrt() * self.normal() + 0.5;
+            if x < 0.0 {
+                0
+            } else {
+                x as usize
+            }
+        }
+    }
+
+    /// Exponential sample with given rate.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -u.ln() / rate
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index proportionally to non-negative `weights`.
+    /// Returns None if all weights are zero/empty.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> Option<usize> {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return None;
+        }
+        let mut t = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            t -= w;
+            if t < 0.0 {
+                return Some(i);
+            }
+        }
+        Some(weights.len() - 1)
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k <= n), Floyd's algorithm.
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            let v = if chosen.contains(&t) { j } else { t };
+            chosen.insert(v);
+            out.push(v);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(42, 2);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_range_bounds() {
+        let mut rng = Pcg64::seeded(1);
+        for _ in 0..10_000 {
+            let x = rng.below(7);
+            assert!(x < 7);
+            let y = rng.range(3, 5);
+            assert!((3..=5).contains(&y));
+            let f = rng.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_variance() {
+        let mut rng = Pcg64::seeded(2);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::seeded(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let m = xs.iter().sum::<f64>() / n as f64;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n as f64;
+        assert!(m.abs() < 0.02, "mean={m}");
+        assert!((v - 1.0).abs() < 0.03, "var={v}");
+    }
+
+    #[test]
+    fn lognormal_median_and_cv() {
+        let mut rng = Pcg64::seeded(4);
+        let n = 200_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| rng.lognormal_median_cv(0.23, 1.58)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = xs[n / 2];
+        assert!((median - 0.23).abs() < 0.01, "median={median}");
+        let m = xs.iter().sum::<f64>() / n as f64;
+        let sd = (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n as f64).sqrt();
+        let cv = sd / m;
+        assert!((cv - 1.58).abs() < 0.12, "cv={cv}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large() {
+        let mut rng = Pcg64::seeded(5);
+        for &lambda in &[0.5, 3.0, 12.0, 80.0] {
+            let n = 50_000;
+            let m: f64 =
+                (0..n).map(|_| rng.poisson(lambda) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (m - lambda).abs() < lambda.max(1.0) * 0.05,
+                "lambda={lambda} m={m}"
+            );
+        }
+        assert_eq!(rng.poisson(0.0), 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::seeded(6);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn weighted_index_respects_weights() {
+        let mut rng = Pcg64::seeded(7);
+        let w = [0.0, 1.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[rng.weighted_index(&w).unwrap()] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.2, "ratio={ratio}");
+        assert_eq!(rng.weighted_index(&[0.0, 0.0]), None);
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut rng = Pcg64::seeded(8);
+        for _ in 0..100 {
+            let got = rng.sample_distinct(50, 10);
+            assert_eq!(got.len(), 10);
+            let set: std::collections::HashSet<_> = got.iter().collect();
+            assert_eq!(set.len(), 10);
+            assert!(got.iter().all(|&x| x < 50));
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Pcg64::seeded(9);
+        let n = 100_000;
+        let m: f64 = (0..n).map(|_| rng.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((m - 0.5).abs() < 0.01, "mean={m}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Timing helpers for the bench harness (criterion is not in the offline
+//! registry): wall-clock scopes, repeated-measurement statistics, and a
+//! simple stage profiler used by the coordinator.
+
+use std::time::{Duration, Instant};
+
+/// Measure one closure invocation.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Statistics over repeated timed runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly: at least `min_iters` times and at least `min_time`
+/// total, then report stats. The result of the last invocation is returned
+/// so benches can validate outputs.
+pub fn bench<T>(min_iters: usize, min_time: Duration, mut f: impl FnMut() -> T) -> (T, BenchStats) {
+    let mut durs = Vec::new();
+    let start = Instant::now();
+    let mut last = None;
+    while durs.len() < min_iters || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        last = Some(f());
+        durs.push(t0.elapsed());
+        if durs.len() > 10_000 {
+            break;
+        }
+    }
+    let total: Duration = durs.iter().sum();
+    let stats = BenchStats {
+        iters: durs.len(),
+        mean: total / durs.len() as u32,
+        min: *durs.iter().min().unwrap(),
+        max: *durs.iter().max().unwrap(),
+    };
+    (last.unwrap(), stats)
+}
+
+/// Accumulating multi-stage profiler: `stage(name, f)` times a closure and
+/// files it under `name`; `report()` renders a sorted table.
+#[derive(Debug, Default)]
+pub struct StageProfiler {
+    stages: Vec<(String, Duration)>,
+}
+
+impl StageProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn stage<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, dt) = time_once(f);
+        self.stages.push((name.to_string(), dt));
+        out
+    }
+
+    pub fn record(&mut self, name: &str, dt: Duration) {
+        self.stages.push((name.to_string(), dt));
+    }
+
+    pub fn total(&self) -> Duration {
+        self.stages.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn stages(&self) -> &[(String, Duration)] {
+        &self.stages
+    }
+
+    pub fn report(&self) -> String {
+        let total = self.total().as_secs_f64().max(1e-12);
+        let mut out = String::new();
+        for (name, d) in &self.stages {
+            out.push_str(&format!(
+                "  {:<28} {:>10.3}s  {:>5.1}%\n",
+                name,
+                d.as_secs_f64(),
+                100.0 * d.as_secs_f64() / total
+            ));
+        }
+        out.push_str(&format!("  {:<28} {:>10.3}s\n", "TOTAL", total));
+        out
+    }
+}
+
+/// Render a Duration compactly for logs.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else {
+        format!("{:.1}min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_enough_iters() {
+        let (out, stats) = bench(5, Duration::from_millis(1), || 42);
+        assert_eq!(out, 42);
+        assert!(stats.iters >= 5);
+        assert!(stats.min <= stats.mean && stats.mean <= stats.max);
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let mut p = StageProfiler::new();
+        let x = p.stage("a", || 1 + 1);
+        assert_eq!(x, 2);
+        p.record("b", Duration::from_millis(2));
+        assert_eq!(p.stages().len(), 2);
+        assert!(p.total() >= Duration::from_millis(2));
+        let rep = p.report();
+        assert!(rep.contains("a") && rep.contains("b") && rep.contains("TOTAL"));
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(Duration::from_micros(50)).ends_with("us"));
+        assert!(fmt_duration(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_duration(Duration::from_secs(5)).ends_with('s'));
+        assert!(fmt_duration(Duration::from_secs(300)).ends_with("min"));
+    }
+}

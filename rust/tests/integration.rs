@@ -1,0 +1,219 @@
+//! Integration tests: compose generators → partitioners → placements →
+//! metrics → simulator across the evaluation-suite networks.
+
+use snnmap::coordinator::{ensemble, experiment, MapperPipeline, PartitionerKind, PlacerKind, RefinerKind};
+use snnmap::hw::NmhConfig;
+use snnmap::hypergraph::io as hgio;
+use snnmap::mapping;
+use snnmap::metrics::evaluate;
+use snnmap::metrics::properties::{self, Mean};
+use snnmap::sim::{simulate, SimParams};
+use snnmap::snn;
+
+fn tiny_hw() -> NmhConfig {
+    NmhConfig::small().scaled(0.04)
+}
+
+#[test]
+fn suite_networks_generate_and_validate() {
+    // every suite network at small scale builds a valid single-axon h-graph
+    for name in ["16k_model", "lenet", "alexnet", "vgg11", "mobilenet", "allen_v1", "16k_rand"] {
+        let net = snn::by_name(name, 0.06, 11).unwrap();
+        net.graph.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(net.graph.is_single_axon(), "{name}");
+        assert!(net.graph.num_nodes() > 50, "{name} too small");
+        assert!(net.graph.num_connections() > net.graph.num_nodes() / 2, "{name} too sparse");
+    }
+}
+
+#[test]
+fn every_partitioner_on_every_category() {
+    for name in ["lenet", "16k_rand"] {
+        let net = snn::by_name(name, 0.08, 5).unwrap();
+        let hw = tiny_hw();
+        for pk in PartitionerKind::ALL {
+            let res = MapperPipeline::new(hw)
+                .partitioner(pk)
+                .placer(PlacerKind::Hilbert)
+                .refiner(RefinerKind::None)
+                .run(&net.graph, net.layer_ranges.as_deref())
+                .unwrap_or_else(|e| panic!("{name}/{}: {e}", pk.name()));
+            mapping::validate(&net.graph, &res.rho, &hw)
+                .unwrap_or_else(|e| panic!("{name}/{}: {e}", pk.name()));
+            assert!(res.rho.num_parts > 1, "{name}/{} single partition", pk.name());
+        }
+    }
+}
+
+#[test]
+fn affinity_driven_partitioners_beat_edgemap_on_connectivity() {
+    // the paper's central claim (§V-B1): second-order-affinity methods
+    // (hierarchical, overlap) dominate the graph-based EdgeMap control
+    let net = snn::by_name("16k_rand", 0.06, 9).unwrap();
+    let hw = tiny_hw();
+    let conn = |pk: PartitionerKind| {
+        MapperPipeline::new(hw)
+            .partitioner(pk)
+            .placer(PlacerKind::Hilbert)
+            .refiner(RefinerKind::None)
+            .run(&net.graph, None)
+            .unwrap()
+            .metrics
+            .connectivity
+    };
+    let overlap = conn(PartitionerKind::HyperedgeOverlap);
+    let hier = conn(PartitionerKind::Hierarchical);
+    let edgemap = conn(PartitionerKind::EdgeMap);
+    assert!(
+        overlap < edgemap,
+        "overlap {overlap} must beat edgemap {edgemap}"
+    );
+    assert!(hier < edgemap, "hierarchical {hier} must beat edgemap {edgemap}");
+}
+
+#[test]
+fn force_refinement_improves_both_initial_placements() {
+    let net = snn::by_name("allen_v1", 0.02, 13).unwrap();
+    let hw = tiny_hw();
+    for placer in [PlacerKind::Hilbert, PlacerKind::Spectral] {
+        let raw = MapperPipeline::new(hw)
+            .partitioner(PartitionerKind::HyperedgeOverlap)
+            .placer(placer)
+            .refiner(RefinerKind::None)
+            .run(&net.graph, None)
+            .unwrap();
+        let refined = MapperPipeline::new(hw)
+            .partitioner(PartitionerKind::HyperedgeOverlap)
+            .placer(placer)
+            .refiner(RefinerKind::ForceDirected)
+            .run(&net.graph, None)
+            .unwrap();
+        assert!(
+            refined.metrics.wirelength <= raw.metrics.wirelength + 1e-9,
+            "{}: {} -> {}",
+            placer.name(),
+            raw.metrics.wirelength,
+            refined.metrics.wirelength
+        );
+    }
+}
+
+#[test]
+fn simulator_validates_analytic_energy_on_real_mapping() {
+    let net = snn::by_name("lenet", 0.1, 3).unwrap();
+    let hw = tiny_hw();
+    let res = MapperPipeline::new(hw)
+        .partitioner(PartitionerKind::Sequential)
+        .placer(PlacerKind::Hilbert)
+        .refiner(RefinerKind::ForceDirected)
+        .run(&net.graph, net.layer_ranges.as_deref())
+        .unwrap();
+    let analytic = evaluate(&res.gp, &res.placement, &hw);
+    let sim = simulate(
+        &res.gp,
+        &res.placement,
+        &hw,
+        SimParams { timesteps: 3000, seed: 17, poisson_spikes: true },
+    );
+    let rel = (sim.energy_per_step() - analytic.energy).abs() / analytic.energy;
+    assert!(rel < 0.05, "sim/analytic energy mismatch: rel={rel}");
+}
+
+#[test]
+fn reuse_correlates_with_connectivity_across_partitioners() {
+    // Fig. 11 signal at test scale: higher geometric-mean synaptic reuse
+    // must track lower connectivity (negative monotone relation)
+    let net = snn::by_name("16k_rand", 0.05, 21).unwrap();
+    let hw = tiny_hw();
+    let mut points: Vec<(f64, f64)> = Vec::new();
+    for pk in PartitionerKind::ALL {
+        let res = MapperPipeline::new(hw)
+            .partitioner(pk)
+            .placer(PlacerKind::Hilbert)
+            .refiner(RefinerKind::None)
+            .run(&net.graph, None)
+            .unwrap();
+        let sr_geo = properties::synaptic_reuse(&net.graph, &res.rho, Mean::Geometric);
+        points.push((sr_geo, res.metrics.connectivity));
+    }
+    let (srs, conns): (Vec<f64>, Vec<f64>) = points.into_iter().unzip();
+    let rho = snnmap::metrics::stats::spearman(&srs, &conns).unwrap();
+    assert!(rho < -0.5, "expected strong negative correlation, got {rho}");
+}
+
+#[test]
+fn hypergraph_io_roundtrip_through_pipeline() {
+    let net = snn::by_name("lenet", 0.08, 2).unwrap();
+    let dir = std::env::temp_dir().join("snnmap_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("lenet.hg");
+    hgio::save_binary(&net.graph, &path).unwrap();
+    let loaded = hgio::load_binary(&path).unwrap();
+    let hw = tiny_hw();
+    let a = MapperPipeline::new(hw)
+        .partitioner(PartitionerKind::HyperedgeOverlap)
+        .placer(PlacerKind::Hilbert)
+        .refiner(RefinerKind::None)
+        .run(&net.graph, None)
+        .unwrap();
+    let b = MapperPipeline::new(hw)
+        .partitioner(PartitionerKind::HyperedgeOverlap)
+        .placer(PlacerKind::Hilbert)
+        .refiner(RefinerKind::None)
+        .run(&loaded, None)
+        .unwrap();
+    assert_eq!(a.rho.assign, b.rho.assign);
+    assert!((a.metrics.elp - b.metrics.elp).abs() < 1e-9);
+}
+
+#[test]
+fn ensemble_beats_or_matches_single_candidate() {
+    let net = snn::by_name("lenet", 0.08, 2).unwrap();
+    let hw = tiny_hw();
+    let single = MapperPipeline::new(hw)
+        .partitioner(PartitionerKind::HyperedgeOverlap)
+        .placer(PlacerKind::Hilbert)
+        .refiner(RefinerKind::None)
+        .run(&net.graph, net.layer_ranges.as_deref())
+        .unwrap();
+    let ens = ensemble::run(
+        &net.graph,
+        net.layer_ranges.as_deref(),
+        hw,
+        PartitionerKind::HyperedgeOverlap,
+        std::time::Duration::from_secs(300),
+        42,
+        None,
+    )
+    .unwrap();
+    assert!(ens.best.metrics.elp <= single.metrics.elp + 1e-9);
+}
+
+#[test]
+fn experiment_grid_fig9_smoke() {
+    let mut spec = experiment::GridSpec::fig9(0.05);
+    spec.networks = vec!["lenet".into(), "16k_rand".into()];
+    spec.hw = Some(tiny_hw());
+    let rows = experiment::run_grid(&spec);
+    assert_eq!(rows.len(), 2 * PartitionerKind::ALL.len());
+    for r in &rows {
+        assert!(r.error.is_none(), "{}/{}: {:?}", r.network, r.partitioner, r.error);
+        assert!(r.connectivity.is_finite() && r.connectivity > 0.0);
+        assert!(r.sr_arith >= 1.0);
+    }
+    // headline ratio: overlap connectivity <= unordered sequential
+    let ratio = snnmap::coordinator::report::ratio_summary(
+        &rows,
+        "overlap",
+        "seq-unordered",
+        |r| r.connectivity,
+    )
+    .unwrap();
+    assert!(ratio <= 1.05, "overlap/seq-unordered connectivity ratio {ratio}");
+}
+
+#[test]
+fn hw_presets_route_by_connection_count() {
+    let small_net = snn::by_name("lenet", 0.1, 1).unwrap();
+    assert_eq!(experiment::hw_for(&small_net, 1.0), NmhConfig::small());
+}

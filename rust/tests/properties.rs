@@ -1,0 +1,291 @@
+//! Property-based tests (hand-rolled, seeded PCG sweeps — proptest is not
+//! in the offline registry). Each property runs across a family of random
+//! h-graphs and hardware configurations.
+
+use snnmap::hw::NmhConfig;
+use snnmap::hypergraph::quotient::{push_forward, Partitioning};
+use snnmap::hypergraph::{Hypergraph, HypergraphBuilder};
+use snnmap::mapping::{self, connectivity, sequential::SeqOrder};
+use snnmap::placement::{force, hilbert, mindist, spectral, Placement};
+use snnmap::util::rng::Pcg64;
+
+/// Random h-graph family: size, degree and weight ranges vary per case.
+fn random_graph(rng: &mut Pcg64) -> Hypergraph {
+    let n = rng.range(20, 300);
+    let mut b = HypergraphBuilder::new(n);
+    for s in 0..n as u32 {
+        if rng.bernoulli(0.85) {
+            let k = rng.range(1, 14.min(n - 1));
+            let dsts: Vec<u32> = (0..k)
+                .map(|_| rng.below(n) as u32)
+                .filter(|&d| d != s)
+                .collect();
+            if !dsts.is_empty() {
+                b.add_edge(s, dsts, rng.next_f32() * 3.0 + 1e-3);
+            }
+        }
+    }
+    b.build()
+}
+
+fn random_hw(rng: &mut Pcg64, g: &Hypergraph) -> NmhConfig {
+    let mut hw = NmhConfig::small();
+    let max_in = g.node_ids().map(|v| g.inbound(v).len()).max().unwrap_or(1);
+    hw.c_npc = rng.range(4, 64);
+    hw.c_apc = rng.range(max_in.max(8), max_in.max(8) * 8);
+    hw.c_spc = rng.range(max_in.max(16), max_in.max(16) * 16);
+    hw
+}
+
+/// Property 1: every partitioner yields a constraint-valid, total
+/// assignment on arbitrary graphs/hardware.
+#[test]
+fn prop_partitioners_always_valid() {
+    let mut rng = Pcg64::seeded(0xABCD);
+    for case in 0..25 {
+        let g = random_graph(&mut rng);
+        let hw = random_hw(&mut rng, &g);
+        let candidates: Vec<(&str, Result<Partitioning, _>)> = vec![
+            ("sequential", mapping::sequential::partition(&g, &hw, SeqOrder::Natural)),
+            ("greedy-seq", mapping::sequential::partition(&g, &hw, SeqOrder::Greedy)),
+            ("overlap", mapping::overlap::partition(&g, &hw)),
+            ("edgemap", mapping::edgemap::partition(&g, &hw)),
+            (
+                "hierarchical",
+                mapping::hierarchical::partition(&g, &hw, Default::default()),
+            ),
+        ];
+        for (name, rho) in candidates {
+            let rho = rho.unwrap_or_else(|e| panic!("case {case} {name}: {e}"));
+            mapping::validate(&g, &rho, &hw).unwrap_or_else(|e| panic!("case {case} {name}: {e}"));
+            assert!(
+                rho.assign.iter().all(|&p| (p as usize) < rho.num_parts),
+                "case {case} {name}: dangling partition id"
+            );
+        }
+    }
+}
+
+/// Property 2: the quotient conserves total weight and Eq. 7 connectivity
+/// computed directly equals Σ w·|D| over the quotient graph.
+#[test]
+fn prop_quotient_conservation_and_connectivity_identity() {
+    let mut rng = Pcg64::seeded(0xBEEF);
+    for case in 0..30 {
+        let g = random_graph(&mut rng);
+        let hw = random_hw(&mut rng, &g);
+        let rho = mapping::sequential::partition(&g, &hw, SeqOrder::Greedy).unwrap();
+        let q = push_forward(&g, &rho);
+        // weight conservation
+        let w_orig: f64 = g.edge_ids().map(|e| g.weight(e) as f64).sum();
+        let w_quot: f64 = q.graph.edge_ids().map(|e| q.graph.weight(e) as f64).sum();
+        assert!((w_orig - w_quot).abs() < 1e-3 * w_orig.max(1.0), "case {case}");
+        // connectivity identity
+        let direct = connectivity(&g, &rho);
+        let via_quotient: f64 = q
+            .graph
+            .edge_ids()
+            .map(|e| q.graph.weight(e) as f64 * q.graph.cardinality(e) as f64)
+            .sum();
+        assert!(
+            (direct - via_quotient).abs() < 1e-6 * direct.max(1.0),
+            "case {case}: {direct} vs {via_quotient}"
+        );
+        // merged_from partitions the original edge set
+        let merged_total: usize = q.merged_from.iter().map(|v| v.len()).sum();
+        assert_eq!(merged_total, g.num_edges(), "case {case}");
+    }
+}
+
+/// Property 3: all placements are injective and in-bounds; force-directed
+/// refinement never increases wirelength.
+#[test]
+fn prop_placements_injective_and_refinement_monotone() {
+    let mut rng = Pcg64::seeded(0xF00D);
+    for case in 0..20 {
+        let g = random_graph(&mut rng);
+        let hw = random_hw(&mut rng, &g);
+        let rho = mapping::overlap::partition(&g, &hw).unwrap();
+        let gp = push_forward(&g, &rho).graph;
+        let full = NmhConfig::small();
+        for (name, mut pl) in [
+            ("hilbert", hilbert::place(&gp, &full)),
+            ("spectral", spectral::place(&gp, &full)),
+            ("mindist", mindist::place(&gp, &full)),
+        ] {
+            pl.validate(&full).unwrap_or_else(|e| panic!("case {case} {name}: {e}"));
+            let before = pl.wirelength(&gp);
+            let stats = force::refine(&gp, &full, &mut pl, Default::default(), None);
+            pl.validate(&full).unwrap_or_else(|e| panic!("case {case} {name} post: {e}"));
+            assert!(
+                stats.final_wirelength <= before + 1e-9,
+                "case {case} {name}: {before} -> {}",
+                stats.final_wirelength
+            );
+        }
+    }
+}
+
+/// Property 4: connectivity is monotone under partition merging — merging
+/// two partitions can only reduce (or keep) Eq. 7 connectivity.
+#[test]
+fn prop_connectivity_monotone_under_merge() {
+    let mut rng = Pcg64::seeded(0xCAFE);
+    for case in 0..30 {
+        let g = random_graph(&mut rng);
+        let hw = random_hw(&mut rng, &g);
+        let rho = mapping::sequential::partition(&g, &hw, SeqOrder::Natural).unwrap();
+        if rho.num_parts < 2 {
+            continue;
+        }
+        let before = connectivity(&g, &rho);
+        // merge two random partitions (ignore constraints: metric property)
+        let a = rng.below(rho.num_parts) as u32;
+        let b = loop {
+            let b = rng.below(rho.num_parts) as u32;
+            if b != a {
+                break b;
+            }
+        };
+        let merged = Partitioning::new(
+            rho.assign.iter().map(|&p| if p == b { a } else { p }).collect(),
+            rho.num_parts,
+        );
+        let after = connectivity(&g, &merged);
+        assert!(after <= before + 1e-9, "case {case}: {before} -> {after}");
+    }
+}
+
+/// Property 5: Hilbert curve is a bijection with unit steps at every order
+/// used by the lattice sizes we support.
+#[test]
+fn prop_hilbert_bijective_unit_steps() {
+    for order in 1..=6u32 {
+        let n = 1u64 << (2 * order);
+        let mut seen = vec![false; n as usize];
+        let mut prev = None;
+        for d in 0..n {
+            let (x, y) = hilbert::d2xy(order, d);
+            let idx = (y as u64 * (1 << order) + x as u64) as usize;
+            assert!(!seen[idx], "order {order} d {d}");
+            seen[idx] = true;
+            assert_eq!(hilbert::xy2d(order, x, y), d);
+            if let Some((px, py)) = prev {
+                let dist =
+                    (x as i64 - px as i64).abs() + (y as i64 - py as i64).abs();
+                assert_eq!(dist, 1, "order {order} d {d}");
+            }
+            prev = Some((x, y));
+        }
+    }
+}
+
+/// Property 6: synaptic reuse is bounded by [1, nodes-per-partition] and
+/// the identity partitioning has reuse exactly 1.
+#[test]
+fn prop_synaptic_reuse_bounds() {
+    use snnmap::metrics::properties::{synaptic_reuse, Mean};
+    let mut rng = Pcg64::seeded(0xDEAD);
+    for case in 0..20 {
+        let g = random_graph(&mut rng);
+        let ident = Partitioning::identity(g.num_nodes());
+        let sr = synaptic_reuse(&g, &ident, Mean::Arithmetic);
+        if g.num_connections() > 0 {
+            assert!((sr - 1.0).abs() < 1e-9, "case {case}: identity reuse {sr}");
+        }
+        let hw = random_hw(&mut rng, &g);
+        let rho = mapping::overlap::partition(&g, &hw).unwrap();
+        let sr = synaptic_reuse(&g, &rho, Mean::Max);
+        let max_part = rho.sizes().into_iter().max().unwrap_or(1);
+        assert!(
+            sr <= max_part as f64 + 1e-9,
+            "case {case}: reuse {sr} > partition size {max_part}"
+        );
+    }
+}
+
+/// Property 7: simulated expected energy tracks the analytic Table I model
+/// across random mappings.
+#[test]
+fn prop_sim_energy_matches_analytic() {
+    use snnmap::metrics::evaluate;
+    use snnmap::sim::{simulate, SimParams};
+    let mut rng = Pcg64::seeded(0x5EED);
+    for case in 0..4 {
+        let g = random_graph(&mut rng);
+        let hw = random_hw(&mut rng, &g);
+        let rho = mapping::sequential::partition(&g, &hw, SeqOrder::Greedy).unwrap();
+        let gp = push_forward(&g, &rho).graph;
+        let full = NmhConfig::small();
+        let pl = hilbert::place(&gp, &full);
+        let analytic = evaluate(&gp, &pl, &full);
+        let sim = simulate(
+            &gp,
+            &pl,
+            &full,
+            SimParams { timesteps: 4000, seed: case as u64, poisson_spikes: true },
+        );
+        let rel = (sim.energy_per_step() - analytic.energy).abs() / analytic.energy;
+        assert!(rel < 0.06, "case {case}: rel={rel}");
+    }
+}
+
+/// Property 8: orderings are permutations, and Kahn agrees with edges.
+#[test]
+fn prop_orderings_are_permutations() {
+    use snnmap::mapping::ordering::{auto_order, greedy_order, kahn_order};
+    let mut rng = Pcg64::seeded(0xFACE);
+    for case in 0..25 {
+        let g = random_graph(&mut rng);
+        let n = g.num_nodes();
+        for (name, order) in [
+            ("greedy", greedy_order(&g)),
+            ("auto", auto_order(&g)),
+        ] {
+            let mut seen = vec![false; n];
+            for &v in &order {
+                assert!(!seen[v as usize], "case {case} {name} duplicate");
+                seen[v as usize] = true;
+            }
+            assert_eq!(order.len(), n, "case {case} {name}");
+        }
+        if let Some(order) = kahn_order(&g) {
+            // topological property: no edge goes backwards
+            let mut pos = vec![0usize; n];
+            for (i, &v) in order.iter().enumerate() {
+                pos[v as usize] = i;
+            }
+            for e in g.edge_ids() {
+                let s = g.source(e);
+                for &d in g.dsts(e) {
+                    if d != s {
+                        assert!(pos[s as usize] < pos[d as usize], "case {case} edge order");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Property 9: placement wirelength is invariant under lattice translation
+/// of the whole placement (metric sanity for the refiners).
+#[test]
+fn prop_wirelength_translation_invariant() {
+    let mut rng = Pcg64::seeded(0x7777);
+    for _ in 0..10 {
+        let g = random_graph(&mut rng);
+        let hw = random_hw(&mut rng, &g);
+        let rho = mapping::sequential::partition(&g, &hw, SeqOrder::Natural).unwrap();
+        let gp = push_forward(&g, &rho).graph;
+        let full = NmhConfig::small();
+        let pl = spectral::place(&gp, &full);
+        let max_x = pl.coords.iter().map(|c| c.0).max().unwrap_or(0);
+        let max_y = pl.coords.iter().map(|c| c.1).max().unwrap_or(0);
+        if (max_x as usize + 2) < full.width && (max_y as usize + 2) < full.height {
+            let shifted = Placement {
+                coords: pl.coords.iter().map(|&(x, y)| (x + 1, y + 1)).collect(),
+            };
+            assert!((pl.wirelength(&gp) - shifted.wirelength(&gp)).abs() < 1e-9);
+        }
+    }
+}
