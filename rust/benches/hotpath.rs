@@ -1,20 +1,41 @@
 //! E10 — hot-path microbenchmarks for the §Perf optimization loop:
 //! overlap partitioning throughput (connections/s), force-refinement
-//! sweep rate, metric-engine throughput, quotient construction, greedy
-//! ordering, and the PJRT-vs-native spectral engine.
+//! sweep rate, metric-engine throughput (serial vs parallel), quotient
+//! construction, greedy ordering, and the PJRT-vs-native spectral engine.
+//!
+//! `--json <path>` additionally writes the numbers machine-readably so the
+//! BENCH trajectory (BENCH_hotpath.json at the repo root) can track
+//! regressions across PRs:
+//!
+//!     cargo bench --bench hotpath -- --json BENCH_hotpath.json
 
 mod common;
 
 use snnmap::coordinator::experiment::hw_for;
 use snnmap::hypergraph::quotient::push_forward;
 use snnmap::mapping::{self, sequential::SeqOrder};
-use snnmap::metrics::evaluate;
+use snnmap::metrics::{evaluate, evaluate_serial};
 use snnmap::placement::{eigen, force, hilbert, spectral};
 use snnmap::runtime::PjrtRuntime;
+use snnmap::util::cli::Args;
+use snnmap::util::json::Json;
+use snnmap::util::par;
 use snnmap::util::timer::{bench, time_once};
 use std::time::Duration;
 
 fn main() {
+    let args = Args::parse(std::env::args().skip(1), &[]);
+    let mut kernels: Vec<(String, Json)> = Vec::new();
+    let mut record = |name: &str, secs: f64, rate_key: &str, rate: f64| {
+        kernels.push((
+            name.to_string(),
+            Json::obj(vec![
+                ("secs_per_iter", Json::Num(secs)),
+                (rate_key, Json::Num(rate)),
+            ]),
+        ));
+    };
+
     let net = common::load("16k_rand");
     let g = &net.graph;
     let hw = hw_for(&net, common::scale());
@@ -30,6 +51,7 @@ fn main() {
         st.mean_secs(),
         conns / st.mean_secs()
     );
+    record("overlap_partition", st.mean_secs(), "conn_per_s", conns / st.mean_secs());
 
     // 2. greedy ordering (Alg. 2)
     let (_, st) = bench(2, min_t, || mapping::ordering::greedy_order(g));
@@ -38,6 +60,7 @@ fn main() {
         st.mean_secs(),
         conns / st.mean_secs()
     );
+    record("greedy_ordering", st.mean_secs(), "conn_per_s", conns / st.mean_secs());
 
     // 3. sequential partitioning over a precomputed order
     let order = mapping::ordering::greedy_order(g);
@@ -49,6 +72,7 @@ fn main() {
         st.mean_secs(),
         conns / st.mean_secs()
     );
+    record("sequential_ordered", st.mean_secs(), "conn_per_s", conns / st.mean_secs());
     let _ = SeqOrder::Natural;
 
     // 4. quotient construction
@@ -58,17 +82,43 @@ fn main() {
         st.mean_secs(),
         conns / st.mean_secs()
     );
+    record("quotient_push_forward", st.mean_secs(), "conn_per_s", conns / st.mean_secs());
     let gp = q.graph;
     println!("  quotient: {} partitions, {} h-edges", gp.num_nodes(), gp.num_edges());
 
-    // 5. metric engine
+    // 5. metric engine: serial reference vs the parallel default.
+    // Throughput is synapse-visits/s (one visit per quotient connection);
+    // the two paths must agree bit-for-bit (ordered reduction).
     let pl = hilbert::place(&gp, &hw);
-    let (m, st) = bench(3, min_t, || evaluate(&gp, &pl, &hw));
+    let visits = gp.num_connections() as f64;
+    let (ms, st_ser) = bench(3, min_t, || evaluate_serial(&gp, &pl, &hw));
     println!(
-        "metric evaluation      {:>10.3}s/iter  (conn {:.3e}, elp {:.3e})",
-        st.mean_secs(),
+        "metric eval (serial)   {:>10.3}s/iter  {:>10.2e} synapse-visits/s",
+        st_ser.mean_secs(),
+        visits / st_ser.mean_secs()
+    );
+    record(
+        "metrics_evaluate_serial",
+        st_ser.mean_secs(),
+        "synapse_visits_per_s",
+        visits / st_ser.mean_secs(),
+    );
+    let (m, st_par) = bench(3, min_t, || evaluate(&gp, &pl, &hw));
+    assert_eq!(ms, m, "parallel evaluate diverged from serial");
+    println!(
+        "metric eval ({} thr)    {:>9.3}s/iter  {:>10.2e} synapse-visits/s  ({:.2}x, conn {:.3e}, elp {:.3e})",
+        par::max_threads(),
+        st_par.mean_secs(),
+        visits / st_par.mean_secs(),
+        st_ser.mean_secs() / st_par.mean_secs(),
         m.connectivity,
         m.elp
+    );
+    record(
+        "metrics_evaluate_parallel",
+        st_par.mean_secs(),
+        "synapse_visits_per_s",
+        visits / st_par.mean_secs(),
     );
 
     // 6. force-directed refinement (one full run from the Hilbert start)
@@ -84,6 +134,7 @@ fn main() {
         stats.initial_wirelength,
         stats.final_wirelength
     );
+    record("force_refinement", dt.as_secs_f64(), "sweeps", stats.sweeps as f64);
 
     // 7. spectral engines: native vs PJRT artifact
     let prob = eigen::build_laplacian(&gp);
@@ -96,6 +147,7 @@ fn main() {
         prob.lap.n,
         prob.lap.nnz()
     );
+    record("spectral_native", st.mean_secs(), "n", prob.lap.n as f64);
     match PjrtRuntime::discover() {
         Some(rt) => {
             let n = prob.lap.n;
@@ -114,6 +166,7 @@ fn main() {
                     st.mean_secs(),
                     compile_t.as_secs_f64() - st.mean_secs()
                 );
+                record("spectral_pjrt", st.mean_secs(), "n", n as f64);
             } else {
                 println!("spectral PJRT          skipped: {} partitions > capacity {}", n, rt.spectral_capacity());
             }
@@ -124,6 +177,31 @@ fn main() {
     // 8. full spectral placement
     let (_, st) = bench(1, min_t, || spectral::place(&gp, &hw));
     println!("spectral placement     {:>10.3}s/iter  (embed + discretize)", st.mean_secs());
+    record("spectral_placement", st.mean_secs(), "n", gp.num_nodes() as f64);
     common::hr();
     println!("targets (DESIGN.md §8): overlap >= 5e6 conn/s; metrics >= 1e7 synapse-visits/s.");
+
+    if let Some(path) = args.get("json") {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("hotpath".into())),
+            ("network", Json::Str(net.name.clone())),
+            ("scale", Json::Num(common::scale())),
+            ("threads", Json::Num(par::max_threads() as f64)),
+            ("nodes", Json::Num(g.num_nodes() as f64)),
+            ("connections", Json::Num(conns)),
+            ("quotient_partitions", Json::Num(gp.num_nodes() as f64)),
+            ("quotient_edges", Json::Num(gp.num_edges() as f64)),
+            ("kernels", Json::Obj(kernels.into_iter().collect())),
+            (
+                "targets",
+                Json::obj(vec![
+                    ("overlap_conn_per_s", Json::Num(5e6)),
+                    ("metrics_synapse_visits_per_s", Json::Num(1e7)),
+                ]),
+            ),
+        ]);
+        let body = doc.to_pretty() + "\n";
+        std::fs::write(path, body).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote machine-readable results to {path}");
+    }
 }

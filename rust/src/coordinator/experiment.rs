@@ -206,30 +206,17 @@ pub fn hw_for(net: &Network, scale: f64) -> NmhConfig {
     NmhConfig::for_connections(net.graph.num_connections()).scaled(scale.min(1.0))
 }
 
-/// Run the grid. Returns rows in deterministic (network-major) order.
+/// Run the grid. Returns rows in deterministic (network-major) order —
+/// network-level parallelism rides the shared [`crate::util::par`] engine
+/// (index-slotted results, so scheduling never reorders the output).
 pub fn run_grid(spec: &GridSpec) -> Vec<ExperimentRow> {
-    let jobs: Vec<String> = spec.networks.clone();
-    let threads = spec.threads.max(1).min(jobs.len().max(1));
-    if threads <= 1 {
-        return jobs.iter().flat_map(|n| run_network(spec, n)).collect();
-    }
-    // network-level parallelism with scoped threads
-    let mut results: Vec<Option<Vec<ExperimentRow>>> = vec![None; jobs.len()];
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let results_mx = std::sync::Mutex::new(&mut results);
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                if i >= jobs.len() {
-                    break;
-                }
-                let rows = run_network(spec, &jobs[i]);
-                results_mx.lock().unwrap()[i] = Some(rows);
-            });
-        }
-    });
-    results.into_iter().flatten().flatten().collect()
+    let threads = spec.threads.max(1);
+    crate::util::par::par_map(spec.networks.len(), threads, |i| {
+        run_network(spec, &spec.networks[i])
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// All grid cells of one network.
@@ -238,6 +225,11 @@ fn run_network(spec: &GridSpec, name: &str) -> Vec<ExperimentRow> {
         return vec![];
     };
     let hw = spec.hw.unwrap_or_else(|| hw_for(&net, spec.scale));
+    // Split the pool between grid workers and the metric engine so the
+    // two levels of parallelism don't multiply into oversubscription
+    // (results are thread-count-invariant either way, DESIGN.md §6).
+    let grid_workers = spec.threads.clamp(1, spec.networks.len().max(1));
+    let inner_threads = (crate::util::par::max_threads() / grid_workers).max(1);
     let mut rows = Vec::new();
     for &pk in &spec.partitioners {
         for &(pl, rf) in &spec.combos {
@@ -245,6 +237,7 @@ fn run_network(spec: &GridSpec, name: &str) -> Vec<ExperimentRow> {
                 .partitioner(pk)
                 .placer(pl)
                 .refiner(rf)
+                .threads(inner_threads)
                 .seed(spec.seed);
             let row = match pipeline.run(&net.graph, net.layer_ranges.as_deref()) {
                 Ok(res) => ExperimentRow {

@@ -5,8 +5,9 @@ use crate::hw::NmhConfig;
 use crate::hypergraph::quotient::{push_forward, Partitioning};
 use crate::hypergraph::Hypergraph;
 use crate::mapping::{self, MapError};
+use crate::metrics::cost::evaluate_with_threads;
 use crate::metrics::properties::{self, Mean};
-use crate::metrics::{evaluate, MappingMetrics};
+use crate::metrics::MappingMetrics;
 use crate::placement::force::{self, ForceParams, RefineStats};
 use crate::placement::{hilbert, mindist, spectral, Placement};
 use crate::runtime::PjrtRuntime;
@@ -182,6 +183,9 @@ pub struct MapperPipeline {
     pub force_params: ForceParams,
     pub hier_params: mapping::hierarchical::HierParams,
     pub seed: u64,
+    /// Worker-pool width shared by the parallel stages (metric engine);
+    /// defaults to the process-wide [`crate::util::par`] pool size.
+    pub threads: usize,
 }
 
 impl MapperPipeline {
@@ -194,7 +198,15 @@ impl MapperPipeline {
             force_params: ForceParams::default(),
             hier_params: mapping::hierarchical::HierParams::default(),
             seed: 42,
+            threads: crate::util::par::max_threads(),
         }
+    }
+
+    /// Cap the worker-pool width used by the parallel pipeline stages
+    /// (1 = fully serial; results are identical either way).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
     }
 
     pub fn partitioner(mut self, k: PartitionerKind) -> Self {
@@ -291,7 +303,7 @@ impl MapperPipeline {
             .map_err(MapError::ConstraintViolated)?;
 
         // ---- evaluate ----
-        let metrics = evaluate(&gp, &placement, &self.hw);
+        let metrics = evaluate_with_threads(&gp, &placement, &self.hw, self.threads);
         let sr = (
             properties::synaptic_reuse(g, &rho, Mean::Arithmetic),
             properties::synaptic_reuse(g, &rho, Mean::Geometric),
@@ -403,6 +415,26 @@ mod tests {
         assert!(refined.metrics.wirelength <= base.metrics.wirelength + 1e-9);
         let rs = refined.refine_stats.unwrap();
         assert!(rs.final_wirelength <= rs.initial_wirelength + 1e-9);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_metrics() {
+        // the pipeline's pool knob must be unobservable in the output
+        // (ordered reduction in the metric engine, DESIGN.md §6)
+        let net = small_net();
+        let run = |t: usize| {
+            MapperPipeline::new(small_hw())
+                .partitioner(PartitionerKind::HyperedgeOverlap)
+                .placer(PlacerKind::Hilbert)
+                .refiner(RefinerKind::None)
+                .threads(t)
+                .run(&net.graph, None)
+                .unwrap()
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert_eq!(serial.rho.assign, parallel.rho.assign);
+        assert_eq!(serial.metrics, parallel.metrics);
     }
 
     #[test]

@@ -68,47 +68,97 @@ pub struct Quotient {
     pub merged_from: Vec<Vec<EdgeId>>,
 }
 
+/// FNV-1a step over one little-endian u32.
+#[inline]
+fn fnv1a_u32(mut h: u64, x: u32) -> u64 {
+    for b in x.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 /// Push `g` forward through `rho` (Eq. 3), merging duplicate h-edges.
 ///
 /// Self-loops are preserved when a partition sends spikes to itself
 /// (intra-partition traffic is later priced at zero distance by the
 /// metric engine, matching core-internal replication).
+///
+/// Hot-path layout: destination sets are deduplicated through a reusable
+/// partition-stamp scratch array (no per-edge sort over duplicates) and
+/// unique quotient edges live in one flat arena indexed by a
+/// hash → chain-link table, so the sweep allocates nothing per input
+/// h-edge — the old version cloned every candidate key into a
+/// `HashMap<(u32, Vec<NodeId>), _>`.
 pub fn push_forward(g: &Hypergraph, rho: &Partitioning) -> Quotient {
     assert_eq!(g.num_nodes(), rho.assign.len());
-    let mut builder = HypergraphBuilder::new(rho.num_parts);
-    builder.reserve(g.num_edges(), g.num_edges() * 2);
+    let ne = g.num_edges();
 
-    // Key: (source partition, destination partition set) -> quotient edge.
-    let mut merge: HashMap<(u32, Vec<NodeId>), usize> = HashMap::new();
+    // Unique quotient edges: source, arena-backed dst span, weight.
+    let mut srcs: Vec<u32> = Vec::new();
+    let mut arena: Vec<NodeId> = Vec::new();
+    let mut span_off: Vec<usize> = vec![0];
     let mut weights: Vec<f32> = Vec::new();
-    let mut keys: Vec<(u32, Vec<NodeId>)> = Vec::new();
     let mut merged_from: Vec<Vec<EdgeId>> = Vec::new();
+    // hash -> chain head; `chain[i]` links unique edges sharing a hash.
+    let mut index: HashMap<u64, u32> = HashMap::with_capacity(ne);
+    let mut chain: Vec<u32> = Vec::new();
 
+    // Reusable scratch: stamp[p] == e marks partition p seen for edge e.
+    let mut stamp: Vec<u32> = vec![u32::MAX; rho.num_parts];
     let mut dset: Vec<NodeId> = Vec::new();
+
     for e in g.edge_ids() {
         let ps = rho.assign[g.source(e) as usize];
         dset.clear();
-        dset.extend(g.dsts(e).iter().map(|&d| rho.assign[d as usize]));
+        for &d in g.dsts(e) {
+            let p = rho.assign[d as usize];
+            if stamp[p as usize] != e {
+                stamp[p as usize] = e;
+                dset.push(p);
+            }
+        }
         dset.sort_unstable();
-        dset.dedup();
-        let key = (ps, dset.clone());
-        match merge.get(&key) {
-            Some(&idx) => {
-                weights[idx] += g.weight(e);
-                merged_from[idx].push(e);
+
+        let mut h = fnv1a_u32(0xcbf2_9ce4_8422_2325, ps);
+        for &p in &dset {
+            h = fnv1a_u32(h, p);
+        }
+
+        // walk the collision chain for an identical (ps, dset)
+        let mut found = None;
+        if let Some(&head) = index.get(&h) {
+            let mut cur = head;
+            while cur != u32::MAX {
+                let ci = cur as usize;
+                if srcs[ci] == ps && arena[span_off[ci]..span_off[ci + 1]] == dset[..] {
+                    found = Some(ci);
+                    break;
+                }
+                cur = chain[ci];
+            }
+        }
+        match found {
+            Some(ci) => {
+                weights[ci] += g.weight(e);
+                merged_from[ci].push(e);
             }
             None => {
-                let idx = weights.len();
-                merge.insert(key.clone(), idx);
-                keys.push(key);
+                let id = srcs.len() as u32;
+                srcs.push(ps);
+                arena.extend_from_slice(&dset);
+                span_off.push(arena.len());
                 weights.push(g.weight(e));
                 merged_from.push(vec![e]);
+                let prev_head = index.insert(h, id);
+                chain.push(prev_head.unwrap_or(u32::MAX));
             }
         }
     }
 
-    for (idx, (ps, dset)) in keys.iter().enumerate() {
-        builder.add_edge_sorted(*ps, dset, weights[idx]);
+    let mut builder = HypergraphBuilder::new(rho.num_parts);
+    builder.reserve(srcs.len(), arena.len());
+    for i in 0..srcs.len() {
+        builder.add_edge_sorted(srcs[i], &arena[span_off[i]..span_off[i + 1]], weights[i]);
     }
     Quotient {
         graph: builder.build(),

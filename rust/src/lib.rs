@@ -13,7 +13,10 @@
 //!   partitioners, placers, metric engine, NoC simulator, experiments;
 //! * numerical hot spots (the spectral-placement eigensolver and batched
 //!   force-field evaluation) are AOT-compiled JAX/Pallas artifacts
-//!   executed through PJRT by [`runtime`], with native fallbacks.
+//!   executed through PJRT by [`runtime`], with native fallbacks;
+//! * CPU-parallel hot paths (metric engine, experiment grid) ride the
+//!   deterministic scoped-thread engine in [`util::par`] — thread counts
+//!   are performance knobs, never semantics knobs (DESIGN.md §6-§7).
 //!
 //! Quick tour:
 //! ```no_run

@@ -11,7 +11,12 @@
 //!
 //! Complexity O(e·d·log d): each node's connections are visited once; the
 //! priority queue is a lazy max-heap flushed per partition via an epoch
-//! stamp (O(1) flush).
+//! stamp (O(1) flush). The inner argmin^lex selection runs on a flat
+//! [`Scoreboard`] — dense per-node slots plus buckets keyed on the cached
+//! `new_axons` value — instead of a `BTreeSet` + `HashMap` pair, so the
+//! hot loop does no hashing and no remove/reinsert churn: candidate keys
+//! only *decrease* while a partition grows, so a monotone bucket floor
+//! plus recompute-on-peek reproduces the exact ordered-set semantics.
 
 use super::{ConstraintTracker, MapError};
 use crate::hw::NmhConfig;
@@ -47,13 +52,213 @@ impl Ord for EdgeEntry {
     }
 }
 
-/// Candidate-node scoreboard for the inner argmin^lex selection:
+/// In-bucket selection rank: ascending order puts the lex-best candidate
+/// (largest inbound set, then smallest node id) last, so `Vec::pop` is the
+/// argmin^lex within a `new_axons` bucket.
+#[inline]
+fn rank_of(g: &Hypergraph, n: u32, sel_min: bool) -> u64 {
+    let inv_id = (u32::MAX - n) as u64;
+    if sel_min {
+        ((g.inbound(n).len() as u64) << 32) | inv_id
+    } else {
+        inv_id
+    }
+}
+
+/// Flat candidate scoreboard for the inner argmin^lex selection:
 /// (new inbound axons ascending, inbound-set size descending, id).
-#[derive(PartialEq, Eq, PartialOrd, Ord, Clone, Copy)]
-struct NodeKey {
-    new_axons: u32,
-    neg_inbound: i64,
-    node: u32,
+///
+/// Entries live in `buckets[new_axons]`, each bucket sorted ascending by
+/// [`rank_of`] (best last). Dense per-node `cached`/`stamp` slots replace
+/// the old `HashMap` membership test; `cur_min` is a monotone floor over
+/// nonempty buckets that is lowered only when a recomputed key moves an
+/// entry down. All mutations are deterministic.
+struct Scoreboard {
+    /// `buckets[a]` = candidates with cached `new_axons == a`, as
+    /// `(rank, node)` sorted ascending by rank.
+    buckets: Vec<Vec<(u64, u32)>>,
+    /// Bucket ids currently holding entries (cleared in O(touched)).
+    dirty: Vec<u32>,
+    /// Per-node candidate generation; 0 = not a live candidate.
+    stamp: Vec<u32>,
+    gen: u32,
+    /// Floor: no live entry sits in a bucket below `cur_min`.
+    cur_min: usize,
+    /// Live candidate count.
+    live: usize,
+    /// Nodes inserted in the current generation (rebuild scratch).
+    members: Vec<u32>,
+    /// Apply the argmin-new-axons policy (ablation knob).
+    sel_min: bool,
+}
+
+impl Scoreboard {
+    fn new(n_nodes: usize, sel_min: bool) -> Self {
+        Scoreboard {
+            buckets: Vec::new(),
+            dirty: Vec::new(),
+            stamp: vec![0; n_nodes],
+            gen: 0,
+            cur_min: 0,
+            live: 0,
+            members: Vec::new(),
+            sel_min,
+        }
+    }
+
+    fn bump_gen(&mut self) {
+        if self.gen == u32::MAX {
+            self.stamp.iter_mut().for_each(|s| *s = 0);
+            self.gen = 1;
+        } else {
+            self.gen += 1;
+        }
+    }
+
+    /// Start collecting candidates for a new h-edge.
+    fn begin(&mut self) {
+        for b in self.dirty.drain(..) {
+            self.buckets[b as usize].clear();
+        }
+        self.bump_gen();
+        self.cur_min = 0;
+        self.live = 0;
+        self.members.clear();
+    }
+
+    fn push_entry(&mut self, n: u32, axons: u32, rank: u64) {
+        let b = axons as usize;
+        if b >= self.buckets.len() {
+            self.buckets.resize_with(b + 1, Vec::new);
+        }
+        let bucket = &mut self.buckets[b];
+        if bucket.is_empty() {
+            self.dirty.push(b as u32);
+        }
+        let pos = bucket.partition_point(|&(r, _)| r < rank);
+        bucket.insert(pos, (rank, n));
+        if b < self.cur_min {
+            self.cur_min = b;
+        }
+    }
+
+    /// Add candidate `n` (no-op if already a live candidate).
+    fn insert(&mut self, n: u32, axons: u32, rank: u64) {
+        if self.stamp[n as usize] == self.gen {
+            return;
+        }
+        self.stamp[n as usize] = self.gen;
+        self.members.push(n);
+        self.push_entry(n, axons, rank);
+        self.live += 1;
+    }
+
+    /// Current argmin^lex candidate, lazily refreshing stale keys via
+    /// `fresh` (keys can only have decreased since insertion). The entry
+    /// stays in place: callers either [`Self::remove_best`] it on
+    /// assignment or [`Self::rebuild`] everything on partition close.
+    fn peek_best(&mut self, mut fresh: impl FnMut(u32) -> u32) -> Option<u32> {
+        if self.live == 0 {
+            return None;
+        }
+        loop {
+            while self.buckets[self.cur_min].is_empty() {
+                self.cur_min += 1;
+            }
+            let &(rank, n) = self.buckets[self.cur_min].last().unwrap();
+            if self.sel_min {
+                let f = fresh(n);
+                if f as usize != self.cur_min {
+                    self.buckets[self.cur_min].pop();
+                    self.push_entry(n, f, rank);
+                    continue;
+                }
+            }
+            return Some(n);
+        }
+    }
+
+    /// Remove the candidate just returned by [`Self::peek_best`].
+    fn remove_best(&mut self, n: u32) {
+        let popped = self.buckets[self.cur_min].pop();
+        debug_assert_eq!(popped.map(|(_, m)| m), Some(n));
+        self.stamp[n as usize] = 0;
+        self.live -= 1;
+    }
+
+    /// Re-key every live candidate (after a partition close resets all
+    /// `new_axons` counts). `key` returns `(new_axons, rank)`.
+    fn rebuild(&mut self, mut key: impl FnMut(u32) -> (u32, u64)) {
+        let survivors: Vec<u32> = self
+            .members
+            .iter()
+            .copied()
+            .filter(|&n| self.stamp[n as usize] != 0)
+            .collect();
+        for b in self.dirty.drain(..) {
+            self.buckets[b as usize].clear();
+        }
+        self.bump_gen();
+        self.cur_min = 0;
+        self.live = 0;
+        self.members.clear();
+        for n in survivors {
+            let (a, r) = key(n);
+            self.stamp[n as usize] = self.gen;
+            self.members.push(n);
+            self.push_entry(n, a, r);
+            self.live += 1;
+        }
+    }
+}
+
+/// Candidate admission (Alg. 1 lines 18-19): unassigned nodes only, keyed
+/// by the axons they would newly pull into the current partition.
+fn push_candidate(
+    g: &Hypergraph,
+    assign: &[u32],
+    tracker: &ConstraintTracker,
+    sb: &mut Scoreboard,
+    sel_min: bool,
+    n: u32,
+) {
+    if assign[n as usize] == u32::MAX {
+        let axons = if sel_min { tracker.new_axons(n) as u32 } else { 0 };
+        sb.insert(n, axons, rank_of(g, n, sel_min));
+    }
+}
+
+/// Queue update (Alg. 1 lines 31-33): every unseen h-edge touching an
+/// assigned node gains an occurrence and loses a remaining slot.
+#[allow(clippy::too_many_arguments)]
+fn touch_edge(
+    c: EdgeId,
+    epoch: u32,
+    seen: &[bool],
+    pq: &mut [f64],
+    pq_epoch: &mut [u32],
+    size: &mut [u32],
+    wf: &[f64],
+    heap: &mut BinaryHeap<EdgeEntry>,
+) {
+    if seen[c as usize] {
+        return;
+    }
+    let ci = c as usize;
+    if pq_epoch[ci] != epoch {
+        pq[ci] = 0.0;
+        pq_epoch[ci] = epoch;
+    }
+    let sz = size[ci] as f64;
+    if sz > 1.0 {
+        pq[ci] = (pq[ci] * sz + 1.0) / (sz - 1.0);
+    } else {
+        pq[ci] = 0.0; // fully assigned edge: no pull left
+    }
+    size[ci] = size[ci].saturating_sub(1);
+    if pq[ci] > 0.0 {
+        heap.push(EdgeEntry { prio: pq[ci] * wf[ci], edge: c, epoch });
+    }
 }
 
 /// Ablation knobs (benches/ablations.rs): Algorithm 1 with pieces off.
@@ -101,6 +306,9 @@ pub fn partition_with_params(
     let mut pq_epoch: Vec<u32> = vec![0; e_total];
     let mut epoch = 0u32;
 
+    // h-edge weights as f64, computed once for the heap priorities.
+    let wf: Vec<f64> = g.edge_ids().map(|e| g.weight(e) as f64).collect();
+
     let mut seen = vec![false; e_total];
     let mut seen_count = 0usize;
 
@@ -112,9 +320,9 @@ pub fn partition_with_params(
     let mut heap: BinaryHeap<EdgeEntry> = BinaryHeap::new();
     let mut part = 0u32;
 
-    // Scratch for the inner node-selection scoreboard.
-    let mut cand: std::collections::BTreeSet<NodeKey> = std::collections::BTreeSet::new();
-    let mut cand_key: std::collections::HashMap<u32, NodeKey> = std::collections::HashMap::new();
+    // Flat scoreboard for the inner node-selection (reused across edges).
+    let sel_min = params.select_min_new_axons;
+    let mut sb = Scoreboard::new(g.num_nodes(), sel_min);
 
     while seen_count < e_total {
         // ---- pick the next h-edge (lines 13-16) ----
@@ -124,7 +332,7 @@ pub fn partition_with_params(
                     let stale = seen[entry.edge as usize]
                         || entry.epoch != epoch
                         || {
-                            let cur = pq[entry.edge as usize] * g.weight(entry.edge) as f64;
+                            let cur = pq[entry.edge as usize] * wf[entry.edge as usize];
                             (cur - entry.prio).abs() > 1e-12
                         };
                     if stale {
@@ -149,51 +357,18 @@ pub fn partition_with_params(
         seen_count += 1;
 
         // ---- collect assignable nodes of e (lines 18-19) ----
-        cand.clear();
-        cand_key.clear();
+        sb.begin();
         let s = g.source(e);
-        let sel_min = params.select_min_new_axons;
-        let push_cand = |n: u32,
-                             cand: &mut std::collections::BTreeSet<NodeKey>,
-                             cand_key: &mut std::collections::HashMap<u32, NodeKey>,
-                             tracker: &ConstraintTracker| {
-            if assign[n as usize] == u32::MAX && !cand_key.contains_key(&n) {
-                let key = if sel_min {
-                    NodeKey {
-                        new_axons: tracker.new_axons(n) as u32,
-                        neg_inbound: -(g.inbound(n).len() as i64),
-                        node: n,
-                    }
-                } else {
-                    NodeKey { new_axons: 0, neg_inbound: 0, node: n }
-                };
-                cand.insert(key);
-                cand_key.insert(n, key);
-            }
-        };
         for &d in g.dsts(e) {
-            push_cand(d, &mut cand, &mut cand_key, &tracker);
+            push_candidate(g, &assign, &tracker, &mut sb, sel_min, d);
         }
         if g.inbound(s).is_empty() {
             // input nodes are free of inbound axons: co-locate with dsts
-            push_cand(s, &mut cand, &mut cand_key, &tracker);
+            push_candidate(g, &assign, &tracker, &mut sb, sel_min, s);
         }
 
         // ---- assign nodes (lines 20-33) ----
-        while let Some(&key) = cand.iter().next() {
-            let n = key.node;
-            // key.new_axons may be stale only w.r.t. *reductions* (axons
-            // added to the partition since insertion); recompute cheaply
-            // and reinsert if it improved.
-            let fresh = if params.select_min_new_axons { tracker.new_axons(n) as u32 } else { 0 };
-            if fresh != key.new_axons {
-                cand.remove(&key);
-                let nk = NodeKey { new_axons: fresh, ..key };
-                cand.insert(nk);
-                cand_key.insert(n, nk);
-                continue;
-            }
-
+        while let Some(n) = sb.peek_best(|m| tracker.new_axons(m) as u32) {
             if !tracker.fits(n) {
                 if tracker.npc == 0 {
                     tracker.node_feasible(n)?;
@@ -212,63 +387,28 @@ pub fn partition_with_params(
                         limit: hw.num_cores(),
                     });
                 }
-                // candidate axon-counts all reset: rebuild the scoreboard
-                let nodes: Vec<u32> = cand_key.keys().copied().collect();
-                cand.clear();
-                cand_key.clear();
-                for m in nodes {
-                    let k = if params.select_min_new_axons {
-                        NodeKey {
-                            new_axons: tracker.new_axons(m) as u32,
-                            neg_inbound: -(g.inbound(m).len() as i64),
-                            node: m,
-                        }
+                // candidate axon-counts all reset: re-key the scoreboard
+                sb.rebuild(|m| {
+                    if sel_min {
+                        (tracker.new_axons(m) as u32, rank_of(g, m, true))
                     } else {
-                        NodeKey { new_axons: 0, neg_inbound: 0, node: m }
-                    };
-                    cand.insert(k);
-                    cand_key.insert(m, k);
-                }
+                        (0, rank_of(g, m, false))
+                    }
+                });
                 continue;
             }
 
             // assign n to the current partition (lines 28-30)
-            cand.remove(&key);
-            cand_key.remove(&n);
+            sb.remove_best(n);
             tracker.add(n);
             assign[n as usize] = part;
 
-            // update the h-edge queue (lines 31-33): every unseen h-edge
-            // touching n gains an occurrence and loses a remaining slot
-            let mut touch = |c: EdgeId, heap: &mut BinaryHeap<EdgeEntry>| {
-                if seen[c as usize] {
-                    return;
-                }
-                let ci = c as usize;
-                if pq_epoch[ci] != epoch {
-                    pq[ci] = 0.0;
-                    pq_epoch[ci] = epoch;
-                }
-                let sz = size[ci] as f64;
-                if sz > 1.0 {
-                    pq[ci] = (pq[ci] * sz + 1.0) / (sz - 1.0);
-                } else {
-                    pq[ci] = 0.0; // fully assigned edge: no pull left
-                }
-                size[ci] = size[ci].saturating_sub(1);
-                if pq[ci] > 0.0 {
-                    heap.push(EdgeEntry {
-                        prio: pq[ci] * g.weight(c) as f64,
-                        edge: c,
-                        epoch,
-                    });
-                }
-            };
+            // update the h-edge queue (lines 31-33)
             for &c in g.inbound(n) {
-                touch(c, &mut heap);
+                touch_edge(c, epoch, &seen, &mut pq, &mut pq_epoch, &mut size, &wf, &mut heap);
             }
             for &c in g.outbound(n) {
-                touch(c, &mut heap);
+                touch_edge(c, epoch, &seen, &mut pq, &mut pq_epoch, &mut size, &wf, &mut heap);
             }
         }
     }
@@ -314,7 +454,7 @@ mod tests {
         let g = b.build();
         let mut hw = NmhConfig::small();
         hw.c_npc = 6;
-        let rho = partition(&g, &hw, ).unwrap();
+        let rho = partition(&g, &hw).unwrap();
         validate(&g, &rho, &hw).unwrap();
         // listeners of the twin axons all share one partition
         let p = rho.assign[3];
@@ -418,5 +558,31 @@ mod tests {
         let a = partition(&g, &hw).unwrap();
         let b2 = partition(&g, &hw).unwrap();
         assert_eq!(a.assign, b2.assign);
+    }
+
+    #[test]
+    fn ablations_still_valid_partitionings() {
+        // both knobs off must still produce constraint-satisfying output
+        let mut rng = Pcg64::seeded(41);
+        let n = 120;
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            let dsts: Vec<u32> = (0..5).map(|_| rng.below(n) as u32).filter(|&d| d != s).collect();
+            if !dsts.is_empty() {
+                b.add_edge(s, dsts, rng.next_f32() + 0.01);
+            }
+        }
+        let g = b.build();
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 12;
+        for (uq, sm) in [(false, true), (true, false), (false, false)] {
+            let rho = partition_with_params(
+                &g,
+                &hw,
+                OverlapParams { use_queue: uq, select_min_new_axons: sm },
+            )
+            .unwrap();
+            validate(&g, &rho, &hw).unwrap();
+        }
     }
 }

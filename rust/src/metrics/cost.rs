@@ -11,11 +11,30 @@
 //! per-neuron destinations into distinct partitions, so each core pays for
 //! at most one copy per axon — the correction hypergraphs bring over [7]'s
 //! edge-wise accounting (§III-B).
+//!
+//! # Execution model (DESIGN.md §6)
+//!
+//! The h-edge sweep and the congestion pass both run as fixed-size chunked
+//! folds over [`crate::util::par`]: per-chunk accumulators are merged in
+//! ascending chunk order, so the floating-point merge tree is identical
+//! for any worker count and `evaluate` is bit-for-bit deterministic —
+//! `evaluate_with_threads(.., 1)` equals `evaluate_with_threads(.., k)`
+//! exactly. Directed partition-pair flows are aggregated through a sorted
+//! flat `Vec` (stable sort keeps duplicate-key weight sums in edge order)
+//! instead of a `HashMap`, which both removes per-edge rehashing and fixes
+//! the run-to-run nondeterminism of iterating a randomly-seeded map.
 
 use super::tau::{rect, tau, Binomial};
 use crate::hw::NmhConfig;
 use crate::hypergraph::Hypergraph;
 use crate::placement::Placement;
+use crate::util::par;
+
+/// H-edges folded per chunk. Fixed (never derived from the worker count)
+/// so the reduction tree — and thus every f64 sum — is thread-invariant.
+const EDGE_CHUNK: usize = 1024;
+/// Aggregated flows folded per chunk of the congestion pass.
+const FLOW_CHUNK: usize = 512;
 
 /// Evaluated mapping metrics (Table I + compound indicators).
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -47,61 +66,138 @@ impl MappingMetrics {
     }
 }
 
+/// Per-chunk accumulator of the h-edge sweep.
+#[derive(Default)]
+struct EdgeAcc {
+    energy: f64,
+    latency: f64,
+    wirelength: f64,
+    copies_weight: f64,
+    connectivity: f64,
+    /// Raw inter-partition copies `(s, d, w)` in edge order (unaggregated).
+    flows: Vec<(u32, u32, f64)>,
+}
+
 /// Evaluate a complete mapping: quotient h-graph `gp` + placement γ.
+/// Parallel over the default worker pool; see [`evaluate_with_threads`].
 pub fn evaluate(gp: &Hypergraph, placement: &Placement, hw: &NmhConfig) -> MappingMetrics {
+    evaluate_with_threads(gp, placement, hw, par::max_threads())
+}
+
+/// Single-threaded reference evaluation. Same chunk structure, same merge
+/// order, no worker threads — the parallel path must equal this exactly.
+pub fn evaluate_serial(gp: &Hypergraph, placement: &Placement, hw: &NmhConfig) -> MappingMetrics {
+    evaluate_with_threads(gp, placement, hw, 1)
+}
+
+/// Evaluate on an explicit worker count (the coordinator threads its pool
+/// size through here; 1 = inline serial execution).
+pub fn evaluate_with_threads(
+    gp: &Hypergraph,
+    placement: &Placement,
+    hw: &NmhConfig,
+    threads: usize,
+) -> MappingMetrics {
     assert_eq!(gp.num_nodes(), placement.len());
     let costs = hw.costs;
-    let mut energy = 0.0f64;
-    let mut latency = 0.0f64;
-    let mut wirelength = 0.0f64;
-    let mut copies_weight = 0.0f64;
-    let mut connectivity = 0.0f64;
+    let coords = &placement.coords;
 
-    // Aggregate directed partition-pair flows for the congestion pass.
-    let mut flows: std::collections::HashMap<(u32, u32), f64> = std::collections::HashMap::new();
-
-    for e in gp.edge_ids() {
-        let s = gp.source(e);
-        let w = gp.weight(e) as f64;
-        let sc = placement.coords[s as usize];
-        connectivity += w * gp.cardinality(e) as f64;
-        for &d in gp.dsts(e) {
-            let dc = placement.coords[d as usize];
-            let dist = NmhConfig::manhattan(sc, dc) as f64;
-            energy += w * (dist * (costs.e_r + costs.e_t) + costs.e_r);
-            latency += w * (dist * (costs.l_r + costs.l_t) + costs.l_r);
-            wirelength += w * dist;
-            copies_weight += w;
-            if d != s {
-                *flows.entry((s, d)).or_insert(0.0) += w;
+    // ---- chunked h-edge sweep (energy / latency / wirelength / flows) ----
+    let acc = par::chunked_fold(
+        gp.num_edges(),
+        EDGE_CHUNK,
+        threads,
+        |r| {
+            let mut a = EdgeAcc::default();
+            for e in r {
+                let e = e as u32;
+                let s = gp.source(e);
+                let w = gp.weight(e) as f64;
+                let sc = coords[s as usize];
+                a.connectivity += w * gp.cardinality(e) as f64;
+                for &d in gp.dsts(e) {
+                    let dc = coords[d as usize];
+                    let dist = NmhConfig::manhattan(sc, dc) as f64;
+                    a.energy += w * (dist * (costs.e_r + costs.e_t) + costs.e_r);
+                    a.latency += w * (dist * (costs.l_r + costs.l_t) + costs.l_r);
+                    a.wirelength += w * dist;
+                    a.copies_weight += w;
+                    if d != s {
+                        a.flows.push((s, d, w));
+                    }
+                }
             }
+            a
+        },
+        |mut a, mut b| {
+            a.energy += b.energy;
+            a.latency += b.latency;
+            a.wirelength += b.wirelength;
+            a.copies_weight += b.copies_weight;
+            a.connectivity += b.connectivity;
+            a.flows.append(&mut b.flows);
+            a
+        },
+    )
+    .unwrap_or_default();
+
+    // ---- aggregate directed partition-pair flows (flat, sorted) ----
+    // Stable sort: duplicate (s, d) keys keep their edge order, so the
+    // per-pair weight sums are reduction-order deterministic too.
+    let mut raw = acc.flows;
+    raw.sort_by_key(|&(s, d, _)| (s, d));
+    let mut flows: Vec<(u32, u32, f64)> = Vec::with_capacity(raw.len());
+    for (s, d, w) in raw {
+        match flows.last_mut() {
+            Some(last) if last.0 == s && last.1 == d => last.2 += w,
+            _ => flows.push((s, d, w)),
         }
     }
 
-    // Congestion: expected traffic per core under random shortest paths.
+    // ---- congestion: parallel per-core traffic accumulation ----
     let bin = Binomial::for_lattice(hw.width, hw.height);
-    let mut core_traffic = vec![0.0f64; hw.num_cores()];
-    for (&(s, d), &w) in flows.iter() {
-        let sc = placement.coords[s as usize];
-        let dc = placement.coords[d as usize];
-        for h in rect(sc, dc) {
-            let t = tau(&bin, h, sc, dc);
-            if t > 0.0 {
-                core_traffic[hw.index(h.0, h.1)] += w * t;
+    let core_traffic = par::chunked_fold(
+        flows.len(),
+        FLOW_CHUNK,
+        threads,
+        |r| {
+            let mut traffic = vec![0.0f64; hw.num_cores()];
+            for &(s, d, w) in &flows[r] {
+                let sc = coords[s as usize];
+                let dc = coords[d as usize];
+                for h in rect(sc, dc) {
+                    let t = tau(&bin, h, sc, dc);
+                    if t > 0.0 {
+                        traffic[hw.index(h.0, h.1)] += w * t;
+                    }
+                }
             }
-        }
-    }
-    let congestion = core_traffic.iter().cloned().fold(0.0, f64::max);
+            traffic
+        },
+        |mut a, b| {
+            for (x, y) in a.iter_mut().zip(&b) {
+                *x += *y;
+            }
+            a
+        },
+    );
+    let congestion = core_traffic
+        .map(|t| t.into_iter().fold(0.0, f64::max))
+        .unwrap_or(0.0);
 
     MappingMetrics {
-        energy,
-        latency,
+        energy: acc.energy,
+        latency: acc.latency,
         congestion,
-        elp: energy * latency,
-        connectivity,
-        wirelength,
+        elp: acc.energy * acc.latency,
+        connectivity: acc.connectivity,
+        wirelength: acc.wirelength,
         num_partitions: gp.num_nodes(),
-        mean_hops: if copies_weight > 0.0 { wirelength / copies_weight } else { 0.0 },
+        mean_hops: if acc.copies_weight > 0.0 {
+            acc.wirelength / acc.copies_weight
+        } else {
+            0.0
+        },
     }
 }
 
@@ -109,6 +205,7 @@ pub fn evaluate(gp: &Hypergraph, placement: &Placement, hw: &NmhConfig) -> Mappi
 mod tests {
     use super::*;
     use crate::hypergraph::HypergraphBuilder;
+    use crate::util::rng::Pcg64;
 
     fn hw() -> NmhConfig {
         NmhConfig::small()
@@ -186,5 +283,140 @@ mod tests {
         let far = evaluate(&gp, &Placement { coords: vec![(0, 0), (20, 20)] }, &hw());
         assert!(near.energy < far.energy);
         assert!(near.elp < far.elp);
+    }
+
+    /// Seeded random quotient-like graph (multi-outbound) + placement.
+    fn random_case(parts: usize, edges: usize, seed: u64) -> (Hypergraph, Placement) {
+        let mut rng = Pcg64::seeded(seed);
+        let mut b = HypergraphBuilder::new(parts);
+        for _ in 0..edges {
+            let s = rng.below(parts) as u32;
+            let k = rng.range(1, 9);
+            let dsts: Vec<u32> = (0..k).map(|_| rng.below(parts) as u32).collect();
+            b.add_edge(s, dsts, rng.next_f32() * 4.0 + 0.01);
+        }
+        let g = b.build();
+        // distinct coords on an 8-wide strip of the lattice
+        let coords: Vec<(u16, u16)> = (0..parts)
+            .map(|p| ((p % 8) as u16, (p / 8) as u16))
+            .collect();
+        (g, Placement { coords })
+    }
+
+    #[test]
+    fn parallel_equals_serial_exactly() {
+        // the ordered reduction must make the worker count unobservable,
+        // down to the last ulp of every metric
+        let (g, pl) = random_case(96, 700, 91);
+        let serial = evaluate_serial(&g, &pl, &hw());
+        for threads in [2, 3, 8] {
+            let par = evaluate_with_threads(&g, &pl, &hw(), threads);
+            assert_eq!(serial, par, "threads={threads} diverged from serial");
+            assert_eq!(serial.energy.to_bits(), par.energy.to_bits());
+            assert_eq!(serial.latency.to_bits(), par.latency.to_bits());
+            assert_eq!(serial.congestion.to_bits(), par.congestion.to_bits());
+            assert_eq!(serial.wirelength.to_bits(), par.wirelength.to_bits());
+        }
+        // and the default entry point is that same deterministic value
+        assert_eq!(serial, evaluate(&g, &pl, &hw()));
+    }
+
+    /// All monotone (shortest) lattice paths from `s` to `d`.
+    fn all_shortest_paths(s: (u16, u16), d: (u16, u16)) -> Vec<Vec<(u16, u16)>> {
+        fn go(
+            cur: (i32, i32),
+            d: (i32, i32),
+            path: &mut Vec<(u16, u16)>,
+            out: &mut Vec<Vec<(u16, u16)>>,
+        ) {
+            path.push((cur.0 as u16, cur.1 as u16));
+            if cur == d {
+                out.push(path.clone());
+            } else {
+                let sx = (d.0 - cur.0).signum();
+                let sy = (d.1 - cur.1).signum();
+                if sx != 0 {
+                    go((cur.0 + sx, cur.1), d, path, out);
+                }
+                if sy != 0 {
+                    go((cur.0, cur.1 + sy), d, path, out);
+                }
+            }
+            path.pop();
+        }
+        let mut out = Vec::new();
+        let mut path = Vec::new();
+        go(
+            (s.0 as i32, s.1 as i32),
+            (d.0 as i32, d.1 as i32),
+            &mut path,
+            &mut out,
+        );
+        out
+    }
+
+    #[test]
+    fn congestion_matches_brute_force_path_enumeration() {
+        // distinct (s, d) partition pairs on a small patch of the lattice;
+        // expected per-core traffic under uniform random shortest-path
+        // routing is reproduced by literally enumerating every path
+        let mut b = HypergraphBuilder::new(5);
+        b.add_edge(0, vec![1, 2], 1.5); // (0,0) -> (3,2), (0,0) -> (2,3)
+        b.add_edge(3, vec![4], 2.0); //    (1,1) -> (3,3)
+        b.add_edge(2, vec![0], 0.7); //    (2,3) -> (0,0)
+        let gp = b.build();
+        let coords: Vec<(u16, u16)> = vec![(0, 0), (3, 2), (2, 3), (1, 1), (3, 3)];
+        let pl = Placement { coords: coords.clone() };
+        let hw = hw();
+
+        let mut traffic = vec![0.0f64; hw.num_cores()];
+        for e in gp.edge_ids() {
+            let s = gp.source(e);
+            let w = gp.weight(e) as f64;
+            for &d in gp.dsts(e) {
+                if d == s {
+                    continue;
+                }
+                let paths = all_shortest_paths(coords[s as usize], coords[d as usize]);
+                let p_path = w / paths.len() as f64;
+                for path in &paths {
+                    for &(x, y) in path {
+                        traffic[hw.index(x, y)] += p_path;
+                    }
+                }
+            }
+        }
+        let brute_max = traffic.iter().cloned().fold(0.0, f64::max);
+
+        let m = evaluate(&gp, &pl, &hw);
+        assert!(
+            (m.congestion - brute_max).abs() < 1e-9,
+            "tau-based {} vs brute-force {}",
+            m.congestion,
+            brute_max
+        );
+
+        // cross-check the whole per-core field, not just the max
+        let bin = Binomial::for_lattice(hw.width, hw.height);
+        for (idx, &t_brute) in traffic.iter().enumerate() {
+            if t_brute == 0.0 {
+                continue;
+            }
+            let h = hw.coord(idx);
+            let mut t_tau = 0.0;
+            for e in gp.edge_ids() {
+                let s = gp.source(e);
+                let w = gp.weight(e) as f64;
+                for &d in gp.dsts(e) {
+                    if d != s {
+                        t_tau += w * tau(&bin, h, coords[s as usize], coords[d as usize]);
+                    }
+                }
+            }
+            assert!(
+                (t_tau - t_brute).abs() < 1e-9,
+                "core {h:?}: tau {t_tau} vs brute {t_brute}"
+            );
+        }
     }
 }

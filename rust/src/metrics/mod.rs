@@ -9,4 +9,4 @@ pub mod properties;
 pub mod stats;
 pub mod tau;
 
-pub use cost::{evaluate, MappingMetrics};
+pub use cost::{evaluate, evaluate_serial, evaluate_with_threads, MappingMetrics};

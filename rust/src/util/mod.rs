@@ -1,9 +1,11 @@
-//! Utility substrate: the offline registry ships no rand/serde/clap, so the
-//! toolchain carries its own deterministic RNG, JSON codec, CLI parser and
-//! timing helpers. All are fully unit-tested and dependency-free.
+//! Utility substrate: the offline registry ships no rand/serde/clap/rayon,
+//! so the toolchain carries its own deterministic RNG, JSON codec, CLI
+//! parser, timing helpers and scoped-thread parallel engine. All are fully
+//! unit-tested and dependency-free.
 
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod timer;
 

@@ -1,0 +1,177 @@
+//! Deterministic scoped-thread parallelism for the mapping hot paths.
+//!
+//! The offline registry ships no rayon, so this module is the crate's
+//! stand-in: a work-stealing indexed map over `std::thread::scope` plus a
+//! chunked fold with an *ordered* reduction. Two properties matter more
+//! than raw speed here and are load-bearing for the metric engine:
+//!
+//! 1. **Placement determinism** — [`par_map`] writes each job's result
+//!    into its own index slot, so output order never depends on thread
+//!    scheduling.
+//! 2. **Reduction determinism** — [`chunked_fold`] splits `0..n` into
+//!    *fixed-size* chunks (independent of the worker count) and merges the
+//!    per-chunk accumulators in ascending chunk order. The floating-point
+//!    merge tree is therefore identical whether 1 or 64 workers execute
+//!    the chunks, which is what lets `metrics::evaluate` promise
+//!    bit-for-bit `parallel == serial` (see DESIGN.md §6-§7).
+//!
+//! Worker count resolution: explicit argument > `set_max_threads` >
+//! `SNNMAP_THREADS` env var > `available_parallelism()`.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Process-wide override installed by [`set_max_threads`]; 0 = unset.
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin the default worker count for all subsequent parallel calls
+/// (coordinator config and tests). `0` restores auto-detection.
+pub fn set_max_threads(n: usize) {
+    OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Default worker count: override > `SNNMAP_THREADS` > hardware threads.
+pub fn max_threads() -> usize {
+    let o = OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    static DETECTED: OnceLock<usize> = OnceLock::new();
+    *DETECTED.get_or_init(|| {
+        std::env::var("SNNMAP_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Parallel indexed map: evaluates `f(0..n)` on up to `threads` workers
+/// (an atomic cursor hands out jobs) and returns the results in index
+/// order regardless of completion order. `threads <= 1` runs inline.
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.min(n).max(1);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let next = AtomicUsize::new(0);
+    let slots = Mutex::new(&mut out);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i); // compute outside the lock
+                slots.lock().unwrap()[i] = Some(v);
+            });
+        }
+    });
+    out.into_iter()
+        .map(|v| v.expect("par_map worker filled every slot"))
+        .collect()
+}
+
+/// Chunked parallel fold with an ordered reduction.
+///
+/// `0..n` is split into fixed chunks of `chunk` indices — the chunk
+/// structure does NOT depend on `threads` — each folded by `fold`, then
+/// the per-chunk accumulators are merged left-to-right in chunk order.
+/// Returns `None` for `n == 0`.
+pub fn chunked_fold<A, Fold, Merge>(
+    n: usize,
+    chunk: usize,
+    threads: usize,
+    fold: Fold,
+    merge: Merge,
+) -> Option<A>
+where
+    A: Send,
+    Fold: Fn(Range<usize>) -> A + Sync,
+    Merge: FnMut(A, A) -> A,
+{
+    if n == 0 {
+        return None;
+    }
+    let chunk = chunk.max(1);
+    let chunks = crate::util::div_ceil(n, chunk);
+    let parts = par_map(chunks, threads, |c| {
+        let lo = c * chunk;
+        fold(lo..(lo + chunk).min(n))
+    });
+    parts.into_iter().reduce(merge)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_index_order() {
+        for threads in [1, 2, 7] {
+            let out = par_map(100, threads, |i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        assert_eq!(par_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(1, 4, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn chunked_fold_matches_serial_sum() {
+        let xs: Vec<u64> = (0..1000).map(|i| i * 3 + 1).collect();
+        let serial: u64 = xs.iter().sum();
+        for threads in [1, 3, 8] {
+            let total = chunked_fold(
+                xs.len(),
+                64,
+                threads,
+                |r| xs[r].iter().sum::<u64>(),
+                |a, b| a + b,
+            )
+            .unwrap();
+            assert_eq!(total, serial);
+        }
+    }
+
+    #[test]
+    fn chunked_fold_float_merge_tree_is_thread_invariant() {
+        // adversarial magnitudes: a naive reduction in completion order
+        // would give run-dependent rounding; fixed chunks + ordered merge
+        // must be bit-identical across worker counts
+        let xs: Vec<f64> = (0..4096)
+            .map(|i| if i % 3 == 0 { 1e16 } else { 1.0 + i as f64 * 1e-3 })
+            .collect();
+        let fold = |r: std::ops::Range<usize>| xs[r].iter().sum::<f64>();
+        let one = chunked_fold(xs.len(), 128, 1, fold, |a, b| a + b).unwrap();
+        for threads in [2, 5, 16] {
+            let many = chunked_fold(xs.len(), 128, threads, fold, |a, b| a + b).unwrap();
+            assert_eq!(one.to_bits(), many.to_bits());
+        }
+    }
+
+    #[test]
+    fn chunked_fold_empty_is_none() {
+        assert!(chunked_fold(0, 8, 4, |_| 0u32, |a, b| a + b).is_none());
+    }
+
+    #[test]
+    fn ragged_tail_chunk_covered() {
+        // n not divisible by chunk: the tail range must still be folded
+        let hits = chunked_fold(10, 4, 2, |r| r.len(), |a, b| a + b).unwrap();
+        assert_eq!(hits, 10);
+    }
+}
