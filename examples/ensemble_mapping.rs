@@ -6,7 +6,7 @@
 //!
 //!     cargo run --release --example ensemble_mapping
 
-use snnmap::coordinator::{ensemble, PartitionerKind};
+use snnmap::coordinator::ensemble;
 use snnmap::hw::NmhConfig;
 use snnmap::runtime::PjrtRuntime;
 use std::time::Duration;
@@ -26,11 +26,13 @@ fn main() {
     }
 
     let budget = Duration::from_secs(120);
-    let res = ensemble::run(
+    // candidates are registry stage names — any registered placer or
+    // refiner can race, not just the built-in enums
+    let res = ensemble::run_named(
         &net.graph,
         None,
         hw,
-        PartitionerKind::HyperedgeOverlap,
+        "overlap",
         budget,
         11,
         runtime.as_ref(),
@@ -39,11 +41,12 @@ fn main() {
 
     println!("\ncandidates (budget {budget:?}):");
     for (pl, rf, elp, dt) in &res.scoreboard {
-        let marker = if (*pl, *rf) == res.best_combo { "  << winner" } else { "" };
+        let winner = (pl, rf) == (&res.best_combo.0, &res.best_combo.1);
+        let marker = if winner { "  << winner" } else { "" };
         println!(
             "  {:<10} + {:<6}  ELP {:>12.4e}  in {:>6.2}s{marker}",
-            pl.name(),
-            rf.name(),
+            pl,
+            rf,
             elp,
             dt.as_secs_f64()
         );

@@ -4,8 +4,10 @@
 //!
 //! Generates a small LeNet-derived SNN, maps it with the paper's headline
 //! pipeline (hyperedge-overlap partitioning → spectral placement →
-//! force-directed refinement), and prints the Table I metrics. Uses the
-//! AOT JAX/Pallas artifacts via PJRT when `artifacts/` exists.
+//! force-directed refinement), and prints the Table I metrics — first
+//! through the enum-builder shims, then re-running the identical mapping
+//! from a serializable PipelineSpec. Uses the AOT JAX/Pallas artifacts
+//! via PJRT when `artifacts/` exists.
 
 use snnmap::prelude::*;
 use snnmap::runtime::PjrtRuntime;
@@ -25,12 +27,15 @@ fn main() {
     //    the example produces a multi-core mapping.
     let hw = NmhConfig::small().scaled(0.05);
 
-    // 3. The pipeline. Engine: PJRT artifacts when built, else native.
+    // 3. The pipeline, via the enum-builder shims (each shim resolves a
+    //    built-in stage through the StageRegistry). Engine: PJRT
+    //    artifacts when built, else native.
     let runtime = PjrtRuntime::discover();
     let result = MapperPipeline::new(hw)
         .partitioner(PartitionerKind::HyperedgeOverlap)
         .placer(PlacerKind::Spectral)
         .refiner(RefinerKind::ForceDirected)
+        .seed(42)
         .run_with(&net.graph, net.layer_ranges.as_deref(), runtime.as_ref())
         .expect("mapping failed");
 
@@ -40,7 +45,28 @@ fn main() {
     );
     print!("{}", result.report());
 
-    // 4. The mapping artifacts themselves are plain data:
+    // 4. The same run as plain data: a PipelineSpec is a JSON document
+    //    (stage names + params + hw + seed) that reproduces the mapping
+    //    bit for bit — archive it, diff it, ship it to a grid runner.
+    let spec = PipelineSpec::from_json_str(
+        r#"{
+            "partitioner": "overlap",
+            "placer": "spectral",
+            "refiner": "force",
+            "hw": {"preset": "small", "scale": 0.05},
+            "seed": 42
+        }"#,
+    )
+    .expect("spec parses");
+    let replay = MapperPipeline::from_spec(&spec)
+        .expect("all stage names registered")
+        .run_with(&net.graph, net.layer_ranges.as_deref(), runtime.as_ref())
+        .expect("mapping failed");
+    assert_eq!(result.rho.assign, replay.rho.assign, "spec replay is bit-for-bit");
+    println!("spec replay: identical partitioning ({} partitions)", replay.rho.num_parts);
+    println!("spec JSON:\n{}", spec.to_json().to_pretty());
+
+    // 5. The mapping artifacts themselves are plain data:
     let p0_core = result.placement.coords[0];
     println!(
         "partition of neuron 0: {} -> core ({}, {})",

@@ -13,7 +13,8 @@ use snnmap::coordinator::experiment::hw_for;
 use snnmap::hypergraph::quotient::push_forward;
 use snnmap::mapping::{self, connectivity, overlap::OverlapParams, pruning};
 use snnmap::metrics::multicast;
-use snnmap::multichip::{self, placement::LocalPlacer, MultiChipConfig};
+use snnmap::multichip::{self, MultiChipConfig};
+use snnmap::stage::StageCtx;
 use snnmap::placement::{eigen, force, hilbert, spectral};
 use snnmap::util::timer::time_once;
 
@@ -129,7 +130,14 @@ fn main() {
         off_chip_latency_factor: 10.0,
     };
     if gp.num_nodes() <= mc.num_cores() {
-        let (aware, _) = multichip::placement::place(&gp, &mc, LocalPlacer::Spectral, true).unwrap();
+        let (aware, _) = multichip::placement::place(
+            &gp,
+            &mc,
+            &spectral::SpectralPlacer::new(),
+            Some(&force::ForceRefiner::new()),
+            &StageCtx::new(42),
+        )
+        .unwrap();
         let oblivious = hilbert::place(&gp, &mc.global_lattice());
         let ma = multichip::metrics::evaluate(&gp, &aware, &mc);
         let mo = multichip::metrics::evaluate(&gp, &oblivious, &mc);

@@ -3,9 +3,13 @@
 //! the best final mapping — is practicable").
 //!
 //! Given one partitioning, try several placement pipelines inside a wall
-//! clock budget and keep the mapping with the lowest ELP.
+//! clock budget and keep the mapping with the lowest ELP. Candidates are
+//! registry stage names, so downstream placers/refiners can race too via
+//! [`run_candidates`].
 
-use super::pipeline::{MapperPipeline, MappingResult, PartitionerKind, PlacerKind, RefinerKind};
+use super::pipeline::{MapperPipeline, MappingResult, PartitionerKind};
+use super::registry::StageRegistry;
+use super::spec::{PipelineSpec, StageSpec};
 use crate::hw::NmhConfig;
 use crate::hypergraph::Hypergraph;
 use crate::mapping::MapError;
@@ -15,24 +19,23 @@ use std::time::{Duration, Instant};
 /// Ensemble outcome: the winner plus the per-candidate scoreboard.
 pub struct EnsembleResult {
     pub best: MappingResult,
-    pub best_combo: (PlacerKind, RefinerKind),
+    /// (placer, refiner) registry names of the winner.
+    pub best_combo: (String, String),
     /// (placer, refiner, elp, wall time) per attempted candidate.
-    pub scoreboard: Vec<(PlacerKind, RefinerKind, f64, Duration)>,
+    pub scoreboard: Vec<(String, String, f64, Duration)>,
     pub budget_exhausted: bool,
 }
 
 /// Candidate placement pipelines in increasing expected cost.
-pub const CANDIDATES: [(PlacerKind, RefinerKind); 5] = [
-    (PlacerKind::Hilbert, RefinerKind::None),
-    (PlacerKind::MinDistance, RefinerKind::None),
-    (PlacerKind::Spectral, RefinerKind::None),
-    (PlacerKind::Hilbert, RefinerKind::ForceDirected),
-    (PlacerKind::Spectral, RefinerKind::ForceDirected),
+pub const CANDIDATES: [(&str, &str); 5] = [
+    ("hilbert", "none"),
+    ("mindist", "none"),
+    ("spectral", "none"),
+    ("hilbert", "force"),
+    ("spectral", "force"),
 ];
 
-/// Run the ensemble: partition once with `partitioner`, then race the
-/// placement candidates until `budget` is spent (the current candidate is
-/// always allowed to finish).
+/// Enum-shim entry point (see [`run_named`]).
 pub fn run(
     g: &Hypergraph,
     layer_ranges: Option<&[(u32, u32)]>,
@@ -42,31 +45,71 @@ pub fn run(
     seed: u64,
     runtime: Option<&PjrtRuntime>,
 ) -> Result<EnsembleResult, MapError> {
+    run_named(g, layer_ranges, hw, partitioner.name(), budget, seed, runtime)
+}
+
+/// Run the ensemble: partition once with the named partitioner, then
+/// race the default [`CANDIDATES`] until `budget` is spent (the current
+/// candidate is always allowed to finish).
+pub fn run_named(
+    g: &Hypergraph,
+    layer_ranges: Option<&[(u32, u32)]>,
+    hw: NmhConfig,
+    partitioner: &str,
+    budget: Duration,
+    seed: u64,
+    runtime: Option<&PjrtRuntime>,
+) -> Result<EnsembleResult, MapError> {
+    let candidates: Vec<(StageSpec, StageSpec)> = CANDIDATES
+        .iter()
+        .map(|&(pl, rf)| (StageSpec::new(pl), StageSpec::new(rf)))
+        .collect();
+    run_candidates(
+        g,
+        layer_ranges,
+        StageRegistry::global(),
+        PipelineSpec::new(hw).partitioner(StageSpec::new(partitioner)).seed(seed),
+        &candidates,
+        budget,
+        runtime,
+    )
+}
+
+/// Fully general ensemble: `base` fixes hw/partitioner/seed/threads and
+/// each candidate overrides the (placer, refiner) pair; all stages
+/// resolve through `registry`.
+pub fn run_candidates(
+    g: &Hypergraph,
+    layer_ranges: Option<&[(u32, u32)]>,
+    registry: &StageRegistry,
+    base: PipelineSpec,
+    candidates: &[(StageSpec, StageSpec)],
+    budget: Duration,
+    runtime: Option<&PjrtRuntime>,
+) -> Result<EnsembleResult, MapError> {
+    assert!(!candidates.is_empty(), "ensemble needs at least one candidate");
     let start = Instant::now();
-    let mut best: Option<(MappingResult, (PlacerKind, RefinerKind))> = None;
+    let mut best: Option<(MappingResult, (String, String))> = None;
     let mut scoreboard = Vec::new();
     let mut budget_exhausted = false;
 
-    for &(placer, refiner) in CANDIDATES.iter() {
+    for (placer, refiner) in candidates.iter() {
         if start.elapsed() > budget && best.is_some() {
             budget_exhausted = true;
             break;
         }
         let t0 = Instant::now();
-        let res = MapperPipeline::new(hw)
-            .partitioner(partitioner)
-            .placer(placer)
-            .refiner(refiner)
-            .seed(seed)
+        let spec = base.clone().placer(placer.clone()).refiner(refiner.clone());
+        let res = MapperPipeline::from_spec_with(registry, &spec)?
             .run_with(g, layer_ranges, runtime)?;
         let dt = t0.elapsed();
-        scoreboard.push((placer, refiner, res.metrics.elp, dt));
+        scoreboard.push((placer.name.clone(), refiner.name.clone(), res.metrics.elp, dt));
         let better = best
             .as_ref()
             .map(|(b, _)| res.metrics.elp < b.metrics.elp)
             .unwrap_or(true);
         if better {
-            best = Some((res, (placer, refiner)));
+            best = Some((res, (placer.name.clone(), refiner.name.clone())));
         }
     }
     let (best, best_combo) = best.expect("at least one candidate always runs");
@@ -101,7 +144,7 @@ mod tests {
         let min_elp = res
             .scoreboard
             .iter()
-            .map(|&(_, _, elp, _)| elp)
+            .map(|(_, _, elp, _)| *elp)
             .fold(f64::INFINITY, f64::min);
         assert!((res.best.metrics.elp - min_elp).abs() < 1e-9);
     }
@@ -110,11 +153,11 @@ mod tests {
     fn tiny_budget_still_yields_mapping() {
         let net = snn::by_name("lenet", 0.1, 5).unwrap();
         let hw = NmhConfig::small().scaled(0.05);
-        let res = run(
+        let res = run_named(
             &net.graph,
             net.layer_ranges.as_deref(),
             hw,
-            PartitionerKind::SequentialUnordered,
+            "seq-unordered",
             Duration::ZERO,
             7,
             None,
@@ -122,5 +165,14 @@ mod tests {
         .unwrap();
         assert!(res.scoreboard.len() >= 1);
         assert!(res.budget_exhausted || res.scoreboard.len() == CANDIDATES.len());
+    }
+
+    #[test]
+    fn unknown_partitioner_name_errors() {
+        let net = snn::by_name("lenet", 0.1, 5).unwrap();
+        let hw = NmhConfig::small().scaled(0.05);
+        let err = run_named(&net.graph, None, hw, "warp-drive", Duration::ZERO, 7, None)
+            .unwrap_err();
+        assert!(matches!(err, MapError::BadSpec(_)), "{err}");
     }
 }

@@ -1,8 +1,15 @@
 //! Experiment grid runner: reproduces the paper's evaluation sweeps
 //! (Figs. 9-11) over the network suite × algorithm combinations, with
 //! optional thread-parallel execution across networks.
+//!
+//! Grid cells are [`StageSpec`] references resolved through the stage
+//! registry — the grid is `PipelineSpec`-driven and accepts any
+//! registered algorithm, not just the built-in enums.
 
-use super::pipeline::{MapperPipeline, PartitionerKind, PlacerKind, RefinerKind};
+use super::pipeline::{MapperPipeline, PartitionerKind};
+use super::registry::StageRegistry;
+use super::report::csv_escape;
+use super::spec::{PipelineSpec, StageSpec};
 use crate::hw::NmhConfig;
 use crate::snn::{self, Network};
 use std::time::Duration;
@@ -13,9 +20,9 @@ pub struct ExperimentRow {
     pub network: String,
     pub nodes: usize,
     pub connections: usize,
-    pub partitioner: &'static str,
-    pub placer: &'static str,
-    pub refiner: &'static str,
+    pub partitioner: String,
+    pub placer: String,
+    pub refiner: String,
     pub partitions: usize,
     pub connectivity: f64,
     pub energy: f64,
@@ -32,44 +39,85 @@ pub struct ExperimentRow {
 }
 
 impl ExperimentRow {
-    pub const CSV_HEADER: &'static str = "network,nodes,connections,partitioner,placer,refiner,\
-partitions,connectivity,energy,latency,congestion,elp,sr_arith,sr_geo,cl_arith,cl_geo,\
-partition_time_s,placement_time_s,error";
+    /// Column names — the single source of truth for header/row arity
+    /// (the field array below is the same fixed size by construction).
+    pub const COLUMNS: [&'static str; 19] = [
+        "network",
+        "nodes",
+        "connections",
+        "partitioner",
+        "placer",
+        "refiner",
+        "partitions",
+        "connectivity",
+        "energy",
+        "latency",
+        "congestion",
+        "elp",
+        "sr_arith",
+        "sr_geo",
+        "cl_arith",
+        "cl_geo",
+        "partition_time_s",
+        "placement_time_s",
+        "error",
+    ];
 
+    /// The CSV header line, derived from [`Self::COLUMNS`].
+    pub fn csv_header() -> String {
+        Self::COLUMNS.join(",")
+    }
+
+    /// Row fields in [`Self::COLUMNS`] order, unescaped.
+    pub fn csv_fields(&self) -> [String; 19] {
+        [
+            self.network.clone(),
+            self.nodes.to_string(),
+            self.connections.to_string(),
+            self.partitioner.clone(),
+            self.placer.clone(),
+            self.refiner.clone(),
+            self.partitions.to_string(),
+            format!("{:.6e}", self.connectivity),
+            format!("{:.6e}", self.energy),
+            format!("{:.6e}", self.latency),
+            format!("{:.6e}", self.congestion),
+            format!("{:.6e}", self.elp),
+            format!("{:.4}", self.sr_arith),
+            format!("{:.4}", self.sr_geo),
+            format!("{:.4}", self.cl_arith),
+            format!("{:.4}", self.cl_geo),
+            format!("{:.4}", self.partition_time.as_secs_f64()),
+            format!("{:.4}", self.placement_time.as_secs_f64()),
+            self.error.clone().unwrap_or_default(),
+        ]
+    }
+
+    /// Emit the row through the quote-aware writer: commas, quotes and
+    /// newlines in free-text fields (network names, error messages) are
+    /// RFC-4180-escaped instead of corrupting the column structure.
     pub fn to_csv(&self) -> String {
-        format!(
-            "{},{},{},{},{},{},{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.4},{:.4},{:.4},{:.4},{:.4},{:.4},{}",
-            self.network,
-            self.nodes,
-            self.connections,
-            self.partitioner,
-            self.placer,
-            self.refiner,
-            self.partitions,
-            self.connectivity,
-            self.energy,
-            self.latency,
-            self.congestion,
-            self.elp,
-            self.sr_arith,
-            self.sr_geo,
-            self.cl_arith,
-            self.cl_geo,
-            self.partition_time.as_secs_f64(),
-            self.placement_time.as_secs_f64(),
-            self.error.as_deref().unwrap_or("")
-        )
+        let fields = self.csv_fields();
+        let mut out = String::new();
+        for (i, f) in fields.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&csv_escape(f));
+        }
+        out
     }
 }
 
-/// Grid specification.
+/// Grid specification. Stage entries are registry names + params; the
+/// compact [`GridSpec::from_json`] form accepts bare strings.
 #[derive(Clone)]
 pub struct GridSpec {
     pub networks: Vec<String>,
     pub scale: f64,
     pub seed: u64,
-    pub partitioners: Vec<PartitionerKind>,
-    pub combos: Vec<(PlacerKind, RefinerKind)>,
+    pub partitioners: Vec<StageSpec>,
+    pub combos: Vec<(StageSpec, StageSpec)>,
     /// Threads across networks (1 = sequential; PJRT engine forces 1).
     pub threads: usize,
     /// Per-network hardware override; default = auto by connection count,
@@ -86,8 +134,8 @@ impl GridSpec {
             networks: default_suite(),
             scale,
             seed: 42,
-            partitioners: PartitionerKind::ALL.to_vec(),
-            combos: vec![(PlacerKind::Hilbert, RefinerKind::None)],
+            partitioners: PartitionerKind::ALL.iter().map(|k| StageSpec::new(k.name())).collect(),
+            combos: vec![(StageSpec::new("hilbert"), StageSpec::new("none"))],
             threads: 1,
             hw: None,
         }
@@ -100,7 +148,7 @@ impl GridSpec {
     ///   "networks": ["lenet", "16k_rand"],
     ///   "scale": 0.2,
     ///   "seed": 7,
-    ///   "partitioners": ["overlap", "hierarchical"],
+    ///   "partitioners": ["overlap", {"name": "streaming", "params": {"window": 64}}],
     ///   "combos": [["hilbert", "force"], ["spectral", "force"]],
     ///   "threads": 2,
     ///   "hw": {"preset": "small", "scale": 0.1}
@@ -108,7 +156,24 @@ impl GridSpec {
     /// ```
     ///
     /// Missing fields fall back to the fig9 defaults at the given scale.
+    /// Stage names and params are validated against the built-in
+    /// registry up front so a bad config fails before any run starts.
     pub fn from_json(doc: &crate::util::json::Json) -> Result<GridSpec, String> {
+        let registry = StageRegistry::global();
+        if let Some(obj) = doc.as_obj() {
+            const KNOWN: [&str; 7] =
+                ["networks", "scale", "seed", "partitioners", "combos", "threads", "hw"];
+            for key in obj.keys() {
+                if !KNOWN.contains(&key.as_str()) {
+                    return Err(format!(
+                        "unknown config field '{key}' (accepted: {})",
+                        KNOWN.join(", ")
+                    ));
+                }
+            }
+        } else {
+            return Err("grid config must be a JSON object".to_string());
+        }
         let scale = doc.get("scale").as_f64().unwrap_or(0.25);
         let mut spec = GridSpec::fig9(scale);
         if let Some(nets) = doc.get("networks").as_arr() {
@@ -124,8 +189,9 @@ impl GridSpec {
             spec.partitioners = pks
                 .iter()
                 .map(|p| {
-                    let name = p.as_str().ok_or("partitioner must be a string")?;
-                    PartitionerKind::parse(name).ok_or_else(|| format!("unknown partitioner '{name}'"))
+                    let s = StageSpec::from_json(p)?;
+                    registry.partitioner(&s.name, &s.params).map_err(|e| e.to_string())?;
+                    Ok(s)
                 })
                 .collect::<Result<_, String>>()?;
         }
@@ -137,14 +203,10 @@ impl GridSpec {
                     if pair.len() != 2 {
                         return Err("combo must be [placer, refiner]".to_string());
                     }
-                    let pl = pair[0]
-                        .as_str()
-                        .and_then(PlacerKind::parse)
-                        .ok_or_else(|| format!("bad placer {:?}", pair[0]))?;
-                    let rf = pair[1]
-                        .as_str()
-                        .and_then(RefinerKind::parse)
-                        .ok_or_else(|| format!("bad refiner {:?}", pair[1]))?;
+                    let pl = StageSpec::from_json(&pair[0])?;
+                    registry.placer(&pl.name, &pl.params).map_err(|e| e.to_string())?;
+                    let rf = StageSpec::from_json(&pair[1])?;
+                    registry.refiner(&rf.name, &rf.params).map_err(|e| e.to_string())?;
                     Ok((pl, rf))
                 })
                 .collect::<Result<_, String>>()?;
@@ -154,13 +216,7 @@ impl GridSpec {
         }
         let hw_doc = doc.get("hw");
         if hw_doc.as_obj().is_some() {
-            let preset = hw_doc.get("preset").as_str().unwrap_or("small");
-            let mut hw = NmhConfig::preset(preset)
-                .ok_or_else(|| format!("unknown hw preset '{preset}'"))?;
-            if let Some(f) = hw_doc.get("scale").as_f64() {
-                hw = hw.scaled(f);
-            }
-            spec.hw = Some(hw);
+            spec.hw = Some(NmhConfig::from_json(hw_doc)?);
         }
         if spec.networks.is_empty() {
             return Err("config selects no networks".into());
@@ -175,16 +231,16 @@ impl GridSpec {
             scale,
             seed: 42,
             partitioners: vec![
-                PartitionerKind::Hierarchical,
-                PartitionerKind::HyperedgeOverlap,
-                PartitionerKind::Sequential,
+                StageSpec::new("hierarchical"),
+                StageSpec::new("overlap"),
+                StageSpec::new("sequential"),
             ],
             combos: vec![
-                (PlacerKind::Hilbert, RefinerKind::None),
-                (PlacerKind::Spectral, RefinerKind::None),
-                (PlacerKind::Hilbert, RefinerKind::ForceDirected),
-                (PlacerKind::Spectral, RefinerKind::ForceDirected),
-                (PlacerKind::MinDistance, RefinerKind::None),
+                (StageSpec::new("hilbert"), StageSpec::new("none")),
+                (StageSpec::new("spectral"), StageSpec::new("none")),
+                (StageSpec::new("hilbert"), StageSpec::new("force")),
+                (StageSpec::new("spectral"), StageSpec::new("force")),
+                (StageSpec::new("mindist"), StageSpec::new("none")),
             ],
             threads: 1,
             hw: None,
@@ -230,23 +286,29 @@ fn run_network(spec: &GridSpec, name: &str) -> Vec<ExperimentRow> {
     // (results are thread-count-invariant either way, DESIGN.md §6).
     let grid_workers = spec.threads.clamp(1, spec.networks.len().max(1));
     let inner_threads = (crate::util::par::max_threads() / grid_workers).max(1);
+    let registry = StageRegistry::global();
     let mut rows = Vec::new();
-    for &pk in &spec.partitioners {
-        for &(pl, rf) in &spec.combos {
-            let pipeline = MapperPipeline::new(hw)
-                .partitioner(pk)
-                .placer(pl)
-                .refiner(rf)
-                .threads(inner_threads)
-                .seed(spec.seed);
-            let row = match pipeline.run(&net.graph, net.layer_ranges.as_deref()) {
+    for pk in &spec.partitioners {
+        for (pl, rf) in &spec.combos {
+            // each cell is one PipelineSpec — the single source of truth
+            let cell = PipelineSpec {
+                hw,
+                partitioner: pk.clone(),
+                placer: pl.clone(),
+                refiner: rf.clone(),
+                seed: spec.seed,
+                threads: inner_threads,
+            };
+            let outcome = MapperPipeline::from_spec_with(registry, &cell)
+                .and_then(|p| p.run(&net.graph, net.layer_ranges.as_deref()));
+            let row = match outcome {
                 Ok(res) => ExperimentRow {
                     network: net.name.clone(),
                     nodes: net.graph.num_nodes(),
                     connections: net.graph.num_connections(),
-                    partitioner: pk.name(),
-                    placer: pl.name(),
-                    refiner: rf.name(),
+                    partitioner: pk.name.clone(),
+                    placer: pl.name.clone(),
+                    refiner: rf.name.clone(),
                     partitions: res.rho.num_parts,
                     connectivity: res.metrics.connectivity,
                     energy: res.metrics.energy,
@@ -265,9 +327,9 @@ fn run_network(spec: &GridSpec, name: &str) -> Vec<ExperimentRow> {
                     network: net.name.clone(),
                     nodes: net.graph.num_nodes(),
                     connections: net.graph.num_connections(),
-                    partitioner: pk.name(),
-                    placer: pl.name(),
-                    refiner: rf.name(),
+                    partitioner: pk.name.clone(),
+                    placer: pl.name.clone(),
+                    refiner: rf.name.clone(),
                     partitions: 0,
                     connectivity: f64::NAN,
                     energy: f64::NAN,
@@ -313,7 +375,7 @@ mod tests {
         assert_eq!(spec.seed, 9);
         assert_eq!(
             spec.partitioners,
-            vec![PartitionerKind::HyperedgeOverlap, PartitionerKind::Streaming]
+            vec![StageSpec::new("overlap"), StageSpec::new("streaming")]
         );
         assert_eq!(spec.combos.len(), 2);
         assert_eq!(spec.threads, 2);
@@ -325,12 +387,32 @@ mod tests {
     }
 
     #[test]
+    fn json_config_accepts_stage_params() {
+        let doc = Json::parse(
+            r#"{
+              "networks": ["lenet"],
+              "scale": 0.1,
+              "partitioners": [{"name": "streaming", "params": {"window": 16}}],
+              "hw": {"preset": "small", "scale": 0.05}
+            }"#,
+        )
+        .unwrap();
+        let spec = GridSpec::from_json(&doc).unwrap();
+        assert_eq!(spec.partitioners.len(), 1);
+        assert_eq!(spec.partitioners[0].name, "streaming");
+        assert_eq!(spec.partitioners[0].params.get_usize("window").unwrap(), Some(16));
+    }
+
+    #[test]
     fn json_config_rejects_bad_fields() {
         for bad in [
             r#"{"networks": [], "scale": 0.1}"#,
             r#"{"partitioners": ["nope"]}"#,
+            r#"{"partitioners": [{"name": "streaming", "params": {"window": "big"}}]}"#,
             r#"{"combos": [["hilbert"]]}"#,
+            r#"{"combos": [["hilbert", "nope"]]}"#,
             r#"{"hw": {"preset": "huge"}}"#,
+            r#"{"partitoners": ["overlap"]}"#,
         ] {
             let doc = Json::parse(bad).unwrap();
             assert!(GridSpec::from_json(&doc).is_err(), "{bad}");
@@ -350,8 +432,8 @@ mod tests {
             networks: vec!["lenet".into()],
             scale: 0.1,
             seed: 3,
-            partitioners: vec![PartitionerKind::Sequential, PartitionerKind::HyperedgeOverlap],
-            combos: vec![(PlacerKind::Hilbert, RefinerKind::None)],
+            partitioners: vec![StageSpec::new("sequential"), StageSpec::new("overlap")],
+            combos: vec![(StageSpec::new("hilbert"), StageSpec::new("none"))],
             threads: 1,
             hw: Some(NmhConfig::small().scaled(0.05)),
         }
@@ -371,11 +453,35 @@ mod tests {
     #[test]
     fn csv_rows_parse_back() {
         let rows = run_grid(&tiny_spec());
-        let header_cols = ExperimentRow::CSV_HEADER.split(',').count();
+        let header_cols = ExperimentRow::csv_header().split(',').count();
+        assert_eq!(header_cols, ExperimentRow::COLUMNS.len());
         for r in &rows {
-            // trailing empty error field: split counts still match
+            // clean fields: no quoting engaged, split counts still match
             assert_eq!(r.to_csv().split(',').count(), header_cols, "{}", r.to_csv());
         }
+    }
+
+    #[test]
+    fn csv_quotes_hostile_fields() {
+        use crate::coordinator::report::csv_split;
+        let mut rows = run_grid(&tiny_spec());
+        let row = &mut rows[0];
+        row.network = "evil,net \"v2\"".to_string();
+        row.error = Some("line1\nline2, still the error".to_string());
+        let line = row.to_csv();
+        let fields = csv_split(&line);
+        assert_eq!(fields.len(), ExperimentRow::COLUMNS.len());
+        assert_eq!(fields[0], row.network);
+        assert_eq!(fields[18], row.error.clone().unwrap());
+    }
+
+    #[test]
+    fn unknown_stage_in_grid_yields_error_row() {
+        let mut spec = tiny_spec();
+        spec.partitioners = vec![StageSpec::new("no-such-stage")];
+        let rows = run_grid(&spec);
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].error.as_deref().unwrap().contains("no-such-stage"));
     }
 
     #[test]

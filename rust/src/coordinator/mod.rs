@@ -1,9 +1,14 @@
-//! L3 coordinator: the user-facing pipeline, the experiment grid runner,
-//! the time-budgeted ensemble mode, and report emitters.
+//! L3 coordinator: the user-facing pipeline, the stage registry and
+//! serializable pipeline specs, the experiment grid runner, the
+//! time-budgeted ensemble mode, and report emitters.
 
 pub mod ensemble;
 pub mod experiment;
 pub mod pipeline;
+pub mod registry;
 pub mod report;
+pub mod spec;
 
 pub use pipeline::{MapperPipeline, MappingResult, PartitionerKind, PlacerKind, RefinerKind};
+pub use registry::StageRegistry;
+pub use spec::{PipelineSpec, StageSpec};

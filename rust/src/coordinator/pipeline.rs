@@ -1,19 +1,30 @@
 //! The mapping pipeline: partition → push-forward → place → refine →
 //! evaluate, with pluggable algorithms (Table IV) and numeric engines.
+//!
+//! Stages are trait objects resolved through
+//! [`super::registry::StageRegistry`]; a pipeline is built either from a
+//! serializable [`super::spec::PipelineSpec`] (`from_spec`) or through
+//! the historical `*Kind` enum builders, which remain as thin shims over
+//! the registry.
 
+use super::registry::StageRegistry;
+use super::spec::PipelineSpec;
 use crate::hw::NmhConfig;
 use crate::hypergraph::quotient::{push_forward, Partitioning};
 use crate::hypergraph::Hypergraph;
-use crate::mapping::{self, MapError};
+use crate::mapping::MapError;
 use crate::metrics::cost::evaluate_with_threads;
 use crate::metrics::properties::{self, Mean};
 use crate::metrics::MappingMetrics;
-use crate::placement::force::{self, ForceParams, RefineStats};
-use crate::placement::{hilbert, mindist, spectral, Placement};
+use crate::placement::force::{ForceParams, ForceRefiner, RefineStats};
+use crate::placement::Placement;
 use crate::runtime::PjrtRuntime;
+use crate::stage::{Partitioner, Placer, Refiner, StageCtx, StageParams};
 use std::time::Duration;
 
-/// Partitioning algorithms (paper Table IV + baselines).
+/// Partitioning algorithms (paper Table IV + baselines). Kept as a thin
+/// shim over [`StageRegistry`] so enum-based callers stay source-stable;
+/// new algorithms register by name and need no variant here.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PartitionerKind {
     /// §IV-A1 multilevel coarsening + FM refinement.
@@ -63,9 +74,17 @@ impl PartitionerKind {
         PartitionerKind::EdgeMap,
         PartitionerKind::Streaming,
     ];
+
+    /// Instantiate the stage through the built-in registry.
+    pub fn to_stage(&self) -> Box<dyn Partitioner> {
+        StageRegistry::global()
+            .partitioner(self.name(), &StageParams::empty())
+            .expect("builtin partitioner")
+    }
 }
 
-/// Initial/direct placement algorithms (Table IV).
+/// Initial/direct placement algorithms (Table IV); shim over the
+/// registry like [`PartitionerKind`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlacerKind {
     /// §IV-B1 Hilbert space-filling curve.
@@ -96,9 +115,16 @@ impl PlacerKind {
 
     pub const ALL: [PlacerKind; 3] =
         [PlacerKind::Hilbert, PlacerKind::Spectral, PlacerKind::MinDistance];
+
+    /// Instantiate the stage through the built-in registry.
+    pub fn to_stage(&self) -> Box<dyn Placer> {
+        StageRegistry::global()
+            .placer(self.name(), &StageParams::empty())
+            .expect("builtin placer")
+    }
 }
 
-/// Placement refinement (Table IV).
+/// Placement refinement (Table IV); shim over the registry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RefinerKind {
     None,
@@ -120,6 +146,13 @@ impl RefinerKind {
             "force" | "force-directed" => RefinerKind::ForceDirected,
             _ => return None,
         })
+    }
+
+    /// Instantiate the stage through the built-in registry.
+    pub fn to_stage(&self) -> Box<dyn Refiner> {
+        StageRegistry::global()
+            .refiner(self.name(), &StageParams::empty())
+            .expect("builtin refiner")
     }
 }
 
@@ -174,14 +207,15 @@ impl MappingResult {
     }
 }
 
-/// Configurable mapping pipeline (builder-style).
+/// Configurable mapping pipeline. Stages are boxed trait objects; build
+/// one from a [`PipelineSpec`] (`from_spec`), from the enum shims
+/// (`partitioner`/`placer`/`refiner`), or inject any custom stage with
+/// the `with_*` setters.
 pub struct MapperPipeline {
     pub hw: NmhConfig,
-    pub partitioner: PartitionerKind,
-    pub placer: PlacerKind,
-    pub refiner: RefinerKind,
-    pub force_params: ForceParams,
-    pub hier_params: mapping::hierarchical::HierParams,
+    partitioner: Box<dyn Partitioner>,
+    placer: Box<dyn Placer>,
+    refiner: Box<dyn Refiner>,
     pub seed: u64,
     /// Worker-pool width shared by the parallel stages (metric engine);
     /// defaults to the process-wide [`crate::util::par`] pool size.
@@ -192,14 +226,31 @@ impl MapperPipeline {
     pub fn new(hw: NmhConfig) -> Self {
         MapperPipeline {
             hw,
-            partitioner: PartitionerKind::HyperedgeOverlap,
-            placer: PlacerKind::Spectral,
-            refiner: RefinerKind::ForceDirected,
-            force_params: ForceParams::default(),
-            hier_params: mapping::hierarchical::HierParams::default(),
+            partitioner: PartitionerKind::HyperedgeOverlap.to_stage(),
+            placer: PlacerKind::Spectral.to_stage(),
+            refiner: RefinerKind::ForceDirected.to_stage(),
             seed: 42,
             threads: crate::util::par::max_threads(),
         }
+    }
+
+    /// Build a pipeline from a serializable spec via the built-in
+    /// registry.
+    pub fn from_spec(spec: &PipelineSpec) -> Result<Self, MapError> {
+        Self::from_spec_with(StageRegistry::global(), spec)
+    }
+
+    /// Build a pipeline from a spec via a caller-supplied registry
+    /// (downstream algorithms included).
+    pub fn from_spec_with(registry: &StageRegistry, spec: &PipelineSpec) -> Result<Self, MapError> {
+        Ok(MapperPipeline {
+            hw: spec.hw,
+            partitioner: registry.partitioner(&spec.partitioner.name, &spec.partitioner.params)?,
+            placer: registry.placer(&spec.placer.name, &spec.placer.params)?,
+            refiner: registry.refiner(&spec.refiner.name, &spec.refiner.params)?,
+            seed: spec.seed,
+            threads: spec.threads.max(1),
+        })
     }
 
     /// Cap the worker-pool width used by the parallel pipeline stages
@@ -209,30 +260,63 @@ impl MapperPipeline {
         self
     }
 
+    /// Enum shim: select a built-in partitioner.
     pub fn partitioner(mut self, k: PartitionerKind) -> Self {
-        self.partitioner = k;
+        self.partitioner = k.to_stage();
         self
     }
 
+    /// Enum shim: select a built-in placer.
     pub fn placer(mut self, k: PlacerKind) -> Self {
-        self.placer = k;
+        self.placer = k.to_stage();
         self
     }
 
+    /// Enum shim: select a built-in refiner.
     pub fn refiner(mut self, k: RefinerKind) -> Self {
-        self.refiner = k;
+        self.refiner = k.to_stage();
         self
     }
 
+    /// Inject a custom partitioning stage.
+    pub fn with_partitioner(mut self, p: Box<dyn Partitioner>) -> Self {
+        self.partitioner = p;
+        self
+    }
+
+    /// Inject a custom placement stage.
+    pub fn with_placer(mut self, p: Box<dyn Placer>) -> Self {
+        self.placer = p;
+        self
+    }
+
+    /// Inject a custom refinement stage.
+    pub fn with_refiner(mut self, r: Box<dyn Refiner>) -> Self {
+        self.refiner = r;
+        self
+    }
+
+    /// The pipeline seed, threaded to every stage through
+    /// [`StageCtx`] (`--seed` is honored uniformly).
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
-        self.hier_params.seed = s;
         self
     }
 
+    /// Shim: switch to a force-directed refiner with explicit
+    /// parameters (the typed form of refiner `params` in a spec).
+    ///
+    /// This *replaces* the refiner stage, so it supersedes any earlier
+    /// `refiner(..)` call — and a later `refiner(..)` call discards
+    /// these parameters again. Call it last when combining both.
     pub fn force_params(mut self, p: ForceParams) -> Self {
-        self.force_params = p;
+        self.refiner = Box::new(ForceRefiner { params: p });
         self
+    }
+
+    /// Stage names as (partitioner, placer, refiner).
+    pub fn stage_names(&self) -> (&str, &str, &str) {
+        (self.partitioner.name(), self.placer.name(), self.refiner.name())
     }
 
     /// Run with the native numeric engine.
@@ -252,51 +336,25 @@ impl MapperPipeline {
         layer_ranges: Option<&[(u32, u32)]>,
         runtime: Option<&PjrtRuntime>,
     ) -> Result<MappingResult, MapError> {
+        let ctx = StageCtx { seed: self.seed, threads: self.threads, layer_ranges, runtime };
+
         // ---- partition ----
         let t0 = std::time::Instant::now();
-        let rho = self.partition(g, layer_ranges)?;
+        let rho = self.partitioner.partition(g, &self.hw, &ctx)?;
         let partition_time = t0.elapsed();
-        mapping::validate(g, &rho, &self.hw)?;
+        crate::mapping::validate(g, &rho, &self.hw)?;
 
         // ---- quotient ----
         let gp = push_forward(g, &rho).graph;
 
-        // ---- place (+ refine) ----
+        // ---- place (+ refine; direct placers skip refinement) ----
         let t1 = std::time::Instant::now();
-        let (mut placement, mut refine_stats) = match self.placer {
-            PlacerKind::Hilbert => (hilbert::place(&gp, &self.hw), None),
-            PlacerKind::MinDistance => (mindist::place(&gp, &self.hw), None),
-            PlacerKind::Spectral => {
-                let pl = match runtime {
-                    Some(rt) => spectral::place_with_engine(
-                        &gp,
-                        &self.hw,
-                        &crate::runtime::SpectralEngine { runtime: rt },
-                    ),
-                    None => spectral::place(&gp, &self.hw),
-                };
-                (pl, None)
-            }
+        let mut placement = self.placer.place(&gp, &self.hw, &ctx)?;
+        let refine_stats = if self.placer.is_direct() {
+            None
+        } else {
+            self.refiner.refine(&gp, &self.hw, &mut placement, &ctx)?
         };
-        if self.refiner == RefinerKind::ForceDirected && self.placer != PlacerKind::MinDistance {
-            // Open a PJRT force-field session once (weight matrix stays
-            // resident); each sweep's batch evaluation then only ships the
-            // (N, 2) coordinates.
-            let session = runtime
-                .filter(|rt| gp.num_nodes() <= rt.force_capacity())
-                .and_then(|rt| {
-                    let w = crate::runtime::dense_flow_matrix(&gp);
-                    rt.force_session(&w, gp.num_nodes()).ok()
-                });
-            let batch = session
-                .as_ref()
-                .map(|s| move |coords: &[(u16, u16)]| s.eval(coords).ok());
-            let stats = match &batch {
-                Some(b) => force::refine(&gp, &self.hw, &mut placement, self.force_params, Some(b)),
-                None => force::refine(&gp, &self.hw, &mut placement, self.force_params, None),
-            };
-            refine_stats = Some(stats);
-        }
         let placement_time = t1.elapsed();
         placement
             .validate(&self.hw)
@@ -325,38 +383,14 @@ impl MapperPipeline {
             refine_stats,
         })
     }
-
-    fn partition(
-        &self,
-        g: &Hypergraph,
-        layer_ranges: Option<&[(u32, u32)]>,
-    ) -> Result<Partitioning, MapError> {
-        use mapping::sequential::SeqOrder;
-        match self.partitioner {
-            PartitionerKind::Hierarchical => {
-                mapping::hierarchical::partition(g, &self.hw, self.hier_params)
-            }
-            PartitionerKind::HyperedgeOverlap => mapping::overlap::partition(g, &self.hw),
-            PartitionerKind::Sequential => {
-                // layered nets: natural ids are already layer-major
-                let order = if layer_ranges.is_some() { SeqOrder::Natural } else { SeqOrder::Greedy };
-                mapping::sequential::partition(g, &self.hw, order)
-            }
-            PartitionerKind::SequentialUnordered => {
-                mapping::sequential::partition(g, &self.hw, SeqOrder::Natural)
-            }
-            PartitionerKind::EdgeMap => mapping::edgemap::partition(g, &self.hw),
-            PartitionerKind::Streaming => {
-                mapping::streaming::partition(g, &self.hw, Default::default())
-            }
-        }
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::spec::StageSpec;
     use crate::snn;
+    use crate::util::json::Json;
 
     fn small_net() -> snn::Network {
         snn::by_name("lenet", 0.12, 3).unwrap()
@@ -462,5 +496,65 @@ mod tests {
         for key in ["partitions", "connectivity", "energy", "ELP", "synaptic reuse"] {
             assert!(rep.contains(key), "missing {key} in report");
         }
+    }
+
+    #[test]
+    fn spec_reproduces_builder_run_bit_for_bit() {
+        // acceptance criterion: a PipelineSpec document fully reproduces
+        // the equivalent enum-builder run
+        let net = small_net();
+        let builder = MapperPipeline::new(small_hw())
+            .partitioner(PartitionerKind::HyperedgeOverlap)
+            .placer(PlacerKind::Hilbert)
+            .refiner(RefinerKind::None)
+            .seed(7)
+            .run(&net.graph, net.layer_ranges.as_deref())
+            .unwrap();
+        let mut spec = PipelineSpec::new(small_hw()).seed(7);
+        spec.partitioner = StageSpec::new("overlap");
+        spec.placer = StageSpec::new("hilbert");
+        spec.refiner = StageSpec::new("none");
+        // ... and once more through a JSON round trip
+        let spec = PipelineSpec::from_json_str(&spec.to_json().to_string()).unwrap();
+        let from_spec = MapperPipeline::from_spec(&spec)
+            .unwrap()
+            .run(&net.graph, net.layer_ranges.as_deref())
+            .unwrap();
+        assert_eq!(builder.rho.assign, from_spec.rho.assign);
+        assert_eq!(builder.metrics, from_spec.metrics);
+    }
+
+    #[test]
+    fn seed_reaches_randomized_stages_uniformly() {
+        // hierarchical derives its seed from StageCtx: pinning the same
+        // value via stage params or via the pipeline seed is equivalent
+        let net = small_net();
+        let via_pipeline = MapperPipeline::new(small_hw())
+            .partitioner(PartitionerKind::Hierarchical)
+            .placer(PlacerKind::Hilbert)
+            .refiner(RefinerKind::None)
+            .seed(5)
+            .run(&net.graph, None)
+            .unwrap();
+        let mut spec = PipelineSpec::new(small_hw()).seed(99);
+        spec.partitioner = StageSpec::with_params(
+            "hierarchical",
+            crate::stage::StageParams::empty().set("seed", Json::Num(5.0)),
+        );
+        spec.placer = StageSpec::new("hilbert");
+        spec.refiner = StageSpec::new("none");
+        let via_params = MapperPipeline::from_spec(&spec)
+            .unwrap()
+            .run(&net.graph, None)
+            .unwrap();
+        assert_eq!(via_pipeline.rho.assign, via_params.rho.assign);
+    }
+
+    #[test]
+    fn unknown_stage_fails_from_spec() {
+        let mut spec = PipelineSpec::new(small_hw());
+        spec.partitioner = StageSpec::new("does-not-exist");
+        let err = MapperPipeline::from_spec(&spec).unwrap_err();
+        assert!(matches!(err, MapError::BadSpec(_)), "{err}");
     }
 }

@@ -1,0 +1,277 @@
+//! The stage registry: string names → boxed stage constructors.
+//!
+//! [`StageRegistry::builtin`] pre-registers all nine built-in algorithms
+//! (six partitioners, three placers) plus the two refiners; downstream
+//! code registers additional algorithms with `register_*` and resolves
+//! them through the same lookup the pipeline, grid runner, ensemble,
+//! multichip mapper and CLI use — adding an algorithm is one
+//! registration, not five `match` edits.
+
+use crate::mapping::{edgemap, hierarchical, overlap, sequential, streaming, MapError};
+use crate::placement::{force, hilbert, mindist, spectral};
+use crate::stage::{NoRefiner, Partitioner, Placer, Refiner, StageParams};
+use std::collections::BTreeMap;
+
+/// Constructor: parse stage parameters into a ready partitioner.
+pub type PartitionerCtor =
+    Box<dyn Fn(&StageParams) -> Result<Box<dyn Partitioner>, String> + Send + Sync>;
+/// Constructor: parse stage parameters into a ready placer.
+pub type PlacerCtor = Box<dyn Fn(&StageParams) -> Result<Box<dyn Placer>, String> + Send + Sync>;
+/// Constructor: parse stage parameters into a ready refiner.
+pub type RefinerCtor = Box<dyn Fn(&StageParams) -> Result<Box<dyn Refiner>, String> + Send + Sync>;
+
+/// Maps stage names to constructors. Names are case-sensitive; aliases
+/// (historical CLI spellings) resolve to their canonical entry.
+pub struct StageRegistry {
+    partitioners: BTreeMap<String, PartitionerCtor>,
+    placers: BTreeMap<String, PlacerCtor>,
+    refiners: BTreeMap<String, RefinerCtor>,
+    aliases: BTreeMap<String, String>,
+}
+
+impl Default for StageRegistry {
+    fn default() -> Self {
+        StageRegistry::builtin()
+    }
+}
+
+impl StageRegistry {
+    /// The process-wide built-in registry (built once, shared) — what the
+    /// enum shims and `from_spec` resolve against. Use [`Self::builtin`]
+    /// when you need an owned registry to extend with `register_*`.
+    pub fn global() -> &'static StageRegistry {
+        static GLOBAL: std::sync::OnceLock<StageRegistry> = std::sync::OnceLock::new();
+        GLOBAL.get_or_init(StageRegistry::builtin)
+    }
+
+    /// A registry with no stages (building block for tests / sandboxes).
+    pub fn empty() -> StageRegistry {
+        StageRegistry {
+            partitioners: BTreeMap::new(),
+            placers: BTreeMap::new(),
+            refiners: BTreeMap::new(),
+            aliases: BTreeMap::new(),
+        }
+    }
+
+    /// All built-in algorithms (paper Table IV + baselines), under the
+    /// same canonical names the `*Kind` enums report.
+    pub fn builtin() -> StageRegistry {
+        let mut r = StageRegistry::empty();
+        r.register_partitioner(
+            "hierarchical",
+            Box::new(|p: &StageParams| -> Result<Box<dyn Partitioner>, String> {
+                Ok(Box::new(hierarchical::HierarchicalPartitioner::from_params(p)?))
+            }),
+        );
+        r.register_partitioner(
+            "overlap",
+            Box::new(|p: &StageParams| -> Result<Box<dyn Partitioner>, String> {
+                Ok(Box::new(overlap::OverlapPartitioner::from_params(p)?))
+            }),
+        );
+        r.register_partitioner(
+            "sequential",
+            Box::new(|p: &StageParams| -> Result<Box<dyn Partitioner>, String> {
+                Ok(Box::new(sequential::SequentialPartitioner::from_params(p)?))
+            }),
+        );
+        r.register_partitioner(
+            "seq-unordered",
+            Box::new(|p: &StageParams| -> Result<Box<dyn Partitioner>, String> {
+                Ok(Box::new(sequential::SequentialPartitioner::from_params_unordered(p)?))
+            }),
+        );
+        r.register_partitioner(
+            "edgemap",
+            Box::new(|p: &StageParams| -> Result<Box<dyn Partitioner>, String> {
+                Ok(Box::new(edgemap::EdgeMapPartitioner::from_params(p)?))
+            }),
+        );
+        r.register_partitioner(
+            "streaming",
+            Box::new(|p: &StageParams| -> Result<Box<dyn Partitioner>, String> {
+                Ok(Box::new(streaming::StreamingPartitioner::from_params(p)?))
+            }),
+        );
+        r.register_placer(
+            "hilbert",
+            Box::new(|p: &StageParams| -> Result<Box<dyn Placer>, String> {
+                Ok(Box::new(hilbert::HilbertPlacer::from_params(p)?))
+            }),
+        );
+        r.register_placer(
+            "spectral",
+            Box::new(|p: &StageParams| -> Result<Box<dyn Placer>, String> {
+                Ok(Box::new(spectral::SpectralPlacer::from_params(p)?))
+            }),
+        );
+        r.register_placer(
+            "mindist",
+            Box::new(|p: &StageParams| -> Result<Box<dyn Placer>, String> {
+                Ok(Box::new(mindist::MinDistPlacer::from_params(p)?))
+            }),
+        );
+        r.register_refiner(
+            "none",
+            Box::new(|p: &StageParams| -> Result<Box<dyn Refiner>, String> {
+                p.check_known(&[])?;
+                Ok(Box::new(NoRefiner))
+            }),
+        );
+        r.register_refiner(
+            "force",
+            Box::new(|p: &StageParams| -> Result<Box<dyn Refiner>, String> {
+                Ok(Box::new(force::ForceRefiner::from_params(p)?))
+            }),
+        );
+        // historical CLI spellings
+        r.alias("hier", "hierarchical");
+        r.alias("hyperedge-overlap", "overlap");
+        r.alias("seq", "sequential");
+        r.alias("unordered", "seq-unordered");
+        r.alias("stream", "streaming");
+        r.alias("min-distance", "mindist");
+        r.alias("force-directed", "force");
+        r
+    }
+
+    pub fn register_partitioner(&mut self, name: &str, ctor: PartitionerCtor) {
+        self.partitioners.insert(name.to_string(), ctor);
+    }
+
+    pub fn register_placer(&mut self, name: &str, ctor: PlacerCtor) {
+        self.placers.insert(name.to_string(), ctor);
+    }
+
+    pub fn register_refiner(&mut self, name: &str, ctor: RefinerCtor) {
+        self.refiners.insert(name.to_string(), ctor);
+    }
+
+    /// Register `alias` as an alternate spelling of `canonical`.
+    pub fn alias(&mut self, alias: &str, canonical: &str) {
+        self.aliases.insert(alias.to_string(), canonical.to_string());
+    }
+
+    fn resolve<'n>(&'n self, name: &'n str) -> &'n str {
+        self.aliases.get(name).map(|s| s.as_str()).unwrap_or(name)
+    }
+
+    /// Instantiate a partitioner by name.
+    pub fn partitioner(
+        &self,
+        name: &str,
+        params: &StageParams,
+    ) -> Result<Box<dyn Partitioner>, MapError> {
+        let ctor = self.partitioners.get(self.resolve(name)).ok_or_else(|| {
+            MapError::BadSpec(format!(
+                "unknown partitioner '{name}' (known: {})",
+                self.partitioner_names().join(", ")
+            ))
+        })?;
+        ctor(params).map_err(|e| MapError::BadSpec(format!("partitioner '{name}': {e}")))
+    }
+
+    /// Instantiate a placer by name.
+    pub fn placer(&self, name: &str, params: &StageParams) -> Result<Box<dyn Placer>, MapError> {
+        let ctor = self.placers.get(self.resolve(name)).ok_or_else(|| {
+            MapError::BadSpec(format!(
+                "unknown placer '{name}' (known: {})",
+                self.placer_names().join(", ")
+            ))
+        })?;
+        ctor(params).map_err(|e| MapError::BadSpec(format!("placer '{name}': {e}")))
+    }
+
+    /// Instantiate a refiner by name.
+    pub fn refiner(&self, name: &str, params: &StageParams) -> Result<Box<dyn Refiner>, MapError> {
+        let ctor = self.refiners.get(self.resolve(name)).ok_or_else(|| {
+            MapError::BadSpec(format!(
+                "unknown refiner '{name}' (known: {})",
+                self.refiner_names().join(", ")
+            ))
+        })?;
+        ctor(params).map_err(|e| MapError::BadSpec(format!("refiner '{name}': {e}")))
+    }
+
+    /// Canonical partitioner names (sorted, aliases excluded).
+    pub fn partitioner_names(&self) -> Vec<String> {
+        self.partitioners.keys().cloned().collect()
+    }
+
+    /// Canonical placer names (sorted, aliases excluded).
+    pub fn placer_names(&self) -> Vec<String> {
+        self.placers.keys().cloned().collect()
+    }
+
+    /// Canonical refiner names (sorted, aliases excluded).
+    pub fn refiner_names(&self) -> Vec<String> {
+        self.refiners.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn all_nine_builtin_algorithms_resolve() {
+        let r = StageRegistry::builtin();
+        let partitioners =
+            ["hierarchical", "overlap", "sequential", "seq-unordered", "edgemap", "streaming"];
+        let placers = ["hilbert", "spectral", "mindist"];
+        assert_eq!(partitioners.len() + placers.len(), 9);
+        for name in partitioners {
+            let stage = r.partitioner(name, &StageParams::empty()).unwrap();
+            assert_eq!(stage.name(), name);
+        }
+        for name in placers {
+            let stage = r.placer(name, &StageParams::empty()).unwrap();
+            assert_eq!(stage.name(), name);
+        }
+        for name in ["none", "force"] {
+            let stage = r.refiner(name, &StageParams::empty()).unwrap();
+            assert_eq!(stage.name(), name);
+        }
+        assert_eq!(r.partitioner_names().len(), 6);
+        assert_eq!(r.placer_names().len(), 3);
+        assert_eq!(r.refiner_names().len(), 2);
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_names() {
+        let r = StageRegistry::builtin();
+        assert_eq!(r.partitioner("hier", &StageParams::empty()).unwrap().name(), "hierarchical");
+        assert_eq!(r.placer("min-distance", &StageParams::empty()).unwrap().name(), "mindist");
+        assert_eq!(r.refiner("force-directed", &StageParams::empty()).unwrap().name(), "force");
+    }
+
+    #[test]
+    fn unknown_names_and_bad_params_error() {
+        let r = StageRegistry::builtin();
+        assert!(r.partitioner("nope", &StageParams::empty()).is_err());
+        assert!(r.placer("nope", &StageParams::empty()).is_err());
+        assert!(r.refiner("nope", &StageParams::empty()).is_err());
+        // unknown key
+        let p = StageParams::empty().set("typo", Json::Num(1.0));
+        assert!(r.partitioner("overlap", &p).is_err());
+        // wrong type
+        let p = StageParams::empty().set("window", Json::Str("big".into()));
+        assert!(r.partitioner("streaming", &p).is_err());
+        // out-of-range value
+        let p = StageParams::empty().set("window", Json::Num(0.0));
+        assert!(r.partitioner("streaming", &p).is_err());
+    }
+
+    #[test]
+    fn params_reach_the_stage() {
+        let r = StageRegistry::builtin();
+        let p = StageParams::empty().set("order", Json::Str("greedy".into()));
+        let stage = r.partitioner("sequential", &p).unwrap();
+        assert_eq!(stage.name(), "sequential");
+        let p = StageParams::empty().set("max_sweeps", Json::Num(3.0));
+        assert!(r.refiner("force", &p).is_ok());
+        assert!(r.refiner("none", &p).is_err(), "'none' accepts no params");
+    }
+}

@@ -6,10 +6,61 @@ use crate::util::json::Json;
 use std::io::Write;
 use std::path::Path;
 
+/// RFC-4180-style field escaping: fields containing a comma, quote or
+/// newline are wrapped in double quotes with inner quotes doubled;
+/// clean fields pass through byte-identical.
+pub fn csv_escape(field: &str) -> String {
+    if field.contains(&[',', '"', '\n', '\r'][..]) {
+        let mut out = String::with_capacity(field.len() + 2);
+        out.push('"');
+        for c in field.chars() {
+            if c == '"' {
+                out.push('"');
+            }
+            out.push(c);
+        }
+        out.push('"');
+        out
+    } else {
+        field.to_string()
+    }
+}
+
+/// Inverse of [`csv_escape`] over one line: split on unquoted commas,
+/// un-double quotes inside quoted fields.
+pub fn csv_split(line: &str) -> Vec<String> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                cur.push(c);
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => fields.push(std::mem::take(&mut cur)),
+                _ => cur.push(c),
+            }
+        }
+    }
+    fields.push(cur);
+    fields
+}
+
 /// Write rows as CSV.
 pub fn write_csv(rows: &[ExperimentRow], path: &Path) -> std::io::Result<()> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "{}", ExperimentRow::CSV_HEADER)?;
+    writeln!(f, "{}", ExperimentRow::csv_header())?;
     for r in rows {
         writeln!(f, "{}", r.to_csv())?;
     }
@@ -50,9 +101,9 @@ pub fn to_json(rows: &[ExperimentRow]) -> Json {
                     ("network", Json::Str(r.network.clone())),
                     ("nodes", Json::Num(r.nodes as f64)),
                     ("connections", Json::Num(r.connections as f64)),
-                    ("partitioner", Json::Str(r.partitioner.into())),
-                    ("placer", Json::Str(r.placer.into())),
-                    ("refiner", Json::Str(r.refiner.into())),
+                    ("partitioner", Json::Str(r.partitioner.clone())),
+                    ("placer", Json::Str(r.placer.clone())),
+                    ("refiner", Json::Str(r.refiner.clone())),
                     ("partitions", Json::Num(r.partitions as f64)),
                     ("connectivity", Json::Num(r.connectivity)),
                     ("energy", Json::Num(r.energy)),
@@ -107,14 +158,14 @@ mod tests {
     use super::*;
     use std::time::Duration;
 
-    fn row(net: &str, pk: &'static str, conn: f64) -> ExperimentRow {
+    fn row(net: &str, pk: &str, conn: f64) -> ExperimentRow {
         ExperimentRow {
             network: net.into(),
             nodes: 10,
             connections: 20,
-            partitioner: pk,
-            placer: "hilbert",
-            refiner: "none",
+            partitioner: pk.into(),
+            placer: "hilbert".into(),
+            refiner: "none".into(),
             partitions: 2,
             connectivity: conn,
             energy: 1.0,
@@ -152,6 +203,22 @@ mod tests {
         assert!(md.contains("| a | overlap |"));
         let js = to_json(&rows).to_string();
         assert!(js.contains("\"network\":\"a\""));
+    }
+
+    #[test]
+    fn csv_escape_roundtrips_hostile_fields() {
+        for field in [
+            "plain",
+            "",
+            "a,b",
+            "say \"hi\"",
+            "multi\nline",
+            "trailing,comma,\"and quotes\"\r\n",
+        ] {
+            let line = format!("{},{}", csv_escape(field), csv_escape("tail"));
+            let fields = csv_split(&line);
+            assert_eq!(fields, vec![field.to_string(), "tail".to_string()], "field={field:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,243 @@
+//! The serializable pipeline description.
+//!
+//! [`PipelineSpec`] is plain data — stage names + per-stage parameter
+//! maps + hardware + seed + thread budget — and round-trips through
+//! JSON. It is the single source of truth for a mapping run: the
+//! builder API, the experiment grid, the ensemble racer and the CLI all
+//! construct one of these (explicitly or through shims) and hand it to
+//! [`super::pipeline::MapperPipeline::from_spec`].
+//!
+//! Document shape (stages accept the string shorthand when they carry
+//! no parameters):
+//!
+//! ```json
+//! {
+//!   "partitioner": {"name": "hierarchical", "params": {"refine_passes": 3}},
+//!   "placer": "spectral",
+//!   "refiner": "force",
+//!   "hw": {"preset": "small", "scale": 0.1},
+//!   "seed": 42,
+//!   "threads": 4
+//! }
+//! ```
+
+use crate::hw::NmhConfig;
+use crate::stage::StageParams;
+use crate::util::json::Json;
+
+/// One stage reference: a registry name plus its parameter map.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageSpec {
+    pub name: String,
+    pub params: StageParams,
+}
+
+impl StageSpec {
+    /// A named stage with default parameters.
+    pub fn new(name: &str) -> StageSpec {
+        StageSpec { name: name.to_string(), params: StageParams::empty() }
+    }
+
+    /// A named stage with explicit parameters.
+    pub fn with_params(name: &str, params: StageParams) -> StageSpec {
+        StageSpec { name: name.to_string(), params }
+    }
+
+    /// Serialize: the bare name when parameter-free, else
+    /// `{"name": ..., "params": {...}}`.
+    pub fn to_json(&self) -> Json {
+        if self.params.is_empty() {
+            Json::Str(self.name.clone())
+        } else {
+            Json::obj(vec![
+                ("name", Json::Str(self.name.clone())),
+                ("params", self.params.to_json()),
+            ])
+        }
+    }
+
+    /// Parse either form.
+    pub fn from_json(doc: &Json) -> Result<StageSpec, String> {
+        match doc {
+            Json::Str(name) => Ok(StageSpec::new(name)),
+            Json::Obj(_) => {
+                let name = doc
+                    .get("name")
+                    .as_str()
+                    .ok_or("stage object needs a string 'name' field")?;
+                let params = StageParams::from_json(doc.get("params"))?;
+                Ok(StageSpec { name: name.to_string(), params })
+            }
+            other => Err(format!("stage must be a name or {{name, params}} object, got {other:?}")),
+        }
+    }
+}
+
+/// A complete, serializable description of one mapping run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineSpec {
+    pub hw: NmhConfig,
+    pub partitioner: StageSpec,
+    pub placer: StageSpec,
+    pub refiner: StageSpec,
+    /// Pipeline seed. JSON serialization is exact only up to 2^53
+    /// (JSON numbers are f64); `from_json` rejects anything beyond.
+    pub seed: u64,
+    /// Worker-pool width for the parallel stages (performance knob only,
+    /// never observable in results — DESIGN.md §6).
+    pub threads: usize,
+}
+
+impl PipelineSpec {
+    /// The default pipeline (the paper's headline combination) on `hw`.
+    pub fn new(hw: NmhConfig) -> PipelineSpec {
+        PipelineSpec {
+            hw,
+            partitioner: StageSpec::new("overlap"),
+            placer: StageSpec::new("spectral"),
+            refiner: StageSpec::new("force"),
+            seed: 42,
+            threads: crate::util::par::max_threads(),
+        }
+    }
+
+    /// Builder-style stage override.
+    pub fn partitioner(mut self, s: StageSpec) -> PipelineSpec {
+        self.partitioner = s;
+        self
+    }
+
+    /// Builder-style stage override.
+    pub fn placer(mut self, s: StageSpec) -> PipelineSpec {
+        self.placer = s;
+        self
+    }
+
+    /// Builder-style stage override.
+    pub fn refiner(mut self, s: StageSpec) -> PipelineSpec {
+        self.refiner = s;
+        self
+    }
+
+    /// Builder-style seed override.
+    pub fn seed(mut self, s: u64) -> PipelineSpec {
+        self.seed = s;
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("partitioner", self.partitioner.to_json()),
+            ("placer", self.placer.to_json()),
+            ("refiner", self.refiner.to_json()),
+            ("hw", self.hw.to_json()),
+            ("seed", Json::Num(self.seed as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+        ])
+    }
+
+    /// Parse a spec document; missing fields fall back to the
+    /// [`Self::new`] defaults (hardware: the "small" preset). Unknown
+    /// top-level keys are rejected, matching the strict per-stage
+    /// parameter parsing — a typo'd field fails instead of silently
+    /// running with a default.
+    pub fn from_json(doc: &Json) -> Result<PipelineSpec, String> {
+        let Some(obj) = doc.as_obj() else {
+            return Err("pipeline spec must be a JSON object".to_string());
+        };
+        const KNOWN: [&str; 6] = ["partitioner", "placer", "refiner", "hw", "seed", "threads"];
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(format!("unknown spec field '{key}' (accepted: {})", KNOWN.join(", ")));
+            }
+        }
+        let hw_doc = doc.get("hw");
+        let hw = if hw_doc.as_obj().is_some() {
+            NmhConfig::from_json(hw_doc)?
+        } else {
+            NmhConfig::small()
+        };
+        let mut spec = PipelineSpec::new(hw);
+        for (field, slot) in [
+            ("partitioner", &mut spec.partitioner),
+            ("placer", &mut spec.placer),
+            ("refiner", &mut spec.refiner),
+        ] {
+            let stage_doc = doc.get(field);
+            if *stage_doc != Json::Null {
+                *slot = StageSpec::from_json(stage_doc).map_err(|e| format!("{field}: {e}"))?;
+            }
+        }
+        if let Some(seed) = doc.get("seed").as_f64() {
+            // JSON numbers are f64: seeds are exact only up to 2^53, and
+            // negatives are rejected rather than silently saturated.
+            if seed < 0.0 || seed.fract() != 0.0 || seed > 9_007_199_254_740_992.0 {
+                return Err(format!("seed must be an integer in [0, 2^53], got {seed}"));
+            }
+            spec.seed = seed as u64;
+        }
+        if let Some(threads) = doc.get("threads").as_usize() {
+            spec.threads = threads.max(1);
+        }
+        Ok(spec)
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json_str(text: &str) -> Result<PipelineSpec, String> {
+        PipelineSpec::from_json(&Json::parse(text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_spec_both_forms_parse() {
+        let bare = StageSpec::from_json(&Json::parse("\"overlap\"").unwrap()).unwrap();
+        assert_eq!(bare, StageSpec::new("overlap"));
+        let full = StageSpec::from_json(
+            &Json::parse(r#"{"name": "streaming", "params": {"window": 32}}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(full.name, "streaming");
+        assert_eq!(full.params.get_usize("window").unwrap(), Some(32));
+        assert!(StageSpec::from_json(&Json::Num(3.0)).is_err());
+        assert!(StageSpec::from_json(&Json::parse(r#"{"params": {}}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn spec_json_roundtrip_exact() {
+        let mut spec = PipelineSpec::new(NmhConfig::small().scaled(0.06)).seed(9);
+        spec.partitioner = StageSpec::with_params(
+            "hierarchical",
+            StageParams::empty().set("refine_passes", Json::Num(3.0)),
+        );
+        spec.placer = StageSpec::new("hilbert");
+        spec.refiner = StageSpec::new("none");
+        spec.threads = 2;
+        let text = spec.to_json().to_pretty();
+        let back = PipelineSpec::from_json_str(&text).unwrap();
+        assert_eq!(back, spec);
+    }
+
+    #[test]
+    fn spec_defaults_fill_missing_fields() {
+        let spec = PipelineSpec::from_json_str(r#"{"partitioner": "edgemap"}"#).unwrap();
+        assert_eq!(spec.partitioner, StageSpec::new("edgemap"));
+        assert_eq!(spec.placer, StageSpec::new("spectral"));
+        assert_eq!(spec.refiner, StageSpec::new("force"));
+        assert_eq!(spec.hw, NmhConfig::small());
+        assert_eq!(spec.seed, 42);
+        assert!(PipelineSpec::from_json_str("[1, 2]").is_err());
+    }
+
+    #[test]
+    fn spec_rejects_unknown_fields_and_bad_seeds() {
+        assert!(PipelineSpec::from_json_str(r#"{"sead": 7}"#).is_err());
+        assert!(PipelineSpec::from_json_str(r#"{"seed": -1}"#).is_err());
+        assert!(PipelineSpec::from_json_str(r#"{"seed": 1.5}"#).is_err());
+        assert!(PipelineSpec::from_json_str(r#"{"hw": {"c_ncp": 9}}"#).is_err());
+        assert!(PipelineSpec::from_json_str(r#"{"seed": 7}"#).is_ok());
+    }
+}

@@ -132,6 +132,102 @@ impl NmhConfig {
         c.c_spc = ((self.c_spc as f64 * f) as usize).max(1);
         c
     }
+
+    /// Serialize the full configuration (every field explicit, so a
+    /// round trip is exact regardless of preset drift).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("width", Json::Num(self.width as f64)),
+            ("height", Json::Num(self.height as f64)),
+            ("c_npc", Json::Num(self.c_npc as f64)),
+            ("c_apc", Json::Num(self.c_apc as f64)),
+            ("c_spc", Json::Num(self.c_spc as f64)),
+            (
+                "costs",
+                Json::obj(vec![
+                    ("e_r", Json::Num(self.costs.e_r)),
+                    ("l_r", Json::Num(self.costs.l_r)),
+                    ("e_t", Json::Num(self.costs.e_t)),
+                    ("l_t", Json::Num(self.costs.l_t)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Parse a configuration from JSON. The document starts from the
+    /// named `preset` (default "small"), applies the optional constraint
+    /// `scale` factor, then overrides any explicitly given field — so
+    /// both the compact experiment-config form
+    /// `{"preset": "small", "scale": 0.1}` and the exact
+    /// [`Self::to_json`] output parse back faithfully. Unknown keys are
+    /// rejected so a typo'd constraint fails instead of silently keeping
+    /// the preset value.
+    pub fn from_json(doc: &crate::util::json::Json) -> Result<Self, String> {
+        if let Some(obj) = doc.as_obj() {
+            const KNOWN: [&str; 8] =
+                ["preset", "scale", "width", "height", "c_npc", "c_apc", "c_spc", "costs"];
+            for key in obj.keys() {
+                if !KNOWN.contains(&key.as_str()) {
+                    return Err(format!(
+                        "unknown hw field '{key}' (accepted: {})",
+                        KNOWN.join(", ")
+                    ));
+                }
+            }
+        } else {
+            return Err("hw must be a JSON object".to_string());
+        }
+        let mut hw = match doc.get("preset").as_str() {
+            Some(name) => {
+                Self::preset(name).ok_or_else(|| format!("unknown hw preset '{name}'"))?
+            }
+            None => Self::small(),
+        };
+        if let Some(f) = doc.get("scale").as_f64() {
+            hw = hw.scaled(f);
+        }
+        if let Some(v) = doc.get("width").as_usize() {
+            hw.width = v;
+        }
+        if let Some(v) = doc.get("height").as_usize() {
+            hw.height = v;
+        }
+        if let Some(v) = doc.get("c_npc").as_usize() {
+            hw.c_npc = v;
+        }
+        if let Some(v) = doc.get("c_apc").as_usize() {
+            hw.c_apc = v;
+        }
+        if let Some(v) = doc.get("c_spc").as_usize() {
+            hw.c_spc = v;
+        }
+        let costs = doc.get("costs");
+        if let Some(cobj) = costs.as_obj() {
+            const KNOWN_COSTS: [&str; 4] = ["e_r", "l_r", "e_t", "l_t"];
+            for key in cobj.keys() {
+                if !KNOWN_COSTS.contains(&key.as_str()) {
+                    return Err(format!(
+                        "unknown hw.costs field '{key}' (accepted: {})",
+                        KNOWN_COSTS.join(", ")
+                    ));
+                }
+            }
+            if let Some(v) = costs.get("e_r").as_f64() {
+                hw.costs.e_r = v;
+            }
+            if let Some(v) = costs.get("l_r").as_f64() {
+                hw.costs.l_r = v;
+            }
+            if let Some(v) = costs.get("e_t").as_f64() {
+                hw.costs.e_t = v;
+            }
+            if let Some(v) = costs.get("l_t").as_f64() {
+                hw.costs.l_t = v;
+            }
+        }
+        Ok(hw)
+    }
 }
 
 #[cfg(test)]
@@ -181,5 +277,32 @@ mod tests {
         assert_eq!((c.c_npc, c.c_apc, c.c_spc), (1, 1, 1));
         let c = NmhConfig::small().scaled(0.5);
         assert_eq!(c.c_npc, 512);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut hw = NmhConfig::small().scaled(0.07);
+        hw.width = 17;
+        hw.costs.e_t = 4.25;
+        let doc = crate::util::json::Json::parse(&hw.to_json().to_string()).unwrap();
+        assert_eq!(NmhConfig::from_json(&doc).unwrap(), hw);
+    }
+
+    #[test]
+    fn json_preset_and_scale_form() {
+        let doc = crate::util::json::Json::parse(
+            r#"{"preset": "small", "scale": 0.05, "width": 8}"#,
+        )
+        .unwrap();
+        let hw = NmhConfig::from_json(&doc).unwrap();
+        assert_eq!(hw.c_npc, 51);
+        assert_eq!(hw.width, 8);
+        let bad = crate::util::json::Json::parse(r#"{"preset": "huge"}"#).unwrap();
+        assert!(NmhConfig::from_json(&bad).is_err());
+        // typo'd fields fail loudly instead of keeping preset values
+        let typo = crate::util::json::Json::parse(r#"{"c_ncp": 100}"#).unwrap();
+        assert!(NmhConfig::from_json(&typo).is_err());
+        let typo = crate::util::json::Json::parse(r#"{"costs": {"e_x": 1.0}}"#).unwrap();
+        assert!(NmhConfig::from_json(&typo).is_err());
     }
 }

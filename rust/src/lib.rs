@@ -11,6 +11,9 @@
 //! Architecture (three layers, see DESIGN.md):
 //! * this crate (L3) owns the whole mapping path: h-graph model,
 //!   partitioners, placers, metric engine, NoC simulator, experiments;
+//! * every algorithm is a [`stage`] trait object resolved by name
+//!   through [`coordinator::StageRegistry`], and a full run is described
+//!   by the serializable [`coordinator::PipelineSpec`] (DESIGN.md §9);
 //! * numerical hot spots (the spectral-placement eigensolver and batched
 //!   force-field evaluation) are AOT-compiled JAX/Pallas artifacts
 //!   executed through PJRT by [`runtime`], with native fallbacks;
@@ -18,7 +21,8 @@
 //!   deterministic scoped-thread engine in [`util::par`] — thread counts
 //!   are performance knobs, never semantics knobs (DESIGN.md §6-§7).
 //!
-//! Quick tour:
+//! Quick tour — the enum-builder shims and the spec form drive the same
+//! registry-backed pipeline:
 //! ```no_run
 //! use snnmap::prelude::*;
 //! let net = snnmap::snn::by_name("lenet", 0.25, 42).unwrap();
@@ -27,9 +31,22 @@
 //!     .partitioner(PartitionerKind::HyperedgeOverlap)
 //!     .placer(PlacerKind::Spectral)
 //!     .refiner(RefinerKind::ForceDirected)
+//!     .seed(42)
 //!     .run(&net.graph, net.layer_ranges.as_deref())
 //!     .expect("mapping failed");
 //! println!("{}", mapping.report());
+//!
+//! // the identical run as a JSON-round-trippable spec:
+//! let spec = PipelineSpec::from_json_str(
+//!     r#"{"partitioner": "overlap", "placer": "spectral",
+//!         "refiner": "force", "hw": {"preset": "small"}, "seed": 42}"#,
+//! )
+//! .unwrap();
+//! let same = MapperPipeline::from_spec(&spec)
+//!     .unwrap()
+//!     .run(&net.graph, net.layer_ranges.as_deref())
+//!     .expect("mapping failed");
+//! assert_eq!(mapping.rho.assign, same.rho.assign);
 //! ```
 
 pub mod coordinator;
@@ -42,6 +59,7 @@ pub mod placement;
 pub mod runtime;
 pub mod sim;
 pub mod snn;
+pub mod stage;
 pub mod util;
 
 /// Common imports for downstream users and the examples.
@@ -49,9 +67,12 @@ pub mod prelude {
     pub use crate::coordinator::pipeline::{
         MapperPipeline, MappingResult, PartitionerKind, PlacerKind, RefinerKind,
     };
+    pub use crate::coordinator::registry::StageRegistry;
+    pub use crate::coordinator::spec::{PipelineSpec, StageSpec};
     pub use crate::hw::{NmhConfig, NocCosts};
     pub use crate::hypergraph::quotient::{push_forward, Partitioning};
     pub use crate::hypergraph::{Hypergraph, HypergraphBuilder};
     pub use crate::metrics::MappingMetrics;
     pub use crate::placement::Placement;
+    pub use crate::stage::{Partitioner, Placer, Refiner, StageCtx, StageParams};
 }

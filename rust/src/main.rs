@@ -9,35 +9,47 @@
 //!   ensemble    time-budgeted placement ensemble (best-ELP wins)
 //!   experiment  figure grids (fig9 | fig10) to CSV
 //!   multichip   chip-aware two-level mapping on a chip array (§VI ext.)
+//!   stages      list every registered stage name
 //!   runtime     show PJRT artifact status
+//!
+//! Every mapping subcommand is driven by a PipelineSpec: flags build
+//! one, `--spec FILE.json` loads one verbatim (pipeline flags are then
+//! ignored with a warning), and `--emit-spec FILE` writes the spec
+//! actually used. A spec plus the same input network (same
+//! `--network/--scale/--seed` or `--in` file) reproduces the mapping
+//! bit for bit; the network itself is not part of the spec.
 
-use snnmap::coordinator::{ensemble, experiment, MapperPipeline, PartitionerKind, PlacerKind, RefinerKind};
+use snnmap::coordinator::{ensemble, experiment, MapperPipeline, PipelineSpec, StageRegistry, StageSpec};
 use snnmap::hw::NmhConfig;
 use snnmap::hypergraph::{io as hgio, stats};
 use snnmap::metrics::evaluate;
 use snnmap::runtime::PjrtRuntime;
 use snnmap::sim::{simulate, SimParams};
 use snnmap::snn::{self, spikefreq};
+use snnmap::stage::{StageCtx, StageParams};
 use snnmap::util::cli::Args;
 use std::path::Path;
 use std::time::Duration;
 
-const USAGE: &str = "snnmap <gen|info|partition|map|simulate|ensemble|experiment|multichip|runtime> [options]
+const USAGE: &str = "snnmap <gen|info|partition|map|simulate|ensemble|experiment|multichip|stages|runtime> [options]
 
 common options:
   --network NAME     suite network (16k_model, lenet, alexnet, vgg11,
                      mobilenet, allen_v1, 16k_rand, 64k_rand, ...)
   --in FILE          load a hypergraph instead (.hg binary or .txt)
   --scale F          network scale factor (default 0.25)
-  --seed N           generator seed (default 42)
+  --seed N           generator + pipeline seed (default 42)
   --hw small|large   hardware preset (default: auto by connection count)
   --hw-scale F       scale per-core constraints (partition-count parity
                      for scaled-down networks)
 
 map options:
-  --partitioner hierarchical|overlap|sequential|seq-unordered|edgemap|streaming
-  --placer hilbert|spectral|mindist
-  --refiner none|force
+  --partitioner NAME  any registered partitioner (see `snnmap stages`)
+  --placer NAME       any registered placer
+  --refiner NAME      any registered refiner
+  --spec FILE.json    load a full PipelineSpec (overrides pipeline flags)
+  --emit-spec FILE    write the spec used (reproduce with --spec + the
+                      same network flags)
   --engine native|pjrt
   --prune-fraction F  drop the weakest F of spike mass first ([16]-style)
 
@@ -46,7 +58,8 @@ ensemble options: --budget-secs N (default 60)
 experiment options: --grid fig9|fig10 | --config FILE.json
                     --out FILE.csv --threads N
 multichip options: --chips-x N --chips-y N (default 2x2)
-                   --off-chip-factor F (default 10)";
+                   --off-chip-factor F (default 10)
+                   --local-placer NAME (default spectral)";
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -65,6 +78,7 @@ fn main() {
         "ensemble" => cmd_ensemble(&args),
         "experiment" => cmd_experiment(&args),
         "multichip" => cmd_multichip(&args),
+        "stages" => cmd_stages(),
         "runtime" => cmd_runtime(),
         _ => {
             eprintln!("unknown command '{cmd}'\n{USAGE}");
@@ -129,16 +143,59 @@ fn resolve_hw(args: &Args, net: &snn::Network) -> NmhConfig {
     hw
 }
 
+/// Build the run's PipelineSpec: `--spec FILE` verbatim, otherwise from
+/// the stage-name flags. Emission is separate ([`emit_spec`]) so
+/// subcommands that force stage overrides archive what actually ran.
+fn build_spec(args: &Args, hw: NmhConfig) -> PipelineSpec {
+    if let Some(path) = args.get("spec") {
+        // the file is the whole pipeline truth: flag-based overrides
+        // would make the archived spec a lie, so they are ignored loudly
+        for flag in ["partitioner", "placer", "refiner", "hw", "hw-scale"] {
+            if args.get(flag).is_some() {
+                eprintln!("[spec] --{flag} ignored: pipeline comes from --spec {path}");
+            }
+        }
+        if args.get("seed").is_some() {
+            eprintln!(
+                "[spec] note: --seed still drives network generation; the \
+                 pipeline seed comes from --spec {path}"
+            );
+        }
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("cannot read {path}: {e}");
+            std::process::exit(1);
+        });
+        PipelineSpec::from_json_str(&text).unwrap_or_else(|e| {
+            eprintln!("bad spec {path}: {e}");
+            std::process::exit(1);
+        })
+    } else {
+        PipelineSpec::new(hw)
+            .partitioner(StageSpec::new(args.get_or("partitioner", "overlap")))
+            .placer(StageSpec::new(args.get_or("placer", "spectral")))
+            .refiner(StageSpec::new(args.get_or("refiner", "force")))
+            .seed(args.get_u64("seed", 42))
+    }
+}
+
+/// `--emit-spec FILE`: archive the spec a subcommand is about to run.
+fn emit_spec(args: &Args, spec: &PipelineSpec) {
+    if let Some(out) = args.get("emit-spec") {
+        std::fs::write(out, spec.to_json().to_pretty()).unwrap_or_else(|e| {
+            eprintln!("cannot write {out}: {e}");
+            std::process::exit(1);
+        });
+        eprintln!("[spec] wrote {out}");
+    }
+}
+
 fn resolve_pipeline(args: &Args, hw: NmhConfig) -> MapperPipeline {
-    let pk = PartitionerKind::parse(args.get_or("partitioner", "overlap"))
-        .expect("bad --partitioner");
-    let pl = PlacerKind::parse(args.get_or("placer", "spectral")).expect("bad --placer");
-    let rf = RefinerKind::parse(args.get_or("refiner", "force")).expect("bad --refiner");
-    MapperPipeline::new(hw)
-        .partitioner(pk)
-        .placer(pl)
-        .refiner(rf)
-        .seed(args.get_u64("seed", 42))
+    let spec = build_spec(args, hw);
+    emit_spec(args, &spec);
+    MapperPipeline::from_spec(&spec).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    })
 }
 
 fn resolve_runtime(args: &Args) -> Option<PjrtRuntime> {
@@ -214,30 +271,28 @@ fn cmd_info(args: &Args) {
 fn cmd_partition(args: &Args) {
     let net = load_network(args);
     let hw = resolve_hw(args, &net);
-    let pipeline = resolve_pipeline(args, hw);
+    // partition-only: run the requested partitioner through the full
+    // pipeline with cheap placement, then report only partitioning data
+    let spec = build_spec(args, hw)
+        .placer(StageSpec::new("hilbert"))
+        .refiner(StageSpec::new("none"));
+    emit_spec(args, &spec);
+    let pipeline = MapperPipeline::from_spec(&spec).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1);
+    });
     let t0 = std::time::Instant::now();
-    let rho = match pipeline.partitioner {
-        _ => {
-            // reuse the pipeline's partition stage through a full run with
-            // cheap placement, then report only partitioning data
-            let res = MapperPipeline::new(hw)
-                .partitioner(pipeline.partitioner)
-                .placer(PlacerKind::Hilbert)
-                .refiner(RefinerKind::None)
-                .seed(pipeline.seed)
-                .run(&net.graph, net.layer_ranges.as_deref())
-                .unwrap_or_else(|e| {
-                    eprintln!("partitioning failed: {e}");
-                    std::process::exit(1);
-                });
-            res
-        }
-    };
+    let res = pipeline
+        .run(&net.graph, net.layer_ranges.as_deref())
+        .unwrap_or_else(|e| {
+            eprintln!("partitioning failed: {e}");
+            std::process::exit(1);
+        });
     println!(
         "partitioner={} partitions={} connectivity={:.6e} time={:.3}s",
-        pipeline.partitioner.name(),
-        rho.rho.num_parts,
-        rho.metrics.connectivity,
+        pipeline.stage_names().0,
+        res.rho.num_parts,
+        res.metrics.connectivity,
         t0.elapsed().as_secs_f64()
     );
 }
@@ -258,15 +313,11 @@ fn cmd_map(args: &Args) {
         net.name,
         net.graph.num_nodes(),
         net.graph.num_connections(),
-        hw.width,
-        hw.height
+        pipeline.hw.width,
+        pipeline.hw.height
     );
-    println!(
-        "pipeline {} + {} + {}",
-        pipeline.partitioner.name(),
-        pipeline.placer.name(),
-        pipeline.refiner.name()
-    );
+    let (pk, pl, rf) = pipeline.stage_names();
+    println!("pipeline {pk} + {pl} + {rf}");
     print!("{}", res.report());
 }
 
@@ -285,10 +336,10 @@ fn cmd_simulate(args: &Args) {
     let rep = simulate(
         &res.gp,
         &res.placement,
-        &hw,
+        &pipeline.hw,
         SimParams { timesteps: steps, seed: args.get_u64("seed", 42), poisson_spikes: true },
     );
-    let analytic = evaluate(&res.gp, &res.placement, &hw);
+    let analytic = evaluate(&res.gp, &res.placement, &pipeline.hw);
     println!("simulated {} timesteps: {} spikes, {} copies, {} hops", rep.timesteps, rep.spikes, rep.copies, rep.hops);
     println!("energy/step      sim {:.4e} pJ   analytic {:.4e} pJ   ratio {:.3}",
         rep.energy_per_step(), analytic.energy, rep.energy_per_step() / analytic.energy);
@@ -299,14 +350,13 @@ fn cmd_simulate(args: &Args) {
 fn cmd_ensemble(args: &Args) {
     let net = load_network(args);
     let hw = resolve_hw(args, &net);
-    let pk = PartitionerKind::parse(args.get_or("partitioner", "overlap")).expect("bad --partitioner");
     let runtime = resolve_runtime(args);
     let budget = Duration::from_secs(args.get_u64("budget-secs", 60));
-    let res = ensemble::run(
+    let res = ensemble::run_named(
         &net.graph,
         net.layer_ranges.as_deref(),
         hw,
-        pk,
+        args.get_or("partitioner", "overlap"),
         budget,
         args.get_u64("seed", 42),
         runtime.as_ref(),
@@ -317,9 +367,9 @@ fn cmd_ensemble(args: &Args) {
     });
     println!("scoreboard (placer+refiner, ELP, time):");
     for (pl, rf, elp, dt) in &res.scoreboard {
-        println!("  {:<10}+{:<6} {:>12.4e}  {:.2}s", pl.name(), rf.name(), elp, dt.as_secs_f64());
+        println!("  {pl:<10}+{rf:<6} {elp:>12.4e}  {:.2}s", dt.as_secs_f64());
     }
-    println!("winner: {}+{}", res.best_combo.0.name(), res.best_combo.1.name());
+    println!("winner: {}+{}", res.best_combo.0, res.best_combo.1);
     print!("{}", res.best.report());
 }
 
@@ -361,7 +411,7 @@ fn cmd_experiment(args: &Args) {
             eprintln!("wrote {} rows to {path}", rows.len());
         }
         None => {
-            println!("{}", experiment::ExperimentRow::CSV_HEADER);
+            println!("{}", experiment::ExperimentRow::csv_header());
             for r in &rows {
                 println!("{}", r.to_csv());
             }
@@ -373,27 +423,42 @@ fn cmd_multichip(args: &Args) {
     use snnmap::multichip::{metrics as mc_metrics, placement as mc_place, MultiChipConfig};
     let net = load_network(args);
     let hw = resolve_hw(args, &net);
-    let pipeline = resolve_pipeline(args, hw);
     let factor = args.get_f64("off-chip-factor", 10.0);
+    // partition on the single-chip constraints, then two-level place;
+    // the chip array and the StageCtx follow the spec's hw/seed so a
+    // `--spec` file stays internally consistent
+    let spec = build_spec(args, hw)
+        .placer(StageSpec::new("hilbert"))
+        .refiner(StageSpec::new("none"));
+    emit_spec(args, &spec);
     let mc = MultiChipConfig {
-        chip: hw,
+        chip: spec.hw,
         chips_x: args.get_usize("chips-x", 2),
         chips_y: args.get_usize("chips-y", 2),
         off_chip_energy_factor: factor,
         off_chip_latency_factor: factor,
     };
-    // partition on the single-chip constraints, then two-level place
-    let res = MapperPipeline::new(hw)
-        .partitioner(pipeline.partitioner)
-        .placer(PlacerKind::Hilbert)
-        .refiner(RefinerKind::None)
-        .seed(pipeline.seed)
+    let ctx_seed = spec.seed;
+    let res = MapperPipeline::from_spec(&spec)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1);
+        })
         .run(&net.graph, net.layer_ranges.as_deref())
         .unwrap_or_else(|e| {
             eprintln!("partitioning failed: {e}");
             std::process::exit(1);
         });
-    let (aware, chips) = mc_place::place(&res.gp, &mc, mc_place::LocalPlacer::Spectral, true)
+    let registry = StageRegistry::builtin();
+    let local = registry
+        .placer(args.get_or("local-placer", "spectral"), &StageParams::empty())
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1);
+        });
+    let refiner = registry.refiner("force", &StageParams::empty()).expect("builtin refiner");
+    let ctx = StageCtx::new(ctx_seed);
+    let (aware, chips) = mc_place::place(&res.gp, &mc, local.as_ref(), Some(refiner.as_ref()), &ctx)
         .unwrap_or_else(|e| {
             eprintln!("multichip placement failed: {e}");
             std::process::exit(1);
@@ -416,6 +481,13 @@ fn cmd_multichip(args: &Args) {
         mo.energy, mo.latency, mo.off_chip_hops
     );
     println!("energy ratio (oblivious/aware) = {:.2}x", mo.energy / ma.energy);
+}
+
+fn cmd_stages() {
+    let registry = StageRegistry::builtin();
+    println!("partitioners: {}", registry.partitioner_names().join(", "));
+    println!("placers:      {}", registry.placer_names().join(", "));
+    println!("refiners:     {}", registry.refiner_names().join(", "));
 }
 
 fn cmd_runtime() {

@@ -186,3 +186,30 @@ mod tests {
         assert_eq!(rho.num_parts, 1);
     }
 }
+
+/// [`crate::stage::Partitioner`] over the graph-based EdgeMap control
+/// (registry name "edgemap"). Deterministic and parameter-free.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EdgeMapPartitioner;
+
+impl EdgeMapPartitioner {
+    pub fn from_params(p: &crate::stage::StageParams) -> Result<Self, String> {
+        p.check_known(&[])?;
+        Ok(EdgeMapPartitioner)
+    }
+}
+
+impl crate::stage::Partitioner for EdgeMapPartitioner {
+    fn name(&self) -> &str {
+        "edgemap"
+    }
+
+    fn partition(
+        &self,
+        g: &Hypergraph,
+        hw: &NmhConfig,
+        _ctx: &crate::stage::StageCtx,
+    ) -> Result<Partitioning, MapError> {
+        partition(g, hw)
+    }
+}

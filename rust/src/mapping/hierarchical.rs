@@ -622,3 +622,53 @@ mod tests {
         assert_eq!(a.assign, b.assign);
     }
 }
+
+/// [`crate::stage::Partitioner`] over the multilevel algorithm (registry
+/// name "hierarchical"). The coarsening/refinement seed follows the
+/// pipeline seed from [`crate::stage::StageCtx`] unless pinned by the
+/// `seed` parameter.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HierarchicalPartitioner {
+    pub params: HierParams,
+    /// When set, overrides `StageCtx::seed` (reproduce one stage while
+    /// varying the rest of the pipeline).
+    pub seed_override: Option<u64>,
+}
+
+impl HierarchicalPartitioner {
+    pub fn new() -> Self {
+        HierarchicalPartitioner { params: HierParams::default(), seed_override: None }
+    }
+
+    /// Construct from spec parameters: `seed`, `refine_passes`,
+    /// `min_pair_fraction`.
+    pub fn from_params(p: &crate::stage::StageParams) -> Result<Self, String> {
+        p.check_known(&["seed", "refine_passes", "min_pair_fraction"])?;
+        let mut s = HierarchicalPartitioner::new();
+        s.seed_override = p.get_u64("seed")?;
+        if let Some(v) = p.get_usize("refine_passes")? {
+            s.params.refine_passes = v;
+        }
+        if let Some(v) = p.get_f64("min_pair_fraction")? {
+            s.params.min_pair_fraction = v;
+        }
+        Ok(s)
+    }
+}
+
+impl crate::stage::Partitioner for HierarchicalPartitioner {
+    fn name(&self) -> &str {
+        "hierarchical"
+    }
+
+    fn partition(
+        &self,
+        g: &Hypergraph,
+        hw: &NmhConfig,
+        ctx: &crate::stage::StageCtx,
+    ) -> Result<Partitioning, MapError> {
+        let mut hp = self.params;
+        hp.seed = self.seed_override.unwrap_or(ctx.seed);
+        partition(g, hw, hp)
+    }
+}

@@ -27,6 +27,9 @@ pub enum MapError {
     TooManyPartitions { got: usize, limit: usize },
     /// Constraint violated by a produced partitioning (validation).
     ConstraintViolated(String),
+    /// A pipeline spec names an unknown stage or carries bad parameters
+    /// (registry/spec layer, see `coordinator::registry`).
+    BadSpec(String),
 }
 
 impl std::fmt::Display for MapError {
@@ -39,6 +42,7 @@ impl std::fmt::Display for MapError {
                 write!(f, "{got} partitions exceed the {limit}-core lattice")
             }
             MapError::ConstraintViolated(m) => write!(f, "constraint violated: {m}"),
+            MapError::BadSpec(m) => write!(f, "bad pipeline spec: {m}"),
         }
     }
 }

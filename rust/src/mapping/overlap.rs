@@ -586,3 +586,45 @@ mod tests {
         }
     }
 }
+
+/// [`crate::stage::Partitioner`] over Algorithm 1 (registry name
+/// "overlap"). Deterministic — the pipeline seed is not consumed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapPartitioner {
+    pub params: OverlapParams,
+}
+
+impl OverlapPartitioner {
+    pub fn new() -> Self {
+        OverlapPartitioner { params: OverlapParams::default() }
+    }
+
+    /// Construct from spec parameters: `use_queue`,
+    /// `select_min_new_axons` (the ablation knobs).
+    pub fn from_params(p: &crate::stage::StageParams) -> Result<Self, String> {
+        p.check_known(&["use_queue", "select_min_new_axons"])?;
+        let mut s = OverlapPartitioner::new();
+        if let Some(v) = p.get_bool("use_queue")? {
+            s.params.use_queue = v;
+        }
+        if let Some(v) = p.get_bool("select_min_new_axons")? {
+            s.params.select_min_new_axons = v;
+        }
+        Ok(s)
+    }
+}
+
+impl crate::stage::Partitioner for OverlapPartitioner {
+    fn name(&self) -> &str {
+        "overlap"
+    }
+
+    fn partition(
+        &self,
+        g: &Hypergraph,
+        hw: &NmhConfig,
+        _ctx: &crate::stage::StageCtx,
+    ) -> Result<Partitioning, MapError> {
+        partition_with_params(g, hw, self.params)
+    }
+}

@@ -195,3 +195,74 @@ mod tests {
         ));
     }
 }
+
+/// [`crate::stage::Partitioner`] over sequential partitioning (registry
+/// names "sequential" and "seq-unordered").
+///
+/// With `order = None` the stage is layer-aware like the historical
+/// pipeline default: natural (layer-major) order when the context
+/// carries layer ranges, Alg. 2's greedy order otherwise.
+#[derive(Clone, Copy, Debug)]
+pub struct SequentialPartitioner {
+    /// Pinned ordering strategy; `None` = layer-aware auto.
+    pub order: Option<SeqOrder>,
+    display: &'static str,
+}
+
+impl SequentialPartitioner {
+    /// Layer-aware variant ("sequential").
+    pub fn auto() -> Self {
+        SequentialPartitioner { order: None, display: "sequential" }
+    }
+
+    /// Natural-order baseline of [7] ("seq-unordered").
+    pub fn unordered() -> Self {
+        SequentialPartitioner { order: Some(SeqOrder::Natural), display: "seq-unordered" }
+    }
+
+    /// Construct the "sequential" stage from spec parameters: `order` in
+    /// {"auto", "natural", "greedy", "kahn"} (default layer-aware auto).
+    pub fn from_params(p: &crate::stage::StageParams) -> Result<Self, String> {
+        p.check_known(&["order"])?;
+        let mut s = SequentialPartitioner::auto();
+        match p.get_str("order")? {
+            None | Some("auto") => {}
+            Some("natural") => s.order = Some(SeqOrder::Natural),
+            Some("greedy") => s.order = Some(SeqOrder::Greedy),
+            Some("kahn") => s.order = Some(SeqOrder::Auto),
+            Some(other) => {
+                return Err(format!(
+                    "unknown order '{other}' (accepted: auto, natural, greedy, kahn)"
+                ))
+            }
+        }
+        Ok(s)
+    }
+
+    /// Construct the "seq-unordered" stage (accepts no parameters).
+    pub fn from_params_unordered(p: &crate::stage::StageParams) -> Result<Self, String> {
+        p.check_known(&[])?;
+        Ok(SequentialPartitioner::unordered())
+    }
+}
+
+impl crate::stage::Partitioner for SequentialPartitioner {
+    fn name(&self) -> &str {
+        self.display
+    }
+
+    fn partition(
+        &self,
+        g: &Hypergraph,
+        hw: &NmhConfig,
+        ctx: &crate::stage::StageCtx,
+    ) -> Result<Partitioning, MapError> {
+        let order = match self.order {
+            Some(o) => o,
+            // layered nets: natural ids are already layer-major
+            None if ctx.layer_ranges.is_some() => SeqOrder::Natural,
+            None => SeqOrder::Greedy,
+        };
+        partition(g, hw, order)
+    }
+}

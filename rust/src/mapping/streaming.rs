@@ -185,3 +185,46 @@ mod tests {
         ));
     }
 }
+
+/// [`crate::stage::Partitioner`] over the one-pass streaming algorithm
+/// (registry name "streaming"). The lookahead window is a spec
+/// parameter instead of a hard-wired `Default::default()`; the pass
+/// itself is deterministic and consumes no randomness.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamingPartitioner {
+    pub params: StreamParams,
+}
+
+impl StreamingPartitioner {
+    pub fn new() -> Self {
+        StreamingPartitioner { params: StreamParams::default() }
+    }
+
+    /// Construct from spec parameters: `window` (lookahead size ≥ 1).
+    pub fn from_params(p: &crate::stage::StageParams) -> Result<Self, String> {
+        p.check_known(&["window"])?;
+        let mut s = StreamingPartitioner::new();
+        if let Some(w) = p.get_usize("window")? {
+            if w == 0 {
+                return Err("parameter 'window' must be >= 1".to_string());
+            }
+            s.params.window = w;
+        }
+        Ok(s)
+    }
+}
+
+impl crate::stage::Partitioner for StreamingPartitioner {
+    fn name(&self) -> &str {
+        "streaming"
+    }
+
+    fn partition(
+        &self,
+        g: &Hypergraph,
+        hw: &NmhConfig,
+        _ctx: &crate::stage::StageCtx,
+    ) -> Result<Partitioning, MapError> {
+        partition(g, hw, self.params)
+    }
+}

@@ -7,30 +7,27 @@
 //! replicate spikes too (one copy per chip), so chip assignment is the
 //! same synaptic-reuse problem.
 //!
-//! Level 2: within each chip, place its partitions with the spectral or
-//! Hilbert scheme on the chip-local lattice, then translate into global
-//! coordinates.
+//! Level 2: within each chip, place its partitions with any registered
+//! [`Placer`] on the chip-local lattice (optionally refined by any
+//! [`Refiner`]), then translate into global coordinates.
 
 use super::MultiChipConfig;
 use crate::hypergraph::quotient::Partitioning;
 use crate::hypergraph::{Hypergraph, HypergraphBuilder};
 use crate::mapping::{self, MapError};
-use crate::placement::{force, hilbert, spectral, Placement};
-
-/// Local placement flavor for level 2.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum LocalPlacer {
-    Hilbert,
-    Spectral,
-}
+use crate::placement::Placement;
+use crate::stage::{Placer, Refiner, StageCtx};
 
 /// Chip-aware placement of a quotient h-graph onto the chip array.
-/// Returns the global placement plus the chip assignment.
+/// Level-2 placement/refinement are pluggable stage trait objects (use
+/// e.g. `StageRegistry::builtin().placer("spectral", ...)`). Returns the
+/// global placement plus the chip assignment.
 pub fn place(
     gp: &Hypergraph,
     mc: &MultiChipConfig,
-    local: LocalPlacer,
-    refine_local: bool,
+    local: &dyn Placer,
+    local_refiner: Option<&dyn Refiner>,
+    ctx: &StageCtx,
 ) -> Result<(Placement, Partitioning), MapError> {
     let p = gp.num_nodes();
     if p > mc.num_cores() {
@@ -94,12 +91,13 @@ pub fn place(
             }
         }
         let sub = b.build();
-        let mut pl = match local {
-            LocalPlacer::Hilbert => hilbert::place(&sub, &mc.chip),
-            LocalPlacer::Spectral => spectral::place(&sub, &mc.chip),
-        };
-        if refine_local {
-            force::refine(&sub, &mc.chip, &mut pl, Default::default(), None);
+        let mut pl = local.place(&sub, &mc.chip, ctx)?;
+        // same stage contract as the single-chip pipeline: direct
+        // placers already descend the objective and skip refinement
+        if !local.is_direct() {
+            if let Some(refiner) = local_refiner {
+                refiner.refine(&sub, &mc.chip, &mut pl, ctx)?;
+            }
         }
         // translate into global coordinates
         let ox = (chip % mc.chips_x) as u16 * mc.chip.width as u16;
@@ -166,6 +164,8 @@ mod tests {
     use super::*;
     use crate::hw::NmhConfig;
     use crate::multichip::metrics::evaluate;
+    use crate::placement::force::ForceRefiner;
+    use crate::placement::hilbert::{self, HilbertPlacer};
     use crate::util::rng::Pcg64;
 
     fn clustered_quotient(k: usize, size: usize, seed: u64) -> Hypergraph {
@@ -202,7 +202,7 @@ mod tests {
     fn placement_valid_and_within_chips() {
         let gp = clustered_quotient(4, 30, 3);
         let mc = tiny_array();
-        let (pl, chips) = place(&gp, &mc, LocalPlacer::Hilbert, false).unwrap();
+        let (pl, chips) = place(&gp, &mc, &HilbertPlacer, None, &StageCtx::new(42)).unwrap();
         pl.validate(&mc.global_lattice()).unwrap();
         // every node's global coordinate must land on its assigned chip
         for v in 0..gp.num_nodes() {
@@ -218,7 +218,9 @@ mod tests {
         // cluster on one chip; a global Hilbert walk will split them
         let gp = clustered_quotient(4, 40, 7);
         let mc = tiny_array();
-        let (aware, _) = place(&gp, &mc, LocalPlacer::Hilbert, true).unwrap();
+        let (aware, _) =
+            place(&gp, &mc, &HilbertPlacer, Some(&ForceRefiner::new()), &StageCtx::new(42))
+                .unwrap();
         let oblivious = hilbert::place(&gp, &mc.global_lattice());
         let ma = evaluate(&gp, &aware, &mc);
         let mo = evaluate(&gp, &oblivious, &mc);
@@ -236,7 +238,7 @@ mod tests {
         // more partitions than one chip can hold: must spread
         let gp = clustered_quotient(1, 100, 9); // one giant cluster
         let mc = tiny_array(); // 64 cores per chip
-        let (pl, chips) = place(&gp, &mc, LocalPlacer::Hilbert, false).unwrap();
+        let (pl, chips) = place(&gp, &mc, &HilbertPlacer, None, &StageCtx::new(42)).unwrap();
         pl.validate(&mc.global_lattice()).unwrap();
         let mut load = vec![0usize; 4];
         for &c in &chips.assign {
@@ -251,7 +253,7 @@ mod tests {
         let gp = clustered_quotient(1, 300, 1);
         let mc = tiny_array(); // 256 cores total
         assert!(matches!(
-            place(&gp, &mc, LocalPlacer::Hilbert, false),
+            place(&gp, &mc, &HilbertPlacer, None, &StageCtx::new(42)),
             Err(MapError::TooManyPartitions { .. })
         ));
     }

@@ -365,3 +365,70 @@ mod tests {
         assert_eq!(stats.sweeps, 1);
     }
 }
+
+/// [`crate::stage::Refiner`] over the force-directed swap refiner
+/// (registry name "force"). When the context carries a PJRT runtime and
+/// the quotient graph fits an artifact bucket, a force-field session is
+/// opened once (weight matrix resident) and each sweep's batch
+/// evaluation only ships the (N, 2) coordinates; results are identical
+/// to the native path since every applied swap re-verifies its gain.
+#[derive(Clone, Copy, Default)]
+pub struct ForceRefiner {
+    pub params: ForceParams,
+}
+
+impl ForceRefiner {
+    pub fn new() -> Self {
+        ForceRefiner { params: ForceParams::default() }
+    }
+
+    /// Construct from spec parameters: `max_sweeps`, `min_rel_gain`,
+    /// `allow_empty_moves`, `clamp_unit`.
+    pub fn from_params(p: &crate::stage::StageParams) -> Result<Self, String> {
+        p.check_known(&["max_sweeps", "min_rel_gain", "allow_empty_moves", "clamp_unit"])?;
+        let mut s = ForceRefiner::new();
+        if let Some(v) = p.get_usize("max_sweeps")? {
+            s.params.max_sweeps = v;
+        }
+        if let Some(v) = p.get_f64("min_rel_gain")? {
+            s.params.min_rel_gain = v;
+        }
+        if let Some(v) = p.get_bool("allow_empty_moves")? {
+            s.params.allow_empty_moves = v;
+        }
+        if let Some(v) = p.get_bool("clamp_unit")? {
+            s.params.clamp_unit = v;
+        }
+        Ok(s)
+    }
+}
+
+impl crate::stage::Refiner for ForceRefiner {
+    fn name(&self) -> &str {
+        "force"
+    }
+
+    fn refine(
+        &self,
+        gp: &Hypergraph,
+        hw: &NmhConfig,
+        placement: &mut Placement,
+        ctx: &crate::stage::StageCtx,
+    ) -> Result<Option<RefineStats>, crate::mapping::MapError> {
+        let session = ctx
+            .runtime
+            .filter(|rt| gp.num_nodes() <= rt.force_capacity())
+            .and_then(|rt| {
+                let w = crate::runtime::dense_flow_matrix(gp);
+                rt.force_session(&w, gp.num_nodes()).ok()
+            });
+        let batch = session
+            .as_ref()
+            .map(|s| move |coords: &[(u16, u16)]| s.eval(coords).ok());
+        let stats = match &batch {
+            Some(b) => refine(gp, hw, placement, self.params, Some(b)),
+            None => refine(gp, hw, placement, self.params, None),
+        };
+        Ok(Some(stats))
+    }
+}

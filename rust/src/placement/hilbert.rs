@@ -159,3 +159,30 @@ mod tests {
         assert_eq!(pl.len(), 15); // exactly fills the 5x3 lattice
     }
 }
+
+/// [`crate::stage::Placer`] over the Hilbert space-filling-curve scheme
+/// (registry name "hilbert"). Deterministic and parameter-free.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HilbertPlacer;
+
+impl HilbertPlacer {
+    pub fn from_params(p: &crate::stage::StageParams) -> Result<Self, String> {
+        p.check_known(&[])?;
+        Ok(HilbertPlacer)
+    }
+}
+
+impl crate::stage::Placer for HilbertPlacer {
+    fn name(&self) -> &str {
+        "hilbert"
+    }
+
+    fn place(
+        &self,
+        gp: &Hypergraph,
+        hw: &NmhConfig,
+        _ctx: &crate::stage::StageCtx,
+    ) -> Result<Placement, crate::mapping::MapError> {
+        Ok(place(gp, hw))
+    }
+}

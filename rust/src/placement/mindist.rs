@@ -233,3 +233,35 @@ mod tests {
         assert_eq!(pl.len(), 9);
     }
 }
+
+/// [`crate::stage::Placer`] over TrueNorth-style minimum-distance direct
+/// placement (registry name "mindist"). A *direct* placer: it already
+/// descends the wirelength objective, so the pipeline skips refinement.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MinDistPlacer;
+
+impl MinDistPlacer {
+    pub fn from_params(p: &crate::stage::StageParams) -> Result<Self, String> {
+        p.check_known(&[])?;
+        Ok(MinDistPlacer)
+    }
+}
+
+impl crate::stage::Placer for MinDistPlacer {
+    fn name(&self) -> &str {
+        "mindist"
+    }
+
+    fn place(
+        &self,
+        gp: &Hypergraph,
+        hw: &NmhConfig,
+        _ctx: &crate::stage::StageCtx,
+    ) -> Result<Placement, crate::mapping::MapError> {
+        Ok(place(gp, hw))
+    }
+
+    fn is_direct(&self) -> bool {
+        true
+    }
+}

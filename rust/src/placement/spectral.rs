@@ -235,3 +235,69 @@ mod tests {
         pl.validate(&hw).unwrap();
     }
 }
+
+/// [`crate::stage::Placer`] over Laplacian-eigenmode placement (registry
+/// name "spectral"). Runs through the AOT PJRT artifacts when the
+/// context carries a runtime, the native subspace iteration otherwise.
+#[derive(Clone, Copy, Debug)]
+pub struct SpectralPlacer {
+    /// Native-engine power/subspace iteration budget.
+    pub iters: usize,
+    /// Native-engine subspace dimension.
+    pub subspace: usize,
+}
+
+impl Default for SpectralPlacer {
+    fn default() -> Self {
+        let d = NativeEigen::default();
+        SpectralPlacer { iters: d.iters, subspace: d.subspace }
+    }
+}
+
+impl SpectralPlacer {
+    pub fn new() -> Self {
+        SpectralPlacer::default()
+    }
+
+    /// Construct from spec parameters: `iters`, `subspace` (native
+    /// engine budget; the PJRT artifact path has its own AOT budget).
+    pub fn from_params(p: &crate::stage::StageParams) -> Result<Self, String> {
+        p.check_known(&["iters", "subspace"])?;
+        let mut s = SpectralPlacer::default();
+        if let Some(v) = p.get_usize("iters")? {
+            s.iters = v;
+        }
+        if let Some(v) = p.get_usize("subspace")? {
+            if v < 2 {
+                return Err("parameter 'subspace' must be >= 2".to_string());
+            }
+            s.subspace = v;
+        }
+        Ok(s)
+    }
+}
+
+impl crate::stage::Placer for SpectralPlacer {
+    fn name(&self) -> &str {
+        "spectral"
+    }
+
+    fn place(
+        &self,
+        gp: &Hypergraph,
+        hw: &NmhConfig,
+        ctx: &crate::stage::StageCtx,
+    ) -> Result<Placement, crate::mapping::MapError> {
+        let pl = match ctx.runtime {
+            Some(rt) => {
+                place_with_engine(gp, hw, &crate::runtime::SpectralEngine { runtime: rt })
+            }
+            None => place_with_engine(
+                gp,
+                hw,
+                &NativeEigen { iters: self.iters, subspace: self.subspace },
+            ),
+        };
+        Ok(pl)
+    }
+}

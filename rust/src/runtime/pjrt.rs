@@ -4,204 +4,352 @@
 //! compiles it once on the PJRT CPU client, caches the executable per
 //! (kind, bucket), and marshals f32 buffers in and out. Python is never
 //! involved at this point — the artifacts are self-contained.
+//!
+//! The XLA FFI bindings are **not** in the offline registry
+//! (DESIGN.md §3), so the real execution path compiles only with the
+//! `pjrt` cargo feature on hosts that also add vendored `xla` and
+//! `anyhow` entries to `[dependencies]` (the feature alone only selects
+//! the backend module). The default build ships an API-identical stub
+//! whose construction fails, which makes [`PjrtRuntime::discover`]
+//! return `None` and routes every caller onto the native engines — the
+//! documented fallback behavior.
 
 use super::artifacts::Manifest;
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::sync::Mutex;
 
-/// A compiled-executable cache over the PJRT CPU client.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: Mutex<HashMap<(String, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+/// Runtime error surfaced by the PJRT bridge. Under the `pjrt` feature
+/// this is `anyhow::Error`; the stub carries a message string.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
+pub struct Error(String);
+
+#[cfg(not(feature = "pjrt"))]
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
 }
 
-// xla's client handles are not Sync-annotated; the coordinator only uses
-// the runtime behind a single-threaded handle or external synchronization.
-unsafe impl Send for PjrtRuntime {}
+#[cfg(not(feature = "pjrt"))]
+impl std::error::Error for Error {}
 
-impl PjrtRuntime {
-    /// Create over a discovered artifact manifest.
-    pub fn new(manifest: Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtRuntime {
-            client,
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-        })
+#[cfg(not(feature = "pjrt"))]
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(feature = "pjrt")]
+pub use anyhow::{Error, Result};
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::{Error, Manifest, Result};
+
+    fn unavailable() -> Error {
+        Error(
+            "XLA/PJRT FFI is not part of this dependency-free build; \
+             rebuild with `--features pjrt` and a vendored `xla` crate"
+                .to_string(),
+        )
     }
 
-    /// Discover artifacts and build the runtime; None when absent.
-    pub fn discover() -> Option<Self> {
-        Manifest::discover().and_then(|m| PjrtRuntime::new(m).ok())
+    /// Stub runtime: construction always fails, so no instance exists in
+    /// a default build and every execution method is unreachable — they
+    /// are kept so the API (and all call sites) typecheck identically.
+    pub struct PjrtRuntime {
+        manifest: Manifest,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn executable(
-        &self,
-        kind: &str,
-        need: usize,
-    ) -> Result<(std::sync::Arc<xla::PjRtLoadedExecutable>, usize)> {
-        let spec = self
-            .manifest
-            .bucket(kind, need)
-            .ok_or_else(|| anyhow!("no '{kind}' artifact bucket for size {need}"))?
-            .clone();
-        let key = (kind.to_string(), spec.n);
-        let mut cache = self.cache.lock().unwrap();
-        if let Some(exe) = cache.get(&key) {
-            return Ok((exe.clone(), spec.n));
+    impl PjrtRuntime {
+        /// Create over a discovered artifact manifest. Always fails in
+        /// the stub build (no FFI to execute the artifacts with).
+        pub fn new(manifest: Manifest) -> Result<Self> {
+            let _ = PjrtRuntime { manifest };
+            Err(unavailable())
         }
-        let proto = xla::HloModuleProto::from_text_file(&spec.path)
-            .with_context(|| format!("parsing {}", spec.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", spec.path.display()))?;
-        let exe = std::sync::Arc::new(exe);
-        cache.insert(key, exe.clone());
-        Ok((exe, spec.n))
-    }
 
-    /// Execute the spectral artifact: `lap` is the dense row-major
-    /// normalized Laplacian (nv × nv); returns the two smallest
-    /// non-trivial eigenvectors as per-node [x, y] coordinates plus their
-    /// eigenvalue estimates.
-    ///
-    /// Padding (zero rows/cols for the operator, identity-free) follows
-    /// the aot.py contract: we ship M = 2I − L̂ in the valid block, zeros
-    /// elsewhere, and the unit-norm D^{1/2}1 deflation vector.
-    pub fn spectral_embed(&self, lap: &[f32], nv: usize, wdeg: &[f64]) -> Result<(Vec<[f64; 2]>, [f64; 2])> {
-        assert_eq!(lap.len(), nv * nv);
-        assert_eq!(wdeg.len(), nv);
-        let (exe, n) = self.executable("spectral", nv)?;
-
-        // build padded M = 2I - L (valid block), zero padding
-        let mut m = vec![0f32; n * n];
-        for r in 0..nv {
-            let src = &lap[r * nv..(r + 1) * nv];
-            let dst = &mut m[r * n..r * n + nv];
-            for (c, (&l, d)) in src.iter().zip(dst.iter_mut()).enumerate() {
-                *d = if c == r { 2.0 - l } else { -l };
+        /// Discover artifacts and build the runtime — always None in
+        /// the stub build, but with an honest diagnosis: when artifacts
+        /// *are* present the problem is the missing feature, not a
+        /// missing `make artifacts` run.
+        pub fn discover() -> Option<Self> {
+            if let Some(m) = Manifest::discover() {
+                eprintln!(
+                    "[runtime] artifacts found at {} but this build has no PJRT support \
+                     (enable the `pjrt` feature); using native engines",
+                    m.dir.display()
+                );
             }
+            None
         }
-        let mut v0 = vec![0f32; n];
-        let norm: f64 = wdeg.iter().map(|&d| d.max(0.0)).sum::<f64>().sqrt();
-        if norm > 0.0 {
-            for (i, &d) in wdeg.iter().enumerate() {
-                v0[i] = (d.max(0.0).sqrt() / norm) as f32;
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (pjrt feature off)".to_string()
+        }
+
+        /// See the `pjrt`-feature implementation for the contract.
+        pub fn spectral_embed(
+            &self,
+            _lap: &[f32],
+            _nv: usize,
+            _wdeg: &[f64],
+        ) -> Result<(Vec<[f64; 2]>, [f64; 2])> {
+            Err(unavailable())
+        }
+
+        /// See the `pjrt`-feature implementation for the contract.
+        pub fn force_field(
+            &self,
+            _w: &[f32],
+            _nv: usize,
+            _coords: &[(u16, u16)],
+        ) -> Result<Vec<[f32; 5]>> {
+            Err(unavailable())
+        }
+
+        /// See the `pjrt`-feature implementation for the contract.
+        pub fn force_session(&self, _w: &[f32], _nv: usize) -> Result<ForceSession<'_>> {
+            Err(unavailable())
+        }
+
+        /// Largest partition count servable by the spectral artifact set.
+        pub fn spectral_capacity(&self) -> usize {
+            self.manifest.max_bucket("spectral").unwrap_or(0)
+        }
+
+        /// Largest partition count servable by the force artifact set.
+        pub fn force_capacity(&self) -> usize {
+            self.manifest.max_bucket("force").unwrap_or(0)
+        }
+    }
+
+    /// A force-field evaluation session (stub: never constructed).
+    pub struct ForceSession<'rt> {
+        _marker: std::marker::PhantomData<&'rt PjrtRuntime>,
+    }
+
+    impl ForceSession<'_> {
+        pub fn eval(&self, _coords: &[(u16, u16)]) -> Result<Vec<[f32; 5]>> {
+            Err(unavailable())
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::{Manifest, Result};
+    use anyhow::{anyhow, Context};
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+
+    /// A compiled-executable cache over the PJRT CPU client.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: Mutex<HashMap<(String, usize), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    }
+
+    // xla's client handles are not Sync-annotated; the coordinator only
+    // uses the runtime behind a single-threaded handle or external
+    // synchronization.
+    unsafe impl Send for PjrtRuntime {}
+
+    impl PjrtRuntime {
+        /// Create over a discovered artifact manifest.
+        pub fn new(manifest: Manifest) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(PjrtRuntime {
+                client,
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+            })
+        }
+
+        /// Discover artifacts and build the runtime; None when absent.
+        pub fn discover() -> Option<Self> {
+            Manifest::discover().and_then(|m| PjrtRuntime::new(m).ok())
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn executable(
+            &self,
+            kind: &str,
+            need: usize,
+        ) -> Result<(std::sync::Arc<xla::PjRtLoadedExecutable>, usize)> {
+            let spec = self
+                .manifest
+                .bucket(kind, need)
+                .ok_or_else(|| anyhow!("no '{kind}' artifact bucket for size {need}"))?
+                .clone();
+            let key = (kind.to_string(), spec.n);
+            let mut cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&key) {
+                return Ok((exe.clone(), spec.n));
             }
+            let proto = xla::HloModuleProto::from_text_file(&spec.path)
+                .with_context(|| format!("parsing {}", spec.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.path.display()))?;
+            let exe = std::sync::Arc::new(exe);
+            cache.insert(key, exe.clone());
+            Ok((exe, spec.n))
         }
 
-        let m_lit = xla::Literal::vec1(&m).reshape(&[n as i64, n as i64])?;
-        let v0_lit = xla::Literal::vec1(&v0).reshape(&[n as i64])?;
-        let result = exe.execute::<xla::Literal>(&[m_lit, v0_lit])?[0][0]
-            .to_literal_sync()?;
-        let (coords_lit, lam_lit) = result.to_tuple2()?;
-        let flat = coords_lit.to_vec::<f32>()?;
-        let lam = lam_lit.to_vec::<f32>()?;
-        let coords = (0..nv)
-            .map(|i| [flat[i * 2] as f64, flat[i * 2 + 1] as f64])
-            .collect();
-        Ok((coords, [lam[0] as f64, lam[1] as f64]))
-    }
+        /// Execute the spectral artifact: `lap` is the dense row-major
+        /// normalized Laplacian (nv × nv); returns the two smallest
+        /// non-trivial eigenvectors as per-node [x, y] coordinates plus
+        /// their eigenvalue estimates.
+        ///
+        /// Padding (zero rows/cols for the operator, identity-free)
+        /// follows the aot.py contract: we ship M = 2I − L̂ in the valid
+        /// block, zeros elsewhere, and the unit-norm D^{1/2}1 deflation
+        /// vector.
+        pub fn spectral_embed(
+            &self,
+            lap: &[f32],
+            nv: usize,
+            wdeg: &[f64],
+        ) -> Result<(Vec<[f64; 2]>, [f64; 2])> {
+            assert_eq!(lap.len(), nv * nv);
+            assert_eq!(wdeg.len(), nv);
+            let (exe, n) = self.executable("spectral", nv)?;
 
-    /// Execute the force-field artifact: `w` is the dense row-major
-    /// destination×source weight matrix (nv × nv), `coords` the current
-    /// core coordinates; returns per-partition potentials under the
-    /// offsets [stay, +x, -x, +y, -y].
-    pub fn force_field(&self, w: &[f32], nv: usize, coords: &[(u16, u16)]) -> Result<Vec<[f32; 5]>> {
-        assert_eq!(w.len(), nv * nv);
-        assert_eq!(coords.len(), nv);
-        let (exe, n) = self.executable("force", nv)?;
+            // build padded M = 2I - L (valid block), zero padding
+            let mut m = vec![0f32; n * n];
+            for r in 0..nv {
+                let src = &lap[r * nv..(r + 1) * nv];
+                let dst = &mut m[r * n..r * n + nv];
+                for (c, (&l, d)) in src.iter().zip(dst.iter_mut()).enumerate() {
+                    *d = if c == r { 2.0 - l } else { -l };
+                }
+            }
+            let mut v0 = vec![0f32; n];
+            let norm: f64 = wdeg.iter().map(|&d| d.max(0.0)).sum::<f64>().sqrt();
+            if norm > 0.0 {
+                for (i, &d) in wdeg.iter().enumerate() {
+                    v0[i] = (d.max(0.0).sqrt() / norm) as f32;
+                }
+            }
 
-        let mut wp = vec![0f32; n * n];
-        for r in 0..nv {
-            wp[r * n..r * n + nv].copy_from_slice(&w[r * nv..(r + 1) * nv]);
+            let m_lit = xla::Literal::vec1(&m).reshape(&[n as i64, n as i64])?;
+            let v0_lit = xla::Literal::vec1(&v0).reshape(&[n as i64])?;
+            let result = exe.execute::<xla::Literal>(&[m_lit, v0_lit])?[0][0]
+                .to_literal_sync()?;
+            let (coords_lit, lam_lit) = result.to_tuple2()?;
+            let flat = coords_lit.to_vec::<f32>()?;
+            let lam = lam_lit.to_vec::<f32>()?;
+            let coords = (0..nv)
+                .map(|i| [flat[i * 2] as f64, flat[i * 2 + 1] as f64])
+                .collect();
+            Ok((coords, [lam[0] as f64, lam[1] as f64]))
         }
-        let mut cp = vec![0f32; n * 2];
-        for (i, &(x, y)) in coords.iter().enumerate() {
-            cp[i * 2] = x as f32;
-            cp[i * 2 + 1] = y as f32;
+
+        /// Execute the force-field artifact: `w` is the dense row-major
+        /// destination×source weight matrix (nv × nv), `coords` the
+        /// current core coordinates; returns per-partition potentials
+        /// under the offsets [stay, +x, -x, +y, -y].
+        pub fn force_field(
+            &self,
+            w: &[f32],
+            nv: usize,
+            coords: &[(u16, u16)],
+        ) -> Result<Vec<[f32; 5]>> {
+            assert_eq!(w.len(), nv * nv);
+            assert_eq!(coords.len(), nv);
+            let (exe, n) = self.executable("force", nv)?;
+
+            let mut wp = vec![0f32; n * n];
+            for r in 0..nv {
+                wp[r * n..r * n + nv].copy_from_slice(&w[r * nv..(r + 1) * nv]);
+            }
+            let mut cp = vec![0f32; n * 2];
+            for (i, &(x, y)) in coords.iter().enumerate() {
+                cp[i * 2] = x as f32;
+                cp[i * 2 + 1] = y as f32;
+            }
+            let w_lit = xla::Literal::vec1(&wp).reshape(&[n as i64, n as i64])?;
+            let c_lit = xla::Literal::vec1(&cp).reshape(&[n as i64, 2])?;
+            let result = exe.execute::<xla::Literal>(&[w_lit, c_lit])?[0][0]
+                .to_literal_sync()?;
+            let pots = result.to_tuple1()?.to_vec::<f32>()?;
+            Ok((0..nv)
+                .map(|i| {
+                    let mut row = [0f32; 5];
+                    row.copy_from_slice(&pots[i * 5..i * 5 + 5]);
+                    row
+                })
+                .collect())
         }
-        let w_lit = xla::Literal::vec1(&wp).reshape(&[n as i64, n as i64])?;
-        let c_lit = xla::Literal::vec1(&cp).reshape(&[n as i64, 2])?;
-        let result = exe.execute::<xla::Literal>(&[w_lit, c_lit])?[0][0]
-            .to_literal_sync()?;
-        let pots = result.to_tuple1()?.to_vec::<f32>()?;
-        Ok((0..nv)
-            .map(|i| {
-                let mut row = [0f32; 5];
-                row.copy_from_slice(&pots[i * 5..i * 5 + 5]);
-                row
-            })
-            .collect())
-    }
 
-    /// Open a force-field session: pads + uploads the weight matrix once
-    /// so per-sweep evaluations only marshal the (N, 2) coordinates.
-    /// Saves the O(bucket²) copy per call that dominated refinement time
-    /// before (§Perf).
-    pub fn force_session(&self, w: &[f32], nv: usize) -> Result<ForceSession<'_>> {
-        assert_eq!(w.len(), nv * nv);
-        let (exe, n) = self.executable("force", nv)?;
-        let mut wp = vec![0f32; n * n];
-        for r in 0..nv {
-            wp[r * n..r * n + nv].copy_from_slice(&w[r * nv..(r + 1) * nv]);
+        /// Open a force-field session: pads + uploads the weight matrix
+        /// once so per-sweep evaluations only marshal the (N, 2)
+        /// coordinates. Saves the O(bucket²) copy per call that
+        /// dominated refinement time before (§Perf).
+        pub fn force_session(&self, w: &[f32], nv: usize) -> Result<ForceSession<'_>> {
+            assert_eq!(w.len(), nv * nv);
+            let (exe, n) = self.executable("force", nv)?;
+            let mut wp = vec![0f32; n * n];
+            for r in 0..nv {
+                wp[r * n..r * n + nv].copy_from_slice(&w[r * nv..(r + 1) * nv]);
+            }
+            let w_lit = xla::Literal::vec1(&wp).reshape(&[n as i64, n as i64])?;
+            Ok(ForceSession { exe, w_lit, nv, n, _marker: std::marker::PhantomData })
         }
-        let w_lit = xla::Literal::vec1(&wp).reshape(&[n as i64, n as i64])?;
-        Ok(ForceSession { exe, w_lit, nv, n, _marker: std::marker::PhantomData })
+
+        /// Largest partition count servable by the spectral artifact set.
+        pub fn spectral_capacity(&self) -> usize {
+            self.manifest.max_bucket("spectral").unwrap_or(0)
+        }
+
+        /// Largest partition count servable by the force artifact set.
+        pub fn force_capacity(&self) -> usize {
+            self.manifest.max_bucket("force").unwrap_or(0)
+        }
     }
 
-    /// Largest partition count servable by the spectral artifact set.
-    pub fn spectral_capacity(&self) -> usize {
-        self.manifest.max_bucket("spectral").unwrap_or(0)
+    /// A force-field evaluation session with the weight matrix resident.
+    pub struct ForceSession<'rt> {
+        exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+        w_lit: xla::Literal,
+        nv: usize,
+        n: usize,
+        _marker: std::marker::PhantomData<&'rt PjrtRuntime>,
     }
 
-    /// Largest partition count servable by the force artifact set.
-    pub fn force_capacity(&self) -> usize {
-        self.manifest.max_bucket("force").unwrap_or(0)
+    impl ForceSession<'_> {
+        /// Evaluate potentials for the current coordinates (see
+        /// [`PjrtRuntime::force_field`] for the output contract).
+        pub fn eval(&self, coords: &[(u16, u16)]) -> Result<Vec<[f32; 5]>> {
+            assert_eq!(coords.len(), self.nv);
+            let mut cp = vec![0f32; self.n * 2];
+            for (i, &(x, y)) in coords.iter().enumerate() {
+                cp[i * 2] = x as f32;
+                cp[i * 2 + 1] = y as f32;
+            }
+            let c_lit = xla::Literal::vec1(&cp).reshape(&[self.n as i64, 2])?;
+            let result = self.exe.execute::<&xla::Literal>(&[&self.w_lit, &c_lit])?[0][0]
+                .to_literal_sync()?;
+            let pots = result.to_tuple1()?.to_vec::<f32>()?;
+            Ok((0..self.nv)
+                .map(|i| {
+                    let mut row = [0f32; 5];
+                    row.copy_from_slice(&pots[i * 5..i * 5 + 5]);
+                    row
+                })
+                .collect())
+        }
     }
 }
 
-/// A force-field evaluation session with the weight matrix resident.
-pub struct ForceSession<'rt> {
-    exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
-    w_lit: xla::Literal,
-    nv: usize,
-    n: usize,
-    _marker: std::marker::PhantomData<&'rt PjrtRuntime>,
-}
-
-impl ForceSession<'_> {
-    /// Evaluate potentials for the current coordinates (see
-    /// [`PjrtRuntime::force_field`] for the output contract).
-    pub fn eval(&self, coords: &[(u16, u16)]) -> Result<Vec<[f32; 5]>> {
-        assert_eq!(coords.len(), self.nv);
-        let mut cp = vec![0f32; self.n * 2];
-        for (i, &(x, y)) in coords.iter().enumerate() {
-            cp[i * 2] = x as f32;
-            cp[i * 2 + 1] = y as f32;
-        }
-        let c_lit = xla::Literal::vec1(&cp).reshape(&[self.n as i64, 2])?;
-        let result = self.exe.execute::<&xla::Literal>(&[&self.w_lit, &c_lit])?[0][0]
-            .to_literal_sync()?;
-        let pots = result.to_tuple1()?.to_vec::<f32>()?;
-        Ok((0..self.nv)
-            .map(|i| {
-                let mut row = [0f32; 5];
-                row.copy_from_slice(&pots[i * 5..i * 5 + 5]);
-                row
-            })
-            .collect())
-    }
-}
+pub use backend::{ForceSession, PjrtRuntime};

@@ -1,0 +1,277 @@
+//! The pluggable stage API: object-safe traits for the three pipeline
+//! stages (partition → place → refine), the shared per-run context, and
+//! the untyped parameter maps stages are constructed from.
+//!
+//! Every algorithm in the mapper is a value implementing one of these
+//! traits; [`crate::coordinator::registry::StageRegistry`] maps string
+//! names to constructors (all nine built-ins pre-registered, downstream
+//! algorithms welcome), and
+//! [`crate::coordinator::spec::PipelineSpec`] is the plain-data,
+//! JSON-round-trippable description of a full run. The old
+//! `PartitionerKind`/`PlacerKind`/`RefinerKind` enums survive as thin
+//! shims over the registry.
+//!
+//! Contract (DESIGN.md §9):
+//! * stages are deterministic functions of their inputs plus
+//!   [`StageCtx::seed`] — thread counts and the optional PJRT runtime
+//!   must never change results beyond documented engine tolerances;
+//! * a [`Partitioner`] must return an assignment that passes
+//!   [`crate::mapping::validate`]; a [`Placer`] must return an injective
+//!   in-bounds placement of the quotient graph's nodes;
+//! * stages hold their own typed knobs (parsed once at construction from
+//!   [`StageParams`]) and borrow everything run-scoped from [`StageCtx`].
+
+use crate::hw::NmhConfig;
+use crate::hypergraph::quotient::Partitioning;
+use crate::hypergraph::Hypergraph;
+use crate::mapping::MapError;
+use crate::placement::force::RefineStats;
+use crate::placement::Placement;
+use crate::runtime::PjrtRuntime;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Run-scoped context shared by every stage invocation: the pipeline
+/// seed, the worker-pool budget, the network's layer structure (when
+/// known) and the optional PJRT runtime for AOT-compiled numeric kernels.
+pub struct StageCtx<'a> {
+    /// The pipeline-level seed; every randomized stage must derive its
+    /// randomness from this (uniform `--seed` behavior).
+    pub seed: u64,
+    /// Worker-pool width available to the stage (1 = serial). Must be a
+    /// performance knob only, never a semantics knob (DESIGN.md §6).
+    pub threads: usize,
+    /// Layer ranges of layered (ANN-derived) networks, `None` for cyclic
+    /// nets; order-sensitive partitioners may exploit this.
+    pub layer_ranges: Option<&'a [(u32, u32)]>,
+    /// PJRT runtime for the AOT JAX/Pallas artifacts; stages fall back to
+    /// native engines when absent.
+    pub runtime: Option<&'a PjrtRuntime>,
+}
+
+impl<'a> StageCtx<'a> {
+    /// A minimal context: the given seed, full thread budget, no layer
+    /// information and the native numeric engines.
+    pub fn new(seed: u64) -> StageCtx<'a> {
+        StageCtx {
+            seed,
+            threads: crate::util::par::max_threads(),
+            layer_ranges: None,
+            runtime: None,
+        }
+    }
+}
+
+/// A partitioning algorithm: ρ — neurons → virtual cores (paper §IV-A).
+pub trait Partitioner: Send + Sync {
+    /// Stable display/registry name.
+    fn name(&self) -> &str;
+    /// Produce a constraint-feasible partitioning of `g` under `hw`.
+    fn partition(
+        &self,
+        g: &Hypergraph,
+        hw: &NmhConfig,
+        ctx: &StageCtx,
+    ) -> Result<Partitioning, MapError>;
+}
+
+/// An initial/direct placement algorithm: γ — virtual cores → lattice
+/// cores (paper §IV-B/C2). `gp` is the quotient h-graph.
+pub trait Placer: Send + Sync {
+    /// Stable display/registry name.
+    fn name(&self) -> &str;
+    /// Place every node of `gp` on a distinct core of `hw`.
+    fn place(
+        &self,
+        gp: &Hypergraph,
+        hw: &NmhConfig,
+        ctx: &StageCtx,
+    ) -> Result<Placement, MapError>;
+    /// Direct placers (e.g. minimum-distance) already optimize the final
+    /// objective and are skipped by the refinement stage, matching the
+    /// paper's Table IV pipeline combinations.
+    fn is_direct(&self) -> bool {
+        false
+    }
+}
+
+/// A placement refinement algorithm (paper §IV-C1).
+pub trait Refiner: Send + Sync {
+    /// Stable display/registry name.
+    fn name(&self) -> &str;
+    /// Refine `placement` in place; returns per-run statistics when the
+    /// refiner does any work (`None` = identity).
+    fn refine(
+        &self,
+        gp: &Hypergraph,
+        hw: &NmhConfig,
+        placement: &mut Placement,
+        ctx: &StageCtx,
+    ) -> Result<Option<RefineStats>, MapError>;
+}
+
+/// The identity refiner (registry name "none").
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoRefiner;
+
+impl Refiner for NoRefiner {
+    fn name(&self) -> &str {
+        "none"
+    }
+
+    fn refine(
+        &self,
+        _gp: &Hypergraph,
+        _hw: &NmhConfig,
+        _placement: &mut Placement,
+        _ctx: &StageCtx,
+    ) -> Result<Option<RefineStats>, MapError> {
+        Ok(None)
+    }
+}
+
+/// Untyped per-stage parameters: a string → JSON map parsed from a
+/// [`crate::coordinator::spec::PipelineSpec`] document and consumed by a
+/// stage constructor, which converts it into the stage's typed knobs
+/// (`HierParams`, `ForceParams`, the streaming lookahead, ...).
+///
+/// Getters are strict: a present-but-mistyped value is an error, a
+/// missing key is `Ok(None)` so constructors can apply defaults.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StageParams(BTreeMap<String, Json>);
+
+impl StageParams {
+    /// No parameters (every built-in accepts this and uses defaults).
+    pub fn empty() -> StageParams {
+        StageParams(BTreeMap::new())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Builder-style insertion.
+    pub fn set(mut self, key: &str, value: Json) -> StageParams {
+        self.0.insert(key.to_string(), value);
+        self
+    }
+
+    /// Parse from a JSON value: an object, or null/absent for empty.
+    pub fn from_json(doc: &Json) -> Result<StageParams, String> {
+        match doc {
+            Json::Null => Ok(StageParams::empty()),
+            Json::Obj(m) => Ok(StageParams(m.clone())),
+            other => Err(format!("stage params must be an object, got {other:?}")),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(self.0.clone())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.0.get(key)
+    }
+
+    /// Reject any key outside `allowed` — typos in a spec fail loudly
+    /// instead of silently running with defaults.
+    pub fn check_known(&self, allowed: &[&str]) -> Result<(), String> {
+        for key in self.0.keys() {
+            if !allowed.contains(&key.as_str()) {
+                return Err(format!(
+                    "unknown parameter '{key}' (accepted: {})",
+                    if allowed.is_empty() { "none".to_string() } else { allowed.join(", ") }
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.0.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| format!("parameter '{key}' must be a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>, String> {
+        match self.get_f64(key)? {
+            None => Ok(None),
+            Some(x) if x >= 0.0 && x.fract() == 0.0 => Ok(Some(x as u64)),
+            Some(x) => Err(format!("parameter '{key}' must be a non-negative integer, got {x}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, String> {
+        Ok(self.get_u64(key)?.map(|x| x as usize))
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>, String> {
+        match self.0.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_bool()
+                .map(Some)
+                .ok_or_else(|| format!("parameter '{key}' must be a boolean, got {v:?}")),
+        }
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<Option<&str>, String> {
+        match self.0.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_str()
+                .map(Some)
+                .ok_or_else(|| format!("parameter '{key}' must be a string, got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_typed_getters() {
+        let p = StageParams::empty()
+            .set("window", Json::Num(64.0))
+            .set("fast", Json::Bool(true))
+            .set("order", Json::Str("greedy".into()));
+        assert_eq!(p.get_usize("window").unwrap(), Some(64));
+        assert_eq!(p.get_bool("fast").unwrap(), Some(true));
+        assert_eq!(p.get_str("order").unwrap(), Some("greedy"));
+        assert_eq!(p.get_f64("missing").unwrap(), None);
+        assert!(p.get_bool("window").is_err());
+        assert!(p.get_u64("order").is_err());
+    }
+
+    #[test]
+    fn params_reject_fractional_and_negative_ints() {
+        let p = StageParams::empty().set("n", Json::Num(1.5));
+        assert!(p.get_u64("n").is_err());
+        let p = StageParams::empty().set("n", Json::Num(-3.0));
+        assert!(p.get_u64("n").is_err());
+    }
+
+    #[test]
+    fn params_check_known() {
+        let p = StageParams::empty().set("window", Json::Num(8.0));
+        assert!(p.check_known(&["window", "seed"]).is_ok());
+        assert!(p.check_known(&["seed"]).is_err());
+        assert!(StageParams::empty().check_known(&[]).is_ok());
+    }
+
+    #[test]
+    fn params_json_roundtrip() {
+        let p = StageParams::empty()
+            .set("a", Json::Num(2.0))
+            .set("b", Json::Str("x".into()));
+        let back = StageParams::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        assert_eq!(StageParams::from_json(&Json::Null).unwrap(), StageParams::empty());
+        assert!(StageParams::from_json(&Json::Num(1.0)).is_err());
+    }
+}

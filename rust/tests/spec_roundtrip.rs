@@ -1,0 +1,181 @@
+//! Registry + spec integration: every built-in stage name round-trips
+//! through StageRegistry and PipelineSpec JSON, a user-registered
+//! partitioner runs end-to-end, and bad specs fail loudly.
+
+use snnmap::coordinator::{MapperPipeline, PipelineSpec, StageRegistry, StageSpec};
+use snnmap::hw::NmhConfig;
+use snnmap::hypergraph::quotient::Partitioning;
+use snnmap::hypergraph::Hypergraph;
+use snnmap::mapping::{self, MapError};
+use snnmap::snn;
+use snnmap::stage::{Partitioner, StageCtx, StageParams};
+use snnmap::util::json::Json;
+
+fn tiny_hw() -> NmhConfig {
+    NmhConfig::small().scaled(0.05)
+}
+
+#[test]
+fn every_builtin_stage_roundtrips_through_spec_json() {
+    let registry = StageRegistry::builtin();
+    let net = snn::by_name("lenet", 0.1, 3).unwrap();
+    for pk in registry.partitioner_names() {
+        for pl in registry.placer_names() {
+            for rf in registry.refiner_names() {
+                let mut spec = PipelineSpec::new(tiny_hw()).seed(7);
+                spec.partitioner = StageSpec::new(&pk);
+                spec.placer = StageSpec::new(&pl);
+                spec.refiner = StageSpec::new(&rf);
+                let text = spec.to_json().to_string();
+                let back = PipelineSpec::from_json_str(&text)
+                    .unwrap_or_else(|e| panic!("{pk}/{pl}/{rf}: {e}"));
+                assert_eq!(back, spec, "{pk}/{pl}/{rf}");
+                // every combination constructs; a cheap subset also runs
+                let pipeline = MapperPipeline::from_spec(&back)
+                    .unwrap_or_else(|e| panic!("{pk}/{pl}/{rf}: {e}"));
+                if pl == "hilbert" && rf == "none" {
+                    let res = pipeline
+                        .run(&net.graph, net.layer_ranges.as_deref())
+                        .unwrap_or_else(|e| panic!("{pk}: {e}"));
+                    assert!(res.rho.num_parts >= 1, "{pk}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn spec_run_matches_builder_run_exactly() {
+    use snnmap::coordinator::{PartitionerKind, PlacerKind, RefinerKind};
+    let net = snn::by_name("16k_rand", 0.05, 9).unwrap();
+    let builder = MapperPipeline::new(tiny_hw())
+        .partitioner(PartitionerKind::Hierarchical)
+        .placer(PlacerKind::Hilbert)
+        .refiner(RefinerKind::ForceDirected)
+        .seed(13)
+        .run(&net.graph, None)
+        .unwrap();
+    let spec = PipelineSpec::from_json_str(
+        r#"{
+            "partitioner": "hierarchical",
+            "placer": "hilbert",
+            "refiner": "force",
+            "hw": {"preset": "small", "scale": 0.05},
+            "seed": 13
+        }"#,
+    )
+    .unwrap();
+    let replay = MapperPipeline::from_spec(&spec).unwrap().run(&net.graph, None).unwrap();
+    assert_eq!(builder.rho.assign, replay.rho.assign);
+    assert_eq!(builder.metrics, replay.metrics);
+    assert_eq!(builder.placement.coords, replay.placement.coords);
+}
+
+/// A downstream partitioner: sequential fill over *reversed* node ids —
+/// deliberately not one of the built-ins.
+struct ReverseSeq;
+
+impl Partitioner for ReverseSeq {
+    fn name(&self) -> &str {
+        "reverse-seq"
+    }
+
+    fn partition(
+        &self,
+        g: &Hypergraph,
+        hw: &NmhConfig,
+        _ctx: &StageCtx,
+    ) -> Result<Partitioning, MapError> {
+        let order: Vec<u32> = (0..g.num_nodes() as u32).rev().collect();
+        mapping::sequential::partition_with_order(g, hw, &order)
+    }
+}
+
+#[test]
+fn custom_registered_partitioner_runs_end_to_end() {
+    let mut registry = StageRegistry::builtin();
+    registry.register_partitioner(
+        "reverse-seq",
+        Box::new(|p: &StageParams| -> Result<Box<dyn Partitioner>, String> {
+            p.check_known(&[])?;
+            Ok(Box::new(ReverseSeq))
+        }),
+    );
+    let net = snn::by_name("lenet", 0.1, 3).unwrap();
+    let mut spec = PipelineSpec::new(tiny_hw()).seed(3);
+    spec.partitioner = StageSpec::new("reverse-seq");
+    spec.placer = StageSpec::new("hilbert");
+    spec.refiner = StageSpec::new("none");
+    let res = MapperPipeline::from_spec_with(&registry, &spec)
+        .unwrap()
+        .run(&net.graph, net.layer_ranges.as_deref())
+        .unwrap();
+    assert!(res.rho.num_parts > 1);
+    mapping::validate(&net.graph, &res.rho, &tiny_hw()).unwrap();
+    // the builtin registry must not know it
+    assert!(MapperPipeline::from_spec(&spec).is_err());
+    // the registered name shows up in the listing
+    assert!(registry.partitioner_names().iter().any(|n| n == "reverse-seq"));
+}
+
+#[test]
+fn unknown_stage_names_fail_with_bad_spec() {
+    for field in ["partitioner", "placer", "refiner"] {
+        let text = format!(r#"{{"{field}": "definitely-not-registered"}}"#);
+        let spec = PipelineSpec::from_json_str(&text).unwrap();
+        let err = MapperPipeline::from_spec(&spec).unwrap_err();
+        assert!(matches!(err, MapError::BadSpec(_)), "{field}: {err}");
+        assert!(
+            err.to_string().contains("definitely-not-registered"),
+            "{field}: {err}"
+        );
+    }
+}
+
+#[test]
+fn bad_stage_params_fail_with_bad_spec() {
+    for text in [
+        // unknown key
+        r#"{"partitioner": {"name": "hierarchical", "params": {"refinement": 3}}}"#,
+        // wrong type
+        r#"{"partitioner": {"name": "hierarchical", "params": {"refine_passes": "many"}}}"#,
+        // out of range
+        r#"{"partitioner": {"name": "streaming", "params": {"window": 0}}}"#,
+        // params on a parameter-free stage
+        r#"{"refiner": {"name": "none", "params": {"sweeps": 1}}}"#,
+        // bad enum value
+        r#"{"partitioner": {"name": "sequential", "params": {"order": "random"}}}"#,
+    ] {
+        let spec = PipelineSpec::from_json_str(text).unwrap();
+        let err = MapperPipeline::from_spec(&spec).unwrap_err();
+        assert!(matches!(err, MapError::BadSpec(_)), "{text}: {err}");
+    }
+    // malformed spec documents fail at parse time
+    assert!(PipelineSpec::from_json_str(r#"{"partitioner": 7}"#).is_err());
+    assert!(PipelineSpec::from_json_str(r#"{"partitioner": {"params": {}}}"#).is_err());
+    assert!(PipelineSpec::from_json_str("not json").is_err());
+}
+
+#[test]
+fn stage_params_change_behavior_through_spec() {
+    // a tiny streaming window must degrade (or at least change) quality
+    // versus the default — proving params actually reach the algorithm
+    let net = snn::by_name("16k_rand", 0.05, 9).unwrap();
+    let run_with_window = |window: f64| {
+        let mut spec = PipelineSpec::new(tiny_hw()).seed(3);
+        spec.partitioner = StageSpec::with_params(
+            "streaming",
+            StageParams::empty().set("window", Json::Num(window)),
+        );
+        spec.placer = StageSpec::new("hilbert");
+        spec.refiner = StageSpec::new("none");
+        MapperPipeline::from_spec(&spec).unwrap().run(&net.graph, None).unwrap()
+    };
+    let narrow = run_with_window(1.0);
+    let wide = run_with_window(256.0);
+    assert!(narrow.rho.num_parts >= 1 && wide.rho.num_parts >= 1);
+    assert_ne!(
+        narrow.rho.assign, wide.rho.assign,
+        "lookahead window had no effect on the partitioning"
+    );
+}
