@@ -1,7 +1,9 @@
 //! E10 — hot-path microbenchmarks for the §Perf optimization loop:
 //! overlap partitioning throughput (connections/s), force-refinement
 //! sweep rate, metric-engine throughput (serial vs parallel), quotient
-//! construction, greedy ordering, and the PJRT-vs-native spectral engine.
+//! construction, greedy ordering, the PJRT-vs-native spectral engine,
+//! and the multilevel hierarchical engine (serial vs two-phase parallel
+//! coarsen/refine/end2end rows with peak hierarchy memory_bytes).
 //!
 //! `--json <path>` additionally writes the numbers machine-readably so the
 //! BENCH trajectory (BENCH_hotpath.json at the repo root) can track
@@ -13,6 +15,7 @@ mod common;
 
 use snnmap::coordinator::experiment::hw_for;
 use snnmap::hypergraph::quotient::push_forward;
+use snnmap::mapping::hierarchical::{self, HierParams};
 use snnmap::mapping::{self, sequential::SeqOrder};
 use snnmap::metrics::{evaluate, evaluate_serial};
 use snnmap::placement::{eigen, force, hilbert, spectral};
@@ -178,6 +181,51 @@ fn main() {
     let (_, st) = bench(1, min_t, || spectral::place(&gp, &hw));
     println!("spectral placement     {:>10.3}s/iter  (embed + discretize)", st.mean_secs());
     record("spectral_placement", st.mean_secs(), "n", gp.num_nodes() as f64);
+
+    // 9. hierarchical multilevel engine: serial vs two-phase parallel.
+    // The paths must agree bit-for-bit; peak memory_bytes is the owned
+    // hierarchy high-water mark (level 0 borrows the input graph).
+    let run_hier = |threads: usize| {
+        let hp = HierParams { threads, ..HierParams::default() };
+        hierarchical::partition_with_stats(g, &hw, hp).unwrap()
+    };
+    let ((rho_ser, hs_ser), st_ser) = bench(1, min_t, || run_hier(1));
+    let ((rho_par, hs_par), st_par) = bench(1, min_t, || run_hier(par::max_threads()));
+    assert_eq!(
+        rho_ser.assign, rho_par.assign,
+        "parallel hierarchical diverged from serial"
+    );
+    let mut record_hier = |mode: &str, end2end: f64, hs: &snnmap::mapping::hierarchical::HierStats| {
+        for (stage, secs) in
+            [("coarsen", hs.coarsen_secs), ("refine", hs.refine_secs), ("end2end", end2end)]
+        {
+            kernels.push((
+                format!("hier_{stage}_{mode}"),
+                Json::obj(vec![
+                    ("secs_per_iter", Json::Num(secs)),
+                    ("conn_per_s", Json::Num(conns / secs.max(1e-12))),
+                    ("memory_bytes", Json::Num(hs.peak_hierarchy_bytes as f64)),
+                ]),
+            ));
+        }
+    };
+    record_hier("serial", st_ser.mean_secs(), &hs_ser);
+    record_hier("parallel", st_par.mean_secs(), &hs_par);
+    println!(
+        "hier end2end (serial)  {:>10.3}s/iter  (coarsen {:.3}s, refine {:.3}s, {} levels, peak {:.2e} B)",
+        st_ser.mean_secs(),
+        hs_ser.coarsen_secs,
+        hs_ser.refine_secs,
+        hs_ser.levels,
+        hs_ser.peak_hierarchy_bytes as f64
+    );
+    println!(
+        "hier end2end ({} thr)   {:>9.3}s/iter  ({:.2}x, {} partitions, bit-identical to serial)",
+        par::max_threads(),
+        st_par.mean_secs(),
+        st_ser.mean_secs() / st_par.mean_secs(),
+        rho_par.num_parts
+    );
     common::hr();
     println!("targets (DESIGN.md §8): overlap >= 5e6 conn/s; metrics >= 1e7 synapse-visits/s.");
 

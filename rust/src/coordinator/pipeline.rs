@@ -217,8 +217,11 @@ pub struct MapperPipeline {
     placer: Box<dyn Placer>,
     refiner: Box<dyn Refiner>,
     pub seed: u64,
-    /// Worker-pool width shared by the parallel stages (metric engine);
-    /// defaults to the process-wide [`crate::util::par`] pool size.
+    /// Worker-pool width shared by the parallel stages — the metric
+    /// engine, the hierarchical partitioner's two-phase rounds and the
+    /// spectral placer's matvec sweeps all receive it through
+    /// [`StageCtx::threads`]; defaults to the process-wide
+    /// [`crate::util::par`] pool size. Never changes results.
     pub threads: usize,
 }
 
@@ -468,6 +471,36 @@ mod tests {
         let serial = run(1);
         let parallel = run(4);
         assert_eq!(serial.rho.assign, parallel.rho.assign);
+        assert_eq!(serial.metrics, parallel.metrics);
+    }
+
+    #[test]
+    fn hierarchical_thread_invariant_through_pipeline() {
+        // `.threads(n)` must reach the partitioner's two-phase rounds
+        // through StageCtx and be unobservable in the output (DESIGN.md
+        // §10). The network must clear the partitioner's parallel
+        // dispatch threshold or the t=4 run would be vacuously serial;
+        // the spectral placer's parallel matvec has its own equivalence
+        // test (quotients here are far below its row threshold).
+        let net = snn::by_name("16k_rand", 0.06, 9).unwrap();
+        assert!(
+            net.graph.num_nodes() >= crate::mapping::hierarchical::PAR_MIN_NODES,
+            "test network too small to exercise the parallel rounds"
+        );
+        let hw = NmhConfig::small().scaled(0.04);
+        let run = |t: usize| {
+            MapperPipeline::new(hw)
+                .partitioner(PartitionerKind::Hierarchical)
+                .placer(PlacerKind::Spectral)
+                .refiner(RefinerKind::None)
+                .threads(t)
+                .run(&net.graph, None)
+                .unwrap()
+        };
+        let serial = run(1);
+        let parallel = run(4);
+        assert_eq!(serial.rho.assign, parallel.rho.assign);
+        assert_eq!(serial.placement.coords, parallel.placement.coords);
         assert_eq!(serial.metrics, parallel.metrics);
     }
 

@@ -77,6 +77,146 @@ fn fnv1a_u32(mut h: u64, x: u32) -> u64 {
     h
 }
 
+/// Reusable arenas + scratch for repeated push-forward sweeps.
+///
+/// The multilevel partitioner runs one push-forward per coarsening round;
+/// with a fresh set of vectors per round the allocator dominated peak
+/// memory. A single `QuotientScratch` threaded through the rounds keeps
+/// every intermediate buffer (dedup stamps, the unique-edge arena, the
+/// hash chain) at its high-water capacity and recycles it.
+#[derive(Default)]
+pub struct QuotientScratch {
+    // Unique quotient edges: source, arena-backed dst span, weight.
+    srcs: Vec<u32>,
+    arena: Vec<NodeId>,
+    span_off: Vec<usize>,
+    weights: Vec<f32>,
+    /// Per-unique-edge accumulated fine multiplicity (see
+    /// [`push_forward_pooled`]); empty when no `fine_mult` was supplied.
+    mult: Vec<u32>,
+    // hash -> chain head; `chain[i]` links unique edges sharing a hash.
+    index: HashMap<u64, u32>,
+    chain: Vec<u32>,
+    // stamp[p] == e marks partition p seen for edge e (reset per sweep:
+    // edge ids restart at 0 every round, so stale stamps would alias).
+    stamp: Vec<u32>,
+    dset: Vec<NodeId>,
+}
+
+impl QuotientScratch {
+    pub fn new() -> Self {
+        QuotientScratch::default()
+    }
+
+    fn reset(&mut self, num_parts: usize, ne: usize) {
+        self.srcs.clear();
+        self.arena.clear();
+        self.span_off.clear();
+        self.span_off.push(0);
+        self.weights.clear();
+        self.mult.clear();
+        self.index.clear();
+        self.index.reserve(ne); // no-op once the retained capacity suffices
+        self.chain.clear();
+        self.stamp.clear();
+        self.stamp.resize(num_parts, u32::MAX);
+        self.dset.clear();
+    }
+}
+
+/// The shared sweep behind both push-forward entry points. Deduplicates
+/// per-edge destination partitions through `scratch.stamp`, merges
+/// identical `(source, D)` quotient edges via the flat arena + hash
+/// chain, and — fused into the same pass — accumulates `fine_mult` (the
+/// original-axon multiplicity each fine edge represents) into
+/// `scratch.mult` and/or appends to per-unique-edge `merged` lists.
+fn sweep(
+    g: &Hypergraph,
+    rho: &Partitioning,
+    fine_mult: Option<&[u32]>,
+    scratch: &mut QuotientScratch,
+    mut merged: Option<&mut Vec<Vec<EdgeId>>>,
+) {
+    assert_eq!(g.num_nodes(), rho.assign.len());
+    scratch.reset(rho.num_parts, g.num_edges());
+
+    for e in g.edge_ids() {
+        let ps = rho.assign[g.source(e) as usize];
+        scratch.dset.clear();
+        for &d in g.dsts(e) {
+            let p = rho.assign[d as usize];
+            if scratch.stamp[p as usize] != e {
+                scratch.stamp[p as usize] = e;
+                scratch.dset.push(p);
+            }
+        }
+        scratch.dset.sort_unstable();
+
+        let mut h = fnv1a_u32(0xcbf2_9ce4_8422_2325, ps);
+        for &p in &scratch.dset {
+            h = fnv1a_u32(h, p);
+        }
+
+        // walk the collision chain for an identical (ps, dset)
+        let mut found = None;
+        if let Some(&head) = scratch.index.get(&h) {
+            let mut cur = head;
+            while cur != u32::MAX {
+                let ci = cur as usize;
+                if scratch.srcs[ci] == ps
+                    && scratch.arena[scratch.span_off[ci]..scratch.span_off[ci + 1]]
+                        == scratch.dset[..]
+                {
+                    found = Some(ci);
+                    break;
+                }
+                cur = scratch.chain[ci];
+            }
+        }
+        let ci = match found {
+            Some(ci) => {
+                scratch.weights[ci] += g.weight(e);
+                ci
+            }
+            None => {
+                let id = scratch.srcs.len() as u32;
+                scratch.srcs.push(ps);
+                scratch.arena.extend_from_slice(&scratch.dset);
+                scratch.span_off.push(scratch.arena.len());
+                scratch.weights.push(g.weight(e));
+                if fine_mult.is_some() {
+                    scratch.mult.push(0);
+                }
+                if let Some(m) = merged.as_deref_mut() {
+                    m.push(Vec::new());
+                }
+                let prev_head = scratch.index.insert(h, id);
+                scratch.chain.push(prev_head.unwrap_or(u32::MAX));
+                id as usize
+            }
+        };
+        if let Some(fm) = fine_mult {
+            scratch.mult[ci] += fm[e as usize];
+        }
+        if let Some(m) = merged.as_deref_mut() {
+            m[ci].push(e);
+        }
+    }
+}
+
+fn build_graph(num_parts: usize, scratch: &QuotientScratch) -> Hypergraph {
+    let mut builder = HypergraphBuilder::new(num_parts);
+    builder.reserve(scratch.srcs.len(), scratch.arena.len());
+    for i in 0..scratch.srcs.len() {
+        builder.add_edge_sorted(
+            scratch.srcs[i],
+            &scratch.arena[scratch.span_off[i]..scratch.span_off[i + 1]],
+            scratch.weights[i],
+        );
+    }
+    builder.build()
+}
+
 /// Push `g` forward through `rho` (Eq. 3), merging duplicate h-edges.
 ///
 /// Self-loops are preserved when a partition sends spikes to itself
@@ -88,82 +228,37 @@ fn fnv1a_u32(mut h: u64, x: u32) -> u64 {
 /// unique quotient edges live in one flat arena indexed by a
 /// hash → chain-link table, so the sweep allocates nothing per input
 /// h-edge — the old version cloned every candidate key into a
-/// `HashMap<(u32, Vec<NodeId>), _>`.
+/// `HashMap<(u32, Vec<NodeId>), _>`. Callers that run many rounds should
+/// prefer [`push_forward_pooled`], which recycles the arenas and skips
+/// the `merged_from` lists entirely.
 pub fn push_forward(g: &Hypergraph, rho: &Partitioning) -> Quotient {
-    assert_eq!(g.num_nodes(), rho.assign.len());
-    let ne = g.num_edges();
-
-    // Unique quotient edges: source, arena-backed dst span, weight.
-    let mut srcs: Vec<u32> = Vec::new();
-    let mut arena: Vec<NodeId> = Vec::new();
-    let mut span_off: Vec<usize> = vec![0];
-    let mut weights: Vec<f32> = Vec::new();
+    let mut scratch = QuotientScratch::new();
     let mut merged_from: Vec<Vec<EdgeId>> = Vec::new();
-    // hash -> chain head; `chain[i]` links unique edges sharing a hash.
-    let mut index: HashMap<u64, u32> = HashMap::with_capacity(ne);
-    let mut chain: Vec<u32> = Vec::new();
-
-    // Reusable scratch: stamp[p] == e marks partition p seen for edge e.
-    let mut stamp: Vec<u32> = vec![u32::MAX; rho.num_parts];
-    let mut dset: Vec<NodeId> = Vec::new();
-
-    for e in g.edge_ids() {
-        let ps = rho.assign[g.source(e) as usize];
-        dset.clear();
-        for &d in g.dsts(e) {
-            let p = rho.assign[d as usize];
-            if stamp[p as usize] != e {
-                stamp[p as usize] = e;
-                dset.push(p);
-            }
-        }
-        dset.sort_unstable();
-
-        let mut h = fnv1a_u32(0xcbf2_9ce4_8422_2325, ps);
-        for &p in &dset {
-            h = fnv1a_u32(h, p);
-        }
-
-        // walk the collision chain for an identical (ps, dset)
-        let mut found = None;
-        if let Some(&head) = index.get(&h) {
-            let mut cur = head;
-            while cur != u32::MAX {
-                let ci = cur as usize;
-                if srcs[ci] == ps && arena[span_off[ci]..span_off[ci + 1]] == dset[..] {
-                    found = Some(ci);
-                    break;
-                }
-                cur = chain[ci];
-            }
-        }
-        match found {
-            Some(ci) => {
-                weights[ci] += g.weight(e);
-                merged_from[ci].push(e);
-            }
-            None => {
-                let id = srcs.len() as u32;
-                srcs.push(ps);
-                arena.extend_from_slice(&dset);
-                span_off.push(arena.len());
-                weights.push(g.weight(e));
-                merged_from.push(vec![e]);
-                let prev_head = index.insert(h, id);
-                chain.push(prev_head.unwrap_or(u32::MAX));
-            }
-        }
-    }
-
-    let mut builder = HypergraphBuilder::new(rho.num_parts);
-    builder.reserve(srcs.len(), arena.len());
-    for i in 0..srcs.len() {
-        builder.add_edge_sorted(srcs[i], &arena[span_off[i]..span_off[i + 1]], weights[i]);
-    }
+    sweep(g, rho, None, &mut scratch, Some(&mut merged_from));
     Quotient {
-        graph: builder.build(),
+        graph: build_graph(rho.num_parts, &scratch),
         merged_from,
     }
+}
+
+/// Arena-reusing push-forward for the multilevel engine: no
+/// `merged_from` bookkeeping (one `Vec` per quotient edge in the plain
+/// entry point); instead, `fine_mult[e]` — the original-axon multiplicity
+/// each fine h-edge represents — is accumulated into the returned
+/// per-quotient-edge multiplicity vector *during* the sweep, which is
+/// exactly the aggregate the coarsening bookkeeping needs (C_apc
+/// accounting). `scratch` is recycled across calls; only the returned
+/// graph and multiplicity vector are fresh allocations.
+pub fn push_forward_pooled(
+    g: &Hypergraph,
+    rho: &Partitioning,
+    fine_mult: &[u32],
+    scratch: &mut QuotientScratch,
+) -> (Hypergraph, Vec<u32>) {
+    assert_eq!(g.num_edges(), fine_mult.len());
+    sweep(g, rho, Some(fine_mult), scratch, None);
+    let graph = build_graph(rho.num_parts, scratch);
+    (graph, std::mem::take(&mut scratch.mult))
 }
 
 #[cfg(test)]
@@ -233,6 +328,36 @@ mod tests {
         assert_eq!(q.graph.num_edges(), 1); // all edges merge to 0 -> {0}
         assert_eq!(q.graph.dsts(0), &[0]);
         assert!((q.graph.weight(0) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pooled_matches_plain_and_fuses_multiplicity() {
+        let mut b = HypergraphBuilder::new(6);
+        b.add_edge(0, vec![2, 3], 1.5);
+        b.add_edge(1, vec![2, 3], 2.5);
+        b.add_edge(4, vec![5], 0.5);
+        b.add_edge(2, vec![0, 1], 1.0);
+        let g = b.build();
+        let rho = Partitioning::new(vec![0, 0, 1, 1, 2, 2], 3);
+        let plain = push_forward(&g, &rho);
+        let fine_mult = vec![3u32, 4, 5, 6];
+        let mut scratch = QuotientScratch::new();
+        // run twice through the same scratch: reuse must not leak state
+        for _ in 0..2 {
+            let (graph, mult) = push_forward_pooled(&g, &rho, &fine_mult, &mut scratch);
+            assert_eq!(graph.num_edges(), plain.graph.num_edges());
+            for e in graph.edge_ids() {
+                assert_eq!(graph.source(e), plain.graph.source(e));
+                assert_eq!(graph.dsts(e), plain.graph.dsts(e));
+                assert!((graph.weight(e) - plain.graph.weight(e)).abs() < 1e-6);
+                // fused multiplicity == Σ fine_mult over merged_from
+                let want: u32 = plain.merged_from[e as usize]
+                    .iter()
+                    .map(|&f| fine_mult[f as usize])
+                    .sum();
+                assert_eq!(mult[e as usize], want, "edge {e}");
+            }
+        }
     }
 
     #[test]

@@ -17,9 +17,10 @@
 //! * numerical hot spots (the spectral-placement eigensolver and batched
 //!   force-field evaluation) are AOT-compiled JAX/Pallas artifacts
 //!   executed through PJRT by [`runtime`], with native fallbacks;
-//! * CPU-parallel hot paths (metric engine, experiment grid) ride the
-//!   deterministic scoped-thread engine in [`util::par`] — thread counts
-//!   are performance knobs, never semantics knobs (DESIGN.md §6-§7).
+//! * CPU-parallel hot paths (metric engine, multilevel partitioning,
+//!   spectral matvec, experiment grid) ride the deterministic
+//!   scoped-thread engine in [`util::par`] — thread counts are
+//!   performance knobs, never semantics knobs (DESIGN.md §6-§7, §10).
 //!
 //! Quick tour — the enum-builder shims and the spec form drive the same
 //! registry-backed pipeline:

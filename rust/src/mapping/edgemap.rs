@@ -8,7 +8,7 @@
 //! it serves as the paper's control for how much second-order affinity
 //! actually buys.
 
-use super::{ConstraintTracker, MapError};
+use super::MapError;
 use crate::hw::NmhConfig;
 use crate::hypergraph::quotient::Partitioning;
 use crate::hypergraph::Hypergraph;
@@ -19,6 +19,7 @@ use std::collections::HashMap;
 /// to, plus the latest-opened partition as fallback).
 pub fn partition(g: &Hypergraph, hw: &NmhConfig) -> Result<Partitioning, MapError> {
     let n = g.num_nodes();
+    super::check_nodes_feasible(g, hw)?;
     let mut assign = vec![u32::MAX; n];
     // One tracker per open partition is too heavy; track per-partition
     // counters + axon stamps in one structure per partition id.
@@ -65,9 +66,8 @@ pub fn partition(g: &Hypergraph, hw: &NmhConfig) -> Result<Partitioning, MapErro
             // open a new partition
             let mut st = PartState::new(g.num_edges());
             if !st.fits(g, hw, u) {
-                // node infeasible even alone
-                let t = ConstraintTracker::new(g, hw);
-                t.node_feasible(u)?;
+                // the prelude proved u fits an empty core, so a rejection
+                // here is an internal inconsistency, not an unmappable node
                 return Err(MapError::ConstraintViolated(format!(
                     "node {u} rejected by empty partition"
                 )));

@@ -10,37 +10,87 @@
 //!    identical (source, D) edges merged with weight summed while a
 //!    multiplicity counter preserves the *original axon count* each coarse
 //!    edge represents (C_apc accounting). Stops when no pair forms or the
-//!    graph reaches ⌈n/C_npc⌉ nodes.
+//!    graph reaches ⌈n/C_npc⌉ nodes. With `threads > 1` each round runs
+//!    **two-phase**: a parallel *propose* phase scores every node's top-K
+//!    candidate partners (the scoring loop that dominates the round) and a
+//!    cheap serial *commit* phase resolves conflicts in the seeded visit
+//!    order — bit-for-bit identical to [`coarsen_round_serial`] (tested).
 //! 2. **Initial partitioning** — each coarsest node is a partition.
-//! 3. **Uncoarsening + FM-style refinement** — the assignment is projected
-//!    level by level; at each level nodes are greedily moved to
-//!    neighboring partitions when the Eq. 7 connectivity gain is positive
-//!    and constraints stay satisfied.
+//! 3. **Uncoarsening + boundary-driven refinement** — the assignment is
+//!    projected level by level; at each level a work-list of *boundary*
+//!    nodes (destinations of h-edges spanning ≥ 2 partitions — the only
+//!    nodes with any Eq. 7 gain candidates) is refined: gains are
+//!    precomputed in parallel chunks against the pass-start assignment,
+//!    then moves are verified and applied serially, each applied move
+//!    re-enqueueing its co-members. Thread count never changes results.
+//!
+//! Memory model (DESIGN.md §10): level 0 *borrows* the input graph
+//! (`Cow::Borrowed` — the old engine cloned it), coarser levels share one
+//! [`QuotientScratch`] arena across push-forward rounds, axon
+//! multiplicities are accumulated inside the push-forward sweep (no
+//! `merged_from` lists), and uncoarsening drops each level's graph as
+//! soon as its assignment has been projected to the finer level.
 
 use super::MapError;
 use crate::hw::NmhConfig;
-use crate::hypergraph::quotient::{push_forward, Partitioning};
+use crate::hypergraph::quotient::{push_forward_pooled, Partitioning, QuotientScratch};
 use crate::hypergraph::Hypergraph;
 use crate::util::rng::Pcg64;
+use std::borrow::Cow;
+
+/// Below this node count a coarsening round / refinement pass runs on the
+/// serial path even when `threads > 1` — scoped-thread spawn overhead
+/// would dominate. Invisible in results: the paths agree bit-for-bit.
+/// `pub(crate)` so thread-invariance tests can assert they actually
+/// cross it (a sub-threshold "parallel" run would be vacuously serial).
+pub(crate) const PAR_MIN_NODES: usize = 512;
+
+/// Candidate partners stored per node by the parallel propose phase. The
+/// serial commit needs at most 8 *unmatched* candidates; storing 24 makes
+/// the exact-recompute fallback (> 16 of a node's best partners already
+/// taken when it is visited) rare.
+const CAND_K: usize = 24;
 
 /// Tunables (defaults follow the paper's description).
 #[derive(Clone, Copy, Debug)]
 pub struct HierParams {
     pub seed: u64,
-    /// Max refinement passes per uncoarsening level.
+    /// Max refinement passes per uncoarsening level. Passes after the
+    /// first only revisit nodes re-enqueued by applied moves, so extra
+    /// passes are cheap.
     pub refine_passes: usize,
     /// Stop coarsening when a round pairs fewer than this fraction.
     pub min_pair_fraction: f64,
+    /// Worker budget for the two-phase coarsening/refinement rounds
+    /// (1 = serial). A performance knob only: the output is bit-for-bit
+    /// identical for every value (enforced by tests).
+    pub threads: usize,
 }
 
 impl Default for HierParams {
     fn default() -> Self {
         HierParams {
             seed: 0xC0FFEE,
-            refine_passes: 2,
+            refine_passes: 3,
             min_pair_fraction: 0.02,
+            threads: 1,
         }
     }
+}
+
+/// Diagnostics from one multilevel run (hotpath bench + `SNNMAP_TIMING`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HierStats {
+    /// Levels in the hierarchy, including the borrowed level 0.
+    pub levels: usize,
+    /// Wall-clock spent coarsening (matching + push-forward rounds).
+    pub coarsen_secs: f64,
+    /// Wall-clock spent uncoarsening (refinement + projection).
+    pub refine_secs: f64,
+    /// Peak bytes held in *owned* hierarchy payloads (coarse graphs,
+    /// multiplicities, aggregates, projection maps). Level 0 borrows the
+    /// input graph and contributes nothing.
+    pub peak_hierarchy_bytes: usize,
 }
 
 /// Per-coarse-node aggregates that NMH constraints are defined on.
@@ -52,9 +102,10 @@ struct Aggregates {
     syn_count: Vec<u64>,
 }
 
-/// One level of the hierarchy.
-struct Level {
-    graph: Hypergraph,
+/// One level of the hierarchy. Level 0 borrows the caller's graph; every
+/// coarser level owns its quotient.
+struct Level<'a> {
+    graph: Cow<'a, Hypergraph>,
     /// original-axon multiplicity of each h-edge at this level
     axon_mult: Vec<u32>,
     agg: Aggregates,
@@ -62,25 +113,47 @@ struct Level {
     to_coarse: Option<Vec<u32>>,
 }
 
+fn hierarchy_bytes(levels: &[Level]) -> usize {
+    levels
+        .iter()
+        .map(|l| {
+            let g = match &l.graph {
+                Cow::Owned(g) => g.memory_bytes(),
+                Cow::Borrowed(_) => 0,
+            };
+            g + l.axon_mult.len() * 4
+                + l.agg.node_count.len() * 4
+                + l.agg.syn_count.len() * 8
+                + l.to_coarse.as_ref().map_or(0, |v| v.len() * 4)
+        })
+        .sum()
+}
+
 /// Hierarchical partitioning entry point.
 pub fn partition(g: &Hypergraph, hw: &NmhConfig, params: HierParams) -> Result<Partitioning, MapError> {
+    partition_with_stats(g, hw, params).map(|(rho, _)| rho)
+}
+
+/// [`partition`] plus per-run diagnostics (level count, stage wall-clock,
+/// peak hierarchy bytes) for the hotpath bench.
+pub fn partition_with_stats(
+    g: &Hypergraph,
+    hw: &NmhConfig,
+    params: HierParams,
+) -> Result<(Partitioning, HierStats), MapError> {
     let n = g.num_nodes();
+    let mut stats = HierStats::default();
     if n == 0 {
-        return Ok(Partitioning::new(vec![], 0));
+        return Ok((Partitioning::new(vec![], 0), stats));
     }
-    // Per-node feasibility (a neuron that can't fit an empty core).
-    {
-        let t = super::ConstraintTracker::new(g, hw);
-        for node in 0..n as u32 {
-            t.node_feasible(node)?;
-        }
-    }
+    super::check_nodes_feasible(g, hw)?;
     let target = crate::util::div_ceil(n, hw.c_npc).max(1);
+    let threads = params.threads.max(1);
     let mut rng = Pcg64::new(params.seed, 23);
 
-    // ---- build hierarchy ----
+    // ---- build hierarchy (level 0 borrows the input graph) ----
     let mut levels: Vec<Level> = vec![Level {
-        graph: g.clone(),
+        graph: Cow::Borrowed(g),
         axon_mult: vec![1; g.num_edges()],
         agg: Aggregates {
             node_count: vec![1; n],
@@ -89,15 +162,23 @@ pub fn partition(g: &Hypergraph, hw: &NmhConfig, params: HierParams) -> Result<P
         to_coarse: None,
     }];
 
-    let debug_timing = std::env::var("SNNMAP_TIMING").is_ok();
+    let debug_timing = crate::util::timing_enabled();
+    let mut qscratch = QuotientScratch::new();
+    let mut props: Vec<NodeProposal> = Vec::new();
+    let t_coarsen = std::time::Instant::now();
     loop {
         let top = levels.last().unwrap();
-        let cur_n = top.graph.num_nodes();
+        let graph: &Hypergraph = &top.graph;
+        let cur_n = graph.num_nodes();
         if cur_n <= target {
             break;
         }
         let t0 = std::time::Instant::now();
-        let matching = coarsen_round(&top.graph, &top.axon_mult, &top.agg, hw, &mut rng);
+        let matching = if threads > 1 && cur_n >= PAR_MIN_NODES {
+            coarsen_round_parallel(graph, &top.axon_mult, &top.agg, hw, &mut rng, threads, &mut props)
+        } else {
+            coarsen_round_serial(graph, &top.axon_mult, &top.agg, hw, &mut rng)
+        };
         if debug_timing {
             eprintln!("[hier] coarsen n={cur_n} pairs={} in {:?}", matching.pairs, t0.elapsed());
         }
@@ -107,15 +188,12 @@ pub fn partition(g: &Hypergraph, hw: &NmhConfig, params: HierParams) -> Result<P
         }
         let rho = Partitioning::new(matching.assign, matching.num_coarse);
         let t0 = std::time::Instant::now();
-        let q = push_forward(&top.graph, &rho);
+        let (qg, axon_mult) = push_forward_pooled(graph, &rho, &top.axon_mult, &mut qscratch);
         if debug_timing {
-            eprintln!("[hier] push_forward -> n={} e={} in {:?}", q.graph.num_nodes(), q.graph.num_edges(), t0.elapsed());
+            eprintln!("[hier] push_forward -> n={} e={} in {:?}", qg.num_nodes(), qg.num_edges(), t0.elapsed());
         }
-        // aggregate multiplicities + node stats into the coarser level
-        let mut axon_mult = vec![0u32; q.graph.num_edges()];
-        for (ce, orig) in q.merged_from.iter().enumerate() {
-            axon_mult[ce] = orig.iter().map(|&e| top.axon_mult[e as usize]).sum();
-        }
+        // node/syn aggregates fold into the coarser level in one sweep
+        // (the axon multiplicities were fused into push_forward itself)
         let mut node_count = vec![0u32; rho.num_parts];
         let mut syn_count = vec![0u64; rho.num_parts];
         for fine in 0..cur_n {
@@ -123,15 +201,18 @@ pub fn partition(g: &Hypergraph, hw: &NmhConfig, params: HierParams) -> Result<P
             node_count[c] += top.agg.node_count[fine];
             syn_count[c] += top.agg.syn_count[fine];
         }
-        let to_coarse = Some(rho.assign);
-        levels.last_mut().unwrap().to_coarse = to_coarse;
+        levels.last_mut().unwrap().to_coarse = Some(rho.assign);
         levels.push(Level {
-            graph: q.graph,
+            graph: Cow::Owned(qg),
             axon_mult,
             agg: Aggregates { node_count, syn_count },
             to_coarse: None,
         });
+        stats.peak_hierarchy_bytes = stats.peak_hierarchy_bytes.max(hierarchy_bytes(&levels));
     }
+    stats.coarsen_secs = t_coarsen.elapsed().as_secs_f64();
+    stats.levels = levels.len();
+    stats.peak_hierarchy_bytes = stats.peak_hierarchy_bytes.max(hierarchy_bytes(&levels));
 
     // ---- initial partitioning: coarsest node == partition ----
     let coarsest_n = levels.last().unwrap().graph.num_nodes();
@@ -144,24 +225,24 @@ pub fn partition(g: &Hypergraph, hw: &NmhConfig, params: HierParams) -> Result<P
     let mut assign: Vec<u32> = (0..coarsest_n as u32).collect();
     let mut num_parts = coarsest_n;
 
-    // ---- uncoarsen + refine ----
-    for li in (0..levels.len()).rev() {
-        let level = &levels[li];
-        // refine at this level
+    // ---- uncoarsen + refine; each level drops once projected ----
+    let t_refine = std::time::Instant::now();
+    while let Some(level) = levels.pop() {
+        let li = levels.len();
         let t0 = std::time::Instant::now();
-        let mut refiner = Refiner::new(&level.graph, &level.axon_mult, &level.agg, hw, num_parts, &assign);
+        let graph: &Hypergraph = &level.graph;
+        let mut refiner = Refiner::new(graph, &level.axon_mult, &level.agg, hw, num_parts, &assign);
         for _ in 0..params.refine_passes {
-            if refiner.pass(&mut rng) == 0 {
+            if refiner.pass(&mut rng, threads) == 0 {
                 break;
             }
         }
         if debug_timing {
-            eprintln!("[hier] refine level {li} (n={}) in {:?}", level.graph.num_nodes(), t0.elapsed());
+            eprintln!("[hier] refine level {li} (n={}) in {:?}", graph.num_nodes(), t0.elapsed());
         }
         assign = refiner.assign;
-        // project to the finer level (li-1), whose to_coarse points here
-        if li > 0 {
-            let finer = &levels[li - 1];
+        // project to the finer level, whose to_coarse points here
+        if let Some(finer) = levels.last() {
             let map = finer.to_coarse.as_ref().expect("hierarchy link missing");
             let mut fine_assign = vec![0u32; finer.graph.num_nodes()];
             for (f, &c) in map.iter().enumerate() {
@@ -170,9 +251,11 @@ pub fn partition(g: &Hypergraph, hw: &NmhConfig, params: HierParams) -> Result<P
             assign = fine_assign;
         }
         num_parts = num_parts.max(assign.iter().map(|&p| p as usize + 1).max().unwrap_or(0));
+        // `level` (its owned graph + aggregates) drops here
     }
+    stats.refine_secs = t_refine.elapsed().as_secs_f64();
 
-    Ok(Partitioning::new(assign, num_parts).compacted())
+    Ok((Partitioning::new(assign, num_parts).compacted(), stats))
 }
 
 /// Result of one coarsening round.
@@ -182,91 +265,130 @@ struct Matching {
     pairs: usize,
 }
 
-/// One pair-coarsening round: random visit order, exact pairwise
-/// second-order-affinity scoring over co-members, feasibility-checked.
-fn coarsen_round(
+/// Epoch-stamped dense scoring scratch for serial matching (a HashMap
+/// here dominated the whole partitioner's runtime — §Perf: 2.5x on the
+/// Allen-V1 row).
+struct MatchScratch {
+    score: Vec<f64>,
+    stamp: Vec<u32>,
+    touched: Vec<u32>,
+    epoch: u32,
+}
+
+impl MatchScratch {
+    fn new(n: usize) -> Self {
+        MatchScratch {
+            score: vec![0.0; n],
+            stamp: vec![0; n],
+            touched: Vec::new(),
+            epoch: 0,
+        }
+    }
+}
+
+/// The co-member affinity sweep shared by every matching path: bump the
+/// epoch-stamped scoreboard for each co-member of `u` (skipping `u` and
+/// anything `skip` rejects) through u's inbound h-edges (siblings +
+/// source) and its outbound h-edges (its own listeners). Keeping this as
+/// the single copy is what guarantees the serial round and the parallel
+/// propose phase accumulate bit-identical f64 scores.
+fn score_comembers<F: Fn(u32) -> bool>(
+    g: &Hypergraph,
+    u: u32,
+    score: &mut [f64],
+    stamp: &mut [u32],
+    touched: &mut Vec<u32>,
+    epoch: u32,
+    skip: F,
+) {
+    let mut bump = |v: u32, w: f64| {
+        if v == u || skip(v) {
+            return;
+        }
+        let vi = v as usize;
+        if stamp[vi] != epoch {
+            stamp[vi] = epoch;
+            score[vi] = 0.0;
+            touched.push(v);
+        }
+        score[vi] += w;
+    };
+    for &e in g.inbound(u) {
+        let w = g.weight(e) as f64;
+        bump(g.source(e), w);
+        for &d in g.dsts(e) {
+            bump(d, w);
+        }
+    }
+    for &e in g.outbound(u) {
+        let w = g.weight(e) as f64;
+        for &d in g.dsts(e) {
+            bump(d, w);
+        }
+    }
+}
+
+/// Partial selection of the top `k` candidates by (score desc, id asc),
+/// left sorted — hub nodes can touch thousands of nodes, so a full sort
+/// is avoided. Shared by the serial matcher (k = 8) and the parallel
+/// propose phase (k = CAND_K); the comparator being a total order is
+/// what makes "filter a sorted superset" == "sort the filtered subset".
+fn select_top_by_score(touched: &mut Vec<u32>, score: &[f64], k: usize) {
+    let cmp = |a: &u32, b: &u32| {
+        score[*b as usize]
+            .partial_cmp(&score[*a as usize])
+            .unwrap()
+            .then(a.cmp(b))
+    };
+    if touched.len() > k {
+        touched.select_nth_unstable_by(k - 1, cmp);
+        touched.truncate(k);
+    }
+    touched.sort_by(cmp);
+}
+
+/// Serial matching step for one visit node: score the *unmatched*
+/// co-members, select the top 8 by (score desc, id asc), pair with the
+/// first feasible one. Shared verbatim by [`coarsen_round_serial`] and
+/// the parallel commit's exact-recompute fallback, which is what keeps
+/// the two round implementations bit-for-bit interchangeable.
+#[allow(clippy::too_many_arguments)]
+fn match_one_serial(
     g: &Hypergraph,
     axon_mult: &[u32],
     agg: &Aggregates,
     hw: &NmhConfig,
-    rng: &mut Pcg64,
-) -> Matching {
-    let n = g.num_nodes();
-    let mut visit: Vec<u32> = (0..n as u32).collect();
-    rng.shuffle(&mut visit);
-    let mut mate = vec![u32::MAX; n];
-
-    // Scratch: epoch-stamped dense accumulators (a HashMap here dominated
-    // the whole partitioner's runtime — §Perf: 2.5x on the Allen-V1 row).
-    let mut score = vec![0.0f64; n];
-    let mut stamp = vec![0u32; n];
-    let mut touched: Vec<u32> = Vec::new();
-    let mut epoch = 0u32;
-    // edge-membership scratch for merge_feasible's axon-union count
-    let mut edge_stamp = vec![0u32; g.num_edges()];
-    let mut edge_epoch = 0u32;
-
-    for &u in &visit {
-        if mate[u as usize] != u32::MAX {
-            continue;
-        }
-        epoch += 1;
-        touched.clear();
-        {
-            let mut bump = |v: u32, w: f64| {
-                if v == u || mate[v as usize] != u32::MAX {
-                    return;
-                }
-                let vi = v as usize;
-                if stamp[vi] != epoch {
-                    stamp[vi] = epoch;
-                    score[vi] = 0.0;
-                    touched.push(v);
-                }
-                score[vi] += w;
-            };
-            // co-members through u's inbound h-edges (siblings + source)…
-            for &e in g.inbound(u) {
-                let w = g.weight(e) as f64;
-                bump(g.source(e), w);
-                for &d in g.dsts(e) {
-                    bump(d, w);
-                }
-            }
-            // …and through its outbound h-edges (its own listeners)
-            for &e in g.outbound(u) {
-                let w = g.weight(e) as f64;
-                for &d in g.dsts(e) {
-                    bump(d, w);
-                }
-            }
-        }
-        if touched.is_empty() {
-            continue;
-        }
-        // best-scoring feasible partner: try the top candidates only
-        // (partial selection — hub nodes can touch thousands of nodes)
-        let cmp = |a: &u32, b: &u32| {
-            score[*b as usize]
-                .partial_cmp(&score[*a as usize])
-                .unwrap()
-                .then(a.cmp(b))
-        };
-        if touched.len() > 8 {
-            touched.select_nth_unstable_by(7, cmp);
-            touched.truncate(8);
-        }
-        touched.sort_by(cmp);
-        for &v in touched.iter().take(8) {
-            if merge_feasible(g, axon_mult, agg, hw, u, v, &mut edge_stamp, &mut edge_epoch) {
-                mate[u as usize] = v;
-                mate[v as usize] = u;
-                break;
-            }
+    u: u32,
+    mate: &mut [u32],
+    scr: &mut MatchScratch,
+    edge_stamp: &mut [u32],
+    edge_epoch: &mut u32,
+) {
+    let MatchScratch { score, stamp, touched, epoch } = scr;
+    *epoch += 1;
+    touched.clear();
+    {
+        let mate = &*mate;
+        score_comembers(g, u, score, stamp, touched, *epoch, |v| {
+            mate[v as usize] != u32::MAX
+        });
+    }
+    if touched.is_empty() {
+        return;
+    }
+    select_top_by_score(touched, score, 8);
+    for &v in touched.iter().take(8) {
+        if merge_feasible(g, axon_mult, agg, hw, u, v, edge_stamp, edge_epoch) {
+            mate[u as usize] = v;
+            mate[v as usize] = u;
+            break;
         }
     }
+}
 
-    // enumerate coarse ids
+/// Number matched pairs/singletons into consecutive coarse ids.
+fn enumerate_matching(mate: &[u32]) -> Matching {
+    let n = mate.len();
     let mut assign = vec![u32::MAX; n];
     let mut next = 0u32;
     let mut pairs = 0usize;
@@ -287,6 +409,142 @@ fn coarsen_round(
         num_coarse: next as usize,
         pairs,
     }
+}
+
+/// One pair-coarsening round, fully serial: random visit order, exact
+/// pairwise second-order-affinity scoring over co-members,
+/// feasibility-checked. The reference implementation the parallel round
+/// must reproduce bit-for-bit.
+fn coarsen_round_serial(
+    g: &Hypergraph,
+    axon_mult: &[u32],
+    agg: &Aggregates,
+    hw: &NmhConfig,
+    rng: &mut Pcg64,
+) -> Matching {
+    let n = g.num_nodes();
+    let mut visit: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut visit);
+    let mut mate = vec![u32::MAX; n];
+    let mut scr = MatchScratch::new(n);
+    // edge-membership scratch for merge_feasible's axon-union count
+    let mut edge_stamp = vec![0u32; g.num_edges()];
+    let mut edge_epoch = 0u32;
+    for &u in &visit {
+        if mate[u as usize] != u32::MAX {
+            continue;
+        }
+        match_one_serial(g, axon_mult, agg, hw, u, &mut mate, &mut scr, &mut edge_stamp, &mut edge_epoch);
+    }
+    enumerate_matching(&mate)
+}
+
+/// Per-node output of the parallel propose phase: the top-`CAND_K`
+/// candidate partners in (score desc, id asc) order, plus whether the
+/// stored prefix is the node's *complete* candidate list.
+#[derive(Clone, Copy)]
+struct NodeProposal {
+    len: u8,
+    complete: bool,
+    cands: [u32; CAND_K],
+}
+
+impl Default for NodeProposal {
+    fn default() -> Self {
+        NodeProposal { len: 0, complete: true, cands: [0; CAND_K] }
+    }
+}
+
+/// Two-phase deterministic parallel coarsening round.
+///
+/// *Propose* (parallel): every node's co-member affinity scores — the
+/// loop that dominates a round — are computed over fixed node chunks with
+/// per-worker epoch-stamped scratch; nothing is matched at round start,
+/// so scores are independent of scheduling and each node's sorted top-K
+/// candidate list is exactly the serial scoreboard minus the
+/// matched-filter.
+///
+/// *Commit* (serial): walk the seeded visit order; for each unmatched
+/// node try its stored candidates, skipping ones matched meanwhile, under
+/// the serial 8-attempt budget. A node's stored prefix can only diverge
+/// from the serial behavior when it runs dry early (most of its best
+/// partners taken) *and* was truncated — then the commit falls back to
+/// [`match_one_serial`], the exact serial code path. Result: bit-for-bit
+/// identical to [`coarsen_round_serial`] for the same rng state (tested
+/// by `coarsen_round_parallel_matches_serial`).
+fn coarsen_round_parallel(
+    g: &Hypergraph,
+    axon_mult: &[u32],
+    agg: &Aggregates,
+    hw: &NmhConfig,
+    rng: &mut Pcg64,
+    threads: usize,
+    props: &mut Vec<NodeProposal>,
+) -> Matching {
+    let n = g.num_nodes();
+    let mut visit: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut visit);
+
+    // ---- propose (parallel over fixed node chunks) ----
+    props.clear();
+    props.resize(n, NodeProposal::default());
+    let chunk = crate::util::div_ceil(n, threads).max(1);
+    crate::util::par::par_chunks_mut(props, chunk, threads, |ci, slice| {
+        let base = ci * chunk;
+        let mut score = vec![0.0f64; n];
+        let mut stamp = vec![0u32; n];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut epoch = 0u32;
+        for (k, slot) in slice.iter_mut().enumerate() {
+            let u = (base + k) as u32;
+            epoch += 1;
+            touched.clear();
+            // same sweep as the serial matcher, minus the matched-filter
+            // (nothing is matched at round start)
+            score_comembers(g, u, &mut score, &mut stamp, &mut touched, epoch, |_| false);
+            let total = touched.len();
+            select_top_by_score(&mut touched, &score, CAND_K);
+            slot.len = touched.len() as u8;
+            slot.complete = total <= CAND_K;
+            slot.cands[..touched.len()].copy_from_slice(&touched);
+        }
+    });
+
+    // ---- commit (serial, seeded visit order) ----
+    let mut mate = vec![u32::MAX; n];
+    let mut edge_stamp = vec![0u32; g.num_edges()];
+    let mut edge_epoch = 0u32;
+    let mut fallback: Option<MatchScratch> = None;
+    for &u in &visit {
+        if mate[u as usize] != u32::MAX {
+            continue;
+        }
+        let p = &props[u as usize];
+        let mut tried = 0usize;
+        let mut matched = false;
+        for &v in &p.cands[..p.len as usize] {
+            if mate[v as usize] != u32::MAX {
+                continue;
+            }
+            tried += 1;
+            if merge_feasible(g, axon_mult, agg, hw, u, v, &mut edge_stamp, &mut edge_epoch) {
+                mate[u as usize] = v;
+                mate[v as usize] = u;
+                matched = true;
+                break;
+            }
+            if tried == 8 {
+                break;
+            }
+        }
+        if !matched && tried < 8 && !p.complete {
+            // stored prefix ran dry before the serial attempt budget:
+            // recompute this node exactly as the serial round would
+            let scr = fallback.get_or_insert_with(|| MatchScratch::new(n));
+            match_one_serial(g, axon_mult, agg, hw, u, &mut mate, scr, &mut edge_stamp, &mut edge_epoch);
+        }
+    }
+    enumerate_matching(&mate)
 }
 
 /// Would merging coarse nodes u and v stay within per-core limits?
@@ -327,19 +585,53 @@ fn merge_feasible(
     axons <= hw.c_apc as u64
 }
 
-/// FM-style greedy move refiner at one hierarchy level.
-///
-/// Gains for *all* candidate partitions of a node are computed in one
-/// sweep of its inbound h-edges using the cover decomposition
+/// Per-worker scratch for the refinement propose phase: epoch-stamped
+/// dense per-partition accumulators for the cover decomposition
 ///
 ///   gain(u: p→q) = base − (W_u − cover_w(q)),
 ///   base        = Σ_{e∋u} w(e)·[u is e's only destination in p],
 ///   W_u         = Σ_{e∋u} w(e),
 ///   cover_w(q)  = Σ_{e∋u} w(e)·[e already reaches q],
 ///
-/// with epoch-stamped dense accumulators — no (edge, partition) hash map
-/// (which previously dominated hierarchical partitioning; §Perf: 47 s →
-/// ~8 s on the Allen-V1 row).
+/// — no (edge, partition) hash map (which previously dominated
+/// hierarchical partitioning; §Perf: 47 s → ~8 s on the Allen-V1 row).
+struct ProposeScratch {
+    cover_w: Vec<f64>,
+    cover_mult: Vec<u64>,
+    cand_stamp: Vec<u32>,
+    epoch: u32,
+    // per-edge partition dedup stamp (one bump per scanned edge)
+    pstamp: Vec<u32>,
+    pepoch: u32,
+    cands: Vec<u32>,
+}
+
+impl ProposeScratch {
+    fn new(num_parts: usize) -> Self {
+        ProposeScratch {
+            cover_w: vec![0.0; num_parts],
+            cover_mult: vec![0; num_parts],
+            cand_stamp: vec![0; num_parts],
+            epoch: 0,
+            pstamp: vec![0; num_parts],
+            pepoch: 0,
+            cands: Vec::new(),
+        }
+    }
+}
+
+/// Boundary-driven greedy move refiner at one hierarchy level.
+///
+/// Instead of re-sweeping all n nodes every pass (the old engine), a
+/// work-list holds only *boundary* nodes — destinations of h-edges whose
+/// destination set spans ≥ 2 partitions; every other node provably has no
+/// Eq. 7 gain candidate. Each pass is two-phase: gains are precomputed in
+/// parallel chunks against the pass-start assignment (read-only, so any
+/// worker count gives identical proposals), then moves are re-verified
+/// against the *current* assignment and applied serially in the seeded
+/// visit order; each applied move re-enqueues the co-members whose gains
+/// it invalidated. Serial and parallel execution are bit-for-bit
+/// identical by construction (and tested).
 struct Refiner<'a> {
     g: &'a Hypergraph,
     axon_mult: &'a [u32],
@@ -349,14 +641,9 @@ struct Refiner<'a> {
     part_nodes: Vec<u64>,
     part_syn: Vec<u64>,
     part_axons: Vec<u64>,
-    // per-pass scratch, stamped by candidate-collection epoch
-    cover_w: Vec<f64>,
-    cover_mult: Vec<u64>,
-    cand_stamp: Vec<u32>,
-    epoch: u32,
-    // per-edge partition dedup stamp (one bump per scanned edge)
-    pstamp: Vec<u32>,
-    pepoch: u32,
+    /// nodes to (re)visit next pass; `in_list` dedups membership
+    worklist: Vec<u32>,
+    in_list: Vec<bool>,
 }
 
 impl<'a> Refiner<'a> {
@@ -377,108 +664,206 @@ impl<'a> Refiner<'a> {
             part_nodes: vec![0; num_parts],
             part_syn: vec![0; num_parts],
             part_axons: vec![0; num_parts],
-            cover_w: vec![0.0; num_parts],
-            cover_mult: vec![0; num_parts],
-            cand_stamp: vec![0; num_parts],
-            epoch: 0,
-            pstamp: vec![0; num_parts],
-            pepoch: 0,
+            worklist: Vec::new(),
+            in_list: vec![false; g.num_nodes()],
         };
         for v in 0..g.num_nodes() {
             let p = r.assign[v] as usize;
             r.part_nodes[p] += agg.node_count[v] as u64;
             r.part_syn[p] += agg.syn_count[v];
         }
-        // part_axons: Σ mult over distinct (edge, partition) incidences
+        // One sweep: part_axons (Σ mult over distinct (edge, partition)
+        // incidences) fused with boundary detection for the work-list.
         let mut stamp = vec![u32::MAX; num_parts];
         for e in g.edge_ids() {
-            for &d in g.dsts(e) {
+            let dsts = g.dsts(e);
+            let first = dsts.first().map(|&d| r.assign[d as usize]);
+            let mut spanning = false;
+            for &d in dsts {
                 let p = r.assign[d as usize];
                 if stamp[p as usize] != e {
                     stamp[p as usize] = e;
                     r.part_axons[p as usize] += axon_mult[e as usize] as u64;
+                }
+                if Some(p) != first {
+                    spanning = true;
+                }
+            }
+            if spanning {
+                for &d in dsts {
+                    if !r.in_list[d as usize] {
+                        r.in_list[d as usize] = true;
+                        r.worklist.push(d);
+                    }
                 }
             }
         }
         r
     }
 
-    /// One refinement pass over all nodes in random order; returns the
-    /// number of applied moves.
-    fn pass(&mut self, rng: &mut Pcg64) -> usize {
-        let n = self.g.num_nodes();
-        let mut visit: Vec<u32> = (0..n as u32).collect();
-        rng.shuffle(&mut visit);
+    /// Target partition of the best positive-gain feasible move for `u`
+    /// against the pass-start state; `u32::MAX` when none. Read-only on
+    /// `self` — the commit phase recomputes the gain anyway, so only the
+    /// chosen target survives the phase boundary.
+    fn propose(&self, u: u32, scr: &mut ProposeScratch) -> u32 {
+        let from = self.assign[u as usize];
+        scr.epoch += 1;
+        scr.cands.clear();
+
+        // single sweep: base gain + per-candidate cover accumulation
+        let mut base = 0.0f64;
+        let mut w_total = 0.0f64;
+        let mut mult_total = 0u64;
+        for &e in self.g.inbound(u) {
+            let w = self.g.weight(e) as f64;
+            let mult = self.axon_mult[e as usize] as u64;
+            w_total += w;
+            mult_total += mult;
+            scr.pepoch += 1;
+            let mut from_others = false;
+            for &d in self.g.dsts(e) {
+                if d == u {
+                    continue;
+                }
+                let p = self.assign[d as usize];
+                if p == from {
+                    from_others = true;
+                    continue;
+                }
+                let pi = p as usize;
+                if scr.pstamp[pi] == scr.pepoch {
+                    continue; // this edge already covers p
+                }
+                scr.pstamp[pi] = scr.pepoch;
+                if scr.cand_stamp[pi] != scr.epoch {
+                    scr.cand_stamp[pi] = scr.epoch;
+                    scr.cover_w[pi] = 0.0;
+                    scr.cover_mult[pi] = 0;
+                    scr.cands.push(p);
+                }
+                scr.cover_w[pi] += w;
+                scr.cover_mult[pi] += mult;
+            }
+            if !from_others {
+                base += w; // u is `from`'s only listener of e
+            }
+        }
+
+        // pick the best feasible positive-gain candidate
+        let mut best: Option<(f64, u32)> = None;
+        for &q in &scr.cands {
+            let qi = q as usize;
+            let gain = base - (w_total - scr.cover_w[qi]);
+            if gain <= 1e-12 {
+                continue;
+            }
+            if best.map(|(g, _)| gain <= g).unwrap_or(false) {
+                continue;
+            }
+            // feasibility: nodes, synapses, axons
+            if self.part_nodes[qi] + self.agg.node_count[u as usize] as u64
+                > self.hw.c_npc as u64
+                || self.part_syn[qi] + self.agg.syn_count[u as usize] > self.hw.c_spc as u64
+                || self.part_axons[qi] + (mult_total - scr.cover_mult[qi])
+                    > self.hw.c_apc as u64
+            {
+                continue;
+            }
+            best = Some((gain, q));
+        }
+        best.map_or(u32::MAX, |(_, q)| q)
+    }
+
+    /// Re-verify a proposed move against the *current* assignment (gains
+    /// and axon deltas shift as earlier commits land) and apply it if it
+    /// still has positive gain and stays feasible.
+    fn commit_move(&mut self, u: u32, q: u32) -> bool {
+        let from = self.assign[u as usize];
+        if q == from {
+            return false;
+        }
+        let mut base = 0.0f64;
+        let mut w_total = 0.0f64;
+        let mut mult_total = 0u64;
+        let mut cover_w_q = 0.0f64;
+        let mut cover_mult_q = 0u64;
+        for &e in self.g.inbound(u) {
+            let w = self.g.weight(e) as f64;
+            let mult = self.axon_mult[e as usize] as u64;
+            w_total += w;
+            mult_total += mult;
+            let mut from_others = false;
+            let mut covers_q = false;
+            for &d in self.g.dsts(e) {
+                if d == u {
+                    continue;
+                }
+                let p = self.assign[d as usize];
+                if p == from {
+                    from_others = true;
+                } else if p == q {
+                    covers_q = true;
+                }
+            }
+            if !from_others {
+                base += w;
+            }
+            if covers_q {
+                cover_w_q += w;
+                cover_mult_q += mult;
+            }
+        }
+        let gain = base - (w_total - cover_w_q);
+        if gain <= 1e-12 {
+            return false;
+        }
+        let qi = q as usize;
+        if self.part_nodes[qi] + self.agg.node_count[u as usize] as u64 > self.hw.c_npc as u64
+            || self.part_syn[qi] + self.agg.syn_count[u as usize] > self.hw.c_spc as u64
+            || self.part_axons[qi] + (mult_total - cover_mult_q) > self.hw.c_apc as u64
+        {
+            return false;
+        }
+        self.apply_move(u, from, q);
+        true
+    }
+
+    /// One two-phase refinement pass over the current work-list; returns
+    /// the number of applied moves (0 = work-list empty or no gains).
+    fn pass(&mut self, rng: &mut Pcg64, threads: usize) -> usize {
+        if self.worklist.is_empty() {
+            return 0;
+        }
+        let mut order = std::mem::take(&mut self.worklist);
+        for &u in &order {
+            self.in_list[u as usize] = false;
+        }
+        rng.shuffle(&mut order);
+
+        // ---- propose (parallel chunks, read-only, pass-start state) ----
+        let threads = if order.len() >= PAR_MIN_NODES { threads.max(1) } else { 1 };
+        let chunk = crate::util::div_ceil(order.len(), threads).max(1);
+        let mut proposals: Vec<u32> = vec![u32::MAX; order.len()];
+        {
+            let this = &*self;
+            let order = &order;
+            crate::util::par::par_chunks_mut(&mut proposals, chunk, threads, |ci, slice| {
+                let base = ci * chunk;
+                let mut scr = ProposeScratch::new(this.part_nodes.len());
+                for (k, slot) in slice.iter_mut().enumerate() {
+                    *slot = this.propose(order[base + k], &mut scr);
+                }
+            });
+        }
+
+        // ---- commit (serial, in visit order) ----
         let mut moves = 0usize;
-        let mut cands: Vec<u32> = Vec::new();
-        for &u in &visit {
-            let from = self.assign[u as usize];
-            self.epoch += 1;
-            cands.clear();
-
-            // single sweep: base gain + per-candidate cover accumulation
-            let mut base = 0.0f64;
-            let mut w_total = 0.0f64;
-            let mut mult_total = 0u64;
-            for &e in self.g.inbound(u) {
-                let w = self.g.weight(e) as f64;
-                let mult = self.axon_mult[e as usize] as u64;
-                w_total += w;
-                mult_total += mult;
-                self.pepoch += 1;
-                let mut from_others = false;
-                for &d in self.g.dsts(e) {
-                    if d == u {
-                        continue;
-                    }
-                    let p = self.assign[d as usize];
-                    if p == from {
-                        from_others = true;
-                        continue;
-                    }
-                    let pi = p as usize;
-                    if self.pstamp[pi] == self.pepoch {
-                        continue; // this edge already covers p
-                    }
-                    self.pstamp[pi] = self.pepoch;
-                    if self.cand_stamp[pi] != self.epoch {
-                        self.cand_stamp[pi] = self.epoch;
-                        self.cover_w[pi] = 0.0;
-                        self.cover_mult[pi] = 0;
-                        cands.push(p);
-                    }
-                    self.cover_w[pi] += w;
-                    self.cover_mult[pi] += mult;
-                }
-                if !from_others {
-                    base += w; // u is `from`'s only listener of e
-                }
+        for (i, &u) in order.iter().enumerate() {
+            let q = proposals[i];
+            if q == u32::MAX {
+                continue;
             }
-
-            // pick the best feasible positive-gain candidate
-            let mut best: Option<(f64, u32)> = None;
-            for &q in &cands {
-                let qi = q as usize;
-                let gain = base - (w_total - self.cover_w[qi]);
-                if gain <= 1e-12 {
-                    continue;
-                }
-                if best.map(|(g, _)| gain <= g).unwrap_or(false) {
-                    continue;
-                }
-                // feasibility: nodes, synapses, axons
-                if self.part_nodes[qi] + self.agg.node_count[u as usize] as u64
-                    > self.hw.c_npc as u64
-                    || self.part_syn[qi] + self.agg.syn_count[u as usize] > self.hw.c_spc as u64
-                    || self.part_axons[qi] + (mult_total - self.cover_mult[qi])
-                        > self.hw.c_apc as u64
-                {
-                    continue;
-                }
-                best = Some((gain, q));
-            }
-            if let Some((_, q)) = best {
-                self.apply_move(u, from, q);
+            if self.commit_move(u, q) {
                 moves += 1;
             }
         }
@@ -491,7 +876,8 @@ impl<'a> Refiner<'a> {
         self.part_nodes[to as usize] += self.agg.node_count[u as usize] as u64;
         self.part_syn[from as usize] -= self.agg.syn_count[u as usize];
         self.part_syn[to as usize] += self.agg.syn_count[u as usize];
-        // exact axon-set maintenance: re-scan each inbound edge's dsts
+        // exact axon-set maintenance: re-scan each inbound edge's dsts,
+        // re-enqueueing the co-members whose gains this move invalidated
         for &e in self.g.inbound(u) {
             let mult = self.axon_mult[e as usize] as u64;
             let mut from_covered = false;
@@ -503,6 +889,10 @@ impl<'a> Refiner<'a> {
                 let p = self.assign[d as usize];
                 from_covered |= p == from;
                 to_covered |= p == to;
+                if !self.in_list[d as usize] {
+                    self.in_list[d as usize] = true;
+                    self.worklist.push(d);
+                }
             }
             if !from_covered {
                 self.part_axons[from as usize] -= mult;
@@ -621,12 +1011,88 @@ mod tests {
         let b = partition(&g, &hw, HierParams::default()).unwrap();
         assert_eq!(a.assign, b.assign);
     }
+
+    #[test]
+    fn coarsen_round_parallel_matches_serial() {
+        // a graph large enough that the parallel dispatch threshold is
+        // genuinely exercised (PAR_MIN_NODES), at several worker counts
+        let mut rng = Pcg64::seeded(33);
+        let g = clusters(8, 80, &mut rng);
+        let n = g.num_nodes();
+        assert!(n >= PAR_MIN_NODES);
+        let agg = Aggregates {
+            node_count: vec![1; n],
+            syn_count: (0..n as u32).map(|v| g.inbound(v).len() as u64).collect(),
+        };
+        let axon_mult = vec![1u32; g.num_edges()];
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 90;
+        let mut rng_s = Pcg64::new(7, 23);
+        let serial = coarsen_round_serial(&g, &axon_mult, &agg, &hw, &mut rng_s);
+        for threads in [2, 3, 8] {
+            let mut rng_p = Pcg64::new(7, 23);
+            let mut props = Vec::new();
+            let par =
+                coarsen_round_parallel(&g, &axon_mult, &agg, &hw, &mut rng_p, threads, &mut props);
+            assert_eq!(par.assign, serial.assign, "threads={threads}");
+            assert_eq!(par.num_coarse, serial.num_coarse);
+            assert_eq!(par.pairs, serial.pairs);
+            // the rng must advance identically (round-to-round coupling)
+            assert_eq!(rng_p.next_u64(), rng_s.clone().next_u64());
+        }
+    }
+
+    #[test]
+    fn parallel_partition_equals_serial_exactly() {
+        // the end-to-end acceptance contract: threads(n) bit-for-bit
+        // identical to the serial path, over multiple seeds
+        let mut rng = Pcg64::seeded(5);
+        let g = clusters(8, 80, &mut rng);
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 96;
+        for seed in [0xC0FFEE, 7, 99] {
+            let mut hp = HierParams { seed, ..HierParams::default() };
+            hp.threads = 1;
+            let serial = partition(&g, &hw, hp).unwrap();
+            for threads in [2, 4, 7] {
+                hp.threads = threads;
+                let par = partition(&g, &hw, hp).unwrap();
+                assert_eq!(serial.assign, par.assign, "seed={seed} threads={threads}");
+                assert_eq!(serial.num_parts, par.num_parts);
+            }
+        }
+    }
+
+    #[test]
+    fn stats_report_levels_and_peak_memory() {
+        let mut rng = Pcg64::seeded(11);
+        let g = clusters(4, 40, &mut rng);
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 40;
+        let (rho, stats) = partition_with_stats(&g, &hw, HierParams::default()).unwrap();
+        validate(&g, &rho, &hw).unwrap();
+        assert!(stats.levels >= 2, "levels={}", stats.levels);
+        assert!(stats.coarsen_secs >= 0.0 && stats.refine_secs >= 0.0);
+        // level 0 borrows the input, so the owned high-water mark is the
+        // coarse levels only — strictly less than "hierarchy + a clone of
+        // the input", the old engine's floor (levels shrink geometrically
+        // in n, sub-geometrically in edges, so allow generous slack)
+        assert!(stats.peak_hierarchy_bytes > 0);
+        assert!(
+            stats.peak_hierarchy_bytes < g.memory_bytes() * (stats.levels - 1).max(1),
+            "peak {} vs input {} over {} owned levels",
+            stats.peak_hierarchy_bytes,
+            g.memory_bytes(),
+            stats.levels - 1
+        );
+    }
 }
 
 /// [`crate::stage::Partitioner`] over the multilevel algorithm (registry
 /// name "hierarchical"). The coarsening/refinement seed follows the
 /// pipeline seed from [`crate::stage::StageCtx`] unless pinned by the
-/// `seed` parameter.
+/// `seed` parameter; the worker budget follows `StageCtx::threads`
+/// (performance-only — results are thread-count invariant).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct HierarchicalPartitioner {
     pub params: HierParams,
@@ -669,6 +1135,7 @@ impl crate::stage::Partitioner for HierarchicalPartitioner {
     ) -> Result<Partitioning, MapError> {
         let mut hp = self.params;
         hp.seed = self.seed_override.unwrap_or(ctx.seed);
+        hp.threads = ctx.threads.max(1);
         partition(g, hw, hp)
     }
 }

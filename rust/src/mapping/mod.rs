@@ -151,6 +151,37 @@ pub fn validate(g: &Hypergraph, rho: &Partitioning, hw: &NmhConfig) -> Result<()
     Ok(())
 }
 
+/// A single node must fit an empty core, else the graph is unmappable —
+/// the O(1) per-node check behind [`check_nodes_feasible`] and
+/// [`ConstraintTracker::node_feasible`].
+pub fn node_feasible(g: &Hypergraph, hw: &NmhConfig, n: u32) -> Result<(), MapError> {
+    let inb = g.inbound(n).len();
+    if inb > hw.c_spc {
+        return Err(MapError::NodeUnmappable {
+            node: n,
+            reason: format!("{inb} inbound synapses > C_spc={}", hw.c_spc),
+        });
+    }
+    if inb > hw.c_apc {
+        return Err(MapError::NodeUnmappable {
+            node: n,
+            reason: format!("{inb} inbound axons > C_apc={}", hw.c_apc),
+        });
+    }
+    Ok(())
+}
+
+/// Shared partitioner prelude: every node must fit an empty core on its
+/// own (Eqs. 5-6 lower bound), else no partitioning exists and the
+/// algorithm should fail fast instead of mid-run. O(n) — each check is
+/// two index-length comparisons.
+pub fn check_nodes_feasible(g: &Hypergraph, hw: &NmhConfig) -> Result<(), MapError> {
+    for n in 0..g.num_nodes() as u32 {
+        node_feasible(g, hw, n)?;
+    }
+    Ok(())
+}
+
 /// Incremental per-partition constraint bookkeeping shared by the greedy
 /// partitioners: tracks node count, synapse count and the distinct
 /// inbound-axon set of the partition under construction.
@@ -207,20 +238,7 @@ impl<'a> ConstraintTracker<'a> {
 
     /// A single node must fit an empty core, else the graph is unmappable.
     pub fn node_feasible(&self, n: u32) -> Result<(), MapError> {
-        let inb = self.g.inbound(n).len();
-        if inb > self.hw.c_spc {
-            return Err(MapError::NodeUnmappable {
-                node: n,
-                reason: format!("{inb} inbound synapses > C_spc={}", self.hw.c_spc),
-            });
-        }
-        if inb > self.hw.c_apc {
-            return Err(MapError::NodeUnmappable {
-                node: n,
-                reason: format!("{inb} inbound axons > C_apc={}", self.hw.c_apc),
-            });
-        }
-        Ok(())
+        node_feasible(self.g, self.hw, n)
     }
 
     /// Add node `n` to the current partition, updating all counters.
@@ -346,5 +364,19 @@ mod tests {
         let t = ConstraintTracker::new(&g, &hw);
         assert!(t.node_feasible(4).is_ok()); // 1 inbound
         assert!(t.node_feasible(2).is_err()); // 2 inbound > 1
+    }
+
+    #[test]
+    fn check_nodes_feasible_prelude() {
+        let g = star();
+        assert!(check_nodes_feasible(&g, &NmhConfig::small()).is_ok());
+        let mut hw = NmhConfig::small();
+        hw.c_spc = 1;
+        let err = check_nodes_feasible(&g, &hw).unwrap_err();
+        assert!(matches!(err, MapError::NodeUnmappable { node: 2, .. }), "{err}");
+        let mut hw = NmhConfig::small();
+        hw.c_apc = 1;
+        let err = check_nodes_feasible(&g, &hw).unwrap_err();
+        assert!(matches!(err, MapError::NodeUnmappable { .. }), "{err}");
     }
 }

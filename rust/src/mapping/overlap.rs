@@ -291,6 +291,7 @@ pub fn partition_with_params(
     params: OverlapParams,
 ) -> Result<Partitioning, MapError> {
     let e_total = g.num_edges();
+    super::check_nodes_feasible(g, hw)?;
     let mut assign = vec![u32::MAX; g.num_nodes()];
     let mut tracker = ConstraintTracker::new(g, hw);
 
@@ -371,7 +372,7 @@ pub fn partition_with_params(
         while let Some(n) = sb.peek_best(|m| tracker.new_axons(m) as u32) {
             if !tracker.fits(n) {
                 if tracker.npc == 0 {
-                    tracker.node_feasible(n)?;
+                    // prelude proved n fits alone => internal inconsistency
                     return Err(MapError::ConstraintViolated(format!(
                         "node {n} rejected by empty partition"
                     )));
@@ -418,7 +419,7 @@ pub fn partition_with_params(
     for n in 0..g.num_nodes() as u32 {
         if assign[n as usize] == u32::MAX {
             if !tracker.fits(n) {
-                tracker.node_feasible(n)?;
+                // n fits alone (prelude), so rolling over must succeed
                 tracker.reset();
                 part += 1;
                 if part as usize >= hw.num_cores() {

@@ -40,14 +40,14 @@ pub fn partition_with_order(
     order: &[u32],
 ) -> Result<Partitioning, MapError> {
     assert_eq!(order.len(), g.num_nodes());
+    super::check_nodes_feasible(g, hw)?;
     let mut assign = vec![u32::MAX; g.num_nodes()];
     let mut tracker = ConstraintTracker::new(g, hw);
     let mut part = 0u32;
     for &n in order {
         if !tracker.fits(n) {
             if tracker.npc == 0 {
-                tracker.node_feasible(n)?;
-                // feasible alone but fits() failed => internal inconsistency
+                // the prelude proved n fits alone => internal inconsistency
                 return Err(MapError::ConstraintViolated(format!(
                     "node {n} rejected by empty partition"
                 )));
@@ -61,7 +61,6 @@ pub fn partition_with_order(
                 });
             }
             if !tracker.fits(n) {
-                tracker.node_feasible(n)?;
                 return Err(MapError::ConstraintViolated(format!(
                     "node {n} rejected by empty partition"
                 )));

@@ -35,6 +35,7 @@ pub fn partition(
     params: StreamParams,
 ) -> Result<Partitioning, MapError> {
     let n = g.num_nodes();
+    super::check_nodes_feasible(g, hw)?;
     let mut assign = vec![u32::MAX; n];
     let mut tracker = ConstraintTracker::new(g, hw);
     let mut part = 0u32;
@@ -71,7 +72,7 @@ pub fn partition(
 
         if !tracker.fits(v) {
             if tracker.npc == 0 {
-                tracker.node_feasible(v)?;
+                // the prelude proved v fits alone => internal inconsistency
                 return Err(MapError::ConstraintViolated(format!(
                     "node {v} rejected by empty partition"
                 )));

@@ -18,17 +18,45 @@ pub struct SparseSym {
     pub vals: Vec<f64>,
 }
 
+/// Rows per parallel matvec chunk; below one chunk's worth of rows the
+/// scoped-thread spawn overhead dominates and the sweep runs inline.
+const MATVEC_ROW_CHUNK: usize = 512;
+
 impl SparseSym {
-    /// y = A x
+    /// y = A x (serial).
     pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        self.matvec_threads(x, y, 1)
+    }
+
+    /// y = A x over up to `threads` workers, row-chunked through
+    /// [`crate::util::par::par_chunks_mut`]. Each output row is an
+    /// independent dot product computed in the same index order as the
+    /// serial sweep, so the result is bit-for-bit identical for every
+    /// worker count (tested by `matvec_parallel_equals_serial_exactly`).
+    pub fn matvec_threads(&self, x: &[f64], y: &mut [f64], threads: usize) {
         debug_assert_eq!(x.len(), self.n);
-        for r in 0..self.n {
-            let mut acc = 0.0;
-            for i in self.row_off[r]..self.row_off[r + 1] {
-                acc += self.vals[i] * x[self.cols[i] as usize];
+        debug_assert_eq!(y.len(), self.n);
+        let row_range = |r: usize| self.row_off[r]..self.row_off[r + 1];
+        if threads <= 1 || self.n < 2 * MATVEC_ROW_CHUNK {
+            for (r, yr) in y.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for i in row_range(r) {
+                    acc += self.vals[i] * x[self.cols[i] as usize];
+                }
+                *yr = acc;
             }
-            y[r] = acc;
+            return;
         }
+        crate::util::par::par_chunks_mut(y, MATVEC_ROW_CHUNK, threads, |ci, ys| {
+            let base = ci * MATVEC_ROW_CHUNK;
+            for (k, yr) in ys.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for i in row_range(base + k) {
+                    acc += self.vals[i] * x[self.cols[i] as usize];
+                }
+                *yr = acc;
+            }
+        });
     }
 
     pub fn nnz(&self) -> usize {
@@ -124,6 +152,19 @@ pub fn smallest_nontrivial_eigs(
     iters: usize,
     subspace: usize,
 ) -> (Vec<[f64; 2]>, [f64; 2]) {
+    smallest_nontrivial_eigs_threads(prob, iters, subspace, 1)
+}
+
+/// [`smallest_nontrivial_eigs`] with a worker budget for the matvec
+/// sweeps (the iteration's dominant cost). Bit-for-bit identical results
+/// for every `threads` value — the Gram–Schmidt stays serial and the
+/// parallel matvec is row-exact.
+pub fn smallest_nontrivial_eigs_threads(
+    prob: &LaplacianProblem,
+    iters: usize,
+    subspace: usize,
+    threads: usize,
+) -> (Vec<[f64; 2]>, [f64; 2]) {
     let n = prob.lap.n;
     let k = subspace.max(2);
     // deterministic sin-hash init (same spirit as the AOT artifact)
@@ -143,7 +184,7 @@ pub fn smallest_nontrivial_eigs(
     for _ in 0..iters {
         for col in q.iter_mut() {
             // y = M col = 2 col - L col
-            prob.lap.matvec(col, &mut y);
+            prob.lap.matvec_threads(col, &mut y, threads);
             for i in 0..n {
                 col[i] = 2.0 * col[i] - y[i];
             }
@@ -154,7 +195,7 @@ pub fn smallest_nontrivial_eigs(
     // Rayleigh quotients under L̂ for the two leading columns.
     let mut lam = [0.0f64; 2];
     for (c, l) in lam.iter_mut().enumerate() {
-        prob.lap.matvec(&q[c], &mut y);
+        prob.lap.matvec_threads(&q[c], &mut y, threads);
         *l = dot(&q[c], &y);
     }
     let coords: Vec<[f64; 2]> = (0..n).map(|i| [q[0][i], q[1][i]]).collect();
@@ -251,6 +292,37 @@ mod tests {
         }
         for i in 4..8 {
             assert_eq!(coords[i][0].signum(), -s0, "node {i}");
+        }
+    }
+
+    #[test]
+    fn matvec_parallel_equals_serial_exactly() {
+        // a matrix wide enough to clear the inline threshold, with
+        // adversarial magnitudes: per-row dot products must be computed
+        // in identical index order on every path
+        let n = 3 * super::MATVEC_ROW_CHUNK + 17;
+        let mut rng = crate::util::rng::Pcg64::seeded(4);
+        let mut row_off = Vec::with_capacity(n + 1);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        row_off.push(0);
+        for r in 0..n {
+            for _ in 0..rng.range(1, 6) {
+                cols.push(rng.below(n) as u32);
+                vals.push(if rng.bernoulli(0.2) { 1e12 } else { rng.next_f64() - 0.5 });
+            }
+            row_off.push(cols.len());
+        }
+        let a = SparseSym { n, row_off, cols, vals };
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let mut y_serial = vec![0.0; n];
+        a.matvec(&x, &mut y_serial);
+        for threads in [2, 3, 8] {
+            let mut y_par = vec![0.0; n];
+            a.matvec_threads(&x, &mut y_par, threads);
+            for (s, p) in y_serial.iter().zip(&y_par) {
+                assert_eq!(s.to_bits(), p.to_bits(), "threads={threads}");
+            }
         }
     }
 

@@ -28,17 +28,20 @@ pub trait EmbeddingEngine {
 pub struct NativeEigen {
     pub iters: usize,
     pub subspace: usize,
+    /// Worker budget for the matvec sweeps (1 = serial; results are
+    /// bit-for-bit identical for every value).
+    pub threads: usize,
 }
 
 impl Default for NativeEigen {
     fn default() -> Self {
-        NativeEigen { iters: 400, subspace: 8 }
+        NativeEigen { iters: 400, subspace: 8, threads: 1 }
     }
 }
 
 impl EmbeddingEngine for NativeEigen {
     fn embed(&self, prob: &LaplacianProblem) -> Vec<[f64; 2]> {
-        eigen::smallest_nontrivial_eigs(prob, self.iters, self.subspace).0
+        eigen::smallest_nontrivial_eigs_threads(prob, self.iters, self.subspace, self.threads).0
     }
 }
 
@@ -295,7 +298,11 @@ impl crate::stage::Placer for SpectralPlacer {
             None => place_with_engine(
                 gp,
                 hw,
-                &NativeEigen { iters: self.iters, subspace: self.subspace },
+                &NativeEigen {
+                    iters: self.iters,
+                    subspace: self.subspace,
+                    threads: ctx.threads.max(1),
+                },
             ),
         };
         Ok(pl)

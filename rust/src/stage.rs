@@ -39,7 +39,9 @@ pub struct StageCtx<'a> {
     /// randomness from this (uniform `--seed` behavior).
     pub seed: u64,
     /// Worker-pool width available to the stage (1 = serial). Must be a
-    /// performance knob only, never a semantics knob (DESIGN.md §6).
+    /// performance knob only, never a semantics knob (DESIGN.md §6) —
+    /// the hierarchical partitioner's two-phase rounds and the spectral
+    /// placer's parallel matvec both honor this bit-for-bit (§10).
     pub threads: usize,
     /// Layer ranges of layered (ANN-derived) networks, `None` for cyclic
     /// nets; order-sensitive partitioners may exploit this.

@@ -15,6 +15,16 @@ pub fn div_ceil(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
+/// Whether stage-timing diagnostics (`SNNMAP_TIMING`) are enabled.
+///
+/// The env var is read once per process — hot loops (the multilevel
+/// partitioner checks this per coarsening round) must not pay a
+/// `std::env::var` syscall + UTF-8 validation each time.
+pub fn timing_enabled() -> bool {
+    static ENABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ENABLED.get_or_init(|| std::env::var("SNNMAP_TIMING").is_ok())
+}
+
 /// Arithmetic mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {

@@ -112,6 +112,46 @@ where
     parts.into_iter().reduce(merge)
 }
 
+/// Parallel mutable-chunk sweep: splits `data` into *fixed-size* chunks
+/// and calls `f(chunk_index, chunk)` for each, distributing chunks over
+/// up to `threads` workers with dynamic scheduling (a mutex-guarded
+/// `chunks_mut` iterator hands out disjoint slices — no unsafe).
+///
+/// Each element is written by exactly one invocation, so as long as `f`
+/// computes chunk contents independently of scheduling (the contract all
+/// callers in this crate obey), the result is bit-for-bit identical for
+/// any worker count. `threads <= 1` runs inline.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    let chunk = chunk.max(1);
+    let n_chunks = crate::util::div_ceil(data.len(), chunk);
+    let threads = threads.min(n_chunks).max(1);
+    if threads <= 1 {
+        for (i, s) in data.chunks_mut(chunk).enumerate() {
+            f(i, s);
+        }
+        return;
+    }
+    let jobs = Mutex::new(data.chunks_mut(chunk).enumerate());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let next = jobs.lock().unwrap().next();
+                match next {
+                    Some((i, s)) => f(i, s),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,6 +206,32 @@ mod tests {
     #[test]
     fn chunked_fold_empty_is_none() {
         assert!(chunked_fold(0, 8, 4, |_| 0u32, |a, b| a + b).is_none());
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_every_slot_once() {
+        for threads in [1, 2, 7] {
+            let mut data = vec![0usize; 103];
+            par_chunks_mut(&mut data, 8, threads, |ci, s| {
+                for (k, v) in s.iter_mut().enumerate() {
+                    *v = ci * 8 + k + 1;
+                }
+            });
+            let want: Vec<usize> = (1..=103).collect();
+            assert_eq!(data, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_empty_and_tiny() {
+        let mut empty: Vec<u32> = vec![];
+        par_chunks_mut(&mut empty, 4, 4, |_, _| panic!("no chunks expected"));
+        let mut one = vec![0u32];
+        par_chunks_mut(&mut one, 4, 4, |ci, s| {
+            assert_eq!(ci, 0);
+            s[0] = 9;
+        });
+        assert_eq!(one, vec![9]);
     }
 
     #[test]

@@ -289,3 +289,51 @@ fn prop_wirelength_translation_invariant() {
         }
     }
 }
+
+/// Property 10: hierarchical partitioning over seeded random SNNs
+/// (the paper's x_rand difficulty spike) always respects C_npc / C_spc /
+/// C_apc, emits a compacted assignment (no empty partition ids), and is
+/// bit-for-bit invariant to the worker count of its two-phase engine.
+#[test]
+fn prop_hierarchical_random_snn_valid_compacted_thread_invariant() {
+    use snnmap::mapping::hierarchical::{self, HierParams};
+    use snnmap::snn::random::{build, RandomSnnParams};
+    for (case, seed) in [3u64, 17, 101].into_iter().enumerate() {
+        let snn = build(RandomSnnParams {
+            nodes: 1200,
+            mean_cardinality: 6.0,
+            decay: 0.1,
+            seed,
+        });
+        let g = &snn.graph;
+        let max_in = g.node_ids().map(|v| g.inbound(v).len()).max().unwrap_or(1);
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 64;
+        hw.c_apc = (max_in * 6).max(64);
+        hw.c_spc = (max_in * 12).max(128);
+        let reference = hierarchical::partition(
+            g,
+            &hw,
+            HierParams { seed: seed ^ 0xA5A5, threads: 1, ..HierParams::default() },
+        )
+        .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        // constraint-valid (Eqs. 4-6) and compacted: every id below
+        // num_parts is used by at least one node
+        mapping::validate(g, &reference, &hw).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let sizes = reference.sizes();
+        assert!(
+            sizes.iter().all(|&s| s > 0),
+            "case {case}: empty partition in {sizes:?}"
+        );
+        for threads in [2, 4, 8] {
+            let rho = hierarchical::partition(
+                g,
+                &hw,
+                HierParams { seed: seed ^ 0xA5A5, threads, ..HierParams::default() },
+            )
+            .unwrap_or_else(|e| panic!("case {case} threads {threads}: {e}"));
+            assert_eq!(rho.assign, reference.assign, "case {case} threads {threads}");
+            assert_eq!(rho.num_parts, reference.num_parts);
+        }
+    }
+}
