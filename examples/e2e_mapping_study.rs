@@ -62,7 +62,11 @@ fn main() {
         let mut outcomes = Vec::new();
         for (label, pk, pl) in [
             ("baseline[7]: seq+hilbert+force", PartitionerKind::Sequential, PlacerKind::Hilbert),
-            ("hypergraph: overlap+spectral+force", PartitionerKind::HyperedgeOverlap, PlacerKind::Spectral),
+            (
+                "hypergraph: overlap+spectral+force",
+                PartitionerKind::HyperedgeOverlap,
+                PlacerKind::Spectral,
+            ),
         ] {
             let t0 = std::time::Instant::now();
             let res = MapperPipeline::new(hw)

@@ -8,7 +8,9 @@ use snnmap::coordinator::report::ratio_summary;
 
 fn main() {
     let scale = common::scale();
-    println!("Fig. 10 — mapping performance across partitioner x placement combos (scale {scale})");
+    println!(
+        "Fig. 10 — mapping performance across partitioner x placement combos (scale {scale})"
+    );
     common::hr();
     let mut spec = GridSpec::fig10(scale);
     spec.networks = common::bench_suite().into_iter().map(String::from).collect();
@@ -90,7 +92,7 @@ fn main() {
     if !impr.is_empty() {
         let min = impr.iter().cloned().fold(f64::INFINITY, f64::min);
         let max = impr.iter().cloned().fold(0.0, f64::max);
-        println!("  force refinement ELP ratio range = {min:.2}..{max:.2}  [paper: metrics to 0.51-0.87x]");
+        println!("  force refinement ELP ratio range = {min:.2}..{max:.2}  [paper: 0.51-0.87x]");
     }
     // mindist speed/quality envelope
     let mut mindist_ratio = Vec::new();

@@ -63,7 +63,9 @@ fn main() {
     // complexity bands (paper: three trends — unordered O(n) at the
     // bottom; overlap/edgemap/ordered-seq O(e·d) in the middle;
     // hierarchical O(e·d²) on top). Verified per network:
-    println!("\ncomplexity bands (expect time: seq-unordered <= overlap ~ edgemap <= hierarchical):");
+    println!(
+        "\ncomplexity bands (expect time: seq-unordered <= overlap ~ edgemap <= hierarchical):"
+    );
     let nets: std::collections::BTreeSet<&str> = rows.iter().map(|r| r.network.as_str()).collect();
     for net in nets {
         let t = |p: &str| {

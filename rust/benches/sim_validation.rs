@@ -15,7 +15,8 @@ fn main() {
     common::hr();
     println!(
         "{:<14} {:<12} {:>12} {:>12} {:>7} {:>12} {:>12} {:>9}",
-        "network", "pipeline", "E_analytic", "E_sim/step", "ratio", "congestion", "peak router", "sim time"
+        "network", "pipeline", "E_analytic", "E_sim/step", "ratio", "congestion", "peak router",
+        "sim time"
     );
     common::hr();
     for name in ["lenet", "allen_v1", "16k_rand"] {

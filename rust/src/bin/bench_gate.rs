@@ -1,0 +1,397 @@
+//! CI bench-regression gate for the BENCH trajectory (DESIGN.md §8).
+//!
+//! Validates a freshly measured `hotpath --json` document against the
+//! committed `BENCH_hotpath.json` baseline:
+//!
+//! 1. **Schema** — every kernel row and metric key the baseline declares
+//!    must be present in the measured document with a finite numeric
+//!    value (so renamed/dropped kernels fail loudly instead of silently
+//!    leaving the trajectory empty). Extra measured rows are reported as
+//!    new, never fatal.
+//! 2. **Regression** — wherever the baseline value is non-null, the
+//!    measured value must not regress by more than the tolerance
+//!    (default 25%, the CI bound; DESIGN.md §8's 20% is the human
+//!    review bound). Rate-like metrics (`*_per_s`) gate downward,
+//!    time/space-like metrics (`secs_per_iter`, `memory_bytes`) gate
+//!    upward; count-like metrics (`sweeps`, `n`, ...) are
+//!    informational. Null baselines are reported as *ungated* — with
+//!    today's all-null trajectory the gate passes while printing every
+//!    row it is not yet guarding.
+//!
+//! Usage (CI runs this from `rust/`):
+//!
+//!     cargo run --release --bin bench_gate -- \
+//!         --measured bench_out.json --baseline ../BENCH_hotpath.json
+//!
+//! Exit code 0 = pass, 1 = schema or regression failure.
+
+use snnmap::util::cli::Args;
+use snnmap::util::json::Json;
+
+/// Relative regression tolerance (0.25 = fail beyond 25%).
+const DEFAULT_TOLERANCE: f64 = 0.25;
+
+/// Gating direction of one metric key.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Direction {
+    /// Throughput: regression = measured falls below baseline.
+    HigherIsBetter,
+    /// Time or space: regression = measured rises above baseline.
+    LowerIsBetter,
+    /// Descriptive (sweep counts, problem sizes): never gated.
+    Informational,
+}
+
+fn direction_of(metric: &str) -> Direction {
+    if metric.ends_with("_per_s") {
+        Direction::HigherIsBetter
+    } else if metric == "secs_per_iter" || metric == "memory_bytes" {
+        Direction::LowerIsBetter
+    } else {
+        Direction::Informational
+    }
+}
+
+/// Outcome of gating one (kernel, metric) cell.
+#[derive(Debug)]
+enum Cell {
+    /// Baseline null: nothing to gate yet.
+    Ungated { kernel: String, metric: String },
+    /// Gated and within tolerance.
+    Ok,
+    /// Gated and out of tolerance.
+    Regressed {
+        kernel: String,
+        metric: String,
+        baseline: f64,
+        measured: f64,
+    },
+    Informational,
+}
+
+/// Run the full gate. `Ok(report)` = pass (the report lists ungated
+/// rows); `Err(failures)` = schema violations and/or regressions.
+fn gate(measured: &Json, baseline: &Json, tolerance: f64) -> Result<Vec<String>, Vec<String>> {
+    let mut failures: Vec<String> = Vec::new();
+    let mut report: Vec<String> = Vec::new();
+
+    if let Some(name) = baseline.get("bench").as_str() {
+        if measured.get("bench").as_str() != Some(name) {
+            failures.push(format!(
+                "schema: measured 'bench' is {:?}, baseline expects {name:?}",
+                measured.get("bench").as_str()
+            ));
+        }
+    }
+    // Scale must match once the baseline records one: cross-scale
+    // throughput comparisons are meaningless.
+    if let Some(scale) = baseline.get("scale").as_f64() {
+        match measured.get("scale").as_f64() {
+            Some(m) if (m - scale).abs() < 1e-12 => {}
+            other => failures.push(format!(
+                "schema: measured scale {other:?} != baseline scale {scale}"
+            )),
+        }
+    }
+
+    let base_kernels = match baseline.get("kernels").as_obj() {
+        Some(m) => m,
+        None => {
+            failures.push("schema: baseline has no 'kernels' object".into());
+            return Err(failures);
+        }
+    };
+    let meas_kernels = match measured.get("kernels").as_obj() {
+        Some(m) => m,
+        None => {
+            failures.push("schema: measured document has no 'kernels' object".into());
+            return Err(failures);
+        }
+    };
+
+    let mut ungated = 0usize;
+    let mut gated = 0usize;
+    for (kernel, base_row) in base_kernels {
+        // The optional PJRT row only appears when artifacts exist on the
+        // measuring host; it never blocks the gate.
+        let optional = kernel == "spectral_pjrt";
+        let meas_row = match meas_kernels.get(kernel) {
+            Some(r) => r,
+            None if optional => continue,
+            None => {
+                failures.push(format!("schema: kernel '{kernel}' missing from measured run"));
+                continue;
+            }
+        };
+        let base_metrics = match base_row.as_obj() {
+            Some(m) => m,
+            None => {
+                failures.push(format!("schema: baseline kernel '{kernel}' is not an object"));
+                continue;
+            }
+        };
+        for (metric, base_val) in base_metrics {
+            let meas_val = meas_row.get(metric).as_f64();
+            let meas_val = match meas_val {
+                Some(v) if v.is_finite() => v,
+                _ => {
+                    failures.push(format!(
+                        "schema: '{kernel}.{metric}' missing or non-numeric in measured run"
+                    ));
+                    continue;
+                }
+            };
+            match check_cell(kernel, metric, base_val, meas_val, tolerance) {
+                Cell::Ungated { kernel, metric } => {
+                    ungated += 1;
+                    report.push(format!("ungated (null baseline): {kernel}.{metric}"));
+                }
+                Cell::Ok => gated += 1,
+                Cell::Regressed { kernel, metric, baseline, measured } => {
+                    gated += 1;
+                    failures.push(format!(
+                        "regression: {kernel}.{metric} measured {measured:.6e} vs baseline \
+                         {baseline:.6e} (tolerance {:.0}%)",
+                        tolerance * 100.0
+                    ));
+                }
+                Cell::Informational => {}
+            }
+        }
+    }
+    for kernel in meas_kernels.keys() {
+        if !base_kernels.contains_key(kernel) {
+            report.push(format!("new kernel (not in baseline): {kernel}"));
+        }
+    }
+    report.push(format!("{gated} cells gated, {ungated} ungated"));
+
+    if failures.is_empty() {
+        Ok(report)
+    } else {
+        Err(failures)
+    }
+}
+
+fn check_cell(kernel: &str, metric: &str, base: &Json, measured: f64, tol: f64) -> Cell {
+    let dir = direction_of(metric);
+    if dir == Direction::Informational {
+        return Cell::Informational;
+    }
+    let base = match base.as_f64() {
+        None => {
+            // Json::Null (or a non-number, which the emitter never
+            // writes): the trajectory has no baseline here yet.
+            return Cell::Ungated { kernel: kernel.into(), metric: metric.into() };
+        }
+        Some(b) => b,
+    };
+    let regressed = match dir {
+        Direction::HigherIsBetter => measured < base * (1.0 - tol),
+        Direction::LowerIsBetter => measured > base * (1.0 + tol),
+        Direction::Informational => false,
+    };
+    if regressed {
+        Cell::Regressed {
+            kernel: kernel.into(),
+            metric: metric.into(),
+            baseline: base,
+            measured,
+        }
+    } else {
+        Cell::Ok
+    }
+}
+
+fn load(path: &str) -> Json {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("bench_gate: cannot read {path}: {e}");
+        std::process::exit(1);
+    });
+    Json::parse(&text).unwrap_or_else(|e| {
+        eprintln!("bench_gate: {path} is not valid JSON: {e}");
+        std::process::exit(1);
+    })
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1), &[]);
+    let measured_path = args.get("measured").unwrap_or_else(|| {
+        eprintln!(
+            "usage: bench_gate --measured <run.json> --baseline <BENCH_hotpath.json> \
+             [--tolerance 0.25]"
+        );
+        std::process::exit(1);
+    });
+    let baseline_path = args.get_or("baseline", "../BENCH_hotpath.json");
+    let tolerance = args
+        .get("tolerance")
+        .map(|t| {
+            t.parse::<f64>()
+                .unwrap_or_else(|_| panic!("--tolerance expects a number, got '{t}'"))
+        })
+        .unwrap_or(DEFAULT_TOLERANCE);
+
+    let measured = load(measured_path);
+    let baseline = load(baseline_path);
+    match gate(&measured, &baseline, tolerance) {
+        Ok(report) => {
+            for line in &report {
+                println!("bench_gate: {line}");
+            }
+            println!("bench_gate: PASS ({measured_path} vs {baseline_path})");
+        }
+        Err(failures) => {
+            for line in &failures {
+                eprintln!("bench_gate: {line}");
+            }
+            eprintln!("bench_gate: FAIL ({} problem(s))", failures.len());
+            std::process::exit(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(pairs: Vec<(&str, Json)>) -> Json {
+        Json::obj(pairs)
+    }
+
+    fn doc(scale: Json, kernels: Vec<(&str, Json)>) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("hotpath".into())),
+            ("scale", scale),
+            ("kernels", Json::obj(kernels)),
+        ])
+    }
+
+    #[test]
+    fn null_baseline_passes_and_reports_ungated() {
+        let base = doc(
+            Json::Null,
+            vec![(
+                "overlap_partition",
+                row(vec![("secs_per_iter", Json::Null), ("conn_per_s", Json::Null)]),
+            )],
+        );
+        let meas = doc(
+            Json::Num(0.12),
+            vec![(
+                "overlap_partition",
+                row(vec![("secs_per_iter", Json::Num(0.5)), ("conn_per_s", Json::Num(1e7))]),
+            )],
+        );
+        let report = gate(&meas, &base, 0.25).expect("null baselines must pass");
+        assert!(report.iter().any(|l| l.contains("ungated") && l.contains("conn_per_s")));
+    }
+
+    #[test]
+    fn throughput_regression_fails_and_improvement_passes() {
+        let base = doc(
+            Json::Num(0.12),
+            vec![("k", row(vec![("conn_per_s", Json::Num(1e7))]))],
+        );
+        let slow = doc(
+            Json::Num(0.12),
+            vec![("k", row(vec![("conn_per_s", Json::Num(7.0e6))]))],
+        );
+        let errs = gate(&slow, &base, 0.25).unwrap_err();
+        assert!(errs.iter().any(|l| l.contains("regression: k.conn_per_s")));
+        // within tolerance
+        let ok = doc(
+            Json::Num(0.12),
+            vec![("k", row(vec![("conn_per_s", Json::Num(7.6e6))]))],
+        );
+        assert!(gate(&ok, &base, 0.25).is_ok());
+        // faster is never a regression
+        let fast = doc(
+            Json::Num(0.12),
+            vec![("k", row(vec![("conn_per_s", Json::Num(5e7))]))],
+        );
+        assert!(gate(&fast, &base, 0.25).is_ok());
+    }
+
+    #[test]
+    fn time_and_memory_gate_upward() {
+        let base = doc(
+            Json::Num(0.12),
+            vec![(
+                "k",
+                row(vec![("secs_per_iter", Json::Num(1.0)), ("memory_bytes", Json::Num(1e6))]),
+            )],
+        );
+        let bloated = doc(
+            Json::Num(0.12),
+            vec![(
+                "k",
+                row(vec![("secs_per_iter", Json::Num(1.1)), ("memory_bytes", Json::Num(2e6))]),
+            )],
+        );
+        let errs = gate(&bloated, &base, 0.25).unwrap_err();
+        assert_eq!(errs.len(), 1, "{errs:?}");
+        assert!(errs[0].contains("k.memory_bytes"));
+    }
+
+    #[test]
+    fn missing_kernel_or_metric_is_schema_failure() {
+        let base = doc(
+            Json::Num(0.12),
+            vec![("k", row(vec![("conn_per_s", Json::Null)]))],
+        );
+        let empty = doc(Json::Num(0.12), vec![]);
+        let errs = gate(&empty, &base, 0.25).unwrap_err();
+        assert!(errs.iter().any(|l| l.contains("kernel 'k' missing")));
+        let wrong_metric = doc(
+            Json::Num(0.12),
+            vec![("k", row(vec![("synapse_visits_per_s", Json::Num(1.0))]))],
+        );
+        let errs = gate(&wrong_metric, &base, 0.25).unwrap_err();
+        assert!(errs.iter().any(|l| l.contains("'k.conn_per_s' missing")));
+    }
+
+    #[test]
+    fn informational_metrics_and_new_kernels_never_fail() {
+        let base = doc(
+            Json::Num(0.12),
+            vec![("k", row(vec![("sweeps", Json::Num(100.0)), ("n", Json::Num(64.0))]))],
+        );
+        let meas = doc(
+            Json::Num(0.12),
+            vec![
+                ("k", row(vec![("sweeps", Json::Num(900.0)), ("n", Json::Num(1.0))])),
+                ("brand_new", row(vec![("conn_per_s", Json::Num(1.0))])),
+            ],
+        );
+        let report = gate(&meas, &base, 0.25).expect("informational cells must not gate");
+        assert!(report.iter().any(|l| l.contains("new kernel") && l.contains("brand_new")));
+    }
+
+    #[test]
+    fn scale_mismatch_fails_once_baseline_records_one() {
+        let base = doc(
+            Json::Num(0.12),
+            vec![("k", row(vec![("conn_per_s", Json::Null)]))],
+        );
+        let meas = doc(
+            Json::Num(0.06),
+            vec![("k", row(vec![("conn_per_s", Json::Num(1.0))]))],
+        );
+        let errs = gate(&meas, &base, 0.25).unwrap_err();
+        assert!(errs.iter().any(|l| l.contains("scale")));
+        // null baseline scale: any measured scale accepted
+        let base_null = doc(Json::Null, vec![("k", row(vec![("conn_per_s", Json::Null)]))]);
+        assert!(gate(&meas, &base_null, 0.25).is_ok());
+    }
+
+    #[test]
+    fn missing_optional_pjrt_row_is_fine() {
+        let base = doc(
+            Json::Num(0.12),
+            vec![("spectral_pjrt", row(vec![("secs_per_iter", Json::Null)]))],
+        );
+        let meas = doc(Json::Num(0.12), vec![]);
+        assert!(gate(&meas, &base, 0.25).is_ok());
+    }
+}

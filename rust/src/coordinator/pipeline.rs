@@ -505,6 +505,46 @@ mod tests {
     }
 
     #[test]
+    fn force_overlap_thread_invariant_through_pipeline() {
+        // `.threads(n)` must reach the overlap partitioner's frontier
+        // scoring and the force refiner's candidate scan through
+        // StageCtx and be unobservable in the output (DESIGN.md §11).
+        // c_npc pins the partition count above the force refiner's
+        // dispatch threshold, so the t=4 run is not vacuously serial.
+        let net = snn::by_name("16k_rand", 0.06, 11).unwrap();
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 8;
+        let run = |t: usize| {
+            MapperPipeline::new(hw)
+                .partitioner(PartitionerKind::HyperedgeOverlap)
+                .placer(PlacerKind::Hilbert)
+                .refiner(RefinerKind::ForceDirected)
+                .threads(t)
+                .run(&net.graph, None)
+                .unwrap()
+        };
+        let serial = run(1);
+        assert!(
+            serial.rho.num_parts >= crate::placement::force::PAR_MIN_PARTS,
+            "workload below the force refiner's parallel dispatch threshold ({} parts)",
+            serial.rho.num_parts
+        );
+        assert_eq!(serial.refine_stats.as_ref().unwrap().par_sweeps, 0);
+        let parallel = run(4);
+        // par_sweeps > 0 proves `.threads(4)` actually reached the
+        // refiner through StageCtx — bit-identical outputs alone could
+        // not distinguish a silently-serial run (the overlap analogue,
+        // OverlapStats.par_growth_steps, is asserted at the unit level
+        // in mapping/overlap.rs since the Partitioner trait returns no
+        // stats).
+        let rs = parallel.refine_stats.as_ref().unwrap();
+        assert_eq!(rs.par_sweeps, rs.sweeps, "parallel run was vacuously serial");
+        assert_eq!(serial.rho.assign, parallel.rho.assign);
+        assert_eq!(serial.placement.coords, parallel.placement.coords);
+        assert_eq!(serial.metrics, parallel.metrics);
+    }
+
+    #[test]
     fn kind_parsing_roundtrip() {
         for pk in PartitionerKind::ALL {
             assert_eq!(PartitionerKind::parse(pk.name()), Some(pk));

@@ -19,7 +19,9 @@
 //! `--network/--scale/--seed` or `--in` file) reproduces the mapping
 //! bit for bit; the network itself is not part of the spec.
 
-use snnmap::coordinator::{ensemble, experiment, MapperPipeline, PipelineSpec, StageRegistry, StageSpec};
+use snnmap::coordinator::{
+    ensemble, experiment, MapperPipeline, PipelineSpec, StageRegistry, StageSpec,
+};
 use snnmap::hw::NmhConfig;
 use snnmap::hypergraph::{io as hgio, stats};
 use snnmap::metrics::evaluate;
@@ -202,11 +204,17 @@ fn resolve_runtime(args: &Args) -> Option<PjrtRuntime> {
     match args.get_or("engine", "native") {
         "pjrt" => match PjrtRuntime::discover() {
             Some(rt) => {
-                eprintln!("[runtime] PJRT {} artifacts at {}", rt.platform(), rt.manifest().dir.display());
+                eprintln!(
+                    "[runtime] PJRT {} artifacts at {}",
+                    rt.platform(),
+                    rt.manifest().dir.display()
+                );
                 Some(rt)
             }
             None => {
-                eprintln!("[runtime] no artifacts found (run `make artifacts`); using native engine");
+                eprintln!(
+                    "[runtime] no artifacts found (run `make artifacts`); using native engine"
+                );
                 None
             }
         },
@@ -340,11 +348,21 @@ fn cmd_simulate(args: &Args) {
         SimParams { timesteps: steps, seed: args.get_u64("seed", 42), poisson_spikes: true },
     );
     let analytic = evaluate(&res.gp, &res.placement, &pipeline.hw);
-    println!("simulated {} timesteps: {} spikes, {} copies, {} hops", rep.timesteps, rep.spikes, rep.copies, rep.hops);
-    println!("energy/step      sim {:.4e} pJ   analytic {:.4e} pJ   ratio {:.3}",
-        rep.energy_per_step(), analytic.energy, rep.energy_per_step() / analytic.energy);
+    println!(
+        "simulated {} timesteps: {} spikes, {} copies, {} hops",
+        rep.timesteps, rep.spikes, rep.copies, rep.hops
+    );
+    println!(
+        "energy/step      sim {:.4e} pJ   analytic {:.4e} pJ   ratio {:.3}",
+        rep.energy_per_step(),
+        analytic.energy,
+        rep.energy_per_step() / analytic.energy
+    );
     println!("makespan         mean {:.2} ns   max {:.2} ns", rep.mean_makespan, rep.max_makespan);
-    println!("peak router load {}   analytic congestion {:.2}", rep.peak_router_load, analytic.congestion);
+    println!(
+        "peak router load {}   analytic congestion {:.2}",
+        rep.peak_router_load, analytic.congestion
+    );
 }
 
 fn cmd_ensemble(args: &Args) {

@@ -130,7 +130,11 @@ fn hierarchy_bytes(levels: &[Level]) -> usize {
 }
 
 /// Hierarchical partitioning entry point.
-pub fn partition(g: &Hypergraph, hw: &NmhConfig, params: HierParams) -> Result<Partitioning, MapError> {
+pub fn partition(
+    g: &Hypergraph,
+    hw: &NmhConfig,
+    params: HierParams,
+) -> Result<Partitioning, MapError> {
     partition_with_stats(g, hw, params).map(|(rho, _)| rho)
 }
 
@@ -175,7 +179,15 @@ pub fn partition_with_stats(
         }
         let t0 = std::time::Instant::now();
         let matching = if threads > 1 && cur_n >= PAR_MIN_NODES {
-            coarsen_round_parallel(graph, &top.axon_mult, &top.agg, hw, &mut rng, threads, &mut props)
+            coarsen_round_parallel(
+                graph,
+                &top.axon_mult,
+                &top.agg,
+                hw,
+                &mut rng,
+                threads,
+                &mut props,
+            )
         } else {
             coarsen_round_serial(graph, &top.axon_mult, &top.agg, hw, &mut rng)
         };
@@ -190,7 +202,12 @@ pub fn partition_with_stats(
         let t0 = std::time::Instant::now();
         let (qg, axon_mult) = push_forward_pooled(graph, &rho, &top.axon_mult, &mut qscratch);
         if debug_timing {
-            eprintln!("[hier] push_forward -> n={} e={} in {:?}", qg.num_nodes(), qg.num_edges(), t0.elapsed());
+            eprintln!(
+                "[hier] push_forward -> n={} e={} in {:?}",
+                qg.num_nodes(),
+                qg.num_edges(),
+                t0.elapsed()
+            );
         }
         // node/syn aggregates fold into the coarser level in one sweep
         // (the axon multiplicities were fused into push_forward itself)
@@ -434,7 +451,17 @@ fn coarsen_round_serial(
         if mate[u as usize] != u32::MAX {
             continue;
         }
-        match_one_serial(g, axon_mult, agg, hw, u, &mut mate, &mut scr, &mut edge_stamp, &mut edge_epoch);
+        match_one_serial(
+            g,
+            axon_mult,
+            agg,
+            hw,
+            u,
+            &mut mate,
+            &mut scr,
+            &mut edge_stamp,
+            &mut edge_epoch,
+        );
     }
     enumerate_matching(&mate)
 }
@@ -488,7 +515,7 @@ fn coarsen_round_parallel(
     // ---- propose (parallel over fixed node chunks) ----
     props.clear();
     props.resize(n, NodeProposal::default());
-    let chunk = crate::util::div_ceil(n, threads).max(1);
+    let chunk = crate::util::par::fixed_chunk(n, threads);
     crate::util::par::par_chunks_mut(props, chunk, threads, |ci, slice| {
         let base = ci * chunk;
         let mut score = vec![0.0f64; n];
@@ -541,7 +568,17 @@ fn coarsen_round_parallel(
             // stored prefix ran dry before the serial attempt budget:
             // recompute this node exactly as the serial round would
             let scr = fallback.get_or_insert_with(|| MatchScratch::new(n));
-            match_one_serial(g, axon_mult, agg, hw, u, &mut mate, scr, &mut edge_stamp, &mut edge_epoch);
+            match_one_serial(
+                g,
+                axon_mult,
+                agg,
+                hw,
+                u,
+                &mut mate,
+                scr,
+                &mut edge_stamp,
+                &mut edge_epoch,
+            );
         }
     }
     enumerate_matching(&mate)
@@ -842,7 +879,7 @@ impl<'a> Refiner<'a> {
 
         // ---- propose (parallel chunks, read-only, pass-start state) ----
         let threads = if order.len() >= PAR_MIN_NODES { threads.max(1) } else { 1 };
-        let chunk = crate::util::div_ceil(order.len(), threads).max(1);
+        let chunk = crate::util::par::fixed_chunk(order.len(), threads);
         let mut proposals: Vec<u32> = vec![u32::MAX; order.len()];
         {
             let this = &*self;

@@ -185,6 +185,12 @@ pub fn check_nodes_feasible(g: &Hypergraph, hw: &NmhConfig) -> Result<(), MapErr
 /// Incremental per-partition constraint bookkeeping shared by the greedy
 /// partitioners: tracks node count, synapse count and the distinct
 /// inbound-axon set of the partition under construction.
+///
+/// The read-only queries ([`Self::new_axons`], [`Self::fits`],
+/// [`Self::has_axon`]) take `&self` and touch no interior mutability, so
+/// a `&ConstraintTracker` can be shared across scoring workers — the
+/// overlap partitioner's parallel frontier scoring relies on this
+/// (DESIGN.md §11); only [`Self::add`]/[`Self::reset`] mutate state.
 pub struct ConstraintTracker<'a> {
     g: &'a Hypergraph,
     hw: &'a NmhConfig,
@@ -251,6 +257,11 @@ impl<'a> ConstraintTracker<'a> {
                 self.apc += 1;
             }
         }
+    }
+
+    /// Heap footprint of the tracker's scratch (stats reporting).
+    pub fn memory_bytes(&self) -> usize {
+        self.stamp.len() * std::mem::size_of::<u32>()
     }
 
     /// Close the current partition and start a fresh one.

@@ -17,6 +17,16 @@
 //! hot loop does no hashing and no remove/reinsert churn: candidate keys
 //! only *decrease* while a partition grows, so a monotone bucket floor
 //! plus recompute-on-peek reproduces the exact ordered-set semantics.
+//!
+//! With `threads > 1` the candidate-scoreboard growth steps run
+//! **two-phase** (DESIGN.md §11): scoring the frontier (an h-edge's
+//! unassigned nodes, or — on partition close — every surviving
+//! candidate) against the open partition is a parallel sweep over fixed
+//! chunks into scratch slots, and the serial insertion that follows
+//! replays the exact seeded order of the serial reference
+//! ([`grow_serial`]). Stale keys remain safe for the same reason they
+//! always were: [`Scoreboard::peek_best`] recomputes a candidate's key
+//! at commit time. Results are bit-for-bit thread-invariant (tested).
 
 use super::{ConstraintTracker, MapError};
 use crate::hw::NmhConfig;
@@ -24,6 +34,31 @@ use crate::hypergraph::quotient::Partitioning;
 use crate::hypergraph::{EdgeId, Hypergraph};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::time::Instant;
+
+/// Below this frontier size a growth step scores serially even when
+/// `threads > 1` — scoped-thread spawn overhead would dominate the
+/// per-candidate `new_axons` sweeps. Invisible in results: the paths
+/// agree bit-for-bit. Public so thread-invariance tests can assert their
+/// workloads actually cross it (see [`OverlapStats::par_growth_steps`]).
+pub const PAR_MIN_FRONTIER: usize = 192;
+
+/// Diagnostics from one overlap run (hotpath bench + CI trajectory),
+/// mirroring `hierarchical::partition_with_stats`'s `HierStats`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapStats {
+    /// Wall-clock spent scoring frontiers (the propose phase).
+    pub score_secs: f64,
+    /// Wall-clock of everything else: edge selection, argmin^lex
+    /// commits, queue maintenance.
+    pub commit_secs: f64,
+    /// Growth steps that dispatched the parallel scoring path.
+    pub par_growth_steps: u64,
+    /// Frontier candidates scored across all growth steps.
+    pub scored_candidates: u64,
+    /// Heap high-water mark of the partitioner's scratch structures.
+    pub peak_scratch_bytes: usize,
+}
 
 /// Heap entry for the h-edge priority queue, with lazy invalidation.
 struct EdgeEntry {
@@ -156,7 +191,9 @@ impl Scoreboard {
     /// Current argmin^lex candidate, lazily refreshing stale keys via
     /// `fresh` (keys can only have decreased since insertion). The entry
     /// stays in place: callers either [`Self::remove_best`] it on
-    /// assignment or [`Self::rebuild`] everything on partition close.
+    /// assignment or [`Self::rebuild_from`] everything on partition
+    /// close. This commit-time recompute is also the staleness backstop
+    /// of the parallel scoring path (DESIGN.md §11).
     fn peek_best(&mut self, mut fresh: impl FnMut(u32) -> u32) -> Option<u32> {
         if self.live == 0 {
             return None;
@@ -186,15 +223,23 @@ impl Scoreboard {
         self.live -= 1;
     }
 
-    /// Re-key every live candidate (after a partition close resets all
-    /// `new_axons` counts). `key` returns `(new_axons, rank)`.
-    fn rebuild(&mut self, mut key: impl FnMut(u32) -> (u32, u64)) {
-        let survivors: Vec<u32> = self
-            .members
+    /// Live candidates in insertion order — the frontier a partition
+    /// close must re-score (all `new_axons` counts reset).
+    fn live_members(&self) -> Vec<u32> {
+        self.members
             .iter()
             .copied()
             .filter(|&n| self.stamp[n as usize] != 0)
-            .collect();
+            .collect()
+    }
+
+    /// Re-key the scoreboard from precomputed `(new_axons, rank)` keys,
+    /// one per `survivors` entry (the [`Self::live_members`] order).
+    /// Splitting collection from insertion lets the key computation run
+    /// on either the serial or the parallel scoring path while this
+    /// serial insertion replays the identical order.
+    fn rebuild_from(&mut self, survivors: &[u32], keys: &[(u32, u64)]) {
+        debug_assert_eq!(survivors.len(), keys.len());
         for b in self.dirty.drain(..) {
             self.buckets[b as usize].clear();
         }
@@ -202,30 +247,85 @@ impl Scoreboard {
         self.cur_min = 0;
         self.live = 0;
         self.members.clear();
-        for n in survivors {
-            let (a, r) = key(n);
+        for (i, &n) in survivors.iter().enumerate() {
+            let (a, r) = keys[i];
             self.stamp[n as usize] = self.gen;
             self.members.push(n);
             self.push_entry(n, a, r);
             self.live += 1;
         }
     }
+
+    /// Heap footprint of the scoreboard's scratch (stats reporting).
+    fn memory_bytes(&self) -> usize {
+        self.buckets
+            .iter()
+            .map(|b| b.capacity() * std::mem::size_of::<(u64, u32)>())
+            .sum::<usize>()
+            + self.buckets.capacity() * std::mem::size_of::<Vec<(u64, u32)>>()
+            + self.stamp.len() * std::mem::size_of::<u32>()
+            + self.dirty.capacity() * std::mem::size_of::<u32>()
+            + self.members.capacity() * std::mem::size_of::<u32>()
+    }
 }
 
-/// Candidate admission (Alg. 1 lines 18-19): unassigned nodes only, keyed
-/// by the axons they would newly pull into the current partition.
-fn push_candidate(
+/// Serial reference growth step (Alg. 1 lines 18-19): score each
+/// frontier node's would-be new inbound axons against the open partition
+/// and insert it, one at a time, in frontier order. The parallel path
+/// ([`grow_parallel`]) must reproduce this bit-for-bit — insertions
+/// never touch the tracker, so every frontier node is scored against the
+/// same partition state regardless of execution order.
+fn grow_serial(
     g: &Hypergraph,
-    assign: &[u32],
     tracker: &ConstraintTracker,
     sb: &mut Scoreboard,
+    frontier: &[u32],
     sel_min: bool,
-    n: u32,
 ) {
-    if assign[n as usize] == u32::MAX {
+    for &n in frontier {
         let axons = if sel_min { tracker.new_axons(n) as u32 } else { 0 };
         sb.insert(n, axons, rank_of(g, n, sel_min));
     }
+}
+
+/// Two-phase parallel growth step: frontier scoring (the `new_axons`
+/// sweeps that dominate large growth steps) runs over fixed chunks into
+/// per-slot scratch — the tracker is shared read-only, so every score is
+/// a pure function of the open partition's state — then a serial
+/// insertion in frontier order replays [`grow_serial`] exactly. Only
+/// dispatched with the argmin-new-axons policy on (`sel_min`); the
+/// ablation path has nothing to score.
+fn grow_parallel(
+    g: &Hypergraph,
+    tracker: &ConstraintTracker,
+    sb: &mut Scoreboard,
+    frontier: &[u32],
+    axons: &mut Vec<u32>,
+    threads: usize,
+) {
+    score_frontier(tracker, frontier, axons, threads);
+    for (i, &n) in frontier.iter().enumerate() {
+        sb.insert(n, axons[i], rank_of(g, n, true));
+    }
+}
+
+/// Parallel `new_axons` sweep shared by [`grow_parallel`] and the
+/// partition-close re-key: `axons[i]` receives frontier node i's count.
+fn score_frontier(
+    tracker: &ConstraintTracker,
+    frontier: &[u32],
+    axons: &mut Vec<u32>,
+    threads: usize,
+) {
+    axons.clear();
+    axons.resize(frontier.len(), 0);
+    let chunk = crate::util::par::fixed_chunk(frontier.len(), threads);
+    crate::util::par::par_chunks_mut(axons, chunk, threads, |ci, slice| {
+        let base = ci * chunk;
+        for (k, slot) in slice.iter_mut().enumerate() {
+            *slot = tracker.new_axons(frontier[base + k]) as u32;
+        }
+    });
 }
 
 /// Queue update (Alg. 1 lines 31-33): every unseen h-edge touching an
@@ -284,12 +384,29 @@ pub fn partition(g: &Hypergraph, hw: &NmhConfig) -> Result<Partitioning, MapErro
     partition_with_params(g, hw, OverlapParams::default())
 }
 
-/// Algorithm 1 with ablation parameters.
+/// Algorithm 1 with ablation parameters (serial reference path).
 pub fn partition_with_params(
     g: &Hypergraph,
     hw: &NmhConfig,
     params: OverlapParams,
 ) -> Result<Partitioning, MapError> {
+    partition_with_stats(g, hw, params, 1).map(|(rho, _)| rho)
+}
+
+/// Algorithm 1 with an explicit worker budget (fed from
+/// [`crate::stage::StageCtx::threads`] by [`OverlapPartitioner`]) and
+/// per-run diagnostics. `threads` is a performance knob only: growth
+/// steps below [`PAR_MIN_FRONTIER`] — and every run with `threads <= 1`
+/// — take the serial path, and the two paths agree bit-for-bit.
+pub fn partition_with_stats(
+    g: &Hypergraph,
+    hw: &NmhConfig,
+    params: OverlapParams,
+    threads: usize,
+) -> Result<(Partitioning, OverlapStats), MapError> {
+    let threads = threads.max(1);
+    let mut stats = OverlapStats::default();
+    let t_run = Instant::now();
     let e_total = g.num_edges();
     super::check_nodes_feasible(g, hw)?;
     let mut assign = vec![u32::MAX; g.num_nodes()];
@@ -325,6 +442,12 @@ pub fn partition_with_params(
     let sel_min = params.select_min_new_axons;
     let mut sb = Scoreboard::new(g.num_nodes(), sel_min);
 
+    // Growth-step scratch, reused across edges: the frontier under
+    // scoring, its parallel score slots, and re-key pairs.
+    let mut frontier: Vec<u32> = Vec::new();
+    let mut axon_scratch: Vec<u32> = Vec::new();
+    let mut key_scratch: Vec<(u32, u64)> = Vec::new();
+
     while seen_count < e_total {
         // ---- pick the next h-edge (lines 13-16) ----
         let e = if !params.use_queue { None } else { loop {
@@ -357,16 +480,29 @@ pub fn partition_with_params(
         seen[e as usize] = true;
         seen_count += 1;
 
-        // ---- collect assignable nodes of e (lines 18-19) ----
-        sb.begin();
-        let s = g.source(e);
+        // ---- collect + score assignable nodes of e (lines 18-19);
+        // the scoring half is the growth step's propose phase ----
+        frontier.clear();
         for &d in g.dsts(e) {
-            push_candidate(g, &assign, &tracker, &mut sb, sel_min, d);
+            if assign[d as usize] == u32::MAX {
+                frontier.push(d);
+            }
         }
-        if g.inbound(s).is_empty() {
+        let s = g.source(e);
+        if g.inbound(s).is_empty() && assign[s as usize] == u32::MAX {
             // input nodes are free of inbound axons: co-locate with dsts
-            push_candidate(g, &assign, &tracker, &mut sb, sel_min, s);
+            frontier.push(s);
         }
+        sb.begin();
+        let t0 = Instant::now();
+        if sel_min && threads > 1 && frontier.len() >= PAR_MIN_FRONTIER {
+            grow_parallel(g, &tracker, &mut sb, &frontier, &mut axon_scratch, threads);
+            stats.par_growth_steps += 1;
+        } else {
+            grow_serial(g, &tracker, &mut sb, &frontier, sel_min);
+        }
+        stats.scored_candidates += frontier.len() as u64;
+        stats.score_secs += t0.elapsed().as_secs_f64();
 
         // ---- assign nodes (lines 20-33) ----
         while let Some(n) = sb.peek_best(|m| tracker.new_axons(m) as u32) {
@@ -389,13 +525,29 @@ pub fn partition_with_params(
                     });
                 }
                 // candidate axon-counts all reset: re-key the scoreboard
-                sb.rebuild(|m| {
-                    if sel_min {
-                        (tracker.new_axons(m) as u32, rank_of(g, m, true))
-                    } else {
-                        (0, rank_of(g, m, false))
+                // (every surviving candidate is the frontier here — on
+                // large runs this is the growth step worth parallelizing)
+                let t0 = Instant::now();
+                let survivors = sb.live_members();
+                key_scratch.clear();
+                if sel_min && threads > 1 && survivors.len() >= PAR_MIN_FRONTIER {
+                    score_frontier(&tracker, &survivors, &mut axon_scratch, threads);
+                    for (i, &m) in survivors.iter().enumerate() {
+                        key_scratch.push((axon_scratch[i], rank_of(g, m, true)));
                     }
-                });
+                    stats.par_growth_steps += 1;
+                } else {
+                    for &m in &survivors {
+                        key_scratch.push(if sel_min {
+                            (tracker.new_axons(m) as u32, rank_of(g, m, true))
+                        } else {
+                            (0, rank_of(g, m, false))
+                        });
+                    }
+                }
+                sb.rebuild_from(&survivors, &key_scratch);
+                stats.scored_candidates += survivors.len() as u64;
+                stats.score_secs += t0.elapsed().as_secs_f64();
                 continue;
             }
 
@@ -434,7 +586,21 @@ pub fn partition_with_params(
         }
     }
 
-    Ok(Partitioning::new(assign, part as usize + 1).compacted())
+    stats.peak_scratch_bytes = sb.memory_bytes()
+        + tracker.memory_bytes()
+        + heap.capacity() * std::mem::size_of::<EdgeEntry>()
+        + pq.capacity() * std::mem::size_of::<f64>()
+        + pq_epoch.capacity() * std::mem::size_of::<u32>()
+        + size.capacity() * std::mem::size_of::<u32>()
+        + wf.capacity() * std::mem::size_of::<f64>()
+        + seen.capacity()
+        + sorted.capacity() * std::mem::size_of::<EdgeId>()
+        + assign.capacity() * std::mem::size_of::<u32>()
+        + frontier.capacity() * std::mem::size_of::<u32>()
+        + axon_scratch.capacity() * std::mem::size_of::<u32>()
+        + key_scratch.capacity() * std::mem::size_of::<(u32, u64)>();
+    stats.commit_secs = (t_run.elapsed().as_secs_f64() - stats.score_secs).max(0.0);
+    Ok((Partitioning::new(assign, part as usize + 1).compacted(), stats))
 }
 
 #[cfg(test)]
@@ -489,9 +655,12 @@ mod tests {
         hw.c_npc = 32;
         let ov = partition(&g, &hw).unwrap();
         validate(&g, &ov, &hw).unwrap();
-        let seq =
-            crate::mapping::sequential::partition(&g, &hw, crate::mapping::sequential::SeqOrder::Natural)
-                .unwrap();
+        let seq = crate::mapping::sequential::partition(
+            &g,
+            &hw,
+            crate::mapping::sequential::SeqOrder::Natural,
+        )
+        .unwrap();
         let c_ov = connectivity(&g, &ov);
         let c_seq = connectivity(&g, &seq);
         assert!(
@@ -562,6 +731,43 @@ mod tests {
     }
 
     #[test]
+    fn overlap_parallel_equals_serial_exactly() {
+        // one hub h-edge fans out past PAR_MIN_FRONTIER so the parallel
+        // growth path provably dispatches (non-vacuity asserted via
+        // par_growth_steps), on top of a random overlapping topology
+        let mut rng = Pcg64::seeded(91);
+        let n = 600;
+        let hub_fan = PAR_MIN_FRONTIER as u32 + 40;
+        let mut b = HypergraphBuilder::new(n);
+        b.add_edge(0, (1..=hub_fan).collect(), 2.0);
+        for s in 0..n as u32 {
+            let dsts: Vec<u32> =
+                (0..6).map(|_| rng.below(n) as u32).filter(|&d| d != s).collect();
+            if !dsts.is_empty() {
+                b.add_edge(s, dsts, rng.next_f32() + 0.01);
+            }
+        }
+        let g = b.build();
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 24;
+        let (reference, st_ser) =
+            partition_with_stats(&g, &hw, OverlapParams::default(), 1).unwrap();
+        validate(&g, &reference, &hw).unwrap();
+        assert_eq!(st_ser.par_growth_steps, 0, "serial run must never dispatch");
+        for threads in [2, 4, 8] {
+            let (rho, st) =
+                partition_with_stats(&g, &hw, OverlapParams::default(), threads).unwrap();
+            assert_eq!(rho.assign, reference.assign, "threads={threads}");
+            assert_eq!(rho.num_parts, reference.num_parts, "threads={threads}");
+            assert!(
+                st.par_growth_steps > 0,
+                "parallel path never dispatched (threads={threads})"
+            );
+            assert_eq!(st.scored_candidates, st_ser.scored_candidates);
+        }
+    }
+
+    #[test]
     fn ablations_still_valid_partitionings() {
         // both knobs off must still produce constraint-satisfying output
         let mut rng = Pcg64::seeded(41);
@@ -589,7 +795,9 @@ mod tests {
 }
 
 /// [`crate::stage::Partitioner`] over Algorithm 1 (registry name
-/// "overlap"). Deterministic — the pipeline seed is not consumed.
+/// "overlap"). Deterministic — the pipeline seed is not consumed, and
+/// the worker budget follows [`crate::stage::StageCtx::threads`]
+/// (performance-only — results are thread-count invariant, §11).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct OverlapPartitioner {
     pub params: OverlapParams,
@@ -624,8 +832,8 @@ impl crate::stage::Partitioner for OverlapPartitioner {
         &self,
         g: &Hypergraph,
         hw: &NmhConfig,
-        _ctx: &crate::stage::StageCtx,
+        ctx: &crate::stage::StageCtx,
     ) -> Result<Partitioning, MapError> {
-        partition_with_params(g, hw, self.params)
+        partition_with_stats(g, hw, self.params, ctx.threads.max(1)).map(|(rho, _)| rho)
     }
 }

@@ -24,7 +24,11 @@ pub enum SeqOrder {
 }
 
 /// Sequentially partition `g` under `hw` constraints using `order`.
-pub fn partition(g: &Hypergraph, hw: &NmhConfig, order: SeqOrder) -> Result<Partitioning, MapError> {
+pub fn partition(
+    g: &Hypergraph,
+    hw: &NmhConfig,
+    order: SeqOrder,
+) -> Result<Partitioning, MapError> {
     let order_vec: Vec<u32> = match order {
         SeqOrder::Natural => (0..g.num_nodes() as u32).collect(),
         SeqOrder::Greedy => super::ordering::greedy_order(g),

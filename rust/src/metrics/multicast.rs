@@ -29,7 +29,11 @@ pub struct MulticastMetrics {
 
 /// Evaluate multicast vs unicast spike movement for a placed mapping.
 /// Energies are in pJ using the Table II per-hop constants.
-pub fn evaluate_multicast(gp: &Hypergraph, placement: &Placement, hw: &NmhConfig) -> MulticastMetrics {
+pub fn evaluate_multicast(
+    gp: &Hypergraph,
+    placement: &Placement,
+    hw: &NmhConfig,
+) -> MulticastMetrics {
     let per_hop = hw.costs.e_r + hw.costs.e_t;
     let mut m = MulticastMetrics::default();
     let mut pts: Vec<(u16, u16)> = Vec::new();

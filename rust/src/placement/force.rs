@@ -12,10 +12,30 @@
 //! candidate forces through the AOT Pallas `force_field` artifact (PJRT),
 //! pruning the candidate scan; results are identical since every applied
 //! swap re-verifies its gain natively.
+//!
+//! With `threads > 1` each sweep runs **two-phase** (DESIGN.md §11): the
+//! candidate scan — every partition × 4 cardinal directions, one
+//! [`swap_gain`] each, the loop that dominates a sweep — becomes a
+//! parallel *propose* phase over fixed partition chunks against the
+//! sweep-start coordinates, and the existing serial sorted-commit loop
+//! re-verifies every gain before applying it, so stale parallel
+//! proposals are harmless. Serial and parallel sweeps are bit-for-bit
+//! identical ([`refine_serial`] is the tested reference).
 
 use super::{PartitionAdjacency, Placement};
 use crate::hw::NmhConfig;
 use crate::hypergraph::Hypergraph;
+
+/// Below this partition count a sweep's candidate scan runs on the
+/// serial path even when `threads > 1` — scoped-thread spawn overhead
+/// would dominate the 4n `swap_gain` calls. Invisible in results: the
+/// paths agree bit-for-bit. Public so thread-invariance tests can assert
+/// their workloads actually cross it (a sub-threshold "parallel" run
+/// would be vacuously serial).
+pub const PAR_MIN_PARTS: usize = 96;
+
+/// The four cardinal one-core moves of Eq. 13.
+const DIRS: [(i32, i32); 4] = [(1, 0), (-1, 0), (0, 1), (0, -1)];
 
 /// Refinement statistics for EXPERIMENTS.md and early-stop tuning.
 #[derive(Debug, Clone, Default)]
@@ -25,6 +45,19 @@ pub struct RefineStats {
     pub moves_to_empty: usize,
     pub initial_wirelength: f64,
     pub final_wirelength: f64,
+    /// Wall-clock spent in the candidate-scan (propose) phase.
+    pub scan_secs: f64,
+    /// Wall-clock spent in the serial sorted-commit phase.
+    pub commit_secs: f64,
+    /// Sweeps whose candidate scan dispatched the parallel path. The
+    /// output is identical either way, so this counter is what lets
+    /// tests prove a run was not vacuously serial (the thread budget
+    /// actually reached the stage through `StageCtx`).
+    pub par_sweeps: usize,
+    /// Heap high-water mark of the refiner's scratch: the flat partition
+    /// adjacency, the occupancy map, the per-partition proposal slots
+    /// and the candidate vector.
+    pub peak_scratch_bytes: usize,
 }
 
 /// Batched potential evaluation: given current coordinates, return for
@@ -62,6 +95,8 @@ impl Default for ForceParams {
 }
 
 /// Refine `placement` in place. `gp` is the quotient h-graph.
+/// Single-threaded compatibility entry point — see
+/// [`refine_with_threads`] for the two-phase parallel form.
 pub fn refine(
     gp: &Hypergraph,
     hw: &NmhConfig,
@@ -69,7 +104,38 @@ pub fn refine(
     params: ForceParams,
     batch: Option<&BatchPotentialFn>,
 ) -> RefineStats {
+    refine_with_threads(gp, hw, placement, params, batch, 1)
+}
+
+/// The serial reference path: every sweep's candidate scan runs inline.
+/// [`refine_with_threads`] must match it bit-for-bit for every worker
+/// count (enforced by `force_parallel_equals_serial_exactly` and
+/// property 11 in `tests/properties.rs`).
+pub fn refine_serial(
+    gp: &Hypergraph,
+    hw: &NmhConfig,
+    placement: &mut Placement,
+    params: ForceParams,
+    batch: Option<&BatchPotentialFn>,
+) -> RefineStats {
+    refine_with_threads(gp, hw, placement, params, batch, 1)
+}
+
+/// [`refine`] with an explicit worker budget (fed from
+/// [`crate::stage::StageCtx::threads`] by [`ForceRefiner`]). A
+/// performance knob only: the output is bit-for-bit identical for every
+/// value, because proposals are scanned against sweep-start coordinates
+/// in fixed chunks and the serial commit loop re-verifies each gain.
+pub fn refine_with_threads(
+    gp: &Hypergraph,
+    hw: &NmhConfig,
+    placement: &mut Placement,
+    params: ForceParams,
+    batch: Option<&BatchPotentialFn>,
+    threads: usize,
+) -> RefineStats {
     let n = placement.len();
+    let threads = threads.max(1);
     let mut stats = RefineStats {
         initial_wirelength: placement.wirelength(gp),
         ..Default::default()
@@ -86,8 +152,10 @@ pub fn refine(
         occ[hw.index(x, y)] = p as u32;
     }
 
-    let dirs: [(i32, i32); 4] = [(1, 0), (-1, 0), (0, 1), (0, -1)];
     let mut last_wl = stats.initial_wirelength;
+    // scratch reused across sweeps (propose slots + candidate vector)
+    let mut props: Vec<DirProposals> = Vec::new();
+    let mut cands: Vec<(f64, usize, usize)> = Vec::new();
 
     for _sweep in 0..params.max_sweeps {
         stats.sweeps += 1;
@@ -100,45 +168,41 @@ pub fn refine(
                 .collect()
         });
 
-        // Collect candidate (gain, core_a, core_b) pairs.
-        let mut cands: Vec<(f64, usize, usize)> = Vec::new();
-        for (p, &(x, y)) in placement.coords.iter().enumerate() {
-            if let Some(hot) = &hot {
-                if !hot[p] {
-                    continue;
-                }
-            }
-            let a = hw.index(x, y);
-            for &(dx, dy) in &dirs {
-                let nx = x as i32 + dx;
-                let ny = y as i32 + dy;
-                if !hw.contains(nx, ny) {
-                    continue;
-                }
-                let bidx = hw.index(nx as u16, ny as u16);
-                if occ[bidx] == u32::MAX && !params.allow_empty_moves {
-                    continue;
-                }
-                // visit each occupied-occupied pair once (a < b)
-                if occ[bidx] != u32::MAX && bidx < a {
-                    continue;
-                }
-                let gain = swap_gain(&adj, &placement.coords, occ[a], occ[bidx], (x, y), (
-                    nx as u16,
-                    ny as u16,
-                ), params.clamp_unit);
-                if gain > 1e-9 {
-                    cands.push((gain, a, bidx));
-                }
-            }
+        // ---- propose: candidate (gain, core_a, core_b) pairs against
+        // the sweep-start coordinates ----
+        let t0 = std::time::Instant::now();
+        cands.clear();
+        if threads > 1 && n >= PAR_MIN_PARTS {
+            stats.par_sweeps += 1;
+            scan_parallel(
+                &adj,
+                &placement.coords,
+                &occ,
+                hw,
+                params,
+                hot.as_deref(),
+                threads,
+                &mut props,
+                &mut cands,
+            );
+        } else {
+            scan_serial(&adj, &placement.coords, &occ, hw, params, hot.as_deref(), &mut cands);
         }
+        stats.scan_secs += t0.elapsed().as_secs_f64();
         if cands.is_empty() {
             break;
         }
+        // stable sort: equal gains keep scan order, which both scan
+        // paths produce identically (ascending partition, DIRS order)
         cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
 
+        // ---- commit: serial, best-gain-first, re-verifying each gain
+        // against the *current* coordinates (gains go stale as earlier
+        // swaps land — which is also what makes parallel proposals
+        // safe: a stale proposal is re-checked or skipped here) ----
+        let t0 = std::time::Instant::now();
         let mut applied = 0usize;
-        for (_, a, b) in cands {
+        for &(_, a, b) in &cands {
             let pa = occ[a];
             let pb = occ[b];
             if pa == u32::MAX && pb == u32::MAX {
@@ -146,7 +210,6 @@ pub fn refine(
             }
             let ca = hw.coord(a);
             let cb = hw.coord(b);
-            // lazy re-evaluation: gains go stale as earlier swaps land
             let gain = swap_gain(&adj, &placement.coords, pa, pb, ca, cb, params.clamp_unit);
             if gain <= 1e-9 {
                 continue;
@@ -166,6 +229,7 @@ pub fn refine(
                 stats.swaps += 1;
             }
         }
+        stats.commit_secs += t0.elapsed().as_secs_f64();
         if applied == 0 {
             break;
         }
@@ -175,8 +239,139 @@ pub fn refine(
         }
         last_wl = wl;
     }
+    stats.peak_scratch_bytes = adj.memory_bytes()
+        + occ.capacity() * std::mem::size_of::<u32>()
+        + props.capacity() * std::mem::size_of::<DirProposals>()
+        + cands.capacity() * std::mem::size_of::<(f64, usize, usize)>();
     stats.final_wirelength = placement.wirelength(gp);
     stats
+}
+
+/// Per-partition output slot of the parallel propose phase: the
+/// positive-gain candidates of the four cardinal directions, in `DIRS`
+/// order. Fixed-size so the propose sweep allocates nothing per call.
+#[derive(Clone, Copy, Default)]
+struct DirProposals {
+    len: u8,
+    cands: [(f64, u32, u32); 4],
+}
+
+/// Candidate admission for one partition against frozen sweep-start
+/// state: every in-bounds cardinal neighbor passes the empty-move and
+/// a<b dedup rules, gets one exact [`swap_gain`], and positive gains are
+/// handed to `emit(gain, core_a, core_b)` in `DIRS` order. This is the
+/// single copy both scan paths share — which is what makes divergence
+/// between [`scan_serial`] and [`scan_parallel`] impossible by
+/// construction (the hot-filter and output layout are all that differ).
+#[inline]
+fn scan_one(
+    adj: &PartitionAdjacency,
+    coords: &[(u16, u16)],
+    occ: &[u32],
+    hw: &NmhConfig,
+    params: ForceParams,
+    p: usize,
+    mut emit: impl FnMut(f64, usize, usize),
+) {
+    let (x, y) = coords[p];
+    let a = hw.index(x, y);
+    for &(dx, dy) in &DIRS {
+        let nx = x as i32 + dx;
+        let ny = y as i32 + dy;
+        if !hw.contains(nx, ny) {
+            continue;
+        }
+        let bidx = hw.index(nx as u16, ny as u16);
+        if occ[bidx] == u32::MAX && !params.allow_empty_moves {
+            continue;
+        }
+        // visit each occupied-occupied pair once (a < b)
+        if occ[bidx] != u32::MAX && bidx < a {
+            continue;
+        }
+        let gain = swap_gain(
+            adj,
+            coords,
+            occ[a],
+            occ[bidx],
+            (x, y),
+            (nx as u16, ny as u16),
+            params.clamp_unit,
+        );
+        if gain > 1e-9 {
+            emit(gain, a, bidx);
+        }
+    }
+}
+
+/// Serial reference candidate scan: partitions ascending, directions in
+/// `DIRS` order, one exact [`swap_gain`] per in-bounds candidate.
+fn scan_serial(
+    adj: &PartitionAdjacency,
+    coords: &[(u16, u16)],
+    occ: &[u32],
+    hw: &NmhConfig,
+    params: ForceParams,
+    hot: Option<&[bool]>,
+    cands: &mut Vec<(f64, usize, usize)>,
+) {
+    for p in 0..coords.len() {
+        if let Some(hot) = hot {
+            if !hot[p] {
+                continue;
+            }
+        }
+        scan_one(adj, coords, occ, hw, params, p, |gain, a, b| {
+            cands.push((gain, a, b));
+        });
+    }
+}
+
+/// Two-phase parallel candidate scan. Each worker fills the
+/// [`DirProposals`] slots of a fixed partition chunk against the shared
+/// read-only sweep-start state (coordinates, occupancy, flat adjacency
+/// — no per-call allocation), then the slots are flattened serially in
+/// partition order. Because every slot is a pure function of the
+/// sweep-start state ([`scan_one`], the shared admission body) and the
+/// flatten order equals the serial scan order, the resulting candidate
+/// vector is bit-for-bit identical to [`scan_serial`]'s for any worker
+/// count.
+#[allow(clippy::too_many_arguments)]
+fn scan_parallel(
+    adj: &PartitionAdjacency,
+    coords: &[(u16, u16)],
+    occ: &[u32],
+    hw: &NmhConfig,
+    params: ForceParams,
+    hot: Option<&[bool]>,
+    threads: usize,
+    props: &mut Vec<DirProposals>,
+    cands: &mut Vec<(f64, usize, usize)>,
+) {
+    let n = coords.len();
+    props.clear();
+    props.resize(n, DirProposals::default());
+    let chunk = crate::util::par::fixed_chunk(n, threads);
+    crate::util::par::par_chunks_mut(props, chunk, threads, |ci, slice| {
+        let base = ci * chunk;
+        for (k, slot) in slice.iter_mut().enumerate() {
+            let p = base + k;
+            if let Some(hot) = hot {
+                if !hot[p] {
+                    continue;
+                }
+            }
+            scan_one(adj, coords, occ, hw, params, p, |gain, a, b| {
+                slot.cands[slot.len as usize] = (gain, a as u32, b as u32);
+                slot.len += 1;
+            });
+        }
+    });
+    for prop in props.iter() {
+        for &(gain, a, b) in &prop.cands[..prop.len as usize] {
+            cands.push((gain, a as usize, b as usize));
+        }
+    }
 }
 
 /// Exact wirelength gain of exchanging the contents of cores at `ca`/`cb`
@@ -215,7 +410,7 @@ fn move_delta(
 ) -> f64 {
     let floor = if clamp { 1 } else { 0 };
     let mut delta = 0.0;
-    for &(q, w) in &adj.adj[p as usize] {
+    for &(q, w) in adj.neighbors(p) {
         if q == other {
             continue;
         }
@@ -364,6 +559,64 @@ mod tests {
         );
         assert_eq!(stats.sweeps, 1);
     }
+
+    #[test]
+    fn force_parallel_equals_serial_exactly() {
+        // random quotient-like graphs large enough that the parallel
+        // dispatch threshold is genuinely crossed, at several worker
+        // counts and seeds: placements and stats must be bit-for-bit
+        // identical to the serial reference
+        let n = 160;
+        assert!(n >= PAR_MIN_PARTS, "test workload below dispatch threshold");
+        let hw = NmhConfig::small();
+        for seed in [5u64, 23, 71] {
+            let mut rng = Pcg64::seeded(seed);
+            let mut b = HypergraphBuilder::new(n);
+            for s in 0..n as u32 {
+                let dsts: Vec<u32> = (0..4)
+                    .map(|_| rng.below(n) as u32)
+                    .filter(|&d| d != s)
+                    .collect();
+                if !dsts.is_empty() {
+                    b.add_edge(s, dsts, rng.next_f32() + 0.05);
+                }
+            }
+            let gp = b.build();
+            let mut cells: Vec<usize> = (0..hw.num_cores()).collect();
+            rng.shuffle(&mut cells);
+            let start = Placement {
+                coords: (0..n).map(|i| hw.coord(cells[i])).collect(),
+            };
+            let mut pl_ser = start.clone();
+            let st_ser = refine_serial(&gp, &hw, &mut pl_ser, ForceParams::default(), None);
+            pl_ser.validate(&hw).unwrap();
+            assert_eq!(st_ser.par_sweeps, 0, "serial run must never dispatch");
+            for threads in [2, 4, 8] {
+                let mut pl_par = start.clone();
+                let st_par = refine_with_threads(
+                    &gp,
+                    &hw,
+                    &mut pl_par,
+                    ForceParams::default(),
+                    None,
+                    threads,
+                );
+                assert_eq!(
+                    st_par.par_sweeps, st_par.sweeps,
+                    "every sweep must dispatch the parallel scan (threads={threads})"
+                );
+                assert_eq!(pl_ser.coords, pl_par.coords, "seed={seed} threads={threads}");
+                assert_eq!(st_ser.sweeps, st_par.sweeps, "seed={seed} threads={threads}");
+                assert_eq!(st_ser.swaps, st_par.swaps);
+                assert_eq!(st_ser.moves_to_empty, st_par.moves_to_empty);
+                assert_eq!(
+                    st_ser.final_wirelength.to_bits(),
+                    st_par.final_wirelength.to_bits(),
+                    "seed={seed} threads={threads}"
+                );
+            }
+        }
+    }
 }
 
 /// [`crate::stage::Refiner`] over the force-directed swap refiner
@@ -372,6 +625,8 @@ mod tests {
 /// opened once (weight matrix resident) and each sweep's batch
 /// evaluation only ships the (N, 2) coordinates; results are identical
 /// to the native path since every applied swap re-verifies its gain.
+/// The worker budget follows [`crate::stage::StageCtx::threads`]
+/// (performance-only — results are thread-count invariant, §11).
 #[derive(Clone, Copy, Default)]
 pub struct ForceRefiner {
     pub params: ForceParams,
@@ -425,9 +680,10 @@ impl crate::stage::Refiner for ForceRefiner {
         let batch = session
             .as_ref()
             .map(|s| move |coords: &[(u16, u16)]| s.eval(coords).ok());
+        let threads = ctx.threads.max(1);
         let stats = match &batch {
-            Some(b) => refine(gp, hw, placement, self.params, Some(b)),
-            None => refine(gp, hw, placement, self.params, None),
+            Some(b) => refine_with_threads(gp, hw, placement, self.params, Some(b), threads),
+            None => refine_with_threads(gp, hw, placement, self.params, None, threads),
         };
         Ok(Some(stats))
     }

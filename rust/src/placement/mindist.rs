@@ -52,7 +52,8 @@ pub fn place(gp: &Hypergraph, hw: &NmhConfig) -> Placement {
             continue;
         }
         // total weighted distance to placed neighbors from candidate c
-        let neighbors: Vec<(u32, f64)> = adj.adj[p as usize]
+        let neighbors: Vec<(u32, f64)> = adj
+            .neighbors(p)
             .iter()
             .filter(|&&(q, _)| coords[q as usize] != (u16::MAX, u16::MAX))
             .copied()

@@ -67,12 +67,22 @@ impl Placement {
     }
 }
 
-/// Symmetric partition-to-partition weight adjacency used by the refiners:
-/// `adj[p]` = list of (q, w) with `w` the total spike frequency of h-edges
-/// linking p and q in either direction (source→dest pairs of the quotient
-/// graph; self-pairs excluded — their clamped distance is constant).
+/// Symmetric partition-to-partition weight adjacency used by the
+/// refiners: partition `p`'s neighbor list is [`Self::neighbors`]`(p)` =
+/// (q, w) pairs with `w` the total spike frequency of h-edges linking p
+/// and q in either direction (source→dest pairs of the quotient graph;
+/// self-pairs excluded — their clamped distance is constant).
+///
+/// The layout is CSR-style flat (`off` + one `nbrs` arena) rather than a
+/// `Vec<Vec<..>>`: the force refiner's parallel propose workers share it
+/// read-only, and a flat arena gives them per-call-allocation-free,
+/// cache-dense neighbor scans (DESIGN.md §11).
 pub struct PartitionAdjacency {
-    pub adj: Vec<Vec<(u32, f64)>>,
+    /// CSR offsets: partition p's pairs live in
+    /// `nbrs[off[p] as usize .. off[p + 1] as usize]`.
+    pub off: Vec<u32>,
+    /// Flat (neighbor, weight) pairs, sorted by neighbor id per row.
+    pub nbrs: Vec<(u32, f64)>,
     /// total adjacent weight per partition (wdeg in Eq. 8's sense,
     /// restricted to source-destination pairs)
     pub wdeg: Vec<f64>,
@@ -94,33 +104,60 @@ impl PartitionAdjacency {
                 *map.entry(key).or_insert(0.0) += w;
             }
         }
-        let mut adj = vec![Vec::new(); n];
+        let mut off = vec![0u32; n + 1];
+        for &(a, b) in map.keys() {
+            off[a as usize + 1] += 1;
+            off[b as usize + 1] += 1;
+        }
+        for p in 0..n {
+            off[p + 1] += off[p];
+        }
+        let mut nbrs = vec![(0u32, 0f64); off[n] as usize];
+        let mut cursor: Vec<u32> = off[..n].to_vec();
+        for (&(a, b), &w) in &map {
+            nbrs[cursor[a as usize] as usize] = (b, w);
+            cursor[a as usize] += 1;
+            nbrs[cursor[b as usize] as usize] = (a, w);
+            cursor[b as usize] += 1;
+        }
+        // Per-row fill order above follows HashMap iteration; sorting by
+        // the (unique) neighbor id restores determinism (§4), and wdeg is
+        // then summed in sorted order so its f64 merge tree is stable too.
         let mut wdeg = vec![0.0; n];
-        for ((a, b), w) in map {
-            adj[a as usize].push((b, w));
-            adj[b as usize].push((a, w));
-            wdeg[a as usize] += w;
-            wdeg[b as usize] += w;
+        for p in 0..n {
+            let row = &mut nbrs[off[p] as usize..off[p + 1] as usize];
+            row.sort_by_key(|&(q, _)| q);
+            wdeg[p] = row.iter().map(|&(_, w)| w).sum();
         }
-        for l in adj.iter_mut() {
-            l.sort_by_key(|&(q, _)| q);
-        }
-        PartitionAdjacency { adj, wdeg }
+        PartitionAdjacency { off, nbrs, wdeg }
+    }
+
+    /// The (q, w) pairs of partition `p`, sorted by q.
+    #[inline]
+    pub fn neighbors(&self, p: u32) -> &[(u32, f64)] {
+        &self.nbrs[self.off[p as usize] as usize..self.off[p as usize + 1] as usize]
     }
 
     pub fn len(&self) -> usize {
-        self.adj.len()
+        self.off.len() - 1
     }
 
     pub fn is_empty(&self) -> bool {
-        self.adj.is_empty()
+        self.len() == 0
+    }
+
+    /// Heap footprint of the flat layout (refiner scratch accounting).
+    pub fn memory_bytes(&self) -> usize {
+        self.off.len() * std::mem::size_of::<u32>()
+            + self.nbrs.len() * std::mem::size_of::<(u32, f64)>()
+            + self.wdeg.len() * std::mem::size_of::<f64>()
     }
 
     /// Potential of partition p at position `c` (Eq. 12 with the paper's
     /// max(‖·‖, 1) clamp), counting both inbound and outbound pulls.
     pub fn potential_at(&self, p: u32, c: (i32, i32), coords: &[(u16, u16)]) -> f64 {
         let mut pot = 0.0;
-        for &(q, w) in &self.adj[p as usize] {
+        for &(q, w) in self.neighbors(p) {
             let qc = coords[q as usize];
             let dist = (c.0 - qc.0 as i32).abs() + (c.1 - qc.1 as i32).abs();
             pot += w * (dist.max(1)) as f64;
@@ -167,8 +204,8 @@ mod tests {
         let gp = quotient_like();
         let adj = PartitionAdjacency::build(&gp);
         // pair (0,1): w 2 ; pair (0,2): w 2 + 0.5 ; pair (1,2): w 1
-        let get = |a: usize, b: u32| {
-            adj.adj[a].iter().find(|&&(q, _)| q == b).map(|&(_, w)| w).unwrap()
+        let get = |a: u32, b: u32| {
+            adj.neighbors(a).iter().find(|&&(q, _)| q == b).map(|&(_, w)| w).unwrap()
         };
         assert!((get(0, 1) - 2.0).abs() < 1e-9);
         assert!((get(0, 2) - 2.5).abs() < 1e-9);
@@ -193,7 +230,7 @@ mod tests {
         b.add_edge(0, vec![0, 1], 3.0);
         let gp = b.build();
         let adj = PartitionAdjacency::build(&gp);
-        assert_eq!(adj.adj[0].len(), 1); // only (0,1), no self pair
-        assert!((adj.adj[0][0].1 - 3.0).abs() < 1e-9);
+        assert_eq!(adj.neighbors(0).len(), 1); // only (0,1), no self pair
+        assert!((adj.neighbors(0)[0].1 - 3.0).abs() < 1e-9);
     }
 }

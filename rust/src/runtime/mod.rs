@@ -92,9 +92,9 @@ mod tests {
         assert_eq!(w[1 * 3 + 1], 0.0); // self excluded
         // matches PartitionAdjacency aggregation
         let adj = crate::placement::PartitionAdjacency::build(&gp);
-        for (p, list) in adj.adj.iter().enumerate() {
-            for &(q, wt) in list {
-                assert!((w[p * 3 + q as usize] as f64 - wt).abs() < 1e-6);
+        for p in 0..adj.len() as u32 {
+            for &(q, wt) in adj.neighbors(p) {
+                assert!((w[p as usize * 3 + q as usize] as f64 - wt).abs() < 1e-6);
             }
         }
     }

@@ -205,7 +205,8 @@ mod tests {
         let gp = b.build();
         let pl = Placement { coords: vec![(0, 0), (2, 3)] };
         let hw = NmhConfig::small();
-        let sim = simulate(&gp, &pl, &hw, SimParams { timesteps: 2, seed: 1, poisson_spikes: true });
+        let sim =
+            simulate(&gp, &pl, &hw, SimParams { timesteps: 2, seed: 1, poisson_spikes: true });
         assert_eq!(sim.hops, sim.copies * 5);
     }
 

@@ -146,7 +146,8 @@ pub fn build(params: AllenParams) -> AllenSnn {
         let (plo, phi) = pop_ranges[pre];
         let pre_size = (phi - plo) as f64;
         // expected out-degree for this neuron
-        let mean_k = target_total * row_mass[pre] / (total_mass * pre_size * (phi > plo) as u8 as f64).max(1e-12);
+        let mean_k = target_total * row_mass[pre]
+            / (total_mass * pre_size * (phi > plo) as u8 as f64).max(1e-12);
         let k = rng.poisson(mean_k).min(nodes - 1);
         if k == 0 {
             continue;

@@ -249,7 +249,13 @@ fn spatial_window(y: usize, x: usize, layer: &Layer, out_sh: Shape) -> Vec<(usiz
 
 /// All output indices `o` with `o*stride - pad <= v < o*stride - pad + k`,
 /// clamped to [0, limit).
-fn covering_range(v: usize, k: usize, stride: usize, pad: usize, limit: usize) -> std::ops::Range<usize> {
+fn covering_range(
+    v: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    limit: usize,
+) -> std::ops::Range<usize> {
     let v = v as i64;
     let k = k as i64;
     let stride = stride as i64;
@@ -296,9 +302,13 @@ mod tests {
 
     #[test]
     fn covering_range_matches_bruteforce() {
-        for &(k, stride, pad, in_n) in
-            &[(3usize, 1usize, 1usize, 8usize), (5, 2, 2, 16), (2, 2, 0, 8), (3, 2, 1, 7), (1, 1, 0, 4)]
-        {
+        for &(k, stride, pad, in_n) in &[
+            (3usize, 1usize, 1usize, 8usize),
+            (5, 2, 2, 16),
+            (2, 2, 0, 8),
+            (3, 2, 1, 7),
+            (1, 1, 0, 4),
+        ] {
             let out_n = conv_dim(in_n, k, stride, pad);
             for v in 0..in_n {
                 let got: Vec<usize> = covering_range(v, k, stride, pad, out_n).collect();

@@ -41,7 +41,9 @@ pub struct StageCtx<'a> {
     /// Worker-pool width available to the stage (1 = serial). Must be a
     /// performance knob only, never a semantics knob (DESIGN.md §6) —
     /// the hierarchical partitioner's two-phase rounds and the spectral
-    /// placer's parallel matvec both honor this bit-for-bit (§10).
+    /// placer's parallel matvec (§10), the overlap partitioner's
+    /// frontier scoring and the force refiner's candidate scan (§11)
+    /// all honor this bit-for-bit.
     pub threads: usize,
     /// Layer ranges of layered (ANN-derived) networks, `None` for cyclic
     /// nets; order-sensitive partitioners may exploit this.

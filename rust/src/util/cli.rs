@@ -86,7 +86,8 @@ mod tests {
 
     #[test]
     fn parses_mixed_styles() {
-        let a = Args::parse(toks("map --network lenet --scale=0.5 --verbose out.json"), &["verbose"]);
+        let a =
+            Args::parse(toks("map --network lenet --scale=0.5 --verbose out.json"), &["verbose"]);
         assert_eq!(a.positional, vec!["map", "out.json"]);
         assert_eq!(a.get("network"), Some("lenet"));
         assert_eq!(a.get_f64("scale", 1.0), 0.5);

@@ -335,7 +335,7 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Arr(v));
                 }
-                other => return Err(format!("expected , or ] found {:?}", other.map(|b| b as char))),
+                other => return Err(format!("expected , or ] got {:?}", other.map(|b| b as char))),
             }
         }
     }
@@ -364,7 +364,7 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                     return Ok(Json::Obj(m));
                 }
-                other => return Err(format!("expected , or }} found {:?}", other.map(|b| b as char))),
+                other => return Err(format!("expected , or }} got {:?}", other.map(|b| b as char))),
             }
         }
     }

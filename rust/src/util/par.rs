@@ -49,6 +49,19 @@ pub fn max_threads() -> usize {
     })
 }
 
+/// Fixed chunk size for an `n`-element two-phase propose sweep: the
+/// smallest chunk that covers `0..n` with at most `threads` chunks.
+///
+/// Every two-phase stage (hierarchical coarsen/refine, force candidate
+/// scan, overlap frontier scoring) derives its [`par_chunks_mut`] chunk
+/// from this one expression so the chunk structure — and therefore any
+/// per-chunk work — is a pure function of `(n, threads)`, never of
+/// scheduling.
+#[inline]
+pub fn fixed_chunk(n: usize, threads: usize) -> usize {
+    crate::util::div_ceil(n, threads.max(1)).max(1)
+}
+
 /// Parallel indexed map: evaluates `f(0..n)` on up to `threads` workers
 /// (an atomic cursor hands out jobs) and returns the results in index
 /// order regardless of completion order. `threads <= 1` runs inline.
@@ -232,6 +245,19 @@ mod tests {
             s[0] = 9;
         });
         assert_eq!(one, vec![9]);
+    }
+
+    #[test]
+    fn fixed_chunk_covers_with_at_most_threads_chunks() {
+        for n in [1usize, 7, 103, 512] {
+            for threads in [1usize, 2, 5, 16] {
+                let c = fixed_chunk(n, threads);
+                let chunks = crate::util::div_ceil(n, c);
+                assert!(chunks <= threads.max(1), "n={n} threads={threads}");
+                assert!(c * chunks >= n, "n={n} threads={threads}");
+            }
+        }
+        assert_eq!(fixed_chunk(10, 0), 10); // zero workers clamps to one chunk
     }
 
     #[test]

@@ -1,7 +1,9 @@
 //! Integration tests: compose generators → partitioners → placements →
 //! metrics → simulator across the evaluation-suite networks.
 
-use snnmap::coordinator::{ensemble, experiment, MapperPipeline, PartitionerKind, PlacerKind, RefinerKind};
+use snnmap::coordinator::{
+    ensemble, experiment, MapperPipeline, PartitionerKind, PlacerKind, RefinerKind,
+};
 use snnmap::hw::NmhConfig;
 use snnmap::hypergraph::io as hgio;
 use snnmap::mapping;

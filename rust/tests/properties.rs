@@ -337,3 +337,70 @@ fn prop_hierarchical_random_snn_valid_compacted_thread_invariant() {
         }
     }
 }
+
+/// Property 11: the two-phase overlap partitioner and force refiner are
+/// bit-for-bit invariant to the worker count over seeded random SNNs —
+/// the companion of property 10's multilevel-engine contract. A tight
+/// C_npc keeps the quotient above the force refiner's parallel dispatch
+/// threshold so the multi-thread runs are not vacuously serial.
+#[test]
+fn prop_overlap_and_force_random_snn_thread_invariant() {
+    use snnmap::mapping::overlap::{self, OverlapParams};
+    use snnmap::placement::force::{self, ForceParams};
+    use snnmap::snn::random::{build, RandomSnnParams};
+    for (case, seed) in [7u64, 43].into_iter().enumerate() {
+        let snn = build(RandomSnnParams {
+            nodes: 1400,
+            mean_cardinality: 6.0,
+            decay: 0.1,
+            seed,
+        });
+        let g = &snn.graph;
+        let max_in = g.node_ids().map(|v| g.inbound(v).len()).max().unwrap_or(1);
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 10;
+        hw.c_apc = (max_in * 6).max(64);
+        hw.c_spc = (max_in * 12).max(128);
+        let (ov_ref, _) = overlap::partition_with_stats(g, &hw, OverlapParams::default(), 1)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        mapping::validate(g, &ov_ref, &hw).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        for threads in [2, 4, 8] {
+            let (rho, _) =
+                overlap::partition_with_stats(g, &hw, OverlapParams::default(), threads)
+                    .unwrap_or_else(|e| panic!("case {case} threads {threads}: {e}"));
+            assert_eq!(rho.assign, ov_ref.assign, "case {case} threads {threads}");
+            assert_eq!(rho.num_parts, ov_ref.num_parts);
+        }
+        // force refinement over the quotient, full-size lattice
+        let gp = push_forward(g, &ov_ref).graph;
+        assert!(
+            gp.num_nodes() >= force::PAR_MIN_PARTS,
+            "case {case}: quotient too small ({}) to exercise the parallel scan",
+            gp.num_nodes()
+        );
+        let full = NmhConfig::small();
+        let start = hilbert::place(&gp, &full);
+        let mut pl_ref = start.clone();
+        let st_ref = force::refine_serial(&gp, &full, &mut pl_ref, ForceParams::default(), None);
+        pl_ref.validate(&full).unwrap();
+        for threads in [2, 4, 8] {
+            let mut pl = start.clone();
+            let st = force::refine_with_threads(
+                &gp,
+                &full,
+                &mut pl,
+                ForceParams::default(),
+                None,
+                threads,
+            );
+            assert!(st.par_sweeps > 0, "case {case} threads {threads}: vacuously serial");
+            assert_eq!(pl.coords, pl_ref.coords, "case {case} threads {threads}");
+            assert_eq!(st.sweeps, st_ref.sweeps, "case {case} threads {threads}");
+            assert_eq!(
+                st.final_wirelength.to_bits(),
+                st_ref.final_wirelength.to_bits(),
+                "case {case} threads {threads}"
+            );
+        }
+    }
+}
