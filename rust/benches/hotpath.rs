@@ -2,11 +2,13 @@
 //! overlap partitioning throughput (connections/s) plus its serial-vs-
 //! parallel growth pair, force-refinement sweep rate plus its serial-vs-
 //! parallel refine pair, metric-engine throughput (serial vs parallel),
-//! quotient construction, greedy ordering, the PJRT-vs-native spectral
-//! engine, and the multilevel hierarchical engine (serial vs two-phase
-//! parallel coarsen/refine/end2end rows with peak hierarchy
-//! memory_bytes). Every serial/parallel pair asserts bit-identical
-//! outputs before recording.
+//! quotient construction plus the pooled push-forward's serial-vs-
+//! parallel sweep pair, greedy ordering plus its serial-vs-parallel
+//! fan-out pair (over the quotient graph, whose hub fan-outs clear the
+//! dispatch threshold), the PJRT-vs-native spectral engine, and the
+//! multilevel hierarchical engine (serial vs two-phase parallel
+//! coarsen/refine/end2end rows with peak hierarchy memory_bytes). Every
+//! serial/parallel pair asserts bit-identical outputs before recording.
 //!
 //! `--json <path>` additionally writes the numbers machine-readably so the
 //! BENCH trajectory (BENCH_hotpath.json at the repo root) can track
@@ -17,7 +19,9 @@
 mod common;
 
 use snnmap::coordinator::experiment::hw_for;
-use snnmap::hypergraph::quotient::push_forward;
+use snnmap::hypergraph::quotient::{
+    push_forward, push_forward_pooled_with_stats, QuotientScratch,
+};
 use snnmap::mapping::hierarchical::{self, HierParams};
 use snnmap::mapping::{self, sequential::SeqOrder};
 use snnmap::metrics::{evaluate, evaluate_serial};
@@ -145,6 +149,90 @@ fn main() {
     );
     let gp = q.graph;
     println!("  quotient: {} partitions, {} h-edges", gp.num_nodes(), gp.num_edges());
+
+    // 4b. pooled quotient push-forward: serial sweep vs the two-phase
+    // parallel scan, through ONE recycled scratch per the production
+    // (multilevel) usage — so the rows gate the steady-state sweep, not
+    // first-use arena growth. The pair must agree bit-for-bit
+    // (asserted); memory_bytes is the sweep's scratch high-water mark
+    // (shared arenas + per-chunk scan buffers).
+    let fine_mult = vec![1u32; g.num_edges()];
+    let mut quot_scratch = QuotientScratch::new();
+    let mut run_quot = |threads: usize| {
+        push_forward_pooled_with_stats(g, &rho, &fine_mult, &mut quot_scratch, threads)
+    };
+    let ((qg_ser, qm_ser, qs_ser), st_q_ser) = bench(2, min_t, || run_quot(1));
+    let ((qg_par, qm_par, qs_par), st_q_par) = bench(2, min_t, || run_quot(par::max_threads()));
+    assert_eq!(
+        qg_ser.num_edges(),
+        qg_par.num_edges(),
+        "parallel quotient sweep diverged from serial"
+    );
+    for e in qg_ser.edge_ids() {
+        assert_eq!(qg_ser.source(e), qg_par.source(e), "edge {e}");
+        assert_eq!(qg_ser.dsts(e), qg_par.dsts(e), "edge {e}");
+        assert_eq!(qg_ser.weight(e).to_bits(), qg_par.weight(e).to_bits(), "edge {e}");
+    }
+    assert_eq!(qm_ser, qm_par, "parallel quotient multiplicity diverged");
+    for (mode, st_m, qs) in [("serial", &st_q_ser, &qs_ser), ("parallel", &st_q_par, &qs_par)] {
+        kernels.push((
+            format!("quotient_push_{mode}"),
+            Json::obj(vec![
+                ("secs_per_iter", Json::Num(st_m.mean_secs())),
+                ("conn_per_s", Json::Num(conns / st_m.mean_secs())),
+                ("memory_bytes", Json::Num(qs.peak_scratch_bytes as f64)),
+            ]),
+        ));
+    }
+    println!(
+        "quotient push (serial) {:>10.3}s/iter  (scan {:.3}s)",
+        st_q_ser.mean_secs(),
+        qs_ser.scan_secs
+    );
+    println!(
+        "quotient push ({} thr)  {:>9.3}s/iter  ({:.2}x, scan {:.3}s, commit {:.3}s, \
+         {} par sweeps, bit-identical to serial)",
+        par::max_threads(),
+        st_q_par.mean_secs(),
+        st_q_ser.mean_secs() / st_q_par.mean_secs(),
+        qs_par.scan_secs,
+        qs_par.commit_secs,
+        qs_par.par_sweeps
+    );
+
+    // 4c. greedy ordering over the *quotient* graph: the addressable
+    // heap serial vs the parallel fan-out propagation engine. Quotient
+    // hub fan-outs are the kind that cross PAR_MIN_FANOUT; at smoke
+    // scales they mostly sit below it (par_steps printed below), so the
+    // pair primarily tracks the addressable-heap engine — the hub tests
+    // in ordering.rs/properties.rs prove the parallel dispatch itself.
+    let qconns = gp.num_connections() as f64;
+    let run_order = |threads: usize| mapping::ordering::greedy_order_with_stats(&gp, threads);
+    let ((ord_ser, gs_ser), st_o_ser) = bench(2, min_t, || run_order(1));
+    let ((ord_par, gs_par), st_o_par) = bench(2, min_t, || run_order(par::max_threads()));
+    assert_eq!(ord_ser, ord_par, "parallel greedy ordering diverged from serial");
+    for (mode, st_m, gs) in [("serial", &st_o_ser, &gs_ser), ("parallel", &st_o_par, &gs_par)] {
+        kernels.push((
+            format!("greedy_order_{mode}"),
+            Json::obj(vec![
+                ("secs_per_iter", Json::Num(st_m.mean_secs())),
+                ("conn_per_s", Json::Num(qconns / st_m.mean_secs())),
+                ("memory_bytes", Json::Num(gs.peak_scratch_bytes as f64)),
+            ]),
+        ));
+    }
+    println!(
+        "greedy order (serial)  {:>10.3}s/iter  {:>10.2e} connections/s",
+        st_o_ser.mean_secs(),
+        qconns / st_o_ser.mean_secs()
+    );
+    println!(
+        "greedy order ({} thr)   {:>9.3}s/iter  ({:.2}x, {} par steps, bit-identical to serial)",
+        par::max_threads(),
+        st_o_par.mean_secs(),
+        st_o_ser.mean_secs() / st_o_par.mean_secs(),
+        gs_par.par_steps
+    );
 
     // 5. metric engine: serial reference vs the parallel default.
     // Throughput is synapse-visits/s (one visit per quotient connection);

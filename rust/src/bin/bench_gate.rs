@@ -31,6 +31,37 @@ use snnmap::util::json::Json;
 /// Relative regression tolerance (0.25 = fail beyond 25%).
 const DEFAULT_TOLERANCE: f64 = 0.25;
 
+/// Every kernel row `benches/hotpath.rs` must emit — the committed
+/// `BENCH_hotpath.json` schema minus host-optional rows (spectral_pjrt).
+/// The bench-smoke job fails when any of these is missing from the
+/// committed baseline *or* from the measured artifact, so a silently
+/// dropped schema row can never shrink the trajectory.
+const EXPECTED_ROWS: &[&str] = &[
+    "force_refine_parallel",
+    "force_refine_serial",
+    "force_refinement",
+    "greedy_order_parallel",
+    "greedy_order_serial",
+    "greedy_ordering",
+    "hier_coarsen_parallel",
+    "hier_coarsen_serial",
+    "hier_end2end_parallel",
+    "hier_end2end_serial",
+    "hier_refine_parallel",
+    "hier_refine_serial",
+    "metrics_evaluate_parallel",
+    "metrics_evaluate_serial",
+    "overlap_grow_parallel",
+    "overlap_grow_serial",
+    "overlap_partition",
+    "quotient_push_forward",
+    "quotient_push_parallel",
+    "quotient_push_serial",
+    "sequential_ordered",
+    "spectral_native",
+    "spectral_placement",
+];
+
 /// Gating direction of one metric key.
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum Direction {
@@ -71,7 +102,14 @@ enum Cell {
 
 /// Run the full gate. `Ok(report)` = pass (the report lists ungated
 /// rows); `Err(failures)` = schema violations and/or regressions.
-fn gate(measured: &Json, baseline: &Json, tolerance: f64) -> Result<Vec<String>, Vec<String>> {
+/// `required` rows (normally [`EXPECTED_ROWS`]; tests pass their own)
+/// must be present in both documents.
+fn gate(
+    measured: &Json,
+    baseline: &Json,
+    tolerance: f64,
+    required: &[&str],
+) -> Result<Vec<String>, Vec<String>> {
     let mut failures: Vec<String> = Vec::new();
     let mut report: Vec<String> = Vec::new();
 
@@ -108,6 +146,22 @@ fn gate(measured: &Json, baseline: &Json, tolerance: f64) -> Result<Vec<String>,
             return Err(failures);
         }
     };
+
+    // Row presence: a committed schema row must exist in both documents.
+    // Rows the baseline declares are presence-checked against the
+    // measured run by the loop below; rows missing from the baseline
+    // itself are reported here (with the measured side too, since the
+    // baseline loop can no longer see them).
+    for &row in required {
+        if !base_kernels.contains_key(row) {
+            failures.push(format!(
+                "schema: expected row '{row}' missing from the committed baseline"
+            ));
+            if !meas_kernels.contains_key(row) {
+                failures.push(format!("schema: kernel '{row}' missing from measured run"));
+            }
+        }
+    }
 
     let mut ungated = 0usize;
     let mut gated = 0usize;
@@ -234,7 +288,7 @@ fn main() {
 
     let measured = load(measured_path);
     let baseline = load(baseline_path);
-    match gate(&measured, &baseline, tolerance) {
+    match gate(&measured, &baseline, tolerance, EXPECTED_ROWS) {
         Ok(report) => {
             for line in &report {
                 println!("bench_gate: {line}");
@@ -283,7 +337,7 @@ mod tests {
                 row(vec![("secs_per_iter", Json::Num(0.5)), ("conn_per_s", Json::Num(1e7))]),
             )],
         );
-        let report = gate(&meas, &base, 0.25).expect("null baselines must pass");
+        let report = gate(&meas, &base, 0.25, &[]).expect("null baselines must pass");
         assert!(report.iter().any(|l| l.contains("ungated") && l.contains("conn_per_s")));
     }
 
@@ -297,20 +351,20 @@ mod tests {
             Json::Num(0.12),
             vec![("k", row(vec![("conn_per_s", Json::Num(7.0e6))]))],
         );
-        let errs = gate(&slow, &base, 0.25).unwrap_err();
+        let errs = gate(&slow, &base, 0.25, &[]).unwrap_err();
         assert!(errs.iter().any(|l| l.contains("regression: k.conn_per_s")));
         // within tolerance
         let ok = doc(
             Json::Num(0.12),
             vec![("k", row(vec![("conn_per_s", Json::Num(7.6e6))]))],
         );
-        assert!(gate(&ok, &base, 0.25).is_ok());
+        assert!(gate(&ok, &base, 0.25, &[]).is_ok());
         // faster is never a regression
         let fast = doc(
             Json::Num(0.12),
             vec![("k", row(vec![("conn_per_s", Json::Num(5e7))]))],
         );
-        assert!(gate(&fast, &base, 0.25).is_ok());
+        assert!(gate(&fast, &base, 0.25, &[]).is_ok());
     }
 
     #[test]
@@ -329,7 +383,7 @@ mod tests {
                 row(vec![("secs_per_iter", Json::Num(1.1)), ("memory_bytes", Json::Num(2e6))]),
             )],
         );
-        let errs = gate(&bloated, &base, 0.25).unwrap_err();
+        let errs = gate(&bloated, &base, 0.25, &[]).unwrap_err();
         assert_eq!(errs.len(), 1, "{errs:?}");
         assert!(errs[0].contains("k.memory_bytes"));
     }
@@ -341,13 +395,13 @@ mod tests {
             vec![("k", row(vec![("conn_per_s", Json::Null)]))],
         );
         let empty = doc(Json::Num(0.12), vec![]);
-        let errs = gate(&empty, &base, 0.25).unwrap_err();
+        let errs = gate(&empty, &base, 0.25, &[]).unwrap_err();
         assert!(errs.iter().any(|l| l.contains("kernel 'k' missing")));
         let wrong_metric = doc(
             Json::Num(0.12),
             vec![("k", row(vec![("synapse_visits_per_s", Json::Num(1.0))]))],
         );
-        let errs = gate(&wrong_metric, &base, 0.25).unwrap_err();
+        let errs = gate(&wrong_metric, &base, 0.25, &[]).unwrap_err();
         assert!(errs.iter().any(|l| l.contains("'k.conn_per_s' missing")));
     }
 
@@ -364,7 +418,7 @@ mod tests {
                 ("brand_new", row(vec![("conn_per_s", Json::Num(1.0))])),
             ],
         );
-        let report = gate(&meas, &base, 0.25).expect("informational cells must not gate");
+        let report = gate(&meas, &base, 0.25, &[]).expect("informational cells must not gate");
         assert!(report.iter().any(|l| l.contains("new kernel") && l.contains("brand_new")));
     }
 
@@ -378,11 +432,11 @@ mod tests {
             Json::Num(0.06),
             vec![("k", row(vec![("conn_per_s", Json::Num(1.0))]))],
         );
-        let errs = gate(&meas, &base, 0.25).unwrap_err();
+        let errs = gate(&meas, &base, 0.25, &[]).unwrap_err();
         assert!(errs.iter().any(|l| l.contains("scale")));
         // null baseline scale: any measured scale accepted
         let base_null = doc(Json::Null, vec![("k", row(vec![("conn_per_s", Json::Null)]))]);
-        assert!(gate(&meas, &base_null, 0.25).is_ok());
+        assert!(gate(&meas, &base_null, 0.25, &[]).is_ok());
     }
 
     #[test]
@@ -392,6 +446,52 @@ mod tests {
             vec![("spectral_pjrt", row(vec![("secs_per_iter", Json::Null)]))],
         );
         let meas = doc(Json::Num(0.12), vec![]);
-        assert!(gate(&meas, &base, 0.25).is_ok());
+        assert!(gate(&meas, &base, 0.25, &[]).is_ok());
+    }
+
+    #[test]
+    fn required_row_missing_from_baseline_or_artifact_fails() {
+        // a committed schema row absent from the baseline is a schema
+        // failure (and is also reported against the artifact when absent
+        // there), so trajectory rows can never be dropped silently
+        let base = doc(
+            Json::Num(0.12),
+            vec![("quotient_push_serial", row(vec![("conn_per_s", Json::Null)]))],
+        );
+        let meas = doc(
+            Json::Num(0.12),
+            vec![("quotient_push_serial", row(vec![("conn_per_s", Json::Num(1.0))]))],
+        );
+        let required = &["quotient_push_serial", "quotient_push_parallel"];
+        let errs = gate(&meas, &base, 0.25, required).unwrap_err();
+        assert!(
+            errs.iter().any(|l| l.contains("'quotient_push_parallel'")
+                && l.contains("committed baseline")),
+            "{errs:?}"
+        );
+        assert!(
+            errs.iter()
+                .any(|l| l.contains("'quotient_push_parallel'") && l.contains("measured run")),
+            "{errs:?}"
+        );
+        // present in both -> passes
+        let base_ok = doc(
+            Json::Num(0.12),
+            vec![("quotient_push_serial", row(vec![("conn_per_s", Json::Null)]))],
+        );
+        assert!(gate(&meas, &base_ok, 0.25, &["quotient_push_serial"]).is_ok());
+    }
+
+    #[test]
+    fn committed_baseline_declares_every_expected_row() {
+        // the committed trajectory file itself must carry the full
+        // expected-row schema (including the PR-5 two-phase rows) — this
+        // is the row-presence check the bench-smoke job relies on
+        let baseline = Json::parse(include_str!("../../../BENCH_hotpath.json"))
+            .expect("committed BENCH_hotpath.json must parse");
+        let kernels = baseline.get("kernels").as_obj().expect("kernels object");
+        for &row in EXPECTED_ROWS {
+            assert!(kernels.contains_key(row), "BENCH_hotpath.json lost row '{row}'");
+        }
     }
 }

@@ -4,9 +4,18 @@
 //! identical source and destination set are then merged by summing their
 //! weights ("we may subsequently merge h-edges with identical source and
 //! destinations by adding together their weights").
+//!
+//! The pooled entry point runs **two-phase** when given a worker budget
+//! (DESIGN.md §12): a parallel *scan* over fixed edge-id chunks computes
+//! each edge's deduplicated, sorted destination-partition set, its FNV
+//! key and a chunk-local unique-edge list, and a serial *commit* merges
+//! the chunk results in edge-id order into the shared [`QuotientScratch`]
+//! — replaying [`sweep_serial`]'s insertion and f32 accumulation order
+//! exactly, so the worker count is never observable in the output.
 
 use super::{EdgeId, Hypergraph, HypergraphBuilder, NodeId};
 use std::collections::HashMap;
+use std::time::Instant;
 
 /// A partitioning ρ: N → P plus its cardinality.
 #[derive(Clone, Debug)]
@@ -68,6 +77,32 @@ pub struct Quotient {
     pub merged_from: Vec<Vec<EdgeId>>,
 }
 
+/// Below this edge count the pooled push-forward sweeps serially even
+/// when `threads > 1` — scoped-thread spawn overhead would dominate the
+/// per-edge destination dedup. Invisible in results: the paths agree
+/// bit-for-bit. Public so thread-invariance tests can assert their
+/// workloads actually cross it (see [`QuotientStats::par_sweeps`]).
+pub const PAR_MIN_EDGES: usize = 512;
+
+/// Diagnostics from one pooled push-forward (hotpath bench + CI
+/// trajectory), mirroring `HierStats`/`OverlapStats` (DESIGN.md §10-§12).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QuotientStats {
+    /// Wall-clock of the scan phase (destination dedup + sort + hashing;
+    /// parallel when dispatched, the whole serial sweep otherwise).
+    pub scan_secs: f64,
+    /// Wall-clock of the serial commit merge (zero on the serial path,
+    /// where scan and commit are one fused sweep).
+    pub commit_secs: f64,
+    /// Sweeps that dispatched the parallel scan path (0 or 1 per call) —
+    /// the counter that makes broken `threads` wiring observable despite
+    /// bit-identical outputs.
+    pub par_sweeps: u64,
+    /// Heap high-water mark of the sweep's scratch (shared arenas plus,
+    /// on the parallel path, the per-chunk scan buffers).
+    pub peak_scratch_bytes: usize,
+}
+
 /// FNV-1a step over one little-endian u32.
 #[inline]
 fn fnv1a_u32(mut h: u64, x: u32) -> u64 {
@@ -101,6 +136,10 @@ pub struct QuotientScratch {
     // edge ids restart at 0 every round, so stale stamps would alias).
     stamp: Vec<u32>,
     dset: Vec<NodeId>,
+    // Parallel-sweep pools: per-chunk scan slots and the commit's
+    // local→global map, recycled across sweeps like every other arena.
+    scans: Vec<ChunkScan>,
+    gmap: Vec<u32>,
 }
 
 impl QuotientScratch {
@@ -122,15 +161,80 @@ impl QuotientScratch {
         self.stamp.resize(num_parts, u32::MAX);
         self.dset.clear();
     }
+
+    /// Heap footprint of the retained arenas (stats reporting).
+    pub fn memory_bytes(&self) -> usize {
+        self.srcs.capacity() * 4
+            + self.arena.capacity() * 4
+            + self.span_off.capacity() * 8
+            + self.weights.capacity() * 4
+            + self.mult.capacity() * 4
+            + self.index.capacity() * (8 + 4)
+            + self.chain.capacity() * 4
+            + self.stamp.capacity() * 4
+            + self.dset.capacity() * 4
+            + self.scans.iter().map(ChunkScan::memory_bytes).sum::<usize>()
+            + self.gmap.capacity() * 4
+    }
 }
 
-/// The shared sweep behind both push-forward entry points. Deduplicates
-/// per-edge destination partitions through `scratch.stamp`, merges
-/// identical `(source, D)` quotient edges via the flat arena + hash
-/// chain, and — fused into the same pass — accumulates `fine_mult` (the
-/// original-axon multiplicity each fine edge represents) into
+/// Find-or-insert one `(src, D)` record with FNV key `h`, accumulating
+/// weight `w` — the single intern routine shared by [`sweep_serial`] and
+/// [`sweep_parallel`]'s commit, so the two paths cannot drift apart
+/// (divergence impossible by construction, §11's `scan_one` pattern).
+/// Returns the unique-edge id and whether it was freshly inserted.
+fn intern_edge(
+    scratch: &mut QuotientScratch,
+    ps: u32,
+    dset: &[NodeId],
+    h: u64,
+    w: f32,
+    track_mult: bool,
+) -> (usize, bool) {
+    // walk the collision chain for an identical (ps, dset)
+    let mut found = None;
+    if let Some(&head) = scratch.index.get(&h) {
+        let mut cur = head;
+        while cur != u32::MAX {
+            let ci = cur as usize;
+            if scratch.srcs[ci] == ps
+                && scratch.arena[scratch.span_off[ci]..scratch.span_off[ci + 1]] == dset[..]
+            {
+                found = Some(ci);
+                break;
+            }
+            cur = scratch.chain[ci];
+        }
+    }
+    match found {
+        Some(ci) => {
+            scratch.weights[ci] += w;
+            (ci, false)
+        }
+        None => {
+            let id = scratch.srcs.len() as u32;
+            scratch.srcs.push(ps);
+            scratch.arena.extend_from_slice(dset);
+            scratch.span_off.push(scratch.arena.len());
+            scratch.weights.push(w);
+            if track_mult {
+                scratch.mult.push(0);
+            }
+            let prev_head = scratch.index.insert(h, id);
+            scratch.chain.push(prev_head.unwrap_or(u32::MAX));
+            (id as usize, true)
+        }
+    }
+}
+
+/// The serial reference sweep behind both push-forward entry points.
+/// Deduplicates per-edge destination partitions through `scratch.stamp`,
+/// merges identical `(source, D)` quotient edges via the flat arena +
+/// hash chain, and — fused into the same pass — accumulates `fine_mult`
+/// (the original-axon multiplicity each fine edge represents) into
 /// `scratch.mult` and/or appends to per-unique-edge `merged` lists.
-fn sweep(
+/// [`sweep_parallel`] must reproduce this bit-for-bit (tested).
+fn sweep_serial(
     g: &Hypergraph,
     rho: &Partitioning,
     fine_mult: Option<&[u32]>,
@@ -157,44 +261,16 @@ fn sweep(
             h = fnv1a_u32(h, p);
         }
 
-        // walk the collision chain for an identical (ps, dset)
-        let mut found = None;
-        if let Some(&head) = scratch.index.get(&h) {
-            let mut cur = head;
-            while cur != u32::MAX {
-                let ci = cur as usize;
-                if scratch.srcs[ci] == ps
-                    && scratch.arena[scratch.span_off[ci]..scratch.span_off[ci + 1]]
-                        == scratch.dset[..]
-                {
-                    found = Some(ci);
-                    break;
-                }
-                cur = scratch.chain[ci];
+        // intern through the shared routine (dset swaps out of the
+        // scratch for the call — a pointer move, not a copy)
+        let dset = std::mem::take(&mut scratch.dset);
+        let (ci, fresh) = intern_edge(scratch, ps, &dset, h, g.weight(e), fine_mult.is_some());
+        scratch.dset = dset;
+        if fresh {
+            if let Some(m) = merged.as_deref_mut() {
+                m.push(Vec::new());
             }
         }
-        let ci = match found {
-            Some(ci) => {
-                scratch.weights[ci] += g.weight(e);
-                ci
-            }
-            None => {
-                let id = scratch.srcs.len() as u32;
-                scratch.srcs.push(ps);
-                scratch.arena.extend_from_slice(&scratch.dset);
-                scratch.span_off.push(scratch.arena.len());
-                scratch.weights.push(g.weight(e));
-                if fine_mult.is_some() {
-                    scratch.mult.push(0);
-                }
-                if let Some(m) = merged.as_deref_mut() {
-                    m.push(Vec::new());
-                }
-                let prev_head = scratch.index.insert(h, id);
-                scratch.chain.push(prev_head.unwrap_or(u32::MAX));
-                id as usize
-            }
-        };
         if let Some(fm) = fine_mult {
             scratch.mult[ci] += fm[e as usize];
         }
@@ -202,6 +278,200 @@ fn sweep(
             m[ci].push(e);
         }
     }
+}
+
+/// Per-chunk slot of the parallel scan phase: each edge in the chunk
+/// maps to a chunk-local unique `(src, D)` record; first occurrences own
+/// a span in the chunk arena plus the precomputed FNV key, so the serial
+/// commit never re-deduplicates, re-sorts or re-hashes a destination
+/// set. Each slot also owns its worker-local dedup state (partition
+/// stamp, sorted-set buffer, local hash chain), so the whole structure
+/// pools inside [`QuotientScratch`] across sweeps — no per-sweep
+/// allocation beyond capacity growth.
+#[derive(Default)]
+struct ChunkScan {
+    /// per-edge (in chunk order): chunk-local unique record id
+    lu: Vec<u32>,
+    /// per-unique: FNV key of (src, D) — identical to the serial sweep's
+    hash: Vec<u64>,
+    /// per-unique: source partition
+    src: Vec<u32>,
+    /// per-unique destination spans in `arena`
+    span_off: Vec<usize>,
+    arena: Vec<NodeId>,
+    // worker-local scan state (reset per sweep, capacity retained)
+    stamp: Vec<u32>,
+    dset: Vec<NodeId>,
+    index: HashMap<u64, u32>,
+    lchain: Vec<u32>,
+}
+
+impl ChunkScan {
+    fn reset(&mut self, num_parts: usize) {
+        self.lu.clear();
+        self.hash.clear();
+        self.src.clear();
+        self.span_off.clear();
+        self.span_off.push(0);
+        self.arena.clear();
+        // stamp epochs are chunk-local edge indices restarting at 0, so
+        // stale values from the previous sweep would alias: refill
+        self.stamp.clear();
+        self.stamp.resize(num_parts, u32::MAX);
+        self.dset.clear();
+        self.index.clear();
+        self.lchain.clear();
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.lu.capacity() * 4
+            + self.hash.capacity() * 8
+            + self.src.capacity() * 4
+            + self.span_off.capacity() * 8
+            + self.arena.capacity() * 4
+            + self.stamp.capacity() * 4
+            + self.dset.capacity() * 4
+            + self.index.capacity() * (8 + 4)
+            + self.lchain.capacity() * 4
+    }
+}
+
+/// Two-phase parallel sweep (DESIGN.md §12), bit-for-bit identical to
+/// [`sweep_serial`].
+///
+/// *Scan* (parallel): fixed contiguous edge-id chunks
+/// ([`crate::util::par::par_chunks_mut`] over one [`ChunkScan`] slot per
+/// chunk) each dedup their edges' destination partitions through a
+/// per-worker epoch-stamped array, sort them, compute the FNV key, and
+/// collapse chunk-internal duplicates through a chunk-local arena + hash
+/// chain. Every slot is a pure function of its edge range, so scheduling
+/// is unobservable.
+///
+/// *Commit* (serial): chunks merge in ascending chunk order and, inside
+/// a chunk, in ascending edge order — i.e. ascending global edge id.
+/// First occurrences walk the shared hash chain exactly as the serial
+/// sweep does (same keys, same insertion order, hence the same unique
+/// ids), repeats resolve through a per-chunk local→global map, and every
+/// edge contributes its own f32 weight individually — the accumulation
+/// tree is the serial left-to-right order, never per-chunk partial sums,
+/// which is what keeps the f32 weights bit-identical for any chunking.
+fn sweep_parallel(
+    g: &Hypergraph,
+    rho: &Partitioning,
+    fine_mult: Option<&[u32]>,
+    scratch: &mut QuotientScratch,
+    threads: usize,
+    stats: &mut QuotientStats,
+) {
+    assert_eq!(g.num_nodes(), rho.assign.len());
+    let ne = g.num_edges();
+    scratch.reset(rho.num_parts, ne);
+
+    // ---- scan (parallel propose over fixed edge-id chunks) ----
+    // The chunk slots and the commit's local→global map pool inside the
+    // scratch; they swap out for the sweep (borrowck) and back in below.
+    let t0 = Instant::now();
+    let chunk = crate::util::par::fixed_chunk(ne, threads);
+    let n_chunks = crate::util::div_ceil(ne, chunk);
+    let mut scans = std::mem::take(&mut scratch.scans);
+    let mut gmap = std::mem::take(&mut scratch.gmap);
+    scans.resize_with(n_chunks, ChunkScan::default);
+    let assign = &rho.assign[..];
+    let num_parts = rho.num_parts;
+    crate::util::par::par_chunks_mut(&mut scans, 1, threads, |ci, slot| {
+        let cs = &mut slot[0];
+        cs.reset(num_parts);
+        let lo = ci * chunk;
+        let hi = (lo + chunk).min(ne);
+        for (k, e) in (lo..hi).enumerate() {
+            let e = e as EdgeId;
+            let ps = assign[g.source(e) as usize];
+            cs.dset.clear();
+            for &d in g.dsts(e) {
+                let p = assign[d as usize];
+                if cs.stamp[p as usize] != k as u32 {
+                    cs.stamp[p as usize] = k as u32;
+                    cs.dset.push(p);
+                }
+            }
+            cs.dset.sort_unstable();
+            let mut h = fnv1a_u32(0xcbf2_9ce4_8422_2325, ps);
+            for &p in &cs.dset {
+                h = fnv1a_u32(h, p);
+            }
+            // chunk-local dedup through the local hash chain
+            let mut found = None;
+            if let Some(&head) = cs.index.get(&h) {
+                let mut cur = head;
+                while cur != u32::MAX {
+                    let ui = cur as usize;
+                    if cs.src[ui] == ps
+                        && cs.arena[cs.span_off[ui]..cs.span_off[ui + 1]] == cs.dset[..]
+                    {
+                        found = Some(cur);
+                        break;
+                    }
+                    cur = cs.lchain[ui];
+                }
+            }
+            let id = match found {
+                Some(id) => id,
+                None => {
+                    let id = cs.src.len() as u32;
+                    cs.src.push(ps);
+                    cs.hash.push(h);
+                    cs.arena.extend_from_slice(&cs.dset);
+                    cs.span_off.push(cs.arena.len());
+                    let prev = cs.index.insert(h, id);
+                    cs.lchain.push(prev.unwrap_or(u32::MAX));
+                    id
+                }
+            };
+            cs.lu.push(id);
+        }
+    });
+    stats.scan_secs += t0.elapsed().as_secs_f64();
+
+    // ---- commit (serial merge in ascending edge-id order) ----
+    let t1 = Instant::now();
+    for (ci, cs) in scans.iter().enumerate() {
+        let lo = ci * chunk;
+        gmap.clear();
+        gmap.resize(cs.src.len(), u32::MAX);
+        for (k, &lu) in cs.lu.iter().enumerate() {
+            let e = (lo + k) as EdgeId;
+            let li = lu as usize;
+            let gi = if gmap[li] != u32::MAX {
+                // repeat within the chunk: the global record is known and
+                // the serial sweep would have found it too — accumulate
+                let gi = gmap[li] as usize;
+                scratch.weights[gi] += g.weight(e);
+                gi
+            } else {
+                // first chunk occurrence: the identical intern routine the
+                // serial sweep runs, on the precomputed (src, dset, key)
+                let dset = &cs.arena[cs.span_off[li]..cs.span_off[li + 1]];
+                let (gi, _) = intern_edge(
+                    scratch,
+                    cs.src[li],
+                    dset,
+                    cs.hash[li],
+                    g.weight(e),
+                    fine_mult.is_some(),
+                );
+                gmap[li] = gi as u32;
+                gi
+            };
+            if let Some(fm) = fine_mult {
+                scratch.mult[gi] += fm[e as usize];
+            }
+        }
+    }
+    stats.commit_secs += t1.elapsed().as_secs_f64();
+    // return the pooled buffers; memory_bytes() then sees them too
+    scratch.scans = scans;
+    scratch.gmap = gmap;
+    stats.peak_scratch_bytes = stats.peak_scratch_bytes.max(scratch.memory_bytes());
 }
 
 fn build_graph(num_parts: usize, scratch: &QuotientScratch) -> Hypergraph {
@@ -234,7 +504,7 @@ fn build_graph(num_parts: usize, scratch: &QuotientScratch) -> Hypergraph {
 pub fn push_forward(g: &Hypergraph, rho: &Partitioning) -> Quotient {
     let mut scratch = QuotientScratch::new();
     let mut merged_from: Vec<Vec<EdgeId>> = Vec::new();
-    sweep(g, rho, None, &mut scratch, Some(&mut merged_from));
+    sweep_serial(g, rho, None, &mut scratch, Some(&mut merged_from));
     Quotient {
         graph: build_graph(rho.num_parts, &scratch),
         merged_from,
@@ -249,16 +519,44 @@ pub fn push_forward(g: &Hypergraph, rho: &Partitioning) -> Quotient {
 /// exactly the aggregate the coarsening bookkeeping needs (C_apc
 /// accounting). `scratch` is recycled across calls; only the returned
 /// graph and multiplicity vector are fresh allocations.
+///
+/// `threads` is a performance knob only: runs with `threads <= 1` — and
+/// every graph below [`PAR_MIN_EDGES`] — take [`sweep_serial`], and the
+/// two-phase parallel path agrees with it bit-for-bit (tested).
 pub fn push_forward_pooled(
     g: &Hypergraph,
     rho: &Partitioning,
     fine_mult: &[u32],
     scratch: &mut QuotientScratch,
+    threads: usize,
 ) -> (Hypergraph, Vec<u32>) {
+    let (graph, mult, _) = push_forward_pooled_with_stats(g, rho, fine_mult, scratch, threads);
+    (graph, mult)
+}
+
+/// [`push_forward_pooled`] plus per-sweep diagnostics (scan/commit
+/// wall-clock, scratch high-water mark, parallel dispatch counter) for
+/// the hotpath bench and the CI trajectory.
+pub fn push_forward_pooled_with_stats(
+    g: &Hypergraph,
+    rho: &Partitioning,
+    fine_mult: &[u32],
+    scratch: &mut QuotientScratch,
+    threads: usize,
+) -> (Hypergraph, Vec<u32>, QuotientStats) {
     assert_eq!(g.num_edges(), fine_mult.len());
-    sweep(g, rho, Some(fine_mult), scratch, None);
+    let mut stats = QuotientStats::default();
+    if threads > 1 && g.num_edges() >= PAR_MIN_EDGES {
+        stats.par_sweeps = 1;
+        sweep_parallel(g, rho, Some(fine_mult), scratch, threads, &mut stats);
+    } else {
+        let t0 = Instant::now();
+        sweep_serial(g, rho, Some(fine_mult), scratch, None);
+        stats.scan_secs = t0.elapsed().as_secs_f64();
+    }
+    stats.peak_scratch_bytes = stats.peak_scratch_bytes.max(scratch.memory_bytes());
     let graph = build_graph(rho.num_parts, scratch);
-    (graph, std::mem::take(&mut scratch.mult))
+    (graph, std::mem::take(&mut scratch.mult), stats)
 }
 
 #[cfg(test)]
@@ -344,7 +642,7 @@ mod tests {
         let mut scratch = QuotientScratch::new();
         // run twice through the same scratch: reuse must not leak state
         for _ in 0..2 {
-            let (graph, mult) = push_forward_pooled(&g, &rho, &fine_mult, &mut scratch);
+            let (graph, mult) = push_forward_pooled(&g, &rho, &fine_mult, &mut scratch, 1);
             assert_eq!(graph.num_edges(), plain.graph.num_edges());
             for e in graph.edge_ids() {
                 assert_eq!(graph.source(e), plain.graph.source(e));
@@ -365,5 +663,83 @@ mod tests {
         let p = Partitioning::new(vec![0, 2, 2], 4).compacted();
         assert_eq!(p.num_parts, 2);
         assert_eq!(p.assign, vec![0, 1, 1]);
+    }
+
+    /// Random graph big enough to clear [`PAR_MIN_EDGES`] (one h-edge
+    /// per node), with enough duplicate (src, D) quotient keys that the
+    /// merge paths are genuinely exercised.
+    fn bulk_graph(seed: u64) -> (Hypergraph, Partitioning) {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seeded(seed);
+        let n = PAR_MIN_EDGES + 77;
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            let k = rng.range(1, 9);
+            let mut dsts: Vec<u32> = (0..k)
+                .map(|_| rng.below(n) as u32)
+                .filter(|&d| d != s)
+                .collect();
+            if dsts.is_empty() {
+                dsts.push((s + 1) % n as u32);
+            }
+            b.add_edge(s, dsts, rng.next_f32() + 1e-4);
+        }
+        let parts = 23;
+        let assign: Vec<u32> = (0..n).map(|_| rng.below(parts) as u32).collect();
+        (b.build(), Partitioning::new(assign, parts))
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_bitwise_across_threads() {
+        let (g, rho) = bulk_graph(0xBEEF);
+        assert!(g.num_edges() >= PAR_MIN_EDGES);
+        let fine_mult: Vec<u32> = (0..g.num_edges()).map(|i| (i % 7 + 1) as u32).collect();
+        let mut scr_s = QuotientScratch::new();
+        let (g1, m1, st1) = push_forward_pooled_with_stats(&g, &rho, &fine_mult, &mut scr_s, 1);
+        assert_eq!(st1.par_sweeps, 0);
+        // one reused scratch across all thread counts: reuse + parallel
+        // sweeps must not interact
+        let mut scr_p = QuotientScratch::new();
+        for threads in [2, 4, 8] {
+            let (g2, m2, st2) =
+                push_forward_pooled_with_stats(&g, &rho, &fine_mult, &mut scr_p, threads);
+            assert_eq!(st2.par_sweeps, 1, "threads={threads} dispatched serially");
+            assert!(st2.peak_scratch_bytes > 0);
+            assert_eq!(g1.num_edges(), g2.num_edges(), "threads={threads}");
+            for e in g1.edge_ids() {
+                assert_eq!(g1.source(e), g2.source(e), "edge {e} threads={threads}");
+                assert_eq!(g1.dsts(e), g2.dsts(e), "edge {e} threads={threads}");
+                assert_eq!(
+                    g1.weight(e).to_bits(),
+                    g2.weight(e).to_bits(),
+                    "edge {e} threads={threads}"
+                );
+            }
+            assert_eq!(m1, m2, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_matches_plain_reference() {
+        // the parallel pooled sweep vs the merged_from bookkeeping of the
+        // plain entry point: same quotient, multiplicity == Σ fine_mult
+        let (g, rho) = bulk_graph(0x5EED);
+        let plain = push_forward(&g, &rho);
+        let fine_mult: Vec<u32> = (0..g.num_edges()).map(|i| (i % 5 + 1) as u32).collect();
+        let mut scratch = QuotientScratch::new();
+        let (qg, mult, stats) =
+            push_forward_pooled_with_stats(&g, &rho, &fine_mult, &mut scratch, 4);
+        assert_eq!(stats.par_sweeps, 1);
+        assert_eq!(qg.num_edges(), plain.graph.num_edges());
+        for e in qg.edge_ids() {
+            assert_eq!(qg.source(e), plain.graph.source(e));
+            assert_eq!(qg.dsts(e), plain.graph.dsts(e));
+            assert_eq!(qg.weight(e).to_bits(), plain.graph.weight(e).to_bits());
+            let want: u32 = plain.merged_from[e as usize]
+                .iter()
+                .map(|&f| fine_mult[f as usize])
+                .sum();
+            assert_eq!(mult[e as usize], want, "edge {e}");
+        }
     }
 }

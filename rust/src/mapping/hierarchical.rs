@@ -29,7 +29,10 @@
 //! [`QuotientScratch`] arena across push-forward rounds, axon
 //! multiplicities are accumulated inside the push-forward sweep (no
 //! `merged_from` lists), and uncoarsening drops each level's graph as
-//! soon as its assignment has been projected to the finer level.
+//! soon as its assignment has been projected to the finer level. The
+//! per-round push-forward itself runs the §12 two-phase parallel sweep
+//! when `threads > 1` (`push_forward_pooled`'s worker knob — bit-for-bit
+//! thread-invariant like every other stage here).
 
 use super::MapError;
 use crate::hw::NmhConfig;
@@ -200,7 +203,8 @@ pub fn partition_with_stats(
         }
         let rho = Partitioning::new(matching.assign, matching.num_coarse);
         let t0 = std::time::Instant::now();
-        let (qg, axon_mult) = push_forward_pooled(graph, &rho, &top.axon_mult, &mut qscratch);
+        let (qg, axon_mult) =
+            push_forward_pooled(graph, &rho, &top.axon_mult, &mut qscratch, threads);
         if debug_timing {
             eprintln!(
                 "[hier] push_forward -> n={} e={} in {:?}",

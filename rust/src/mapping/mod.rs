@@ -155,6 +155,15 @@ pub fn validate(g: &Hypergraph, rho: &Partitioning, hw: &NmhConfig) -> Result<()
 /// the O(1) per-node check behind [`check_nodes_feasible`] and
 /// [`ConstraintTracker::node_feasible`].
 pub fn node_feasible(g: &Hypergraph, hw: &NmhConfig, n: u32) -> Result<(), MapError> {
+    if hw.c_npc == 0 {
+        // a zero-capacity core admits no node at all: without this check
+        // every greedy partitioner would fail mid-run with the internal
+        // "rejected by empty partition" inconsistency instead
+        return Err(MapError::NodeUnmappable {
+            node: n,
+            reason: "C_npc=0 admits no node on any core".to_string(),
+        });
+    }
     let inb = g.inbound(n).len();
     if inb > hw.c_spc {
         return Err(MapError::NodeUnmappable {
@@ -375,6 +384,31 @@ mod tests {
         let t = ConstraintTracker::new(&g, &hw);
         assert!(t.node_feasible(4).is_ok()); // 1 inbound
         assert!(t.node_feasible(2).is_err()); // 2 inbound > 1
+    }
+
+    #[test]
+    fn zero_npc_classified_as_unmappable_not_internal_inconsistency() {
+        // C_npc = 0 means no node fits any core: the prelude must report
+        // NodeUnmappable instead of letting the greedy partitioners die
+        // mid-run with the "rejected by empty partition" internal error
+        let g = star();
+        let mut hw = NmhConfig::small();
+        hw.c_npc = 0;
+        let err = node_feasible(&g, &hw, 0).unwrap_err();
+        assert!(matches!(err, MapError::NodeUnmappable { node: 0, .. }), "{err}");
+        let seq = crate::mapping::sequential::partition(
+            &g,
+            &hw,
+            crate::mapping::sequential::SeqOrder::Natural,
+        );
+        let stream = crate::mapping::streaming::partition(&g, &hw, Default::default());
+        let edge = crate::mapping::edgemap::partition(&g, &hw);
+        for (name, res) in [("sequential", seq), ("streaming", stream), ("edgemap", edge)] {
+            assert!(
+                matches!(res, Err(MapError::NodeUnmappable { node: 0, .. })),
+                "{name}: {res:?}"
+            );
+        }
     }
 
     #[test]

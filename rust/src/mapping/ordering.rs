@@ -6,13 +6,56 @@
 //! h-graphs the paper introduces a greedy frequency-accumulation order
 //! (Alg. 2) and, for acyclic quotient graphs, weighted Kahn topological
 //! ordering.
+//!
+//! Alg. 2's engine is an **addressable** (position-indexed) max-heap:
+//! a priority bump re-sifts the node's single live entry in place, so
+//! the structure never holds stale duplicates — the lazy-invalidation
+//! `BinaryHeap` churn of the reference implementation
+//! ([`greedy_order_serial`], kept as the bit-exact oracle) is gone. With
+//! `threads > 1` the per-placement frequency propagation (the `dsts`
+//! fan-out of the placed node's outbound h-edges) runs **two-phase**
+//! (DESIGN.md §12): a parallel propose over fixed fan-out chunks marks
+//! which destinations take a bump against the step-start state, and a
+//! serial commit applies the bumps in destination order — bit-for-bit
+//! identical to the serial walk for every worker count (tested).
 
 use crate::hypergraph::Hypergraph;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::collections::VecDeque;
+use std::time::Instant;
 
-/// Max-heap entry with lazy invalidation.
+/// Below this per-step fan-out (Σ |D_e| over the placed node's outbound
+/// h-edges) the frequency propagation runs serially even when
+/// `threads > 1`. The propose phase does only two array reads per
+/// element, so — unlike the force scan's per-candidate `swap_gain` —
+/// there is nothing to amortize the scoped-thread spawn against until
+/// the fan-out's random `placed`/`prio` reads (the cache-miss-bound cost
+/// on large graphs) reach the thousands; a small floor would make the
+/// parallel path a net pessimization on exactly the steps it targets.
+/// Fine SNN graphs (|D| ≈ mean cardinality) and small-scale quotient
+/// graphs stay serial by design; billion-edge hub fan-outs dispatch.
+/// Public so thread-invariance tests can assert their workloads actually
+/// dispatch (see [`OrderStats::par_steps`]).
+pub const PAR_MIN_FANOUT: usize = 1024;
+
+/// Diagnostics from one greedy-ordering run (hotpath bench + CI
+/// trajectory), mirroring `QuotientStats`/`OverlapStats` (DESIGN.md §12).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OrderStats {
+    /// Wall-clock of parallel propose phases (zero when never dispatched).
+    pub propose_secs: f64,
+    /// Wall-clock of everything else: selection, bumps, heap maintenance.
+    pub commit_secs: f64,
+    /// Placement steps that dispatched the parallel propose path — the
+    /// counter that makes broken `threads` wiring observable despite
+    /// bit-identical outputs.
+    pub par_steps: u64,
+    /// Heap high-water mark of the ordering's scratch structures.
+    pub peak_scratch_bytes: usize,
+}
+
+/// Max-heap entry with lazy invalidation (reference implementation only).
 #[derive(PartialEq)]
 struct Entry {
     prio: f64,
@@ -35,22 +78,248 @@ impl Ord for Entry {
     }
 }
 
-/// Greedy nodes ordering (Alg. 2).
-///
-/// An addressable priority queue accumulates, per node, the total spike
-/// frequency of connections from already-ordered nodes; the next node is
-/// the highest-priority unordered one, falling back to minimum-inbound
-/// nodes when the queue is exhausted. Produces an order with high local
-/// synaptic reuse in O(e·d·log n).
+/// Addressable binary max-heap over node ids, keyed by an external
+/// priority slice. `pos[n]` tracks n's heap slot, so a priority increase
+/// re-sifts the existing entry in place — at most one live entry per
+/// node, never a stale one. Ordering is (priority desc, node id asc),
+/// the same total order as the reference [`Entry`], so selections and
+/// tie-breaks are identical by construction.
+struct AddressableHeap {
+    heap: Vec<u32>,
+    /// node -> heap slot, `u32::MAX` when absent.
+    pos: Vec<u32>,
+}
+
+impl AddressableHeap {
+    fn new(n: usize) -> Self {
+        AddressableHeap { heap: Vec::with_capacity(n), pos: vec![u32::MAX; n] }
+    }
+
+    /// The heap's total order: higher priority first, smaller id on ties.
+    #[inline]
+    fn better(prio: &[f64], a: u32, b: u32) -> bool {
+        let (pa, pb) = (prio[a as usize], prio[b as usize]);
+        pa > pb || (pa == pb && a < b)
+    }
+
+    /// Insert `n`, or restore the heap property after n's priority rose
+    /// (priorities only ever increase in Alg. 2, so sift-up suffices).
+    fn bump(&mut self, prio: &[f64], n: u32) {
+        let i = self.pos[n as usize];
+        if i == u32::MAX {
+            self.pos[n as usize] = self.heap.len() as u32;
+            self.heap.push(n);
+            self.sift_up(prio, self.heap.len() - 1);
+        } else {
+            self.sift_up(prio, i as usize);
+        }
+    }
+
+    fn pop(&mut self, prio: &[f64]) -> Option<u32> {
+        if self.heap.is_empty() {
+            return None;
+        }
+        let top = self.heap[0];
+        self.pos[top as usize] = u32::MAX;
+        let last = self.heap.pop().unwrap();
+        if !self.heap.is_empty() {
+            self.heap[0] = last;
+            self.pos[last as usize] = 0;
+            self.sift_down(prio, 0);
+        }
+        Some(top)
+    }
+
+    fn sift_up(&mut self, prio: &[f64], mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::better(prio, self.heap[i], self.heap[parent]) {
+                self.swap_slots(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, prio: &[f64], mut i: usize) {
+        loop {
+            let l = 2 * i + 1;
+            if l >= self.heap.len() {
+                break;
+            }
+            let r = l + 1;
+            let mut best = l;
+            if r < self.heap.len() && Self::better(prio, self.heap[r], self.heap[l]) {
+                best = r;
+            }
+            if Self::better(prio, self.heap[best], self.heap[i]) {
+                self.swap_slots(i, best);
+                i = best;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn swap_slots(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos[self.heap[a] as usize] = a as u32;
+        self.pos[self.heap[b] as usize] = b as u32;
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.heap.capacity() * 4 + self.pos.capacity() * 4
+    }
+}
+
+/// Greedy nodes ordering (Alg. 2), serial single-thread entry point.
 pub fn greedy_order(g: &Hypergraph) -> Vec<u32> {
+    greedy_order_threads(g, 1)
+}
+
+/// [`greedy_order`] with an explicit worker budget (fed from
+/// [`crate::stage::StageCtx::threads`] by the sequential partitioner and
+/// the Hilbert/minimum-distance placers). A performance knob only:
+/// the output is bit-for-bit identical for every value (enforced by
+/// tests against [`greedy_order_serial`]).
+pub fn greedy_order_threads(g: &Hypergraph, threads: usize) -> Vec<u32> {
+    greedy_order_with_stats(g, threads).0
+}
+
+/// [`greedy_order_threads`] plus per-run diagnostics for the hotpath
+/// bench and the CI trajectory.
+///
+/// The addressable priority structure accumulates, per node, the total
+/// spike frequency of connections from already-ordered nodes; the next
+/// node is the highest-priority unordered one, falling back to
+/// minimum-inbound nodes when no unordered node has positive priority
+/// (Alg. 2 lines 6-7, 12). Invariant: the heap holds exactly the
+/// unplaced nodes whose priority is positive (or the +inf seeds), at
+/// their *current* priority — which is precisely the set the reference
+/// heap's skip-stale pop converges to.
+pub fn greedy_order_with_stats(g: &Hypergraph, threads: usize) -> (Vec<u32>, OrderStats) {
+    let threads = threads.max(1);
+    let mut stats = OrderStats::default();
+    let t_run = Instant::now();
+    let n = g.num_nodes();
+    let mut order = Vec::with_capacity(n);
+    let mut prio = vec![0.0f64; n];
+    let mut placed = vec![false; n];
+    let mut heap = AddressableHeap::new(n);
+
+    // Nodes sorted by inbound-set size: the fallback source (line 12) and
+    // the +inf seeding of minimum-inbound nodes (lines 6-7).
+    let mut by_inbound: Vec<u32> = (0..n as u32).collect();
+    by_inbound.sort_by_key(|&m| (g.inbound(m).len(), m));
+    let min_inbound = by_inbound
+        .first()
+        .map(|&m| g.inbound(m).len())
+        .unwrap_or(0);
+    for &m in by_inbound.iter().take_while(|&&m| g.inbound(m).len() == min_inbound) {
+        prio[m as usize] = f64::INFINITY;
+        heap.bump(&prio, m);
+    }
+    let mut fallback_cursor = 0usize;
+
+    // fan-out propose scratch, reused across placement steps
+    let mut pairs: Vec<(u32, f64)> = Vec::new();
+    let mut keep: Vec<bool> = Vec::new();
+
+    while order.len() < n {
+        // highest-priority unordered node, else next min-inbound unplaced
+        let node = heap.pop(&prio).unwrap_or_else(|| {
+            while placed[by_inbound[fallback_cursor] as usize] {
+                fallback_cursor += 1;
+            }
+            by_inbound[fallback_cursor]
+        });
+        placed[node as usize] = true;
+        order.push(node);
+
+        // propagate frequency to destinations (lines 14-15); the fan-out
+        // size is only worth computing when a parallel pool exists
+        let par_fanout = threads > 1
+            && g.outbound(node).iter().map(|&e| g.cardinality(e)).sum::<usize>()
+                >= PAR_MIN_FANOUT;
+        if par_fanout {
+            // flatten the fan-out in (outbound edge, destination) order
+            pairs.clear();
+            for &e in g.outbound(node) {
+                let w = g.weight(e) as f64;
+                for &m in g.dsts(e) {
+                    pairs.push((m, w));
+                }
+            }
+            // propose (parallel): mark destinations that take a bump.
+            // Exact against the step-start state: neither `placed` nor a
+            // priority's finiteness changes inside the step, so every
+            // mark is a pure function of (graph, step-start state).
+            stats.par_steps += 1;
+            let t0 = Instant::now();
+            keep.clear();
+            keep.resize(pairs.len(), false);
+            let chunk = crate::util::par::fixed_chunk(pairs.len(), threads);
+            {
+                let (pairs_ref, placed_ref, prio_ref) = (&pairs, &placed, &prio);
+                crate::util::par::par_chunks_mut(&mut keep, chunk, threads, |ci, slice| {
+                    let base = ci * chunk;
+                    for (k, slot) in slice.iter_mut().enumerate() {
+                        let (m, _) = pairs_ref[base + k];
+                        *slot = !placed_ref[m as usize] && prio_ref[m as usize].is_finite();
+                    }
+                });
+            }
+            stats.propose_secs += t0.elapsed().as_secs_f64();
+            // commit (serial, destination order == the serial walk's, so
+            // the f64 accumulation order is identical)
+            for (i, &(m, w)) in pairs.iter().enumerate() {
+                if keep[i] {
+                    prio[m as usize] += w;
+                    if prio[m as usize] > 0.0 {
+                        heap.bump(&prio, m);
+                    }
+                }
+            }
+        } else {
+            // serial walk, same (edge, destination) order
+            for &e in g.outbound(node) {
+                let w = g.weight(e) as f64;
+                for &m in g.dsts(e) {
+                    if !placed[m as usize] && prio[m as usize].is_finite() {
+                        prio[m as usize] += w;
+                        if prio[m as usize] > 0.0 {
+                            heap.bump(&prio, m);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    stats.peak_scratch_bytes = heap.memory_bytes()
+        + prio.capacity() * 8
+        + placed.capacity()
+        + by_inbound.capacity() * 4
+        + pairs.capacity() * std::mem::size_of::<(u32, f64)>()
+        + keep.capacity();
+    stats.commit_secs = (t_run.elapsed().as_secs_f64() - stats.propose_secs).max(0.0);
+    (order, stats)
+}
+
+/// The pre-addressable-heap reference implementation of Alg. 2: a lazy
+/// `BinaryHeap` that pushes a fresh entry on every bump and skips
+/// stale/placed/non-positive entries at pop. Kept verbatim as the
+/// bit-exact oracle the production engine is tested against — a popped
+/// entry is live iff it records the node's current priority, so the
+/// selection rule is "argmax (priority, smaller id) over unplaced nodes
+/// with positive priority", exactly the addressable heap's invariant.
+pub fn greedy_order_serial(g: &Hypergraph) -> Vec<u32> {
     let n = g.num_nodes();
     let mut order = Vec::with_capacity(n);
     let mut prio = vec![0.0f64; n];
     let mut placed = vec![false; n];
     let mut heap: BinaryHeap<Entry> = BinaryHeap::new();
 
-    // Nodes sorted by inbound-set size: the fallback source (line 12) and
-    // the +inf seeding of minimum-inbound nodes (lines 6-7).
     let mut by_inbound: Vec<u32> = (0..n as u32).collect();
     by_inbound.sort_by_key(|&m| (g.inbound(m).len(), m));
     let min_inbound = by_inbound
@@ -148,7 +417,13 @@ pub fn kahn_order(g: &Hypergraph) -> Option<Vec<u32>> {
 /// Order for an arbitrary h-graph: Kahn when acyclic, else greedy (the
 /// dispatch rule used throughout §IV).
 pub fn auto_order(g: &Hypergraph) -> Vec<u32> {
-    kahn_order(g).unwrap_or_else(|| greedy_order(g))
+    auto_order_threads(g, 1)
+}
+
+/// [`auto_order`] with a worker budget for the greedy branch (Kahn is
+/// O(e·d) and stays serial). Performance knob only — thread-invariant.
+pub fn auto_order_threads(g: &Hypergraph, threads: usize) -> Vec<u32> {
+    kahn_order(g).unwrap_or_else(|| greedy_order_threads(g, threads))
 }
 
 #[cfg(test)]
@@ -225,6 +500,104 @@ mod tests {
     }
 
     #[test]
+    fn addressable_heap_matches_lazy_reference_on_random_graphs() {
+        // zero-weight h-edges included: the reference skips their
+        // non-positive entries at pop, the addressable heap never
+        // inserts them — both must land on the same order
+        let mut rng = Pcg64::seeded(0xA11);
+        for trial in 0..12 {
+            let n = rng.range(30, 400);
+            let mut b = HypergraphBuilder::new(n);
+            for s in 0..n as u32 {
+                if rng.bernoulli(0.85) {
+                    let k = rng.range(1, 10);
+                    let dsts: Vec<u32> =
+                        (0..k).map(|_| rng.below(n) as u32).filter(|&d| d != s).collect();
+                    if dsts.is_empty() {
+                        continue;
+                    }
+                    let w = if rng.bernoulli(0.15) { 0.0 } else { rng.next_f32() + 1e-3 };
+                    b.add_edge(s, dsts, w);
+                }
+            }
+            let g = b.build();
+            let reference = greedy_order_serial(&g);
+            assert_eq!(greedy_order(&g), reference, "trial {trial}");
+        }
+    }
+
+    /// A quotient-style hub graph whose first placements fan out past
+    /// [`PAR_MIN_FANOUT`], so multi-thread runs genuinely dispatch.
+    fn hub_graph(n: usize, seed: u64) -> Hypergraph {
+        let mut rng = Pcg64::seeded(seed);
+        let mut b = HypergraphBuilder::new(n);
+        // node 0: the only zero-inbound node; its axon reaches everyone
+        b.add_edge(0, (1..n as u32).collect(), 1.5);
+        for s in 1..n as u32 {
+            let k = rng.range(1, 8);
+            let dsts: Vec<u32> = (0..k)
+                .map(|_| 1 + rng.below(n - 1) as u32)
+                .filter(|&d| d != s)
+                .collect();
+            if !dsts.is_empty() {
+                b.add_edge(s, dsts, rng.next_f32() + 1e-3);
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn parallel_propagation_matches_serial_with_dispatch() {
+        let n = PAR_MIN_FANOUT * 3;
+        let g = hub_graph(n, 0x0DD);
+        let reference = greedy_order_serial(&g);
+        let (one, st1) = greedy_order_with_stats(&g, 1);
+        assert_eq!(one, reference);
+        assert_eq!(st1.par_steps, 0);
+        for threads in [2, 4, 8] {
+            let (order, stats) = greedy_order_with_stats(&g, threads);
+            assert_eq!(order, reference, "threads={threads}");
+            assert!(stats.par_steps > 0, "threads={threads} never dispatched");
+            assert!(stats.peak_scratch_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn all_min_inbound_cycle_orders_by_id() {
+        // a ring: every node has exactly one inbound axon, so all are
+        // +inf-seeded and pop purely by the id tie-break — the fallback
+        // cursor is never consulted and the bump guard never fires
+        let n = 64;
+        let mut b = HypergraphBuilder::new(n);
+        for i in 0..n as u32 {
+            b.add_edge(i, vec![(i + 1) % n as u32], 1.0);
+        }
+        let g = b.build();
+        let want: Vec<u32> = (0..n as u32).collect();
+        assert_eq!(greedy_order_serial(&g), want);
+        for threads in [1, 4] {
+            assert_eq!(greedy_order_threads(&g, threads), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_edges_never_promote() {
+        // a zero-weight axon must not pull its listeners ahead of the
+        // fallback order (their priority stays non-positive)
+        let mut b = HypergraphBuilder::new(4);
+        b.add_edge(0, vec![2, 3], 0.0);
+        b.add_edge(1, vec![3], 2.0);
+        let g = b.build();
+        let reference = greedy_order_serial(&g);
+        for threads in [1, 2] {
+            assert_eq!(greedy_order_threads(&g, threads), reference);
+        }
+        // node 3 (promoted by the weighted axon) precedes node 2 (not)
+        let pos = |x: u32| reference.iter().position(|&v| v == x).unwrap();
+        assert!(pos(3) < pos(2), "order={reference:?}");
+    }
+
+    #[test]
     fn kahn_respects_topology() {
         let mut b = HypergraphBuilder::new(6);
         b.add_edge(0, vec![2, 3], 1.0);
@@ -267,5 +640,7 @@ mod tests {
         b.add_edge(2, vec![0], 1.0);
         let g = b.build();
         assert!(is_permutation(&auto_order(&g), 3));
+        // the threaded variant takes the same branches
+        assert_eq!(auto_order_threads(&g, 4), auto_order(&g));
     }
 }

@@ -21,15 +21,17 @@ pub struct PruneReport {
     pub mass_removed: f64,
 }
 
-/// Remove h-edges with spike frequency below `threshold`.
-/// (An axon's spikes all share its frequency, so pruning is edge-level:
-/// per-synapse pruning would break the single-source h-edge invariant.)
-pub fn prune_below(g: &Hypergraph, threshold: f32) -> (Hypergraph, PruneReport) {
+/// Rebuild `g` keeping exactly the edges `keep` admits, reporting the
+/// removed spike mass — the shared tail of both pruning entry points.
+fn rebuild_keeping(
+    g: &Hypergraph,
+    keep: impl Fn(crate::hypergraph::EdgeId) -> bool,
+) -> (Hypergraph, PruneReport) {
     let total_mass: f64 = g.edge_ids().map(|e| g.weight(e) as f64).sum();
     let mut b = HypergraphBuilder::new(g.num_nodes());
     let mut kept_mass = 0.0f64;
     for e in g.edge_ids() {
-        if g.weight(e) >= threshold {
+        if keep(e) {
             kept_mass += g.weight(e) as f64;
             b.add_edge_sorted(g.source(e), g.dsts(e), g.weight(e));
         }
@@ -45,8 +47,20 @@ pub fn prune_below(g: &Hypergraph, threshold: f32) -> (Hypergraph, PruneReport) 
     (pruned, report)
 }
 
+/// Remove h-edges with spike frequency below `threshold`.
+/// (An axon's spikes all share its frequency, so pruning is edge-level:
+/// per-synapse pruning would break the single-source h-edge invariant.)
+pub fn prune_below(g: &Hypergraph, threshold: f32) -> (Hypergraph, PruneReport) {
+    rebuild_keeping(g, |e| g.weight(e) >= threshold)
+}
+
 /// Remove the weakest h-edges totalling at most `fraction` of the spike
 /// mass (0.0 = no-op, approaching 1.0 = drop almost everything).
+///
+/// Edges are pruned weakest-first with ties resolved by edge id, so
+/// tied-weight edges are dropped only up to the remaining budget
+/// (deterministically) — a threshold-based cut would prune the whole tie
+/// class and overshoot the budget.
 pub fn prune_fraction(g: &Hypergraph, fraction: f64) -> (Hypergraph, PruneReport) {
     assert!((0.0..1.0).contains(&fraction), "fraction must be in [0, 1)");
     if g.num_edges() == 0 || fraction == 0.0 {
@@ -59,22 +73,26 @@ pub fn prune_fraction(g: &Hypergraph, fraction: f64) -> (Hypergraph, PruneReport
         };
         return (g.clone(), report);
     }
-    let mut weights: Vec<f32> = g.edge_ids().map(|e| g.weight(e)).collect();
-    weights.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let total: f64 = weights.iter().map(|&w| w as f64).sum();
+    let mut order: Vec<u32> = g.edge_ids().collect();
+    order.sort_by(|&a, &b| {
+        g.weight(a)
+            .partial_cmp(&g.weight(b))
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let total: f64 = order.iter().map(|&e| g.weight(e) as f64).sum();
     let budget = total * fraction;
     let mut acc = 0.0f64;
-    let mut threshold = 0.0f32;
-    for &w in &weights {
-        if acc + w as f64 > budget {
-            break;
+    let mut drop = vec![false; g.num_edges()];
+    for &e in &order {
+        let w = g.weight(e) as f64;
+        if acc + w > budget {
+            break; // weights ascend: no later edge fits either
         }
-        acc += w as f64;
-        threshold = w;
+        acc += w;
+        drop[e as usize] = true;
     }
-    // prune strictly-below-or-equal the threshold weight but never the
-    // whole graph: bump by the smallest representable step
-    prune_below(g, f32::from_bits(threshold.to_bits() + 1))
+    rebuild_keeping(g, |e| !drop[e as usize])
 }
 
 #[cfg(test)]
@@ -122,6 +140,24 @@ mod tests {
         let (p, r) = prune_fraction(&g, 0.5);
         assert_eq!(p.num_edges(), 1);
         assert!(r.mass_removed <= 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn prune_fraction_tied_weights_respect_budget() {
+        // four equal-weight edges, fraction 0.3: the budget (1.2 of 4.0)
+        // admits exactly one tied edge — a threshold cut would prune all
+        // four (100% of the mass, the bug this test pins down)
+        let mut b = HypergraphBuilder::new(5);
+        for s in 0..4u32 {
+            b.add_edge(s, vec![s + 1], 1.0);
+        }
+        let g = b.build();
+        let (p, r) = prune_fraction(&g, 0.3);
+        assert_eq!(p.num_edges(), 3, "tied weights overshot the budget");
+        assert!(r.mass_removed <= 0.3 + 1e-9, "removed {}", r.mass_removed);
+        // deterministic: the lowest-id edge of the tie class goes first
+        assert!(p.edge_ids().all(|e| p.source(e) != 0), "edge 0 survived");
+        p.validate().unwrap();
     }
 
     #[test]

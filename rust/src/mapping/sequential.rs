@@ -29,10 +29,23 @@ pub fn partition(
     hw: &NmhConfig,
     order: SeqOrder,
 ) -> Result<Partitioning, MapError> {
+    partition_threads(g, hw, order, 1)
+}
+
+/// [`partition`] with a worker budget for the ordering pass (fed from
+/// [`crate::stage::StageCtx::threads`] by [`SequentialPartitioner`]).
+/// Performance knob only: `greedy_order_threads` is bit-for-bit
+/// thread-invariant, so the partitioning is too.
+pub fn partition_threads(
+    g: &Hypergraph,
+    hw: &NmhConfig,
+    order: SeqOrder,
+    threads: usize,
+) -> Result<Partitioning, MapError> {
     let order_vec: Vec<u32> = match order {
         SeqOrder::Natural => (0..g.num_nodes() as u32).collect(),
-        SeqOrder::Greedy => super::ordering::greedy_order(g),
-        SeqOrder::Auto => super::ordering::auto_order(g),
+        SeqOrder::Greedy => super::ordering::greedy_order_threads(g, threads),
+        SeqOrder::Auto => super::ordering::auto_order_threads(g, threads),
     };
     partition_with_order(g, hw, &order_vec)
 }
@@ -266,6 +279,6 @@ impl crate::stage::Partitioner for SequentialPartitioner {
             None if ctx.layer_ranges.is_some() => SeqOrder::Natural,
             None => SeqOrder::Greedy,
         };
-        partition(g, hw, order)
+        partition_threads(g, hw, order, ctx.threads.max(1))
     }
 }

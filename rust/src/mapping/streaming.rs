@@ -3,9 +3,9 @@
 //!
 //! Nodes arrive in a single pass (any order); a bounded lookahead buffer
 //! re-ranks the next assignment by second-order affinity to the *open*
-//! partition, and each node is placed greedily into the open partition or
-//! — when it would not fit or shows zero affinity — parked until the
-//! partition rolls over. This is the O(n) regime of sequential
+//! partition, and each node is placed greedily into the open partition
+//! or — when it would not fit — parked until the partition rolls over.
+//! This is the O(n) regime of sequential
 //! partitioning with a small constant-factor quality recovery, trading
 //! the global ordering pass (Alg. 2) for a window: the natural choice
 //! when the SNN streams from disk and can't be indexed up front.
@@ -29,6 +29,12 @@ impl Default for StreamParams {
 }
 
 /// Partition `g` with a single streaming pass + lookahead window.
+///
+/// A window node that would not fit the open partition is **parked** —
+/// removed from the ranking until the partition rolls over — and the
+/// next-best fitting window candidate is tried instead; the partition
+/// rolls over only when *no* window node fits, at which point the parked
+/// nodes rejoin the window and compete for the fresh partition.
 pub fn partition(
     g: &Hypergraph,
     hw: &NmhConfig,
@@ -40,9 +46,10 @@ pub fn partition(
     let mut tracker = ConstraintTracker::new(g, hw);
     let mut part = 0u32;
 
-    // the stream + window
+    // the stream + window + parked set (unfitting nodes awaiting rollover)
     let mut next_id = 0u32;
     let mut window: Vec<u32> = Vec::with_capacity(params.window);
+    let mut parked: Vec<u32> = Vec::new();
 
     let fill_window = |window: &mut Vec<u32>, next_id: &mut u32| {
         while window.len() < params.window && (*next_id as usize) < n {
@@ -52,7 +59,21 @@ pub fn partition(
     };
     fill_window(&mut window, &mut next_id);
 
-    while !window.is_empty() {
+    while !window.is_empty() || !parked.is_empty() {
+        if window.is_empty() {
+            // no window node fits the open partition: roll over and let
+            // the parked nodes compete for the fresh one
+            tracker.reset();
+            part += 1;
+            if part as usize >= hw.num_cores() {
+                return Err(MapError::TooManyPartitions {
+                    got: part as usize + 1,
+                    limit: hw.num_cores(),
+                });
+            }
+            window.append(&mut parked);
+            continue;
+        }
         // rank the window by affinity to the current partition: count of
         // inbound axons already present (synaptic reuse now), tie-break by
         // fewest new axons.
@@ -77,16 +98,9 @@ pub fn partition(
                     "node {v} rejected by empty partition"
                 )));
             }
-            // roll over to a fresh partition and retry v there
-            tracker.reset();
-            part += 1;
-            if part as usize >= hw.num_cores() {
-                return Err(MapError::TooManyPartitions {
-                    got: part as usize + 1,
-                    limit: hw.num_cores(),
-                });
-            }
-            window.push(v);
+            // park v until the partition rolls over; the next-best
+            // window candidate keeps filling the open partition
+            parked.push(v);
             continue;
         }
         tracker.add(v);
@@ -159,6 +173,48 @@ mod tests {
         let streamed = partition(&g, &hw, StreamParams { window: 1 }).unwrap();
         let seq = sequential::partition(&g, &hw, sequential::SeqOrder::Natural).unwrap();
         assert_eq!(streamed.assign, seq.assign);
+    }
+
+    #[test]
+    fn window_one_equals_sequential_under_rollover_pressure() {
+        // window = 1 must track sequential Natural even when partitions
+        // roll over constantly (the park-then-rollover path degenerates
+        // to sequential's reset-and-retry)
+        let g = shuffled_clusters(4, 25, 11);
+        let mut hwc = hw(7);
+        hwc.c_spc = 40;
+        let streamed = partition(&g, &hwc, StreamParams { window: 1 }).unwrap();
+        let seq = sequential::partition(&g, &hwc, sequential::SeqOrder::Natural).unwrap();
+        assert_eq!(streamed.assign, seq.assign);
+    }
+
+    #[test]
+    fn parks_oversized_node_while_comembers_keep_filling() {
+        // Hub B (node 6) shares two axons with the open partition, so it
+        // outranks the remaining smalls the moment small 0 lands — but
+        // its 12 inbound synapses exceed the remaining C_spc budget. The
+        // doc'd behavior: park B, keep filling with smalls 1-5, roll
+        // over once for B alone. The pre-fix code instead rolled over on
+        // the spot, scattering the smalls over 6 partitions.
+        let mut b = HypergraphBuilder::new(19);
+        b.add_edge(7, vec![1, 2, 3, 4, 5, 6], 1.0); // e0: smalls 1-5 + B
+        b.add_edge(8, vec![0, 6], 1.0); // e1: small 0 + B
+        for i in 0..10u32 {
+            b.add_edge(9 + i, vec![6], 1.0); // B's private fan-in
+        }
+        let g = b.build();
+        let mut hwc = hw(30);
+        hwc.c_apc = 20;
+        hwc.c_spc = 12; // B alone needs 12; small 0 + B needs 13
+        let rho = partition(&g, &hwc, StreamParams::default()).unwrap();
+        validate(&g, &rho, &hwc).unwrap();
+        assert_eq!(rho.num_parts, 2, "assign={:?}", rho.assign);
+        // every small co-habits with small 0; B got the rollover alone
+        let p0 = rho.assign[0];
+        for small in 1..=5usize {
+            assert_eq!(rho.assign[small], p0, "small {small} was evicted");
+        }
+        assert_ne!(rho.assign[6], p0, "the parked hub must wait for the rollover");
     }
 
     #[test]

@@ -86,7 +86,15 @@ pub fn place_with_order(_gp: &Hypergraph, hw: &NmhConfig, order: &[u32]) -> Plac
 /// §IV-B1 placement: Kahn topological order when `gp` is acyclic, else
 /// the greedy Alg. 2 order.
 pub fn place(gp: &Hypergraph, hw: &NmhConfig) -> Placement {
-    let order = ordering::auto_order(gp);
+    place_threads(gp, hw, 1)
+}
+
+/// [`place`] with a worker budget for the Alg. 2 ordering pass (fed from
+/// [`crate::stage::StageCtx::threads`] by [`HilbertPlacer`]).
+/// Performance knob only — the order, and hence the placement, is
+/// bit-for-bit thread-invariant.
+pub fn place_threads(gp: &Hypergraph, hw: &NmhConfig, threads: usize) -> Placement {
+    let order = ordering::auto_order_threads(gp, threads);
     place_with_order(gp, hw, &order)
 }
 
@@ -181,8 +189,8 @@ impl crate::stage::Placer for HilbertPlacer {
         &self,
         gp: &Hypergraph,
         hw: &NmhConfig,
-        _ctx: &crate::stage::StageCtx,
+        ctx: &crate::stage::StageCtx,
     ) -> Result<Placement, crate::mapping::MapError> {
-        Ok(place(gp, hw))
+        Ok(place_threads(gp, hw, ctx.threads.max(1)))
     }
 }

@@ -17,13 +17,21 @@ use std::collections::BTreeSet;
 
 /// Minimum-distance placement of the quotient h-graph `gp`.
 pub fn place(gp: &Hypergraph, hw: &NmhConfig) -> Placement {
+    place_threads(gp, hw, 1)
+}
+
+/// [`place`] with a worker budget for the Alg. 2 ordering pass (fed from
+/// [`crate::stage::StageCtx::threads`] by [`MinDistPlacer`]).
+/// Performance knob only — the order, and hence the placement, is
+/// bit-for-bit thread-invariant.
+pub fn place_threads(gp: &Hypergraph, hw: &NmhConfig, threads: usize) -> Placement {
     let n = gp.num_nodes();
     assert!(n <= hw.num_cores(), "more partitions than cores");
     if n == 0 {
         return Placement { coords: vec![] };
     }
     let adj = PartitionAdjacency::build(gp);
-    let order = ordering::auto_order(gp);
+    let order = ordering::auto_order_threads(gp, threads);
 
     // Input partitions: no inbound h-edges.
     let inputs: Vec<u32> = (0..n as u32).filter(|&p| gp.inbound(p).is_empty()).collect();
@@ -257,9 +265,9 @@ impl crate::stage::Placer for MinDistPlacer {
         &self,
         gp: &Hypergraph,
         hw: &NmhConfig,
-        _ctx: &crate::stage::StageCtx,
+        ctx: &crate::stage::StageCtx,
     ) -> Result<Placement, crate::mapping::MapError> {
-        Ok(place(gp, hw))
+        Ok(place_threads(gp, hw, ctx.threads.max(1)))
     }
 
     fn is_direct(&self) -> bool {

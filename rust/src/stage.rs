@@ -42,8 +42,11 @@ pub struct StageCtx<'a> {
     /// performance knob only, never a semantics knob (DESIGN.md §6) —
     /// the hierarchical partitioner's two-phase rounds and the spectral
     /// placer's parallel matvec (§10), the overlap partitioner's
-    /// frontier scoring and the force refiner's candidate scan (§11)
-    /// all honor this bit-for-bit.
+    /// frontier scoring and the force refiner's candidate scan (§11),
+    /// the quotient push-forward's parallel scan and the greedy
+    /// ordering's fan-out propagation behind the sequential partitioner
+    /// and the Hilbert/minimum-distance placers (§12) all honor this
+    /// bit-for-bit.
     pub threads: usize,
     /// Layer ranges of layered (ANN-derived) networks, `None` for cyclic
     /// nets; order-sensitive partitioners may exploit this.

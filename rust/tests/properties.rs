@@ -404,3 +404,172 @@ fn prop_overlap_and_force_random_snn_thread_invariant() {
         }
     }
 }
+
+/// Property 12: the quotient push-forward — plain, pooled-serial and
+/// pooled-parallel — agrees with a naive `HashMap<(src, Vec<dst>), w>`
+/// reference over random SNNs, the pooled paths are bit-for-bit
+/// invariant to the worker count (dispatch counter checked), and the
+/// fused multiplicity equals Σ fine_mult over `merged_from`.
+#[test]
+fn prop_quotient_pushforward_matches_naive_reference() {
+    use snnmap::hypergraph::quotient::{
+        push_forward_pooled_with_stats, QuotientScratch, PAR_MIN_EDGES,
+    };
+    use std::collections::HashMap;
+    let mut rng = Pcg64::seeded(0x51AE);
+    for case in 0..6 {
+        // one h-edge per node keeps the edge count >= the dispatch floor
+        let n = rng.range(PAR_MIN_EDGES + 20, PAR_MIN_EDGES + 300);
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            let k = rng.range(1, 10);
+            let mut dsts: Vec<u32> = (0..k)
+                .map(|_| rng.below(n) as u32)
+                .filter(|&d| d != s)
+                .collect();
+            if dsts.is_empty() {
+                dsts.push((s + 1) % n as u32);
+            }
+            b.add_edge(s, dsts, rng.next_f32() + 1e-4);
+        }
+        let g = b.build();
+        let parts = rng.range(2, 40);
+        let assign: Vec<u32> = (0..n).map(|_| rng.below(parts) as u32).collect();
+        let rho = Partitioning::new(assign, parts);
+
+        // naive reference: dedup'd sorted destination-partition sets,
+        // weights summed in f64
+        let mut naive: HashMap<(u32, Vec<u32>), f64> = HashMap::new();
+        for e in g.edge_ids() {
+            let ps = rho.assign[g.source(e) as usize];
+            let mut dset: Vec<u32> = g.dsts(e).iter().map(|&d| rho.assign[d as usize]).collect();
+            dset.sort_unstable();
+            dset.dedup();
+            *naive.entry((ps, dset)).or_insert(0.0) += g.weight(e) as f64;
+        }
+        let q = push_forward(&g, &rho);
+        assert_eq!(q.graph.num_edges(), naive.len(), "case {case}");
+        for e in q.graph.edge_ids() {
+            let key = (q.graph.source(e), q.graph.dsts(e).to_vec());
+            let want = *naive
+                .get(&key)
+                .unwrap_or_else(|| panic!("case {case}: edge {e} not in reference"));
+            let got = q.graph.weight(e) as f64;
+            assert!(
+                (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                "case {case} edge {e}: {got} vs {want}"
+            );
+        }
+
+        // pooled serial == pooled parallel, bitwise, across thread counts
+        let fine_mult: Vec<u32> = (0..g.num_edges()).map(|_| rng.range(1, 5) as u32).collect();
+        let mut scratch = QuotientScratch::new();
+        let (g1, m1, st1) =
+            push_forward_pooled_with_stats(&g, &rho, &fine_mult, &mut scratch, 1);
+        assert_eq!(st1.par_sweeps, 0);
+        assert_eq!(g1.num_edges(), q.graph.num_edges());
+        for threads in [2, 4, 8] {
+            let (g2, m2, st2) =
+                push_forward_pooled_with_stats(&g, &rho, &fine_mult, &mut scratch, threads);
+            assert_eq!(st2.par_sweeps, 1, "case {case} threads {threads}: vacuously serial");
+            for e in g1.edge_ids() {
+                assert_eq!(g1.source(e), g2.source(e), "case {case} threads {threads}");
+                assert_eq!(g1.dsts(e), g2.dsts(e), "case {case} threads {threads}");
+                assert_eq!(
+                    g1.weight(e).to_bits(),
+                    g2.weight(e).to_bits(),
+                    "case {case} threads {threads} edge {e}"
+                );
+            }
+            assert_eq!(m1, m2, "case {case} threads {threads}");
+        }
+        // fused multiplicity == Σ fine_mult over the plain merged_from
+        for e in g1.edge_ids() {
+            let want: u32 = q.merged_from[e as usize]
+                .iter()
+                .map(|&f| fine_mult[f as usize])
+                .sum();
+            assert_eq!(m1[e as usize], want, "case {case} edge {e}");
+        }
+    }
+}
+
+/// Property 13: greedy ordering (Alg. 2) edge cases — zero-weight
+/// h-edges and all-nodes-min-inbound cyclic graphs — plus random hub
+/// graphs: the addressable-heap engine equals the lazy-heap reference,
+/// serial == parallel permutations across thread counts, and hub
+/// fan-outs genuinely dispatch the parallel propose path.
+#[test]
+fn prop_greedy_order_edge_cases_serial_equals_parallel() {
+    use snnmap::mapping::ordering::{
+        greedy_order_serial, greedy_order_threads, greedy_order_with_stats, PAR_MIN_FANOUT,
+    };
+    let mut rng = Pcg64::seeded(0x0BD);
+    // (a) zero-weight h-edges sprinkled over random graphs
+    for case in 0..8 {
+        let n = rng.range(30, 250);
+        let mut b = HypergraphBuilder::new(n);
+        for s in 0..n as u32 {
+            if rng.bernoulli(0.8) {
+                let k = rng.range(1, 8.min(n - 1));
+                let dsts: Vec<u32> = (0..k)
+                    .map(|_| rng.below(n) as u32)
+                    .filter(|&d| d != s)
+                    .collect();
+                if dsts.is_empty() {
+                    continue;
+                }
+                let w = if rng.bernoulli(0.25) { 0.0 } else { rng.next_f32() + 1e-3 };
+                b.add_edge(s, dsts, w);
+            }
+        }
+        let g = b.build();
+        let reference = greedy_order_serial(&g);
+        for threads in [1, 2, 4, 8] {
+            assert_eq!(
+                greedy_order_threads(&g, threads),
+                reference,
+                "case {case} threads {threads}"
+            );
+        }
+    }
+    // (b) all-nodes-min-inbound cycle: every node +inf-seeded, order is
+    // the pure id tie-break
+    let n = 97;
+    let mut b = HypergraphBuilder::new(n);
+    for i in 0..n as u32 {
+        b.add_edge(i, vec![(i + 1) % n as u32], 0.5);
+    }
+    let ring = b.build();
+    let want: Vec<u32> = (0..n as u32).collect();
+    assert_eq!(greedy_order_serial(&ring), want);
+    for threads in [1, 2, 8] {
+        assert_eq!(greedy_order_threads(&ring, threads), want, "threads {threads}");
+    }
+    // (c) hub graphs whose fan-outs clear the parallel dispatch floor
+    for case in 0..3 {
+        let n = PAR_MIN_FANOUT * 2 + 50;
+        let mut b = HypergraphBuilder::new(n);
+        b.add_edge(0, (1..n as u32).collect(), 2.0);
+        for s in 1..n as u32 {
+            let k = rng.range(1, 6);
+            let dsts: Vec<u32> = (0..k)
+                .map(|_| 1 + rng.below(n - 1) as u32)
+                .filter(|&d| d != s)
+                .collect();
+            if !dsts.is_empty() {
+                b.add_edge(s, dsts, rng.next_f32() + 1e-3);
+            }
+        }
+        let g = b.build();
+        let reference = greedy_order_serial(&g);
+        for threads in [2, 4, 8] {
+            let (order, stats) = greedy_order_with_stats(&g, threads);
+            assert_eq!(order, reference, "case {case} threads {threads}");
+            assert!(
+                stats.par_steps > 0,
+                "case {case} threads {threads}: fan-out never dispatched"
+            );
+        }
+    }
+}
