@@ -223,6 +223,10 @@ pub struct MapperPipeline {
     /// [`StageCtx::threads`]; defaults to the process-wide
     /// [`crate::util::par`] pool size. Never changes results.
     pub threads: usize,
+    /// Crash-safe checkpoint/resume policy, handed to stages through
+    /// [`StageCtx::checkpoint`] (DESIGN.md §13). Run-environment, not
+    /// part of the spec: results are identical with or without it.
+    pub checkpoint: Option<crate::runtime::CheckpointPolicy>,
 }
 
 impl MapperPipeline {
@@ -234,6 +238,7 @@ impl MapperPipeline {
             refiner: RefinerKind::ForceDirected.to_stage(),
             seed: 42,
             threads: crate::util::par::max_threads(),
+            checkpoint: None,
         }
     }
 
@@ -253,6 +258,7 @@ impl MapperPipeline {
             refiner: registry.refiner(&spec.refiner.name, &spec.refiner.params)?,
             seed: spec.seed,
             threads: spec.threads.max(1),
+            checkpoint: None,
         })
     }
 
@@ -306,6 +312,13 @@ impl MapperPipeline {
         self
     }
 
+    /// Enable crash-safe checkpoint/resume for stages that support it
+    /// (the hierarchical partitioner; see DESIGN.md §13).
+    pub fn with_checkpoint(mut self, policy: crate::runtime::CheckpointPolicy) -> Self {
+        self.checkpoint = Some(policy);
+        self
+    }
+
     /// Shim: switch to a force-directed refiner with explicit
     /// parameters (the typed form of refiner `params` in a spec).
     ///
@@ -339,7 +352,13 @@ impl MapperPipeline {
         layer_ranges: Option<&[(u32, u32)]>,
         runtime: Option<&PjrtRuntime>,
     ) -> Result<MappingResult, MapError> {
-        let ctx = StageCtx { seed: self.seed, threads: self.threads, layer_ranges, runtime };
+        let ctx = StageCtx {
+            seed: self.seed,
+            threads: self.threads,
+            layer_ranges,
+            runtime,
+            checkpoint: self.checkpoint.clone(),
+        };
 
         // ---- partition ----
         let t0 = std::time::Instant::now();

@@ -57,14 +57,16 @@ pub fn csv_split(line: &str) -> Vec<String> {
     fields
 }
 
-/// Write rows as CSV.
+/// Write rows as CSV. The write is atomic (tmp + fsync + rename, the
+/// checkpoint subsystem's helper): a killed run never leaves a
+/// half-written report behind.
 pub fn write_csv(rows: &[ExperimentRow], path: &Path) -> std::io::Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "{}", ExperimentRow::csv_header())?;
+    let mut buf: Vec<u8> = Vec::new();
+    writeln!(buf, "{}", ExperimentRow::csv_header())?;
     for r in rows {
-        writeln!(f, "{}", r.to_csv())?;
+        writeln!(buf, "{}", r.to_csv())?;
     }
-    f.flush()
+    crate::runtime::checkpoint::atomic_write(path, &buf)
 }
 
 /// Render rows as a GitHub-markdown table (the EXPERIMENTS.md format).
@@ -231,5 +233,7 @@ mod tests {
         let text = std::fs::read_to_string(&p).unwrap();
         assert!(text.starts_with("network,"));
         assert_eq!(text.lines().count(), 2);
+        // the atomic write leaves no temp file behind
+        assert!(!dir.join("rows.csv.tmp").exists());
     }
 }

@@ -5,6 +5,13 @@
 //! to store). A human-readable text format (one h-edge per line:
 //! `src w d1 d2 ...`) supports tests, fixtures and interchange with the
 //! paper's planned open-source benchmark hypergraphs.
+//!
+//! The binary reader treats its input as untrusted (DESIGN.md §13): header
+//! counts are validated against the stream length before any allocation,
+//! offsets are checked for monotonicity and coverage, and every malformed
+//! input maps to `InvalidData` instead of an OOM abort or a slice panic.
+//! The streaming [`write_binary`]/[`read_binary`] pair is reused by the
+//! `SNNCK1` checkpoint format to embed per-level graphs.
 
 use super::{Hypergraph, HypergraphBuilder};
 use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
@@ -12,56 +19,120 @@ use std::path::Path;
 
 const MAGIC: &[u8; 6] = b"SNNHG1";
 
+/// Header size in bytes: magic + three u64 counts.
+const HEADER_BYTES: u64 = 6 + 3 * 8;
+
+/// Preallocation cap (in elements) for streams whose length is unknown:
+/// hostile counts then fail at `read_exact` instead of aborting on a
+/// multi-terabyte `Vec::with_capacity`.
+const PREALLOC_CAP: usize = 1 << 20;
+
 /// Write `g` to `path` in the binary format.
 pub fn save_binary(g: &Hypergraph, path: &Path) -> io::Result<()> {
     let f = std::fs::File::create(path)?;
     let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    write_u64(&mut w, g.num_nodes() as u64)?;
-    write_u64(&mut w, g.num_edges() as u64)?;
-    write_u64(&mut w, g.num_connections() as u64)?;
-    for &s in &g.sources {
-        write_u32(&mut w, s)?;
-    }
-    for &o in &g.dst_off {
-        write_u64(&mut w, o as u64)?;
-    }
-    for &d in &g.dsts {
-        write_u32(&mut w, d)?;
-    }
-    for &x in &g.weights {
-        write_u32(&mut w, x.to_bits())?;
-    }
+    write_binary(g, &mut w)?;
     w.flush()
 }
 
-/// Load a binary h-graph from `path`.
+/// Stream `g` to any writer in the binary format.
+pub fn write_binary<W: Write>(g: &Hypergraph, w: &mut W) -> io::Result<()> {
+    w.write_all(MAGIC)?;
+    write_u64(w, g.num_nodes() as u64)?;
+    write_u64(w, g.num_edges() as u64)?;
+    write_u64(w, g.num_connections() as u64)?;
+    for &s in &g.sources {
+        write_u32(w, s)?;
+    }
+    for &o in &g.dst_off {
+        write_u64(w, o as u64)?;
+    }
+    for &d in &g.dsts {
+        write_u32(w, d)?;
+    }
+    for &x in &g.weights {
+        write_u32(w, x.to_bits())?;
+    }
+    Ok(())
+}
+
+/// Load a binary h-graph from `path`. The file length bounds the header
+/// counts, so corrupt/hostile files are rejected before allocation.
 pub fn load_binary(path: &Path) -> io::Result<Hypergraph> {
     let f = std::fs::File::open(path)?;
+    let limit = f.metadata().ok().map(|m| m.len());
     let mut r = BufReader::new(f);
+    read_binary(&mut r, limit)
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Read a binary h-graph from any reader. `byte_limit`, when known (file
+/// length, or an embedding section's length), is an upper bound on the
+/// whole stream including the header; header counts implying more bytes
+/// than that are rejected up front.
+pub fn read_binary<R: Read>(r: &mut R, byte_limit: Option<u64>) -> io::Result<Hypergraph> {
     let mut magic = [0u8; 6];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic"));
+        return Err(bad("bad magic"));
     }
-    let n = read_u64(&mut r)? as usize;
-    let e = read_u64(&mut r)? as usize;
-    let c = read_u64(&mut r)? as usize;
-    let mut sources = Vec::with_capacity(e);
+    let n64 = read_u64(r)?;
+    let e64 = read_u64(r)?;
+    let c64 = read_u64(r)?;
+    // Node/edge ids are u32 on the wire — counts beyond that id space
+    // cannot describe a well-formed graph, and rejecting them also bounds
+    // the builder's O(n) index allocation.
+    let id_space = u32::MAX as u64 + 1;
+    if n64 > id_space || e64 > id_space {
+        return Err(bad(format!("counts exceed u32 id space: n={n64} e={e64}")));
+    }
+    // Untrusted header counts: bound the implied body size (checked
+    // arithmetic — u64::MAX counts must not wrap into plausibility).
+    let body = e64
+        .checked_mul(4) // sources
+        .and_then(|b| (e64 + 1).checked_mul(8).and_then(|x| b.checked_add(x))) // dst_off
+        .and_then(|b| c64.checked_mul(4).and_then(|x| b.checked_add(x))) // dsts
+        .and_then(|b| e64.checked_mul(4).and_then(|x| b.checked_add(x))) // weights
+        .ok_or_else(|| bad("header counts overflow"))?;
+    if let Some(limit) = byte_limit {
+        if body.checked_add(HEADER_BYTES).is_none_or(|total| total > limit) {
+            return Err(bad(format!("header counts imply {body} body bytes, stream has at most {limit}")));
+        }
+    }
+    let n = n64 as usize;
+    let e = e64 as usize;
+    let c = c64 as usize;
+    let mut sources = Vec::with_capacity(e.min(PREALLOC_CAP));
     for _ in 0..e {
-        sources.push(read_u32(&mut r)?);
+        sources.push(read_u32(r)?);
     }
-    let mut dst_off = Vec::with_capacity(e + 1);
+    let mut dst_off = Vec::with_capacity((e + 1).min(PREALLOC_CAP));
     for _ in 0..=e {
-        dst_off.push(read_u64(&mut r)? as usize);
+        let o = read_u64(r)?;
+        if o > c64 {
+            return Err(bad(format!("dst offset {o} exceeds connection count {c64}")));
+        }
+        dst_off.push(o as usize);
     }
-    let mut dsts = Vec::with_capacity(c);
+    if dst_off[0] != 0 {
+        return Err(bad("dst offsets must start at 0"));
+    }
+    if dst_off.windows(2).any(|w| w[0] > w[1]) {
+        return Err(bad("dst offsets must be non-decreasing"));
+    }
+    if *dst_off.last().unwrap() != c {
+        return Err(bad("dst offsets do not cover the connection array"));
+    }
+    let mut dsts = Vec::with_capacity(c.min(PREALLOC_CAP));
     for _ in 0..c {
-        dsts.push(read_u32(&mut r)?);
+        dsts.push(read_u32(r)?);
     }
-    let mut weights = Vec::with_capacity(e);
+    let mut weights = Vec::with_capacity(e.min(PREALLOC_CAP));
     for _ in 0..e {
-        weights.push(f32::from_bits(read_u32(&mut r)?));
+        weights.push(f32::from_bits(read_u32(r)?));
     }
     // Rebuild through the builder to regenerate node indices and validate.
     let mut b = HypergraphBuilder::new(n);
@@ -198,6 +269,100 @@ mod tests {
         let p = dir.join("bad.hg");
         std::fs::write(&p, b"NOTMAGIC").unwrap();
         assert!(load_binary(&p).is_err());
+    }
+
+    /// Hand-assemble a raw SNNHG1 stream from header counts + body words.
+    fn craft(n: u64, e: u64, c: u64, body: &[(u8, u64)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        for x in [n, e, c] {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        for &(width, word) in body {
+            match width {
+                4 => out.extend_from_slice(&(word as u32).to_le_bytes()),
+                8 => out.extend_from_slice(&word.to_le_bytes()),
+                _ => unreachable!(),
+            }
+        }
+        out
+    }
+
+    fn load_bytes(name: &str, bytes: &[u8]) -> io::Result<Hypergraph> {
+        let dir = std::env::temp_dir().join("snnmap_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, bytes).unwrap();
+        load_binary(&p)
+    }
+
+    fn assert_invalid(res: io::Result<Hypergraph>) {
+        match res {
+            Err(e) => assert_eq!(e.kind(), io::ErrorKind::InvalidData, "kind={:?}", e.kind()),
+            Ok(_) => panic!("malformed file was accepted"),
+        }
+    }
+
+    #[test]
+    fn binary_rejects_truncated_body() {
+        let g = random_graph(17);
+        let dir = std::env::temp_dir().join("snnmap_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trunc.hg");
+        save_binary(&g, &p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        // Chop off the tail: header counts now exceed the file size and
+        // must be rejected before any allocation.
+        std::fs::write(&p, &full[..full.len() - 16]).unwrap();
+        assert_invalid(load_binary(&p));
+    }
+
+    #[test]
+    fn binary_rejects_huge_counts() {
+        // Counts whose implied body size overflows u64 / dwarfs the file:
+        // previously a `Vec::with_capacity(u64::MAX as usize)` OOM abort.
+        assert_invalid(load_bytes("huge1.hg", &craft(4, u64::MAX, 2, &[])));
+        assert_invalid(load_bytes("huge2.hg", &craft(4, 2, u64::MAX, &[])));
+        // Counts past the u32 id space are structurally impossible.
+        assert_invalid(load_bytes("huge3.hg", &craft(1 << 33, 0, 0, &[(8, 0)])));
+    }
+
+    #[test]
+    fn binary_rejects_bad_offsets() {
+        // n=4, e=2, c=3; sources [0,1]; then a dst_off table of 3 u64s,
+        // dsts [2,3,3 as u32], weights [2 f32 words].
+        let tail: &[(u8, u64)] = &[(4, 2), (4, 3), (4, 3), (4, 0x3f80_0000), (4, 0x3f80_0000)];
+        let mk = |offs: [u64; 3]| {
+            let mut body: Vec<(u8, u64)> = vec![(4, 0), (4, 1)];
+            body.extend(offs.iter().map(|&o| (8u8, o)));
+            body.extend_from_slice(tail);
+            craft(4, 2, 3, &body)
+        };
+        // Decreasing offsets: previously panicked slicing dsts[2..1].
+        assert_invalid(load_bytes("offdec.hg", &mk([0, 2, 1])));
+        // First offset nonzero.
+        assert_invalid(load_bytes("offstart.hg", &mk([1, 2, 3])));
+        // Offset beyond the connection array.
+        assert_invalid(load_bytes("offover.hg", &mk([0, 2, 9])));
+        // Last offset short of the connection array.
+        assert_invalid(load_bytes("offshort.hg", &mk([0, 1, 2])));
+        // Sanity: the well-formed variant of the same stream loads.
+        let g = load_bytes("offok.hg", &mk([0, 2, 3])).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.num_connections(), 3);
+    }
+
+    #[test]
+    fn streaming_roundtrip_with_limit() {
+        let g = random_graph(19);
+        let mut buf = Vec::new();
+        write_binary(&g, &mut buf).unwrap();
+        let mut cursor: &[u8] = &buf;
+        let g2 = read_binary(&mut cursor, Some(buf.len() as u64)).unwrap();
+        assert!(graphs_equal(&g, &g2));
+        // A limit tighter than the header's implied size is rejected.
+        let mut cursor: &[u8] = &buf;
+        assert_invalid(read_binary(&mut cursor, Some(buf.len() as u64 - 1)));
     }
 
     #[test]

@@ -20,7 +20,14 @@
 //! * CPU-parallel hot paths (metric engine, multilevel partitioning,
 //!   spectral matvec, experiment grid) ride the deterministic
 //!   scoped-thread engine in [`util::par`] — thread counts are
-//!   performance knobs, never semantics knobs (DESIGN.md §6-§7, §10).
+//!   performance knobs, never semantics knobs (DESIGN.md §6-§7, §10);
+//! * long hierarchical runs are crash-safe: [`runtime::checkpoint`]
+//!   snapshots the coarsening hierarchy between rounds (atomic writes,
+//!   per-section CRCs, corruption falls back to the newest valid file)
+//!   and resumes bit-for-bit — even across thread counts (DESIGN.md
+//!   §13). CLI: `--checkpoint-dir DIR` to save, `--resume` to continue;
+//!   in code, [`CheckpointPolicy`](runtime::CheckpointPolicy) via
+//!   `MapperPipeline::with_checkpoint`.
 //!
 //! Quick tour — the enum-builder shims and the spec form drive the same
 //! registry-backed pipeline:
@@ -75,5 +82,6 @@ pub mod prelude {
     pub use crate::hypergraph::{Hypergraph, HypergraphBuilder};
     pub use crate::metrics::MappingMetrics;
     pub use crate::placement::Placement;
+    pub use crate::runtime::CheckpointPolicy;
     pub use crate::stage::{Partitioner, Placer, Refiner, StageCtx, StageParams};
 }

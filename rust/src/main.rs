@@ -25,7 +25,7 @@ use snnmap::coordinator::{
 use snnmap::hw::NmhConfig;
 use snnmap::hypergraph::{io as hgio, stats};
 use snnmap::metrics::evaluate;
-use snnmap::runtime::PjrtRuntime;
+use snnmap::runtime::{checkpoint, PjrtRuntime};
 use snnmap::sim::{simulate, SimParams};
 use snnmap::snn::{self, spikefreq};
 use snnmap::stage::{StageCtx, StageParams};
@@ -55,6 +55,18 @@ map options:
   --engine native|pjrt
   --prune-fraction F  drop the weakest F of spike mass first ([16]-style)
 
+checkpoint options (partition/map, hierarchical partitioner; DESIGN.md §13):
+  --checkpoint-dir DIR       save crash-safe coarsening checkpoints in DIR
+  --checkpoint-interval N    rounds between checkpoints (default 1)
+  --checkpoint-keep K        retain the newest K checkpoints (default 3)
+  --resume                   resume from the newest valid checkpoint in DIR
+                             (corrupt files are skipped with a warning);
+                             resumed runs are bit-identical to uninterrupted
+  --ckpt-stop-after-rounds N checkpoint and exit with code 3 after N rounds
+                             (crash simulation for CI)
+  --out-assign FILE          write the final assignment, one core id per
+                             line (atomic write)
+
 simulate options: --steps N (default 200)
 ensemble options: --budget-secs N (default 60)
 experiment options: --grid fig9|fig10 | --config FILE.json
@@ -69,7 +81,7 @@ fn main() {
         eprintln!("{USAGE}");
         std::process::exit(2);
     }
-    let args = Args::parse(argv, &["verbose", "text"]);
+    let args = Args::parse(argv, &["verbose", "text", "resume"]);
     let cmd = args.positional.first().cloned().unwrap_or_default();
     match cmd.as_str() {
         "gen" => cmd_gen(&args),
@@ -181,13 +193,76 @@ fn build_spec(args: &Args, hw: NmhConfig) -> PipelineSpec {
 }
 
 /// `--emit-spec FILE`: archive the spec a subcommand is about to run.
+/// The write is atomic (tmp + fsync + rename) so a killed run never
+/// leaves a half-written spec behind.
 fn emit_spec(args: &Args, spec: &PipelineSpec) {
     if let Some(out) = args.get("emit-spec") {
-        std::fs::write(out, spec.to_json().to_pretty()).unwrap_or_else(|e| {
+        checkpoint::atomic_write(Path::new(out), spec.to_json().to_pretty().as_bytes())
+            .unwrap_or_else(|e| {
+                eprintln!("cannot write {out}: {e}");
+                std::process::exit(1);
+            });
+        eprintln!("[spec] wrote {out}");
+    }
+}
+
+/// Build the checkpoint policy from `--checkpoint-*`/`--resume`; `None`
+/// when checkpointing is off.
+fn resolve_checkpoint(args: &Args) -> Option<checkpoint::CheckpointPolicy> {
+    let dir = match args.get("checkpoint-dir") {
+        Some(d) => d,
+        None => {
+            if args.has_flag("resume") || args.get("ckpt-stop-after-rounds").is_some() {
+                eprintln!("--resume / --ckpt-stop-after-rounds require --checkpoint-dir");
+                std::process::exit(2);
+            }
+            return None;
+        }
+    };
+    let mut pol = checkpoint::CheckpointPolicy::new(dir);
+    pol.interval_rounds = args.get_usize("checkpoint-interval", 1).max(1);
+    pol.keep_last = args.get_usize("checkpoint-keep", 3).max(1);
+    pol.resume = args.has_flag("resume");
+    if args.get("ckpt-stop-after-rounds").is_some() {
+        pol.stop_after_rounds = Some(args.get_u64("ckpt-stop-after-rounds", 1).max(1));
+    }
+    Some(pol)
+}
+
+/// Unwrap a mapping result. A deliberate round-limit checkpoint stop
+/// exits with code 3 (CI's "interrupted as requested, state saved"
+/// signal); real failures exit with 1.
+fn unwrap_mapping<T>(res: Result<T, snnmap::mapping::MapError>, what: &str) -> T {
+    match res {
+        Ok(v) => v,
+        Err(snnmap::mapping::MapError::Checkpoint(msg))
+            if msg.starts_with(checkpoint::ROUND_LIMIT_PREFIX) =>
+        {
+            eprintln!("[ckpt] {msg}");
+            std::process::exit(3);
+        }
+        Err(e) => {
+            eprintln!("{what} failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// `--out-assign FILE`: write the final partition assignment (one core id
+/// per line, node order) atomically — CI diffs a resumed run's file
+/// against a straight-through run's.
+fn write_assignment(args: &Args, rho: &snnmap::hypergraph::quotient::Partitioning) {
+    if let Some(out) = args.get("out-assign") {
+        let mut s = String::with_capacity(rho.assign.len() * 4 + 16);
+        for &p in &rho.assign {
+            s.push_str(&p.to_string());
+            s.push('\n');
+        }
+        checkpoint::atomic_write(Path::new(out), s.as_bytes()).unwrap_or_else(|e| {
             eprintln!("cannot write {out}: {e}");
             std::process::exit(1);
         });
-        eprintln!("[spec] wrote {out}");
+        eprintln!("[map] wrote {out} ({} nodes, {} partitions)", rho.assign.len(), rho.num_parts);
     }
 }
 
@@ -285,17 +360,16 @@ fn cmd_partition(args: &Args) {
         .placer(StageSpec::new("hilbert"))
         .refiner(StageSpec::new("none"));
     emit_spec(args, &spec);
-    let pipeline = MapperPipeline::from_spec(&spec).unwrap_or_else(|e| {
+    let mut pipeline = MapperPipeline::from_spec(&spec).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(1);
     });
+    if let Some(pol) = resolve_checkpoint(args) {
+        pipeline = pipeline.with_checkpoint(pol);
+    }
     let t0 = std::time::Instant::now();
-    let res = pipeline
-        .run(&net.graph, net.layer_ranges.as_deref())
-        .unwrap_or_else(|e| {
-            eprintln!("partitioning failed: {e}");
-            std::process::exit(1);
-        });
+    let res = unwrap_mapping(pipeline.run(&net.graph, net.layer_ranges.as_deref()), "partitioning");
+    write_assignment(args, &res.rho);
     println!(
         "partitioner={} partitions={} connectivity={:.6e} time={:.3}s",
         pipeline.stage_names().0,
@@ -308,14 +382,16 @@ fn cmd_partition(args: &Args) {
 fn cmd_map(args: &Args) {
     let net = load_network(args);
     let hw = resolve_hw(args, &net);
-    let pipeline = resolve_pipeline(args, hw);
+    let mut pipeline = resolve_pipeline(args, hw);
+    if let Some(pol) = resolve_checkpoint(args) {
+        pipeline = pipeline.with_checkpoint(pol);
+    }
     let runtime = resolve_runtime(args);
-    let res = pipeline
-        .run_with(&net.graph, net.layer_ranges.as_deref(), runtime.as_ref())
-        .unwrap_or_else(|e| {
-            eprintln!("mapping failed: {e}");
-            std::process::exit(1);
-        });
+    let res = unwrap_mapping(
+        pipeline.run_with(&net.graph, net.layer_ranges.as_deref(), runtime.as_ref()),
+        "mapping",
+    );
+    write_assignment(args, &res.rho);
     println!(
         "network {} ({} nodes, {} connections) on {}x{} lattice",
         net.name,

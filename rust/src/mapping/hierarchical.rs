@@ -38,8 +38,10 @@ use super::MapError;
 use crate::hw::NmhConfig;
 use crate::hypergraph::quotient::{push_forward_pooled, Partitioning, QuotientScratch};
 use crate::hypergraph::Hypergraph;
+use crate::runtime::checkpoint::{self, CheckpointPolicy};
 use crate::util::rng::Pcg64;
 use std::borrow::Cow;
+use std::path::Path;
 
 /// Below this node count a coarsening round / refinement pass runs on the
 /// serial path even when `threads > 1` — scoped-thread spawn overhead
@@ -55,7 +57,7 @@ pub(crate) const PAR_MIN_NODES: usize = 512;
 const CAND_K: usize = 24;
 
 /// Tunables (defaults follow the paper's description).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct HierParams {
     pub seed: u64,
     /// Max refinement passes per uncoarsening level. Passes after the
@@ -68,6 +70,11 @@ pub struct HierParams {
     /// (1 = serial). A performance knob only: the output is bit-for-bit
     /// identical for every value (enforced by tests).
     pub threads: usize,
+    /// Crash-safe checkpoint/resume between coarsening rounds
+    /// (DESIGN.md §13). `None` (the default) runs without checkpointing.
+    /// Like `threads`, this is an environment knob only: resumed runs are
+    /// bit-for-bit identical to uninterrupted ones (enforced by tests).
+    pub checkpoint: Option<CheckpointPolicy>,
 }
 
 impl Default for HierParams {
@@ -77,6 +84,7 @@ impl Default for HierParams {
             refine_passes: 3,
             min_pair_fraction: 0.02,
             threads: 1,
+            checkpoint: None,
         }
     }
 }
@@ -169,6 +177,71 @@ pub fn partition_with_stats(
         to_coarse: None,
     }];
 
+    // ---- checkpoint/resume (DESIGN.md §13) ----
+    // The fingerprint pins everything the run is a function of *except*
+    // the thread count (a performance knob with bit-identical results),
+    // so a checkpoint resumes on any worker budget.
+    let policy = params.checkpoint.as_ref();
+    let spec_hash = policy.map(|_| run_fingerprint(g, hw, &params));
+    // Coarsening rounds completed so far; also names the checkpoint files.
+    let mut round: u64 = 0;
+    // Coarsening wall-clock carried over from the interrupted run.
+    let mut coarsen_base = 0.0f64;
+    if let Some(pol) = policy {
+        if pol.resume {
+            let want = spec_hash.unwrap();
+            let rec = checkpoint::load_latest(&pol.dir, want).map_err(|e| {
+                MapError::Checkpoint(format!("scanning {}: {e}", pol.dir.display()))
+            })?;
+            for (path, why) in &rec.skipped {
+                eprintln!("[ckpt] skipped {}: {why}", path.display());
+            }
+            if let Some(state) = rec.state {
+                let consistent = state
+                    .levels
+                    .first()
+                    .is_some_and(|l0| {
+                        l0.graph.is_none()
+                            && l0.node_count.len() == n
+                            && l0.axon_mult.len() == g.num_edges()
+                    })
+                    && state.levels.iter().skip(1).all(|l| l.graph.is_some());
+                if !consistent {
+                    return Err(MapError::Checkpoint(
+                        "checkpoint inconsistent with the input graph".into(),
+                    ));
+                }
+                round = state.round;
+                rng = Pcg64::from_state(state.rng);
+                coarsen_base = state.coarsen_secs;
+                stats.peak_hierarchy_bytes = state.peak_hierarchy_bytes as usize;
+                levels = state
+                    .levels
+                    .into_iter()
+                    .map(|ls| Level {
+                        graph: match ls.graph {
+                            Some(qg) => Cow::Owned(qg),
+                            None => Cow::Borrowed(g),
+                        },
+                        axon_mult: ls.axon_mult,
+                        agg: Aggregates {
+                            node_count: ls.node_count,
+                            syn_count: ls.syn_count,
+                        },
+                        to_coarse: ls.to_coarse,
+                    })
+                    .collect();
+                eprintln!(
+                    "[ckpt] resumed round {round} ({} levels) from {}",
+                    levels.len(),
+                    rec.loaded_from.as_deref().unwrap_or(Path::new("?")).display()
+                );
+            } else if !rec.skipped.is_empty() {
+                eprintln!("[ckpt] no valid checkpoint in {}; starting fresh", pol.dir.display());
+            }
+        }
+    }
+
     let debug_timing = crate::util::timing_enabled();
     let mut qscratch = QuotientScratch::new();
     let mut props: Vec<NodeProposal> = Vec::new();
@@ -230,8 +303,39 @@ pub fn partition_with_stats(
             to_coarse: None,
         });
         stats.peak_hierarchy_bytes = stats.peak_hierarchy_bytes.max(hierarchy_bytes(&levels));
+        round += 1;
+        if let Some(pol) = policy {
+            let stop = pol.stop_after_rounds.is_some_and(|limit| round >= limit);
+            if stop || round % pol.interval_rounds.max(1) as u64 == 0 {
+                // The RNG state is captured *after* this round, so replay
+                // continues exactly where the interrupted run would have.
+                let view = checkpoint::RunStateView {
+                    spec_hash: spec_hash.unwrap(),
+                    seed: params.seed,
+                    round,
+                    rng: rng.state(),
+                    coarsen_secs: coarsen_base + t_coarsen.elapsed().as_secs_f64(),
+                    peak_hierarchy_bytes: stats.peak_hierarchy_bytes as u64,
+                    levels: level_views(&levels),
+                };
+                let path = checkpoint::save(pol, &view).map_err(|e| {
+                    MapError::Checkpoint(format!("writing to {}: {e}", pol.dir.display()))
+                })?;
+                if debug_timing {
+                    eprintln!("[ckpt] wrote {} after round {round}", path.display());
+                }
+                if stop {
+                    return Err(MapError::Checkpoint(format!(
+                        "{}: stopped after {round} coarsening rounds; state saved to {} \
+                         (rerun with --resume to continue)",
+                        checkpoint::ROUND_LIMIT_PREFIX,
+                        path.display()
+                    )));
+                }
+            }
+        }
     }
-    stats.coarsen_secs = t_coarsen.elapsed().as_secs_f64();
+    stats.coarsen_secs = coarsen_base + t_coarsen.elapsed().as_secs_f64();
     stats.levels = levels.len();
     stats.peak_hierarchy_bytes = stats.peak_hierarchy_bytes.max(hierarchy_bytes(&levels));
 
@@ -277,6 +381,42 @@ pub fn partition_with_stats(
     stats.refine_secs = t_refine.elapsed().as_secs_f64();
 
     Ok((Partitioning::new(assign, num_parts).compacted(), stats))
+}
+
+/// Fingerprint of everything a run's output is a function of: input graph
+/// structure, hardware constraints, seed and algorithm knobs. The thread
+/// count is deliberately excluded (results are thread-invariant, so a
+/// checkpoint resumes on any worker budget), as is the checkpoint policy
+/// itself (where state is saved cannot change what is computed).
+fn run_fingerprint(g: &Hypergraph, hw: &NmhConfig, params: &HierParams) -> u64 {
+    let mut h = checkpoint::Fnv64::new();
+    h.write_u64(checkpoint::graph_fingerprint(g));
+    for v in [hw.width, hw.height, hw.c_npc, hw.c_apc, hw.c_spc] {
+        h.write_u64(v as u64);
+    }
+    h.write_u64(params.seed);
+    h.write_u64(params.refine_passes as u64);
+    h.write_u64(params.min_pair_fraction.to_bits());
+    h.finish()
+}
+
+/// Borrowed checkpoint views of the hierarchy. Level 0 is `Cow::Borrowed`
+/// (the caller's graph, pinned by the run fingerprint) and serializes no
+/// graph; owned quotient levels embed theirs as `SNNHG1` streams.
+fn level_views<'a>(levels: &'a [Level]) -> Vec<checkpoint::LevelView<'a>> {
+    levels
+        .iter()
+        .map(|l| checkpoint::LevelView {
+            graph: match &l.graph {
+                Cow::Owned(qg) => Some(qg),
+                Cow::Borrowed(_) => None,
+            },
+            axon_mult: &l.axon_mult,
+            node_count: &l.agg.node_count,
+            syn_count: &l.agg.syn_count,
+            to_coarse: l.to_coarse.as_deref(),
+        })
+        .collect()
 }
 
 /// Result of one coarsening round.
@@ -1094,10 +1234,10 @@ mod tests {
         for seed in [0xC0FFEE, 7, 99] {
             let mut hp = HierParams { seed, ..HierParams::default() };
             hp.threads = 1;
-            let serial = partition(&g, &hw, hp).unwrap();
+            let serial = partition(&g, &hw, hp.clone()).unwrap();
             for threads in [2, 4, 7] {
                 hp.threads = threads;
-                let par = partition(&g, &hw, hp).unwrap();
+                let par = partition(&g, &hw, hp.clone()).unwrap();
                 assert_eq!(serial.assign, par.assign, "seed={seed} threads={threads}");
                 assert_eq!(serial.num_parts, par.num_parts);
             }
@@ -1134,7 +1274,7 @@ mod tests {
 /// pipeline seed from [`crate::stage::StageCtx`] unless pinned by the
 /// `seed` parameter; the worker budget follows `StageCtx::threads`
 /// (performance-only — results are thread-count invariant).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct HierarchicalPartitioner {
     pub params: HierParams,
     /// When set, overrides `StageCtx::seed` (reproduce one stage while
@@ -1174,9 +1314,14 @@ impl crate::stage::Partitioner for HierarchicalPartitioner {
         hw: &NmhConfig,
         ctx: &crate::stage::StageCtx,
     ) -> Result<Partitioning, MapError> {
-        let mut hp = self.params;
+        let mut hp = self.params.clone();
         hp.seed = self.seed_override.unwrap_or(ctx.seed);
         hp.threads = ctx.threads.max(1);
+        // Checkpointing is run-environment, so it rides on StageCtx (not
+        // the spec); the pipeline's policy wins over any params-level one.
+        if ctx.checkpoint.is_some() {
+            hp.checkpoint = ctx.checkpoint.clone();
+        }
         partition(g, hw, hp)
     }
 }

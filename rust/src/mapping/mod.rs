@@ -30,6 +30,10 @@ pub enum MapError {
     /// A pipeline spec names an unknown stage or carries bad parameters
     /// (registry/spec layer, see `coordinator::registry`).
     BadSpec(String),
+    /// Checkpoint subsystem failure or a deliberate round-limit stop (the
+    /// latter carries the [`crate::runtime::checkpoint::ROUND_LIMIT_PREFIX`]
+    /// message prefix and maps to CLI exit code 3).
+    Checkpoint(String),
 }
 
 impl std::fmt::Display for MapError {
@@ -43,6 +47,7 @@ impl std::fmt::Display for MapError {
             }
             MapError::ConstraintViolated(m) => write!(f, "constraint violated: {m}"),
             MapError::BadSpec(m) => write!(f, "bad pipeline spec: {m}"),
+            MapError::Checkpoint(m) => write!(f, "checkpoint: {m}"),
         }
     }
 }

@@ -1,0 +1,763 @@
+//! Crash-safe checkpoint/resume for long mapping runs (DESIGN.md §13).
+//!
+//! Long multilevel partitioning runs — the paper's "towards billions of
+//! neurons" regime — are hours of work that die with the process. This
+//! module gives [`crate::mapping::hierarchical::partition_with_stats`] a
+//! durable run-state format, `SNNCK1`, written between coarsening rounds:
+//!
+//! ```text
+//! "SNNCK1"                                  magic, 6 bytes
+//! version:u32 spec:u64 seed:u64             header (little-endian)
+//! round:u64 levels:u64 crc:u32              header CRC32 over the 36
+//!                                           bytes after the magic
+//! [RUN section]                             RNG state + stat accumulators
+//! [LEVEL section] × levels                  hierarchy levels, coarsest
+//!                                           last; each embeds its quotient
+//!                                           graph as an SNNHG1 stream
+//!                                           (level 0 borrows the caller's
+//!                                           graph and stores none)
+//! section := tag:u32 len:u64 payload crc:u32(payload)
+//! ```
+//!
+//! Durability and recovery:
+//! * writes go to `<name>.tmp`, are fsynced, then atomically renamed over
+//!   the final name ([`atomic_write`]) — a crash leaves either the old
+//!   file or the new one, never a torn mix;
+//! * a retention policy keeps the newest K checkpoints and prunes older
+//!   ones ([`prune`]);
+//! * [`load_latest`] scans newest-first, verifies magic/version/CRC and
+//!   the run fingerprint, and on corruption falls back to the next older
+//!   valid checkpoint, reporting every file it skipped and why — a
+//!   flipped bit degrades the resume point, it does not abort the run.
+//!
+//! Because the whole mapping pipeline is a deterministic function of its
+//! inputs plus the seed (DESIGN.md §9), restoring the hierarchy, the RNG
+//! state and the accumulators reproduces the uninterrupted run bit for
+//! bit — enforced by `tests/checkpoint_resume.rs` across thread counts.
+//! The same format doubles as a spill target for future out-of-core
+//! mapping: a LEVEL section is exactly one hierarchy level.
+
+use crate::hypergraph::{io as hgio, Hypergraph};
+use crate::util::rng::Pcg64State;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+pub const MAGIC: &[u8; 6] = b"SNNCK1";
+pub const VERSION: u32 = 1;
+
+const TAG_RUN: u32 = 1;
+const TAG_LEVEL: u32 = 2;
+/// Header bytes covered by the header CRC: version + 4 u64 fields.
+const HEADER_CRC_SPAN: usize = 4 + 4 * 8;
+
+/// Message prefix of the [`crate::mapping::MapError::Checkpoint`] error a
+/// deliberate round-limit stop produces; the CLI maps it to exit code 3
+/// so CI can tell "interrupted as requested" from a real failure.
+pub const ROUND_LIMIT_PREFIX: &str = "round-limit stop";
+
+/// Where/how often to checkpoint, and whether to resume. Carried by
+/// `HierParams` and `StageCtx`; deliberately *not* part of
+/// `PipelineSpec` — the checkpoint directory is run-environment, not
+/// pipeline truth, so two runs of one spec stay comparable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointPolicy {
+    /// Directory holding `ckpt-<round>.snnck` files; created on demand.
+    pub dir: PathBuf,
+    /// Checkpoint every this-many coarsening rounds (min 1).
+    pub interval_rounds: usize,
+    /// Retention: keep the newest K checkpoints, prune older (min 1).
+    pub keep_last: usize,
+    /// Scan `dir` for the newest valid checkpoint before starting.
+    pub resume: bool,
+    /// Testing/CI hook: checkpoint and stop with a
+    /// [`ROUND_LIMIT_PREFIX`] error after this many coarsening rounds,
+    /// simulating a crash at a known point.
+    pub stop_after_rounds: Option<u64>,
+}
+
+impl CheckpointPolicy {
+    pub fn new(dir: impl Into<PathBuf>) -> CheckpointPolicy {
+        CheckpointPolicy {
+            dir: dir.into(),
+            interval_rounds: 1,
+            keep_last: 3,
+            resume: false,
+            stop_after_rounds: None,
+        }
+    }
+}
+
+/// Borrowed view of one hierarchy level, as the partitioner holds it.
+/// `graph` is `None` for level 0, which borrows the caller's input graph
+/// (the run fingerprint pins its identity instead of re-serializing it).
+pub struct LevelView<'a> {
+    pub graph: Option<&'a Hypergraph>,
+    pub axon_mult: &'a [u32],
+    pub node_count: &'a [u32],
+    pub syn_count: &'a [u64],
+    pub to_coarse: Option<&'a [u32]>,
+}
+
+/// Borrowed view of the full run state at a checkpoint boundary.
+pub struct RunStateView<'a> {
+    /// Fingerprint of (input graph, hardware, partitioner params, seed);
+    /// a checkpoint only resumes the run it came from.
+    pub spec_hash: u64,
+    pub seed: u64,
+    /// Coarsening rounds completed when this state was captured.
+    pub round: u64,
+    /// RNG state *after* the captured rounds.
+    pub rng: Pcg64State,
+    /// Coarsening wall-clock accumulated so far (informational).
+    pub coarsen_secs: f64,
+    pub peak_hierarchy_bytes: u64,
+    pub levels: Vec<LevelView<'a>>,
+}
+
+/// Owned deserialized level.
+pub struct LevelState {
+    pub graph: Option<Hypergraph>,
+    pub axon_mult: Vec<u32>,
+    pub node_count: Vec<u32>,
+    pub syn_count: Vec<u64>,
+    pub to_coarse: Option<Vec<u32>>,
+}
+
+/// Owned deserialized run state.
+pub struct RunState {
+    pub spec_hash: u64,
+    pub seed: u64,
+    pub round: u64,
+    pub rng: Pcg64State,
+    pub coarsen_secs: f64,
+    pub peak_hierarchy_bytes: u64,
+    pub levels: Vec<LevelState>,
+}
+
+/// Outcome of a recovery scan: the newest valid state (if any), where it
+/// came from, and every newer file that was skipped with the reason.
+#[derive(Default)]
+pub struct Recovery {
+    pub state: Option<RunState>,
+    pub loaded_from: Option<PathBuf>,
+    pub skipped: Vec<(PathBuf, String)>,
+}
+
+// ---------------------------------------------------------------- CRC32
+
+/// CRC-32 (IEEE, reflected), table-driven.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut crc = i as u32;
+            for _ in 0..8 {
+                crc = (crc >> 1) ^ (0xEDB8_8320 & (crc & 1).wrapping_neg());
+            }
+            *slot = crc;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ table[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+// ------------------------------------------------------------ FNV-1a 64
+
+/// Incremental FNV-1a 64-bit hasher for run/graph fingerprints. Not
+/// cryptographic — it guards against *mistakes* (resuming a checkpoint
+/// against a different network or hardware config), not adversaries.
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    #[inline]
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, x: u32) {
+        self.write_bytes(&x.to_le_bytes());
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, x: u64) {
+        self.write_bytes(&x.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Structural fingerprint of a hypergraph (ids, topology, weight bits).
+pub fn graph_fingerprint(g: &Hypergraph) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_u64(g.num_nodes() as u64);
+    h.write_u64(g.num_edges() as u64);
+    h.write_u64(g.num_connections() as u64);
+    for e in g.edge_ids() {
+        h.write_u32(g.source(e));
+        h.write_u32(g.weight(e).to_bits());
+        h.write_u64(g.cardinality(e) as u64);
+        for &d in g.dsts(e) {
+            h.write_u32(d);
+        }
+    }
+    h.finish()
+}
+
+// ------------------------------------------------------- atomic writing
+
+/// Crash-consistent file write: write `<path>.tmp`, fsync, atomically
+/// rename onto `path`, then best-effort fsync the parent directory so the
+/// rename itself is durable. Readers never observe a torn file. Shared by
+/// the checkpoint writer, the CSV reporter and `--emit-spec`.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let parent = path.parent().filter(|p| !p.as_os_str().is_empty());
+    if let Some(dir) = parent {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    if let Some(dir) = parent {
+        // Directory fsync is not supported everywhere; durability of the
+        // rename is best-effort there, atomicity holds regardless.
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- encode
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u32_slice(out: &mut Vec<u8>, xs: &[u32]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        put_u32(out, x);
+    }
+}
+
+fn put_u64_slice(out: &mut Vec<u8>, xs: &[u64]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        put_u64(out, x);
+    }
+}
+
+fn put_section(out: &mut Vec<u8>, tag: u32, payload: &[u8]) {
+    put_u32(out, tag);
+    put_u64(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+    put_u32(out, crc32(payload));
+}
+
+/// Serialize a run state into an `SNNCK1` byte stream.
+pub fn encode(state: &RunStateView) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, VERSION);
+    put_u64(&mut out, state.spec_hash);
+    put_u64(&mut out, state.seed);
+    put_u64(&mut out, state.round);
+    put_u64(&mut out, state.levels.len() as u64);
+    let crc = crc32(&out[MAGIC.len()..]);
+    put_u32(&mut out, crc);
+
+    let mut p = Vec::new();
+    for w in [state.rng.state_hi, state.rng.state_lo, state.rng.inc_hi, state.rng.inc_lo] {
+        put_u64(&mut p, w);
+    }
+    match state.rng.spare_normal {
+        Some(x) => {
+            p.push(1);
+            put_u64(&mut p, x.to_bits());
+        }
+        None => {
+            p.push(0);
+            put_u64(&mut p, 0);
+        }
+    }
+    put_u64(&mut p, state.coarsen_secs.to_bits());
+    put_u64(&mut p, state.peak_hierarchy_bytes);
+    put_section(&mut out, TAG_RUN, &p);
+
+    for lv in &state.levels {
+        let mut p = Vec::new();
+        let mut flags = 0u8;
+        if lv.graph.is_some() {
+            flags |= 1;
+        }
+        if lv.to_coarse.is_some() {
+            flags |= 2;
+        }
+        p.push(flags);
+        if let Some(g) = lv.graph {
+            let mut gb = Vec::new();
+            hgio::write_binary(g, &mut gb).expect("Vec write is infallible");
+            put_u64(&mut p, gb.len() as u64);
+            p.extend_from_slice(&gb);
+        }
+        put_u32_slice(&mut p, lv.axon_mult);
+        put_u32_slice(&mut p, lv.node_count);
+        put_u64_slice(&mut p, lv.syn_count);
+        if let Some(tc) = lv.to_coarse {
+            put_u32_slice(&mut p, tc);
+        }
+        put_section(&mut out, TAG_LEVEL, &p);
+    }
+    out
+}
+
+// ---------------------------------------------------------------- decode
+
+/// Bounds-checked cursor over untrusted bytes: every length is validated
+/// against the remaining input before slicing or allocating.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self.pos.checked_add(n).ok_or("length overflow")?;
+        if end > self.buf.len() {
+            return Err(format!("truncated: need {n} bytes at offset {}", self.pos));
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn read_len(&mut self) -> Result<usize, String> {
+        usize::try_from(self.u64()?).map_err(|_| "length exceeds address space".to_string())
+    }
+
+    fn u32_vec(&mut self) -> Result<Vec<u32>, String> {
+        let n = self.read_len()?;
+        let raw = self.bytes(n.checked_mul(4).ok_or("length overflow")?)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn u64_vec(&mut self) -> Result<Vec<u64>, String> {
+        let n = self.read_len()?;
+        let raw = self.bytes(n.checked_mul(8).ok_or("length overflow")?)?;
+        Ok(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Read a `tag/len/payload/crc` section, verifying tag and CRC.
+    fn section(&mut self, want: u32) -> Result<&'a [u8], String> {
+        let tag = self.u32()?;
+        if tag != want {
+            return Err(format!("expected section tag {want}, found {tag}"));
+        }
+        let n = self.read_len()?;
+        let payload = self.bytes(n)?;
+        let crc = self.u32()?;
+        if crc32(payload) != crc {
+            return Err(format!("section {want} CRC mismatch"));
+        }
+        Ok(payload)
+    }
+}
+
+/// Deserialize an `SNNCK1` byte stream, verifying magic, version, header
+/// CRC and per-section CRCs. When `expect_spec_hash` is given, a
+/// mismatching fingerprint is an error (the checkpoint belongs to a
+/// different run). All failures are descriptive strings — the recovery
+/// scan reports them per skipped file.
+pub fn decode(bytes: &[u8], expect_spec_hash: Option<u64>) -> Result<RunState, String> {
+    let mut r = Reader::new(bytes);
+    if r.bytes(MAGIC.len())? != MAGIC {
+        return Err("bad magic".to_string());
+    }
+    let header_start = r.pos;
+    let version = r.u32()?;
+    let spec_hash = r.u64()?;
+    let seed = r.u64()?;
+    let round = r.u64()?;
+    let num_levels = r.u64()?;
+    let header_crc = r.u32()?;
+    if crc32(&bytes[header_start..header_start + HEADER_CRC_SPAN]) != header_crc {
+        return Err("header CRC mismatch".to_string());
+    }
+    if version != VERSION {
+        return Err(format!("unsupported version {version}"));
+    }
+    if let Some(want) = expect_spec_hash {
+        if spec_hash != want {
+            return Err(format!(
+                "spec hash mismatch: checkpoint {spec_hash:#018x}, run {want:#018x} \
+                 (different graph/hardware/params/seed)"
+            ));
+        }
+    }
+    if num_levels == 0 {
+        return Err("no hierarchy levels".to_string());
+    }
+    // A level costs >= ~50 payload bytes; this bound keeps a corrupt count
+    // (which the header CRC nearly always catches first) from preallocating.
+    if num_levels > bytes.len() as u64 {
+        return Err(format!("implausible level count {num_levels}"));
+    }
+
+    let p = r.section(TAG_RUN)?;
+    let mut pr = Reader::new(p);
+    let rng = Pcg64State {
+        state_hi: pr.u64()?,
+        state_lo: pr.u64()?,
+        inc_hi: pr.u64()?,
+        inc_lo: pr.u64()?,
+        spare_normal: {
+            let has = pr.u8()? != 0;
+            let bits = pr.u64()?;
+            has.then(|| f64::from_bits(bits))
+        },
+    };
+    let coarsen_secs = f64::from_bits(pr.u64()?);
+    let peak_hierarchy_bytes = pr.u64()?;
+
+    let mut levels = Vec::with_capacity(num_levels as usize);
+    for i in 0..num_levels {
+        let p = r.section(TAG_LEVEL)?;
+        let mut pr = Reader::new(p);
+        let flags = pr.u8()?;
+        let graph = if flags & 1 != 0 {
+            let glen = pr.read_len()?;
+            let gb = pr.bytes(glen)?;
+            let mut cursor = gb;
+            Some(
+                hgio::read_binary(&mut cursor, Some(glen as u64))
+                    .map_err(|e| format!("level {i} embedded graph: {e}"))?,
+            )
+        } else {
+            None
+        };
+        levels.push(LevelState {
+            graph,
+            axon_mult: pr.u32_vec()?,
+            node_count: pr.u32_vec()?,
+            syn_count: pr.u64_vec()?,
+            to_coarse: if flags & 2 != 0 { Some(pr.u32_vec()?) } else { None },
+        });
+    }
+    Ok(RunState {
+        spec_hash,
+        seed,
+        round,
+        rng,
+        coarsen_secs,
+        peak_hierarchy_bytes,
+        levels,
+    })
+}
+
+// ------------------------------------------------------- file management
+
+fn checkpoint_file_name(round: u64) -> String {
+    // Zero-padded so lexicographic filename order == round order.
+    format!("ckpt-{round:08}.snnck")
+}
+
+/// Checkpoint files in `dir`, newest (highest round) first.
+pub fn list_checkpoints(dir: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let p = entry?.path();
+        if let Some(name) = p.file_name().and_then(|s| s.to_str()) {
+            if name.starts_with("ckpt-") && name.ends_with(".snnck") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    out.reverse();
+    Ok(out)
+}
+
+/// Encode and durably write one checkpoint, then apply retention.
+/// Returns the written path.
+pub fn save(policy: &CheckpointPolicy, state: &RunStateView) -> io::Result<PathBuf> {
+    let path = policy.dir.join(checkpoint_file_name(state.round));
+    atomic_write(&path, &encode(state))?;
+    prune(&policy.dir, policy.keep_last.max(1))?;
+    Ok(path)
+}
+
+/// Remove all but the newest `keep_last` checkpoints; returns the pruned
+/// paths.
+pub fn prune(dir: &Path, keep_last: usize) -> io::Result<Vec<PathBuf>> {
+    let mut removed = Vec::new();
+    for p in list_checkpoints(dir)?.drain(..).skip(keep_last) {
+        std::fs::remove_file(&p)?;
+        removed.push(p);
+    }
+    Ok(removed)
+}
+
+/// Scan `dir` newest-first for a checkpoint of the run identified by
+/// `expect_spec_hash`. Unreadable, corrupt or foreign files are skipped
+/// (with reasons) in favor of the next older one — corruption degrades
+/// the resume point instead of failing the run. A missing directory or an
+/// empty scan is `Ok` with no state: the caller starts fresh.
+pub fn load_latest(dir: &Path, expect_spec_hash: u64) -> io::Result<Recovery> {
+    let mut rec = Recovery::default();
+    if !dir.is_dir() {
+        return Ok(rec);
+    }
+    for path in list_checkpoints(dir)? {
+        let attempt = std::fs::read(&path)
+            .map_err(|e| e.to_string())
+            .and_then(|bytes| decode(&bytes, Some(expect_spec_hash)));
+        match attempt {
+            Ok(state) => {
+                rec.loaded_from = Some(path);
+                rec.state = Some(state);
+                break;
+            }
+            Err(why) => rec.skipped.push((path, why)),
+        }
+    }
+    Ok(rec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+    use crate::util::rng::Pcg64;
+
+    fn small_graph() -> Hypergraph {
+        let mut b = HypergraphBuilder::new(6);
+        b.add_edge(0, vec![1, 2], 1.5);
+        b.add_edge(2, vec![3, 4, 5], 0.25);
+        b.add_edge(5, vec![0], 2.0);
+        b.build()
+    }
+
+    fn sample_state(g: &Hypergraph) -> (Vec<u32>, Vec<u32>, Vec<u64>, Vec<u32>) {
+        let n = g.num_nodes();
+        let am: Vec<u32> = (0..g.num_edges() as u32).map(|i| i + 1).collect();
+        let nc: Vec<u32> = (0..n as u32).map(|i| i * 3 + 1).collect();
+        let sc: Vec<u64> = (0..n as u64).map(|i| i * 7).collect();
+        let tc: Vec<u32> = (0..n as u32).map(|i| i / 2).collect();
+        (am, nc, sc, tc)
+    }
+
+    fn view_of<'a>(
+        coarse: &'a Hypergraph,
+        parts: &'a (Vec<u32>, Vec<u32>, Vec<u64>, Vec<u32>),
+        rng: &Pcg64,
+    ) -> RunStateView<'a> {
+        let (am, nc, sc, tc) = parts;
+        RunStateView {
+            spec_hash: 0xDEAD_BEEF_1234_5678,
+            seed: 42,
+            round: 1,
+            rng: rng.state(),
+            coarsen_secs: 0.125,
+            peak_hierarchy_bytes: 4096,
+            levels: vec![
+                LevelView {
+                    graph: None,
+                    axon_mult: am,
+                    node_count: nc,
+                    syn_count: sc,
+                    to_coarse: Some(tc),
+                },
+                LevelView {
+                    graph: Some(coarse),
+                    axon_mult: am,
+                    node_count: nc,
+                    syn_count: sc,
+                    to_coarse: None,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let g = small_graph();
+        let coarse = small_graph();
+        let parts = sample_state(&g);
+        let mut rng = Pcg64::new(7, 23);
+        rng.normal(); // populate the spare so it's exercised
+        let view = view_of(&coarse, &parts, &rng);
+        let bytes = encode(&view);
+        let state = decode(&bytes, Some(view.spec_hash)).unwrap();
+        assert_eq!(state.spec_hash, view.spec_hash);
+        assert_eq!(state.seed, 42);
+        assert_eq!(state.round, 1);
+        assert_eq!(state.rng, rng.state());
+        assert_eq!(state.coarsen_secs.to_bits(), 0.125f64.to_bits());
+        assert_eq!(state.peak_hierarchy_bytes, 4096);
+        assert_eq!(state.levels.len(), 2);
+        assert!(state.levels[0].graph.is_none());
+        let back = state.levels[1].graph.as_ref().unwrap();
+        assert_eq!(graph_fingerprint(back), graph_fingerprint(&coarse));
+        assert_eq!(state.levels[0].axon_mult, parts.0);
+        assert_eq!(state.levels[0].node_count, parts.1);
+        assert_eq!(state.levels[0].syn_count, parts.2);
+        assert_eq!(state.levels[0].to_coarse.as_deref(), Some(parts.3.as_slice()));
+        assert!(state.levels[1].to_coarse.is_none());
+    }
+
+    #[test]
+    fn decode_rejects_every_single_bit_flip_in_header_and_sections() {
+        let g = small_graph();
+        let coarse = small_graph();
+        let parts = sample_state(&g);
+        let rng = Pcg64::new(7, 23);
+        let view = view_of(&coarse, &parts, &rng);
+        let bytes = encode(&view);
+        // Flip one byte at a stride of positions across the stream; CRCs
+        // (or structural checks) must catch every one.
+        for pos in (0..bytes.len()).step_by(7) {
+            let mut corrupt = bytes.clone();
+            corrupt[pos] ^= 0x40;
+            assert!(
+                decode(&corrupt, Some(view.spec_hash)).is_err(),
+                "flip at byte {pos} went undetected"
+            );
+        }
+        // Truncations are caught too.
+        for cut in [0, 5, 6, 40, bytes.len() - 1] {
+            assert!(decode(&bytes[..cut], Some(view.spec_hash)).is_err());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_wrong_spec_hash_but_accepts_unchecked() {
+        let g = small_graph();
+        let coarse = small_graph();
+        let parts = sample_state(&g);
+        let rng = Pcg64::new(7, 23);
+        let view = view_of(&coarse, &parts, &rng);
+        let bytes = encode(&view);
+        let err = decode(&bytes, Some(view.spec_hash + 1)).unwrap_err();
+        assert!(err.contains("spec hash mismatch"), "{err}");
+        assert!(decode(&bytes, None).is_ok());
+    }
+
+    #[test]
+    fn save_prune_and_recover_with_corruption_fallback() {
+        let dir = std::env::temp_dir().join("snnmap_ckpt_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let g = small_graph();
+        let coarse = small_graph();
+        let parts = sample_state(&g);
+        let rng = Pcg64::new(7, 23);
+        let mut policy = CheckpointPolicy::new(&dir);
+        policy.keep_last = 2;
+        // Write rounds 1..=3; retention keeps {2, 3}.
+        for round in 1..=3u64 {
+            let mut view = view_of(&coarse, &parts, &rng);
+            view.round = round;
+            save(&policy, &view).unwrap();
+        }
+        let files = list_checkpoints(&dir).unwrap();
+        let names: Vec<_> =
+            files.iter().map(|p| p.file_name().unwrap().to_str().unwrap().to_string()).collect();
+        assert_eq!(names, vec!["ckpt-00000003.snnck", "ckpt-00000002.snnck"]);
+        // No stray tmp files survive a completed write.
+        assert!(std::fs::read_dir(&dir)
+            .unwrap()
+            .all(|e| !e.unwrap().path().to_str().unwrap().ends_with(".tmp")));
+
+        // Clean recovery finds round 3.
+        let rec = load_latest(&dir, 0xDEAD_BEEF_1234_5678).unwrap();
+        assert_eq!(rec.state.as_ref().unwrap().round, 3);
+        assert!(rec.skipped.is_empty());
+
+        // Corrupt the newest: recovery degrades to round 2 and reports it.
+        let newest = &files[0];
+        let mut bytes = std::fs::read(newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(newest, &bytes).unwrap();
+        let rec = load_latest(&dir, 0xDEAD_BEEF_1234_5678).unwrap();
+        assert_eq!(rec.state.as_ref().unwrap().round, 2);
+        assert_eq!(rec.skipped.len(), 1);
+        assert_eq!(rec.skipped[0].0, *newest);
+
+        // Corrupt both: no state, two skips, still no hard error.
+        let mut bytes = std::fs::read(&files[1]).unwrap();
+        bytes[10] ^= 0xFF;
+        std::fs::write(&files[1], &bytes).unwrap();
+        let rec = load_latest(&dir, 0xDEAD_BEEF_1234_5678).unwrap();
+        assert!(rec.state.is_none());
+        assert_eq!(rec.skipped.len(), 2);
+
+        // Missing directory is a clean fresh start.
+        let rec = load_latest(&dir.join("nope"), 1).unwrap();
+        assert!(rec.state.is_none() && rec.skipped.is_empty());
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC-32 of "123456789" is 0xCBF43926 (standard check value).
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn graph_fingerprint_sensitivity() {
+        let g = small_graph();
+        assert_eq!(graph_fingerprint(&g), graph_fingerprint(&small_graph()));
+        let mut b = HypergraphBuilder::new(6);
+        b.add_edge(0, vec![1, 2], 1.5);
+        b.add_edge(2, vec![3, 4, 5], 0.25);
+        b.add_edge(5, vec![0], 2.5); // weight differs
+        assert_ne!(graph_fingerprint(&g), graph_fingerprint(&b.build()));
+    }
+}

@@ -6,11 +6,15 @@
 //! * [`SpectralEngine`] — adapts the runtime to the placement layer's
 //!   [`EmbeddingEngine`](crate::placement::spectral::EmbeddingEngine)
 //!   trait so spectral placement can run through XLA.
+//! * [`checkpoint`] — the `SNNCK1` crash-safe run-state format and the
+//!   corruption-tolerant recovery scan (DESIGN.md §13).
 
 pub mod artifacts;
+pub mod checkpoint;
 pub mod pjrt;
 
 pub use artifacts::Manifest;
+pub use checkpoint::CheckpointPolicy;
 pub use pjrt::PjrtRuntime;
 
 use crate::placement::eigen::LaplacianProblem;

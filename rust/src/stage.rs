@@ -54,17 +54,23 @@ pub struct StageCtx<'a> {
     /// PJRT runtime for the AOT JAX/Pallas artifacts; stages fall back to
     /// native engines when absent.
     pub runtime: Option<&'a PjrtRuntime>,
+    /// Crash-safe checkpoint/resume policy (DESIGN.md §13). Like
+    /// `threads`, run-environment only: stages that honor it (the
+    /// hierarchical partitioner) must produce bit-identical results with
+    /// or without it, resumed or not.
+    pub checkpoint: Option<crate::runtime::checkpoint::CheckpointPolicy>,
 }
 
 impl<'a> StageCtx<'a> {
     /// A minimal context: the given seed, full thread budget, no layer
-    /// information and the native numeric engines.
+    /// information, no checkpointing and the native numeric engines.
     pub fn new(seed: u64) -> StageCtx<'a> {
         StageCtx {
             seed,
             threads: crate::util::par::max_threads(),
             layer_ranges: None,
             runtime: None,
+            checkpoint: None,
         }
     }
 }

@@ -1,0 +1,209 @@
+//! Resume-equivalence and corruption-recovery properties of the SNNCK1
+//! checkpoint subsystem (DESIGN.md §13, ISSUE 6 acceptance criteria):
+//!
+//! * a hierarchical run killed after round r and resumed from its
+//!   checkpoint produces a `Partitioning` bit-for-bit equal to the
+//!   uninterrupted run, for several r, seeds and thread counts
+//!   {1, 2, 4, 8};
+//! * a bit-flipped newest checkpoint degrades recovery to the previous
+//!   valid one (reported, not fatal), and the resumed result is still
+//!   exact;
+//! * a checkpoint of a *different* run (spec-hash mismatch) is skipped.
+
+use snnmap::hw::NmhConfig;
+use snnmap::hypergraph::{Hypergraph, HypergraphBuilder};
+use snnmap::mapping::hierarchical::{partition_with_stats, HierParams, HierStats};
+use snnmap::mapping::MapError;
+use snnmap::runtime::checkpoint::{self, CheckpointPolicy};
+use snnmap::util::rng::Pcg64;
+use std::path::PathBuf;
+
+/// k dense clusters with sparse inter-cluster links (the hierarchical
+/// partitioner's own test topology — deep enough for several coarsening
+/// rounds).
+fn clusters(k: usize, size: usize, gen_seed: u64) -> Hypergraph {
+    let mut rng = Pcg64::seeded(gen_seed);
+    let n = k * size;
+    let mut b = HypergraphBuilder::new(n);
+    for s in 0..n as u32 {
+        let c = s as usize / size;
+        let mut dsts: Vec<u32> =
+            (0..4).map(|_| (c * size + rng.below(size)) as u32).filter(|&d| d != s).collect();
+        if rng.bernoulli(0.1) {
+            dsts.push(rng.below(n) as u32);
+        }
+        dsts.retain(|&d| d != s);
+        if !dsts.is_empty() {
+            b.add_edge(s, dsts, rng.next_f32() + 0.01);
+        }
+    }
+    b.build()
+}
+
+fn test_hw() -> NmhConfig {
+    let mut hw = NmhConfig::small();
+    hw.c_npc = 48; // 768 nodes -> target 16: ~5-6 coarsening rounds
+    hw
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("snnmap_ckpt_resume_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn params(seed: u64, threads: usize, ckpt: Option<CheckpointPolicy>) -> HierParams {
+    HierParams { seed, threads, checkpoint: ckpt, ..HierParams::default() }
+}
+
+/// Run to the deliberate round-r stop; the error must carry the
+/// round-limit prefix (exit-code-3 contract).
+fn run_until_stop(g: &Hypergraph, hw: &NmhConfig, seed: u64, dir: &PathBuf, stop_round: u64) {
+    let mut pol = CheckpointPolicy::new(dir);
+    pol.keep_last = 8;
+    pol.stop_after_rounds = Some(stop_round);
+    let err = partition_with_stats(g, hw, params(seed, 2, Some(pol))).unwrap_err();
+    match err {
+        MapError::Checkpoint(msg) => {
+            assert!(msg.starts_with(checkpoint::ROUND_LIMIT_PREFIX), "unexpected message: {msg}")
+        }
+        other => panic!("expected a checkpoint stop, got {other}"),
+    }
+}
+
+/// Resume policy that writes no further checkpoints (huge interval), so
+/// every thread count resumes from the same interrupted state.
+fn resume_policy(dir: &PathBuf) -> CheckpointPolicy {
+    let mut pol = CheckpointPolicy::new(dir);
+    pol.resume = true;
+    pol.interval_rounds = 1_000_000;
+    pol
+}
+
+/// Deterministic HierStats fields. Wall-clock (`coarsen_secs`,
+/// `refine_secs`) cannot be bitwise-reproducible in any run — even two
+/// uninterrupted runs differ — so "HierStats bitwise equal" is asserted
+/// over the fields determinism governs.
+fn det_stats(s: &HierStats) -> (usize, usize) {
+    (s.levels, s.peak_hierarchy_bytes)
+}
+
+#[test]
+fn resumed_runs_bitwise_equal_uninterrupted() {
+    let g = clusters(8, 96, 33);
+    let hw = test_hw();
+    for seed in [7u64, 0xC0FFEE] {
+        let (base_rho, base_stats) = partition_with_stats(&g, &hw, params(seed, 1, None)).unwrap();
+        for stop_round in [1u64, 2, 3] {
+            let dir = fresh_dir(&format!("eq_{seed}_{stop_round}"));
+            run_until_stop(&g, &hw, seed, &dir, stop_round);
+            let newest = checkpoint::list_checkpoints(&dir).unwrap();
+            assert_eq!(newest.len(), stop_round as usize, "one checkpoint per round");
+            for threads in [1usize, 2, 4, 8] {
+                let (rho, stats) =
+                    partition_with_stats(&g, &hw, params(seed, threads, Some(resume_policy(&dir))))
+                        .unwrap();
+                assert_eq!(
+                    rho.assign, base_rho.assign,
+                    "seed={seed} stop_round={stop_round} threads={threads}"
+                );
+                assert_eq!(rho.num_parts, base_rho.num_parts);
+                assert_eq!(det_stats(&stats), det_stats(&base_stats));
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn corrupted_newest_falls_back_to_previous_and_stays_exact() {
+    let g = clusters(8, 96, 33);
+    let hw = test_hw();
+    let seed = 7u64;
+    let (base_rho, _) = partition_with_stats(&g, &hw, params(seed, 1, None)).unwrap();
+    let dir = fresh_dir("corrupt");
+    run_until_stop(&g, &hw, seed, &dir, 3);
+    let files = checkpoint::list_checkpoints(&dir).unwrap();
+    assert_eq!(files.len(), 3);
+
+    // Flip one bit mid-file in the newest checkpoint (round 3).
+    let newest = files[0].clone();
+    let mut bytes = std::fs::read(&newest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&newest, &bytes).unwrap();
+
+    // The recovery scan must skip it (with a reason) and land on round 2.
+    let spec_hash = {
+        // Recover via the public scan with the hash the partitioner will
+        // use: read it out of a *valid* checkpoint header instead of
+        // re-deriving it here.
+        let valid = std::fs::read(&files[1]).unwrap();
+        checkpoint::decode(&valid, None).unwrap().spec_hash
+    };
+    let rec = checkpoint::load_latest(&dir, spec_hash).unwrap();
+    assert_eq!(rec.skipped.len(), 1, "exactly the flipped file is skipped");
+    assert_eq!(rec.skipped[0].0, newest);
+    let state = rec.state.expect("previous checkpoint must recover");
+    assert_eq!(state.round, 2);
+
+    // And a resume through the partitioner still matches bit for bit.
+    for threads in [1usize, 4] {
+        let (rho, _) =
+            partition_with_stats(&g, &hw, params(seed, threads, Some(resume_policy(&dir))))
+                .unwrap();
+        assert_eq!(rho.assign, base_rho.assign, "threads={threads}");
+        assert_eq!(rho.num_parts, base_rho.num_parts);
+    }
+
+    // Corrupt every checkpoint: resume degrades to a fresh start and the
+    // result is still exact (recovery never makes the run fail).
+    for f in &files {
+        let mut bytes = std::fs::read(f).unwrap();
+        let mid = bytes.len() / 3;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(f, &bytes).unwrap();
+    }
+    let (rho, _) =
+        partition_with_stats(&g, &hw, params(seed, 2, Some(resume_policy(&dir)))).unwrap();
+    assert_eq!(rho.assign, base_rho.assign);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn foreign_checkpoint_is_skipped_not_resumed() {
+    let g = clusters(8, 96, 33);
+    let hw = test_hw();
+    let dir = fresh_dir("foreign");
+    // Checkpoints written under seed 7...
+    run_until_stop(&g, &hw, 7, &dir, 2);
+    // ...must not resume a seed-99 run: the spec hash differs, the scan
+    // skips both files, and the run starts fresh — equal to its own
+    // uninterrupted baseline, not seed 7's.
+    let (base99, _) = partition_with_stats(&g, &hw, params(99, 1, None)).unwrap();
+    let (rho, _) = partition_with_stats(&g, &hw, params(99, 2, Some(resume_policy(&dir)))).unwrap();
+    assert_eq!(rho.assign, base99.assign);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn interval_and_retention_control_the_files_on_disk() {
+    let g = clusters(8, 96, 33);
+    let hw = test_hw();
+    let dir = fresh_dir("interval");
+    let mut pol = CheckpointPolicy::new(&dir);
+    pol.interval_rounds = 2;
+    pol.keep_last = 2;
+    pol.stop_after_rounds = Some(5);
+    let err = partition_with_stats(&g, &hw, params(7, 1, Some(pol))).unwrap_err();
+    assert!(matches!(err, MapError::Checkpoint(_)));
+    // Rounds 2 and 4 checkpoint by interval, 5 by the stop; retention
+    // keeps the newest two.
+    let names: Vec<String> = checkpoint::list_checkpoints(&dir)
+        .unwrap()
+        .iter()
+        .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+        .collect();
+    assert_eq!(names, vec!["ckpt-00000005.snnck", "ckpt-00000004.snnck"]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
