@@ -444,7 +444,8 @@ fn main() {
             ),
         ]);
         let body = doc.to_pretty() + "\n";
-        std::fs::write(path, body).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        snnmap::runtime::checkpoint::atomic_write(std::path::Path::new(path), body.as_bytes())
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
         println!("wrote machine-readable results to {path}");
     }
 }

@@ -1,0 +1,55 @@
+//! `snn_lint` — run the repo's invariant lint (DESIGN.md §14) over the
+//! crate tree and exit nonzero on unwaived findings.
+//!
+//! Usage: `cargo run --release --bin snn_lint [-- --root <crate-dir>]`
+//!
+//! The root defaults to `CARGO_MANIFEST_DIR` (set by cargo), falling
+//! back to the current directory, so both `cargo run` and a bare binary
+//! invocation from `rust/` work. Exit codes: 0 clean, 1 unwaived
+//! findings, 2 usage or I/O error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root: Option<PathBuf> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(p) => root = Some(PathBuf::from(p)),
+                    None => {
+                        eprintln!("snn_lint: --root expects a path");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            other => {
+                eprintln!("snn_lint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+        i += 1;
+    }
+    let root = root
+        .or_else(|| std::env::var_os("CARGO_MANIFEST_DIR").map(PathBuf::from))
+        .unwrap_or_else(|| PathBuf::from("."));
+
+    match snnmap::lint::lint_tree(&root) {
+        Ok(report) => {
+            print!("{}", report.render());
+            if report.is_clean() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("snn_lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

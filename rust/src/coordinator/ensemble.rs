@@ -88,6 +88,8 @@ pub fn run_candidates(
     runtime: Option<&PjrtRuntime>,
 ) -> Result<EnsembleResult, MapError> {
     assert!(!candidates.is_empty(), "ensemble needs at least one candidate");
+    // snn-lint: allow(timing-gate) — budget wall-clock is product semantics: it decides
+    // early exit and is surfaced to the caller as `budget_exhausted`
     let start = Instant::now();
     let mut best: Option<(MappingResult, (String, String))> = None;
     let mut scoreboard = Vec::new();
@@ -98,6 +100,7 @@ pub fn run_candidates(
             budget_exhausted = true;
             break;
         }
+        // snn-lint: allow(timing-gate) — the per-candidate duration lands in the scoreboard
         let t0 = Instant::now();
         let spec = base.clone().placer(placer.clone()).refiner(refiner.clone());
         let res = MapperPipeline::from_spec_with(registry, &spec)?
@@ -112,6 +115,8 @@ pub fn run_candidates(
             best = Some((res, (placer.name.clone(), refiner.name.clone())));
         }
     }
+    // snn-lint: allow(unwrap-ban) — the non-empty assert above plus `best.is_some()` gating
+    // the budget break guarantee at least one candidate ran to completion
     let (best, best_combo) = best.expect("at least one candidate always runs");
     Ok(EnsembleResult {
         best,

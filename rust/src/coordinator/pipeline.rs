@@ -79,6 +79,8 @@ impl PartitionerKind {
     pub fn to_stage(&self) -> Box<dyn Partitioner> {
         StageRegistry::global()
             .partitioner(self.name(), &StageParams::empty())
+            // snn-lint: allow(unwrap-ban) — name() enumerates compiled-in builtins and
+            // StageRegistry::global() registers every one (spec round-trip tests cover all)
             .expect("builtin partitioner")
     }
 }
@@ -120,6 +122,8 @@ impl PlacerKind {
     pub fn to_stage(&self) -> Box<dyn Placer> {
         StageRegistry::global()
             .placer(self.name(), &StageParams::empty())
+            // snn-lint: allow(unwrap-ban) — name() enumerates compiled-in builtins and
+            // StageRegistry::global() registers every one (spec round-trip tests cover all)
             .expect("builtin placer")
     }
 }
@@ -152,6 +156,8 @@ impl RefinerKind {
     pub fn to_stage(&self) -> Box<dyn Refiner> {
         StageRegistry::global()
             .refiner(self.name(), &StageParams::empty())
+            // snn-lint: allow(unwrap-ban) — name() enumerates compiled-in builtins and
+            // StageRegistry::global() registers every one (spec round-trip tests cover all)
             .expect("builtin refiner")
     }
 }

@@ -123,6 +123,7 @@ pub fn read_binary<R: Read>(r: &mut R, byte_limit: Option<u64>) -> io::Result<Hy
     if dst_off.windows(2).any(|w| w[0] > w[1]) {
         return Err(bad("dst offsets must be non-decreasing"));
     }
+    // snn-lint: allow(unwrap-ban) — dst_off is non-empty: dst_off[0] was read two checks above
     if *dst_off.last().unwrap() != c {
         return Err(bad("dst offsets do not cover the connection array"));
     }

@@ -355,6 +355,9 @@ impl ChunkScan {
 /// edge contributes its own f32 weight individually — the accumulation
 /// tree is the serial left-to-right order, never per-chunk partial sums,
 /// which is what keeps the f32 weights bit-identical for any chunking.
+// snn-lint: allow(parallel-serial-pairing) — sweep_serial runs via the public
+// push_forward dispatch at threads<=1; parallel_sweep_matches_serial_bitwise_across_threads
+// asserts bitwise equality of the two sweeps across worker counts
 fn sweep_parallel(
     g: &Hypergraph,
     rho: &Partitioning,

@@ -60,6 +60,7 @@
 pub mod coordinator;
 pub mod hw;
 pub mod hypergraph;
+pub mod lint;
 pub mod mapping;
 pub mod metrics;
 pub mod multichip;

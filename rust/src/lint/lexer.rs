@@ -1,0 +1,338 @@
+//! A minimal Rust lexer for the lint pass: enough token structure to tell
+//! identifiers, punctuation, literals and lifetimes apart, with comments
+//! captured out-of-band. The registry is offline, so `syn` is not an
+//! option — and the rules only need lexical shape, not a parse tree.
+//!
+//! Guarantees the rules rely on:
+//! * string/char/byte/raw-string literal *contents* never surface as
+//!   tokens (a `"fs::write"` inside a fixture string cannot fire R3);
+//! * comments never surface as tokens, but are kept with their line and
+//!   a `standalone` flag so the waiver parser can decide coverage;
+//! * nested block comments and `r#"…"#`-style raw strings are honored;
+//! * `'a` (lifetime) and `'a'` (char) are distinguished so a lifetime
+//!   never swallows the token after it.
+
+/// Token kind. Literal payloads are dropped deliberately — no rule may
+/// depend on literal contents, which keeps fixtures-in-strings inert.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `impl`, `unwrap`, …).
+    Ident(String),
+    /// Single punctuation byte (`.`, `:`, `{`, …).
+    Punct(char),
+    /// Any literal: string, raw string, byte string, char, number.
+    Lit,
+    /// A lifetime such as `'a` or `'static`.
+    Lifetime,
+}
+
+/// One token with its 1-indexed source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub line: u32,
+}
+
+/// One comment (line or block), with the line it starts on and whether
+/// it is the first thing on that line (`standalone`) — waivers in
+/// standalone comments extend their coverage to the next token's line.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub standalone: bool,
+    pub text: String,
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lex `src` into tokens plus out-of-band comments. Never fails: bytes
+/// the lexer does not understand become single-byte `Punct` tokens.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Token> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut tokens_on_line = false;
+
+    let text_of = |range: &[u8]| String::from_utf8_lossy(range).into_owned();
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            tokens_on_line = false;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i + 2;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            comments.push(Comment {
+                line,
+                standalone: !tokens_on_line,
+                text: text_of(&b[i + 2..j]),
+            });
+            i = j;
+            continue;
+        }
+        // block comment (nested)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start_line = line;
+            let standalone = !tokens_on_line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let text_start = j;
+            let mut text_end = j;
+            while j < n && depth > 0 {
+                if b[j] == b'\n' {
+                    line += 1;
+                }
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                    continue;
+                }
+                if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                    if depth == 0 {
+                        text_end = j - 2;
+                    }
+                    continue;
+                }
+                j += 1;
+                text_end = j;
+            }
+            comments.push(Comment {
+                line: start_line,
+                standalone,
+                text: text_of(&b[text_start..text_end.min(n)]),
+            });
+            i = j;
+            continue;
+        }
+        // raw / byte strings and raw identifiers: r"…", r#"…"#, b"…",
+        // br#"…"#, r#ident
+        if c == b'r' || c == b'b' {
+            let mut j = i;
+            if b[j] == b'b' {
+                j += 1;
+            }
+            let raw = j < n && b[j] == b'r';
+            if raw {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            let bytestr_prefix_len = if c == b'b' { 1 } else { 0 };
+            let plain_byte_string = hashes == 0 && j == i + bytestr_prefix_len;
+            if j < n && b[j] == b'"' && (raw || plain_byte_string) {
+                let start_line = line;
+                j += 1;
+                if raw {
+                    // scan for `"` followed by `hashes` hashes
+                    loop {
+                        if j >= n {
+                            break;
+                        }
+                        if b[j] == b'\n' {
+                            line += 1;
+                            j += 1;
+                            continue;
+                        }
+                        if b[j] == b'"' {
+                            let mut k = j + 1;
+                            let mut seen = 0usize;
+                            while k < n && seen < hashes && b[k] == b'#' {
+                                seen += 1;
+                                k += 1;
+                            }
+                            if seen == hashes {
+                                j = k;
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                } else {
+                    // escape-aware byte string
+                    while j < n {
+                        if b[j] == b'\\' {
+                            j += 2;
+                            continue;
+                        }
+                        if b[j] == b'\n' {
+                            line += 1;
+                        }
+                        if b[j] == b'"' {
+                            j += 1;
+                            break;
+                        }
+                        j += 1;
+                    }
+                }
+                toks.push(Token { kind: TokKind::Lit, line: start_line });
+                tokens_on_line = true;
+                i = j;
+                continue;
+            }
+            // raw identifier r#ident
+            if c == b'r'
+                && i + 2 < n
+                && b[i + 1] == b'#'
+                && (b[i + 2].is_ascii_alphabetic() || b[i + 2] == b'_')
+            {
+                let mut j = i + 2;
+                while j < n && is_ident_byte(b[j]) {
+                    j += 1;
+                }
+                toks.push(Token { kind: TokKind::Ident(text_of(&b[i + 2..j])), line });
+                tokens_on_line = true;
+                i = j;
+                continue;
+            }
+        }
+        // identifier / keyword
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let mut j = i;
+            while j < n && is_ident_byte(b[j]) {
+                j += 1;
+            }
+            toks.push(Token { kind: TokKind::Ident(text_of(&b[i..j])), line });
+            tokens_on_line = true;
+            i = j;
+            continue;
+        }
+        // string literal
+        if c == b'"' {
+            let start_line = line;
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == b'\\' {
+                    j += 2;
+                    continue;
+                }
+                if b[j] == b'\n' {
+                    line += 1;
+                }
+                if b[j] == b'"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Token { kind: TokKind::Lit, line: start_line });
+            tokens_on_line = true;
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                let mut j = i + 2;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                toks.push(Token { kind: TokKind::Lit, line });
+                tokens_on_line = true;
+                i = j + 1;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == b'\'' {
+                toks.push(Token { kind: TokKind::Lit, line });
+                tokens_on_line = true;
+                i += 3;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n && is_ident_byte(b[j]) {
+                j += 1;
+            }
+            toks.push(Token { kind: TokKind::Lifetime, line });
+            tokens_on_line = true;
+            i = j;
+            continue;
+        }
+        // number literal (digits, `1_000u32`, `1.5e-3`, `0xff`)
+        if c.is_ascii_digit() {
+            let mut j = i;
+            loop {
+                while j < n && is_ident_byte(b[j]) {
+                    j += 1;
+                }
+                if j < n && b[j] == b'.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                    j += 1;
+                    continue;
+                }
+                if j < n && (b[j] == b'+' || b[j] == b'-') && j > i && (b[j - 1] | 0x20) == b'e' {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Token { kind: TokKind::Lit, line });
+            tokens_on_line = true;
+            i = j;
+            continue;
+        }
+        toks.push(Token { kind: TokKind::Punct(c as char), line });
+        tokens_on_line = true;
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// The identifier text at `i`, if that token is an identifier.
+pub fn ident_at(toks: &[Token], i: usize) -> Option<&str> {
+    match toks.get(i) {
+        Some(Token { kind: TokKind::Ident(s), .. }) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+/// True iff token `i` is the punctuation byte `c`.
+pub fn punct_at(toks: &[Token], i: usize, c: char) -> bool {
+    matches!(toks.get(i), Some(Token { kind: TokKind::Punct(p), .. }) if *p == c)
+}
+
+/// True iff tokens at `i..` spell the path segment pair `a::b`.
+pub fn path2_at(toks: &[Token], i: usize, a: &str, b: &str) -> bool {
+    ident_at(toks, i) == Some(a)
+        && punct_at(toks, i + 1, ':')
+        && punct_at(toks, i + 2, ':')
+        && ident_at(toks, i + 3) == Some(b)
+}
+
+/// Index of the brace that closes the `open`/`close` pair whose opening
+/// token sits at `open_idx`. Falls back to the last token on imbalance
+/// (truncated input) — rules degrade to over-scanning, never panic.
+pub fn match_delim(toks: &[Token], open_idx: usize, open: char, close: char) -> usize {
+    let mut depth = 0isize;
+    let mut k = open_idx;
+    while k < toks.len() {
+        if punct_at(toks, k, open) {
+            depth += 1;
+        } else if punct_at(toks, k, close) {
+            depth -= 1;
+            if depth == 0 {
+                return k;
+            }
+        }
+        k += 1;
+    }
+    toks.len().saturating_sub(1)
+}

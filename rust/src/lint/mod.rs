@@ -1,0 +1,218 @@
+//! # snn-lint — the repo's determinism & invariant static-analysis pass
+//!
+//! The crate's value proposition — reproducible mappings, bit-for-bit
+//! across thread counts, crash-consistent on disk — rests on disciplines
+//! that used to live only in DESIGN.md §10–§13 and in tests. This module
+//! turns them into machine-checked rules over the source tree itself
+//! (`rust/src` + `rust/tests` + `rust/benches`), enforced by the
+//! `snn_lint` binary in CI. The registry is offline, so there is no
+//! `syn`: [`lexer`] is a small hand-rolled Rust lexer and every rule is
+//! lexical/structural. See DESIGN.md §14 for the rule catalogue.
+//!
+//! A finding is suppressed by an inline waiver comment of the form
+//! `// snn-lint: allow(rule-id) — reason`, where the reason is
+//! mandatory: a waiver is a claim that an invariant makes the flagged
+//! pattern safe, and the claim has to be written down. A waiver on its
+//! own line covers the next code line; a trailing waiver covers its own
+//! line. Malformed waivers (missing reason, unknown rule id) are
+//! themselves findings — rule id `bad-waiver` — and cannot be waived.
+
+pub mod lexer;
+pub mod model;
+pub mod rules;
+
+use std::path::Path;
+
+/// One lint rule: stable id (used in waivers) plus a one-line summary.
+#[derive(Debug, Clone, Copy)]
+pub struct Rule {
+    pub id: &'static str,
+    pub summary: &'static str,
+}
+
+/// The rule catalogue, in reporting order (DESIGN.md §14).
+pub const RULES: [Rule; 7] = [
+    Rule {
+        id: "parallel-serial-pairing",
+        summary: "every *_parallel/*_threads fn needs a *_serial twin referenced from tests",
+    },
+    Rule {
+        id: "unordered-iteration",
+        summary: "no HashMap/HashSet iteration in non-test src/ unless sorted downstream",
+    },
+    Rule {
+        id: "no-raw-writes",
+        summary: "file writes go through checkpoint::atomic_write (or hypergraph/io.rs)",
+    },
+    Rule {
+        id: "unwrap-ban",
+        summary: "no unwrap()/expect()/panic! in library code without a reasoned waiver",
+    },
+    Rule {
+        id: "env-discipline",
+        summary: "env::var only in util/ behind OnceLock, main.rs, src/bin/ or artifacts.rs",
+    },
+    Rule {
+        id: "timing-gate",
+        summary: "Instant::now() in stage code must feed a *Stats field or timing_enabled()",
+    },
+    Rule {
+        id: "threads-wiring",
+        summary: "every impl Partitioner/Placer/Refiner must read ctx.threads",
+    },
+];
+
+/// Pseudo-rule id for malformed waivers; never waivable.
+pub const BAD_WAIVER: &str = "bad-waiver";
+
+/// Where a file sits in the crate, which decides rule scope.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileClass {
+    /// Library code under `src/` — every rule applies.
+    Lib,
+    /// `src/main.rs` and `src/bin/**` — R2/R3/R5 apply.
+    Bin,
+    /// `tests/**` — only R3 applies (plus waiver hygiene).
+    Test,
+    /// `benches/**` — only R3 applies (plus waiver hygiene).
+    Bench,
+}
+
+/// Classify a crate-relative path (`/`-separated).
+pub fn classify(path: &str) -> FileClass {
+    if path.starts_with("tests/") {
+        FileClass::Test
+    } else if path.starts_with("benches/") {
+        FileClass::Bench
+    } else if path.starts_with("src/bin/") || path == "src/main.rs" {
+        FileClass::Bin
+    } else {
+        FileClass::Lib
+    }
+}
+
+/// One diagnostic: rule id, crate-relative path, 1-indexed line, message
+/// and — when an inline waiver covers it — the waiver's reason.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: String,
+    pub path: String,
+    pub line: u32,
+    pub msg: String,
+    pub waived: Option<String>,
+}
+
+/// The result of a lint run over a file set.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// All findings (waived and unwaived), sorted by rule, path, line.
+    pub findings: Vec<Finding>,
+    /// Waivers that suppressed nothing — advisory (stale or mis-placed).
+    pub unused_waivers: Vec<(String, u32)>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// Findings not covered by a waiver — these fail the build.
+    pub fn unwaived(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.waived.is_none())
+    }
+
+    /// Findings suppressed by a reasoned waiver.
+    pub fn waived(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| f.waived.is_some())
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.unwaived().next().is_none()
+    }
+
+    /// Human-readable report: unwaived findings grouped by rule with
+    /// `path:line`, then a summary line, then advisory notes.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut total_unwaived = 0usize;
+        let rule_ids: Vec<&str> =
+            RULES.iter().map(|r| r.id).chain(std::iter::once(BAD_WAIVER)).collect();
+        for rid in rule_ids {
+            let hits: Vec<&Finding> =
+                self.unwaived().filter(|f| f.rule == rid).collect();
+            if hits.is_empty() {
+                continue;
+            }
+            total_unwaived += hits.len();
+            let summary = RULES
+                .iter()
+                .find(|r| r.id == rid)
+                .map(|r| r.summary)
+                .unwrap_or("malformed `snn-lint:` waiver comment");
+            out.push_str(&format!("[{rid}] {summary}\n"));
+            for f in hits {
+                out.push_str(&format!("  {}:{}  {}\n", f.path, f.line, f.msg));
+            }
+        }
+        let waived = self.waived().count();
+        out.push_str(&format!(
+            "{} file(s) scanned: {} unwaived finding(s), {} waived\n",
+            self.files_scanned, total_unwaived, waived
+        ));
+        for (path, line) in &self.unused_waivers {
+            out.push_str(&format!("note: unused waiver at {path}:{line}\n"));
+        }
+        out
+    }
+}
+
+/// Lint an in-memory file set of `(crate-relative path, source)` pairs.
+pub fn lint_sources(files: &[(String, String)]) -> LintReport {
+    rules::run(files)
+}
+
+/// Lint the crate tree rooted at `root` (the directory holding
+/// `Cargo.toml`): walks `src/`, `tests/` and `benches/` in sorted order
+/// so reports are deterministic across platforms.
+pub fn lint_tree(root: &Path) -> Result<LintReport, String> {
+    let mut files: Vec<(String, String)> = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs_files(&dir, root, &mut files)?;
+        }
+    }
+    if files.is_empty() {
+        return Err(format!("no .rs files under {}", root.display()));
+    }
+    Ok(lint_sources(&files))
+}
+
+fn collect_rs_files(
+    dir: &Path,
+    root: &Path,
+    out: &mut Vec<(String, String)>,
+) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    let mut entries: Vec<std::path::PathBuf> = Vec::new();
+    for ent in rd {
+        let ent = ent.map_err(|e| format!("reading {}: {e}", dir.display()))?;
+        entries.push(ent.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(&p, root, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let bytes =
+                std::fs::read(&p).map_err(|e| format!("reading {}: {e}", p.display()))?;
+            let src = String::from_utf8_lossy(&bytes).into_owned();
+            let rel = p
+                .strip_prefix(root)
+                .map_err(|_| format!("{} escapes {}", p.display(), root.display()))?
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, src));
+        }
+    }
+    Ok(())
+}

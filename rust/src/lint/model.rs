@@ -1,0 +1,263 @@
+//! Per-file structural model built on the token stream: test regions,
+//! function spans, `impl` blocks, and parsed waivers. This is the layer
+//! between the lexer and the rules — rules only ever ask "is this token
+//! inside a test?", "which fn encloses this?", "is this line waived?".
+
+use super::lexer::{ident_at, match_delim, punct_at, Comment, TokKind, Token};
+use super::RULES;
+
+/// A `fn` item: its name, the line of the `fn` keyword, the token index
+/// of the `fn` keyword, and the token span of its body (absent for
+/// trait-method declarations ending in `;`).
+#[derive(Debug, Clone)]
+pub struct FnInfo {
+    pub name: String,
+    pub line: u32,
+    pub kw_idx: usize,
+    pub body: Option<(usize, usize)>,
+}
+
+/// An `impl` block: the trait name when it is a trait impl (`impl T for
+/// U`), the line of the `impl` keyword, its body token span, and the
+/// token index of the `impl` keyword.
+#[derive(Debug, Clone)]
+pub struct ImplInfo {
+    pub trait_name: Option<String>,
+    pub line: u32,
+    pub body: (usize, usize),
+    pub kw_idx: usize,
+}
+
+/// A parsed, well-formed waiver: the rules it waives, its mandatory
+/// reason, and the source lines it covers (its own line, plus the next
+/// token's line when the comment stands alone on its line).
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub reason: String,
+    pub covered: Vec<u32>,
+}
+
+/// A malformed waiver — reported as an unwaivable `bad-waiver` finding
+/// (a waiver that silently failed to parse would silently stop waiving).
+#[derive(Debug, Clone)]
+pub struct BadWaiver {
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Everything the rules need to know about one file.
+#[derive(Debug, Default)]
+pub struct FileModel {
+    pub test_regions: Vec<(usize, usize)>,
+    pub fns: Vec<FnInfo>,
+    pub impls: Vec<ImplInfo>,
+    pub waivers: Vec<Waiver>,
+    pub bad_waivers: Vec<BadWaiver>,
+}
+
+impl FileModel {
+    pub fn build(toks: &[Token], comments: &[Comment]) -> FileModel {
+        let mut m = FileModel::default();
+        m.scan_test_regions(toks);
+        m.scan_fns(toks);
+        m.scan_impls(toks);
+        for c in comments {
+            match parse_waiver(c, toks) {
+                WaiverParse::NotAWaiver => {}
+                WaiverParse::Ok(w) => m.waivers.push(w),
+                WaiverParse::Bad(b) => m.bad_waivers.push(b),
+            }
+        }
+        m
+    }
+
+    /// True iff token `idx` sits inside a `#[test]` / `#[cfg(test)]`
+    /// region (attribute arguments containing the ident `test` but not
+    /// `not`, so `#[cfg(not(test))]` does not count).
+    pub fn in_test(&self, idx: usize) -> bool {
+        self.test_regions.iter().any(|&(s, e)| s <= idx && idx <= e)
+    }
+
+    /// The innermost fn whose body contains token `idx`.
+    pub fn enclosing_fn(&self, idx: usize) -> Option<&FnInfo> {
+        self.fns
+            .iter()
+            .filter(|f| f.body.is_some_and(|(s, e)| s <= idx && idx <= e))
+            .max_by_key(|f| f.body.map(|(s, _)| s))
+    }
+
+    fn scan_test_regions(&mut self, toks: &[Token]) {
+        let n = toks.len();
+        let mut i = 0usize;
+        while i < n {
+            if !(punct_at(toks, i, '#') && punct_at(toks, i + 1, '[')) {
+                i += 1;
+                continue;
+            }
+            let close = match_delim(toks, i + 1, '[', ']');
+            let mut has_test = false;
+            let mut has_not = false;
+            for t in &toks[i + 1..=close.min(n - 1)] {
+                if let TokKind::Ident(s) = &t.kind {
+                    has_test |= s == "test";
+                    has_not |= s == "not";
+                }
+            }
+            if has_test && !has_not {
+                // skip any further attributes, then span the next item
+                let mut j = close + 1;
+                while punct_at(toks, j, '#') && punct_at(toks, j + 1, '[') {
+                    j = match_delim(toks, j + 1, '[', ']') + 1;
+                }
+                let mut k = j;
+                while k < n {
+                    if punct_at(toks, k, '{') {
+                        self.test_regions.push((i, match_delim(toks, k, '{', '}')));
+                        break;
+                    }
+                    if punct_at(toks, k, ';') {
+                        self.test_regions.push((i, k));
+                        break;
+                    }
+                    k += 1;
+                }
+            }
+            i = close + 1;
+        }
+    }
+
+    fn scan_fns(&mut self, toks: &[Token]) {
+        let n = toks.len();
+        for i in 0..n {
+            if ident_at(toks, i) != Some("fn") {
+                continue;
+            }
+            let Some(name) = ident_at(toks, i + 1) else { continue };
+            let mut body = None;
+            let mut k = i + 2;
+            while k < n {
+                if punct_at(toks, k, '{') {
+                    body = Some((k, match_delim(toks, k, '{', '}')));
+                    break;
+                }
+                if punct_at(toks, k, ';') {
+                    break;
+                }
+                k += 1;
+            }
+            self.fns.push(FnInfo { name: name.to_string(), line: toks[i].line, kw_idx: i, body });
+        }
+    }
+
+    fn scan_impls(&mut self, toks: &[Token]) {
+        let n = toks.len();
+        let mut i = 0usize;
+        while i < n {
+            if ident_at(toks, i) != Some("impl") {
+                i += 1;
+                continue;
+            }
+            // walk the header: at angle-depth 0, the ident before `for`
+            // is the trait name (`impl<T> Trait<X> for Type { … }`)
+            let mut angle = 0isize;
+            let mut last_ident: Option<String> = None;
+            let mut trait_name: Option<String> = None;
+            let mut k = i + 1;
+            while k < n {
+                if punct_at(toks, k, '<') {
+                    angle += 1;
+                } else if punct_at(toks, k, '>') {
+                    // `->` in the header (fn-pointer types) is not a closer
+                    if !punct_at(toks, k.wrapping_sub(1), '-') {
+                        angle = (angle - 1).max(0);
+                    }
+                } else if angle == 0 && (punct_at(toks, k, '{') || punct_at(toks, k, ';')) {
+                    if punct_at(toks, k, '{') {
+                        self.impls.push(ImplInfo {
+                            trait_name: trait_name.clone(),
+                            line: toks[i].line,
+                            body: (k, match_delim(toks, k, '{', '}')),
+                            kw_idx: i,
+                        });
+                    }
+                    break;
+                } else if angle == 0 {
+                    if let Some(id) = ident_at(toks, k) {
+                        if id == "for" {
+                            trait_name = last_ident.take();
+                        } else {
+                            last_ident = Some(id.to_string());
+                        }
+                    }
+                }
+                k += 1;
+            }
+            i = k.max(i + 1);
+        }
+    }
+}
+
+enum WaiverParse {
+    NotAWaiver,
+    Ok(Waiver),
+    Bad(BadWaiver),
+}
+
+/// Strip comment-decoration (`/`, `!`, whitespace) from the front; a
+/// waiver marker must be the first thing left. Doc prose that *mentions*
+/// the marker mid-sentence or in backticks therefore never parses.
+fn comment_payload(text: &str) -> &str {
+    text.trim_start_matches(|c: char| c == '/' || c == '!' || c.is_whitespace())
+}
+
+fn parse_waiver(c: &Comment, toks: &[Token]) -> WaiverParse {
+    let t = comment_payload(&c.text);
+    let Some(rest) = t.strip_prefix("snn-lint:") else {
+        return WaiverParse::NotAWaiver;
+    };
+    let bad = |msg: &str| {
+        WaiverParse::Bad(BadWaiver { line: c.line, msg: msg.to_string() })
+    };
+    let rest = rest.trim_start();
+    let Some(after_allow) = rest.strip_prefix("allow") else {
+        return bad("malformed waiver: expected `allow(<rule-id>)`");
+    };
+    let after_allow = after_allow.trim_start();
+    let Some(inner) = after_allow.strip_prefix('(') else {
+        return bad("malformed waiver: expected `allow(<rule-id>)`");
+    };
+    let Some(close) = inner.find(')') else {
+        return bad("malformed waiver: unclosed `allow(`");
+    };
+    let ids: Vec<String> = inner[..close]
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if ids.is_empty() {
+        return bad("waiver names no rule");
+    }
+    if let Some(unknown) = ids.iter().find(|id| !RULES.iter().any(|r| r.id == id.as_str())) {
+        return WaiverParse::Bad(BadWaiver {
+            line: c.line,
+            msg: format!("unknown rule id `{unknown}`"),
+        });
+    }
+    let reason = inner[close + 1..]
+        .trim_start_matches(|ch: char| {
+            ch == '-' || ch == '\u{2014}' || ch == '\u{2013}' || ch == ':' || ch.is_whitespace()
+        })
+        .trim();
+    if reason.is_empty() {
+        return bad("waiver must carry a reason after the rule list");
+    }
+    let mut covered = vec![c.line];
+    if c.standalone {
+        if let Some(next) = toks.iter().map(|t| t.line).find(|&l| l > c.line) {
+            covered.push(next);
+        }
+    }
+    WaiverParse::Ok(Waiver { line: c.line, rules: ids, reason: reason.to_string(), covered })
+}

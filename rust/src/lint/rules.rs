@@ -1,0 +1,907 @@
+//! The seven repo-invariant rules (R1–R7), run over the per-file models.
+//! Every rule is purely lexical/structural — see DESIGN.md §14 for each
+//! rule's rationale and the exact scope table.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{ident_at, path2_at, punct_at, TokKind, Token};
+use super::model::FileModel;
+use super::{classify, FileClass, Finding, LintReport, BAD_WAIVER};
+
+struct ParsedFile {
+    path: String,
+    class: FileClass,
+    toks: Vec<Token>,
+    model: FileModel,
+}
+
+/// Methods whose hash-ordered iteration order can leak into results.
+const ITER_METHODS: [&str; 11] = [
+    "iter", "iter_mut", "into_iter", "keys", "into_keys", "values", "values_mut", "into_values",
+    "drain", "retain", "extract_if",
+];
+
+/// Suffixes marking a parallel entry point needing a serial twin (R1),
+/// tried longest-first so `*_with_threads` is not mis-stemmed.
+const PAR_SUFFIXES: [&str; 3] = ["_with_threads", "_threads", "_parallel"];
+
+fn par_stem(name: &str) -> Option<&str> {
+    PAR_SUFFIXES
+        .iter()
+        .find_map(|suf| name.strip_suffix(suf))
+        .filter(|stem| !stem.is_empty())
+}
+
+/// The outermost type name a declaration resolves to: skips `&`, `mut`,
+/// `dyn`, `impl` and lifetimes, then follows a `::` path to its last
+/// segment. `Vec<HashSet<u32>>` resolves to `Vec` — containers *of* hash
+/// collections are not themselves hash-ordered.
+fn type_head(toks: &[Token], mut k: usize) -> Option<String> {
+    loop {
+        let lifetime = matches!(toks.get(k).map(|t| &t.kind), Some(TokKind::Lifetime));
+        if punct_at(toks, k, '&') || lifetime {
+            k += 1;
+            continue;
+        }
+        match ident_at(toks, k) {
+            Some("mut") | Some("dyn") | Some("impl") => {
+                k += 1;
+                continue;
+            }
+            _ => break,
+        }
+    }
+    let mut last = ident_at(toks, k)?.to_string();
+    while punct_at(toks, k + 1, ':') && punct_at(toks, k + 2, ':') {
+        match ident_at(toks, k + 3) {
+            Some(id) => {
+                last = id.to_string();
+                k += 3;
+            }
+            None => break,
+        }
+    }
+    Some(last)
+}
+
+/// Run all rules over `files` (path → source). Paths are relative to the
+/// crate root with `/` separators (`src/…`, `tests/…`, `benches/…`).
+pub fn run(files: &[(String, String)]) -> LintReport {
+    let parsed: Vec<ParsedFile> = files
+        .iter()
+        .map(|(path, src)| {
+            let (toks, comments) = super::lexer::lex(src);
+            let model = FileModel::build(&toks, &comments);
+            ParsedFile { path: path.clone(), class: classify(path), toks, model }
+        })
+        .collect();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut push = |rule: &str, path: &str, line: u32, msg: String| {
+        findings.push(Finding {
+            rule: rule.to_string(),
+            path: path.to_string(),
+            line,
+            msg,
+            waived: None,
+        });
+    };
+
+    // ---- R1 parallel-serial-pairing --------------------------------
+    // Pass 1: every `*_parallel`/`*_threads` lib fn needs a local twin.
+    let mut twins_needed: Vec<(usize, u32, String, String)> = Vec::new();
+    for (fi, f) in parsed.iter().enumerate() {
+        if f.class != FileClass::Lib {
+            continue;
+        }
+        let local: BTreeSet<&str> = f.model.fns.iter().map(|x| x.name.as_str()).collect();
+        for func in &f.model.fns {
+            if f.model.in_test(func.kw_idx) {
+                continue;
+            }
+            let Some(stem) = par_stem(&func.name) else { continue };
+            let twin = format!("{stem}_serial");
+            if local.contains(twin.as_str()) {
+                twins_needed.push((fi, func.line, func.name.clone(), twin));
+            } else {
+                push(
+                    "parallel-serial-pairing",
+                    &f.path,
+                    func.line,
+                    format!("`{}` has no `{twin}` twin in this module", func.name),
+                );
+            }
+        }
+    }
+    // Pass 2: the twin must be referenced from test/bench context
+    // somewhere in the tree (the equality test that keeps it honest).
+    let mut referenced: BTreeSet<String> = BTreeSet::new();
+    for f in &parsed {
+        let whole_file_is_test = matches!(f.class, FileClass::Test | FileClass::Bench);
+        for (i, t) in f.toks.iter().enumerate() {
+            if let TokKind::Ident(id) = &t.kind {
+                if whole_file_is_test || f.model.in_test(i) {
+                    referenced.insert(id.clone());
+                }
+            }
+        }
+    }
+    for (fi, line, name, twin) in &twins_needed {
+        if !referenced.contains(twin) {
+            push(
+                "parallel-serial-pairing",
+                &parsed[*fi].path,
+                *line,
+                format!(
+                    "serial twin `{twin}` of `{name}` is never referenced from a test or bench"
+                ),
+            );
+        }
+    }
+
+    for f in &parsed {
+        let toks = &f.toks;
+        let n = toks.len();
+
+        // ---- R3 no-raw-writes (all contexts) -----------------------
+        if f.path != "src/hypergraph/io.rs" && f.path != "src/runtime/checkpoint.rs" {
+            for i in 0..n {
+                if path2_at(toks, i, "fs", "write") {
+                    push(
+                        "no-raw-writes",
+                        &f.path,
+                        toks[i].line,
+                        "raw `fs::write` — route through `runtime::checkpoint::atomic_write`"
+                            .to_string(),
+                    );
+                } else if path2_at(toks, i, "File", "create")
+                    || path2_at(toks, i, "File", "create_new")
+                    || path2_at(toks, i, "OpenOptions", "new")
+                {
+                    push(
+                        "no-raw-writes",
+                        &f.path,
+                        toks[i].line,
+                        "raw file creation — route through `runtime::checkpoint::atomic_write`"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+
+        // ---- R4 unwrap-ban (library code, non-test) ----------------
+        if f.class == FileClass::Lib {
+            for i in 0..n {
+                if f.model.in_test(i) {
+                    continue;
+                }
+                if punct_at(toks, i, '.') && punct_at(toks, i + 2, '(') {
+                    if let Some(m @ ("unwrap" | "expect")) = ident_at(toks, i + 1) {
+                        push(
+                            "unwrap-ban",
+                            &f.path,
+                            toks[i + 1].line,
+                            format!("`.{m}()` in library code — convert to `MapError` or waive"),
+                        );
+                    }
+                }
+                if ident_at(toks, i) == Some("panic") && punct_at(toks, i + 1, '!') {
+                    push(
+                        "unwrap-ban",
+                        &f.path,
+                        toks[i].line,
+                        "`panic!` in library code — convert to `MapError` or waive".to_string(),
+                    );
+                }
+            }
+        }
+
+        // ---- R5 env-discipline (src/, non-test) --------------------
+        let r5_exempt = f.path == "src/main.rs"
+            || f.path.starts_with("src/bin/")
+            || f.path == "src/runtime/artifacts.rs";
+        if matches!(f.class, FileClass::Lib | FileClass::Bin) && !r5_exempt {
+            for i in 0..n {
+                if f.model.in_test(i) {
+                    continue;
+                }
+                if path2_at(toks, i, "env", "var") || path2_at(toks, i, "env", "var_os") {
+                    let gated = f.path.starts_with("src/util/")
+                        && f.model.enclosing_fn(i).and_then(|x| x.body).is_some_and(|(s, e)| {
+                            toks[s..=e.min(n - 1)].iter().any(
+                                |t| matches!(&t.kind, TokKind::Ident(id) if id == "OnceLock"),
+                            )
+                        });
+                    if !gated {
+                        push(
+                            "env-discipline",
+                            &f.path,
+                            toks[i].line,
+                            "`env::var` needs a util/ `OnceLock` gate, main.rs or artifacts.rs"
+                                .to_string(),
+                        );
+                    }
+                }
+            }
+        }
+
+        // ---- R6 timing-gate (stage code, non-test) -----------------
+        if f.class == FileClass::Lib && !f.path.starts_with("src/util/") {
+            for i in 0..n {
+                if f.model.in_test(i) {
+                    continue;
+                }
+                if path2_at(toks, i, "Instant", "now") {
+                    let sunk = f.model.enclosing_fn(i).and_then(|x| x.body).is_some_and(|(s, e)| {
+                        toks[s..=e.min(n - 1)].iter().any(|t| {
+                            matches!(&t.kind, TokKind::Ident(id)
+                                if id == "timing_enabled"
+                                    || id.to_ascii_lowercase().ends_with("stats")
+                                    || id.ends_with("_secs"))
+                        })
+                    });
+                    if !sunk {
+                        push(
+                            "timing-gate",
+                            &f.path,
+                            toks[i].line,
+                            "`Instant::now()` without a `*Stats` sink or `timing_enabled()` gate"
+                                .to_string(),
+                        );
+                    }
+                }
+            }
+        }
+
+        // ---- R7 threads-wiring (stage impls) -----------------------
+        if f.class == FileClass::Lib {
+            for im in &f.model.impls {
+                let Some(tr) = im.trait_name.as_deref() else { continue };
+                if !matches!(tr, "Partitioner" | "Placer" | "Refiner") || f.model.in_test(im.kw_idx)
+                {
+                    continue;
+                }
+                let (s, e) = im.body;
+                let reads = (s..e.min(n)).any(|i| {
+                    matches!(&toks[i].kind, TokKind::Ident(id) if id.ends_with("ctx"))
+                        && punct_at(toks, i + 1, '.')
+                        && ident_at(toks, i + 2) == Some("threads")
+                });
+                if !reads {
+                    push(
+                        "threads-wiring",
+                        &f.path,
+                        im.line,
+                        format!("`impl {tr}` never reads `ctx.threads` — thread budget ignored"),
+                    );
+                }
+            }
+        }
+
+        // ---- R2 unordered-iteration (src/, non-test) ---------------
+        if matches!(f.class, FileClass::Lib | FileClass::Bin) {
+            let tracked = tracked_hash_names(toks, &f.model);
+            if !tracked.is_empty() {
+                for i in 0..n {
+                    if f.model.in_test(i) {
+                        continue;
+                    }
+                    let mut hit: Option<(String, u32)> = None;
+                    if let Some(name) = ident_at(toks, i) {
+                        if tracked.contains(name)
+                            && punct_at(toks, i + 1, '.')
+                            && ident_at(toks, i + 2).is_some_and(|m| ITER_METHODS.contains(&m))
+                        {
+                            hit = Some((name.to_string(), toks[i].line));
+                        }
+                    }
+                    if ident_at(toks, i) == Some("in") {
+                        let mut k = i + 1;
+                        if punct_at(toks, k, '&') {
+                            k += 1;
+                        }
+                        if ident_at(toks, k) == Some("mut") {
+                            k += 1;
+                        }
+                        if ident_at(toks, k) == Some("self") && punct_at(toks, k + 1, '.') {
+                            k += 2;
+                        }
+                        if let Some(name) = ident_at(toks, k) {
+                            if tracked.contains(name) && punct_at(toks, k + 1, '{') {
+                                hit = Some((name.to_string(), toks[k].line));
+                            }
+                        }
+                    }
+                    if let Some((name, line)) = hit {
+                        // downstream sort in the same fn restores order
+                        let sorted =
+                            f.model.enclosing_fn(i).and_then(|x| x.body).is_some_and(|(_, e)| {
+                                toks[i + 1..=e.min(n - 1)].iter().any(|t| {
+                                    matches!(&t.kind, TokKind::Ident(id)
+                                        if id.starts_with("sort"))
+                                })
+                            });
+                        if !sorted {
+                            push(
+                                "unordered-iteration",
+                                &f.path,
+                                line,
+                                format!("hash-ordered `{name}` iteration can leak into results"),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- waiver application ----------------------------------------
+    let mut used: BTreeSet<(String, u32)> = BTreeSet::new();
+    for fnd in &mut findings {
+        if let Some(f) = parsed.iter().find(|p| p.path == fnd.path) {
+            for w in &f.model.waivers {
+                if w.rules.iter().any(|r| r == &fnd.rule) && w.covered.contains(&fnd.line) {
+                    fnd.waived = Some(w.reason.clone());
+                    used.insert((f.path.clone(), w.line));
+                    break;
+                }
+            }
+        }
+    }
+    for f in &parsed {
+        for b in &f.model.bad_waivers {
+            findings.push(Finding {
+                rule: BAD_WAIVER.to_string(),
+                path: f.path.clone(),
+                line: b.line,
+                msg: b.msg.clone(),
+                waived: None,
+            });
+        }
+    }
+    let mut unused_waivers: Vec<(String, u32)> = Vec::new();
+    for f in &parsed {
+        for w in &f.model.waivers {
+            if !used.contains(&(f.path.clone(), w.line)) {
+                unused_waivers.push((f.path.clone(), w.line));
+            }
+        }
+    }
+
+    let rule_order = |rule: &str| -> usize {
+        super::RULES.iter().position(|r| r.id == rule).unwrap_or(super::RULES.len())
+    };
+    findings.sort_by(|a, b| {
+        rule_order(&a.rule)
+            .cmp(&rule_order(&b.rule))
+            .then_with(|| a.path.cmp(&b.path))
+            .then_with(|| a.line.cmp(&b.line))
+    });
+
+    LintReport { findings, unused_waivers, files_scanned: files.len() }
+}
+
+/// File-local names (let bindings, struct fields, fn params) whose type
+/// head is `HashMap`/`HashSet`.
+fn tracked_hash_names(toks: &[Token], model: &FileModel) -> BTreeSet<String> {
+    let n = toks.len();
+    let mut tracked: BTreeSet<String> = BTreeSet::new();
+    let is_hash = |h: &Option<String>| {
+        matches!(h.as_deref(), Some("HashMap") | Some("HashSet"))
+    };
+    for i in 0..n {
+        // `let [mut] name: HashMap<…>` / `let [mut] name = HashMap::new()`
+        if ident_at(toks, i) == Some("let") {
+            let mut k = i + 1;
+            if ident_at(toks, k) == Some("mut") {
+                k += 1;
+            }
+            let Some(name) = ident_at(toks, k) else { continue };
+            if punct_at(toks, k + 1, ':')
+                && !punct_at(toks, k + 2, ':')
+                && is_hash(&type_head(toks, k + 2))
+            {
+                tracked.insert(name.to_string());
+            } else if punct_at(toks, k + 1, '=') {
+                for j in k + 2..(k + 9).min(n) {
+                    if matches!(ident_at(toks, j), Some("HashMap") | Some("HashSet")) {
+                        tracked.insert(name.to_string());
+                        break;
+                    }
+                    if punct_at(toks, j, ';') || punct_at(toks, j, '(') || punct_at(toks, j, '{') {
+                        break;
+                    }
+                }
+            }
+        }
+        // `struct S { field: HashMap<…>, … }` (depth-1 fields only)
+        if ident_at(toks, i) == Some("struct") && ident_at(toks, i + 1).is_some() {
+            let mut k = i + 2;
+            while k < n
+                && !punct_at(toks, k, '{')
+                && !punct_at(toks, k, ';')
+                && !punct_at(toks, k, '(')
+            {
+                k += 1;
+            }
+            if punct_at(toks, k, '{') {
+                let end = super::lexer::match_delim(toks, k, '{', '}');
+                let mut depth = 0isize;
+                for j in k..end {
+                    if punct_at(toks, j, '{') {
+                        depth += 1;
+                    } else if punct_at(toks, j, '}') {
+                        depth -= 1;
+                    } else if depth == 1
+                        && punct_at(toks, j + 1, ':')
+                        && !punct_at(toks, j + 2, ':')
+                    {
+                        if let Some(name) = ident_at(toks, j) {
+                            if is_hash(&type_head(toks, j + 2)) {
+                                tracked.insert(name.to_string());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // fn params: `fn f(name: HashMap<…>)`
+    for func in &model.fns {
+        let Some((body_start, _)) = func.body else { continue };
+        for j in func.kw_idx..body_start {
+            if punct_at(toks, j + 1, ':') && !punct_at(toks, j + 2, ':') {
+                if let Some(name) = ident_at(toks, j) {
+                    if is_hash(&type_head(toks, j + 2)) {
+                        tracked.insert(name.to_string());
+                    }
+                }
+            }
+        }
+    }
+    tracked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{lint_sources, LintReport};
+
+    fn lint_one(path: &str, src: &str) -> LintReport {
+        lint_sources(&[(path.to_string(), src.to_string())])
+    }
+
+    fn unwaived_rules(r: &LintReport) -> Vec<String> {
+        r.unwaived().map(|f| f.rule.clone()).collect()
+    }
+
+    // ---- R1 parallel-serial-pairing --------------------------------
+
+    #[test]
+    fn r1_fires_on_missing_twin() {
+        let r = lint_one("src/a.rs", "pub fn foo_parallel(x: u32) -> u32 { x }\n");
+        assert_eq!(unwaived_rules(&r), vec!["parallel-serial-pairing"]);
+    }
+
+    #[test]
+    fn r1_fires_on_twin_unreferenced_from_tests() {
+        let src = r#"
+pub fn foo_parallel(x: u32) -> u32 { foo_serial(x) }
+pub fn foo_serial(x: u32) -> u32 { x }
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert_eq!(unwaived_rules(&r), vec!["parallel-serial-pairing"]);
+    }
+
+    #[test]
+    fn r1_clean_when_twin_is_tested() {
+        let files = vec![
+            (
+                "src/a.rs".to_string(),
+                "pub fn foo_parallel(x: u32) -> u32 { foo_serial(x) }\n\
+                 pub fn foo_serial(x: u32) -> u32 { x }\n"
+                    .to_string(),
+            ),
+            (
+                "tests/eq.rs".to_string(),
+                "#[test]\nfn twins_agree() { assert_eq!(a::foo_parallel(3), a::foo_serial(3)); }\n"
+                    .to_string(),
+            ),
+        ];
+        let r = lint_sources(&files);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn r1_waived() {
+        let src = "// snn-lint: allow(parallel-serial-pairing) — wrapper, no parallel body\n\
+                   pub fn foo_parallel(x: u32) -> u32 { x }\n";
+        let r = lint_one("src/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+        assert_eq!(r.waived().count(), 1);
+    }
+
+    #[test]
+    fn r1_ignores_test_only_fns_and_with_threads_suffix() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn helper_parallel() {}\n}\n";
+        assert!(lint_one("src/a.rs", src).is_clean());
+        let r = lint_one("src/b.rs", "pub fn go_with_threads(t: usize) -> usize { t }\n");
+        // stem is `go`, so the expected twin is go_serial, not go_with_serial
+        assert!(r.findings[0].msg.contains("go_serial"), "{}", r.findings[0].msg);
+    }
+
+    // ---- R2 unordered-iteration ------------------------------------
+
+    const R2_FIRING: &str = r#"
+use std::collections::HashMap;
+pub fn f() -> u32 {
+    let m: HashMap<u32, u32> = HashMap::new();
+    let mut s = 0;
+    for k in m.keys() {
+        s += k;
+    }
+    s
+}
+"#;
+
+    #[test]
+    fn r2_fires_on_hash_iteration() {
+        assert_eq!(unwaived_rules(&lint_one("src/a.rs", R2_FIRING)), vec!["unordered-iteration"]);
+    }
+
+    #[test]
+    fn r2_clean_when_sorted_downstream() {
+        let src = r#"
+use std::collections::HashMap;
+pub fn f() -> Vec<u32> {
+    let m: HashMap<u32, u32> = HashMap::new();
+    let mut ks: Vec<u32> = m.keys().copied().collect();
+    ks.sort();
+    ks
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn r2_clean_in_tests_and_for_non_hash_containers() {
+        assert!(lint_one("tests/t.rs", R2_FIRING).is_clean());
+        let src =
+            "pub fn f(v: Vec<u32>) -> u32 { let mut s = 0; for x in v.iter() { s += x; } s }\n";
+        assert!(lint_one("src/a.rs", src).is_clean());
+    }
+
+    #[test]
+    fn r2_waived() {
+        let src = r#"
+use std::collections::HashSet;
+pub fn f(s: HashSet<u32>) -> u32 {
+    // snn-lint: allow(unordered-iteration) — summation is order-independent
+    s.iter().sum()
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+        assert_eq!(r.waived().count(), 1);
+    }
+
+    // ---- R3 no-raw-writes ------------------------------------------
+
+    #[test]
+    fn r3_fires_on_fs_write_and_file_create_everywhere() {
+        let w = r#"pub fn f(p: &std::path::Path) { let _ = std::fs::write(p, b"x"); }"#;
+        assert_eq!(unwaived_rules(&lint_one("src/a.rs", w)), vec!["no-raw-writes"]);
+        // benches and tests are NOT exempt: crash-consistency is global
+        assert_eq!(unwaived_rules(&lint_one("benches/b.rs", w)), vec!["no-raw-writes"]);
+        let c = r#"pub fn f(p: &std::path::Path) { let _ = std::fs::File::create(p); }"#;
+        assert_eq!(unwaived_rules(&lint_one("tests/t.rs", c)), vec!["no-raw-writes"]);
+    }
+
+    #[test]
+    fn r3_clean_in_allowlisted_io_modules() {
+        let w = r#"pub fn f(p: &std::path::Path) { let _ = std::fs::write(p, b"x"); }"#;
+        assert!(lint_one("src/runtime/checkpoint.rs", w).is_clean());
+        assert!(lint_one("src/hypergraph/io.rs", w).is_clean());
+    }
+
+    #[test]
+    fn r3_waived() {
+        let src = r#"
+pub fn corrupt(p: &std::path::Path) {
+    // snn-lint: allow(no-raw-writes) — corruption harness, atomicity is under test
+    let _ = std::fs::write(p, b"x");
+}
+"#;
+        let r = lint_one("tests/t.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    // ---- R4 unwrap-ban ---------------------------------------------
+
+    #[test]
+    fn r4_fires_on_unwrap_expect_panic_in_lib() {
+        let src = r#"
+pub fn f(x: Option<u32>) -> u32 { x.unwrap() }
+pub fn g(x: Option<u32>) -> u32 { x.expect("set") }
+pub fn h() { panic!("no"); }
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert_eq!(unwaived_rules(&r), vec!["unwrap-ban"; 3]);
+    }
+
+    #[test]
+    fn r4_clean_in_tests_bins_and_benches() {
+        let src = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert!(lint_one("tests/t.rs", src).is_clean());
+        assert!(lint_one("benches/b.rs", src).is_clean());
+        assert!(lint_one("src/bin/tool.rs", src).is_clean());
+        assert!(lint_one("src/main.rs", src).is_clean());
+        let in_test_mod =
+            "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
+        assert!(lint_one("src/a.rs", in_test_mod).is_clean());
+    }
+
+    #[test]
+    fn r4_waived_with_reason() {
+        let src = r#"
+pub fn f(x: Option<u32>) -> u32 {
+    // snn-lint: allow(unwrap-ban) — caller guarantees Some by construction
+    x.unwrap()
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+        let reason = r.waived().next().and_then(|f| f.waived.clone());
+        assert_eq!(reason.as_deref(), Some("caller guarantees Some by construction"));
+    }
+
+    #[test]
+    fn r4_not_fooled_by_strings_comments_or_lookalikes() {
+        let src = r#"
+pub fn f() -> &'static str {
+    // a comment mentioning x.unwrap() and panic!() changes nothing
+    "x.unwrap() and panic!(msg) in a string are inert"
+}
+pub fn g(x: Option<u32>) -> u32 { x.unwrap_or(0) }
+"#;
+        assert!(lint_one("src/a.rs", src).is_clean());
+    }
+
+    // ---- R5 env-discipline -----------------------------------------
+
+    #[test]
+    fn r5_fires_outside_util() {
+        let src = r#"pub fn f() -> String { std::env::var("X").unwrap_or_default() }"#;
+        assert_eq!(unwaived_rules(&lint_one("src/mapping/a.rs", src)), vec!["env-discipline"]);
+    }
+
+    #[test]
+    fn r5_clean_in_main_bins_artifacts_and_gated_util() {
+        let src = r#"pub fn f() -> String { std::env::var("X").unwrap_or_default() }"#;
+        assert!(lint_one("src/main.rs", src).is_clean());
+        assert!(lint_one("src/bin/tool.rs", src).is_clean());
+        assert!(lint_one("src/runtime/artifacts.rs", src).is_clean());
+        let gated = r#"
+use std::sync::OnceLock;
+pub fn threads() -> usize {
+    static V: OnceLock<usize> = OnceLock::new();
+    *V.get_or_init(|| std::env::var("T").ok().and_then(|s| s.parse().ok()).unwrap_or(1))
+}
+"#;
+        assert!(lint_one("src/util/par.rs", gated).is_clean());
+    }
+
+    #[test]
+    fn r5_fires_in_util_without_oncelock_unless_waived() {
+        let src = r#"pub fn f() -> String { std::env::var("X").unwrap_or_default() }"#;
+        assert_eq!(unwaived_rules(&lint_one("src/util/x.rs", src)), vec!["env-discipline"]);
+        let waived = r#"
+pub fn f() -> String {
+    // snn-lint: allow(env-discipline) — read once at startup by the coordinator
+    std::env::var("X").unwrap_or_default()
+}
+"#;
+        assert!(lint_one("src/util/x.rs", waived).is_clean());
+    }
+
+    // ---- R6 timing-gate --------------------------------------------
+
+    #[test]
+    fn r6_fires_on_unsunk_instant() {
+        let src = r#"
+pub fn f() -> u64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}
+"#;
+        assert_eq!(unwaived_rules(&lint_one("src/mapping/a.rs", src)), vec!["timing-gate"]);
+    }
+
+    #[test]
+    fn r6_clean_when_feeding_stats_or_gated() {
+        let sunk = r#"
+pub struct RunStats { pub coarsen_secs: f64 }
+pub fn f(stats: &mut RunStats) {
+    let t = std::time::Instant::now();
+    stats.coarsen_secs = t.elapsed().as_secs_f64();
+}
+"#;
+        assert!(lint_one("src/mapping/a.rs", sunk).is_clean());
+        let gated = r#"
+pub fn f() {
+    if crate::util::timing_enabled() {
+        let t = std::time::Instant::now();
+        eprintln!("{:?}", t.elapsed());
+    }
+}
+"#;
+        assert!(lint_one("src/mapping/a.rs", gated).is_clean());
+        // util/ itself (the timer module) is out of scope
+        let raw = "pub fn f() -> std::time::Instant { std::time::Instant::now() }\n";
+        assert!(lint_one("src/util/timer.rs", raw).is_clean());
+    }
+
+    #[test]
+    fn r6_waived() {
+        let src = r#"
+pub fn f() -> bool {
+    // snn-lint: allow(timing-gate) — wall-clock budget is product semantics here
+    let t = std::time::Instant::now();
+    t.elapsed().as_secs() > 1
+}
+"#;
+        assert!(lint_one("src/coordinator/a.rs", src).is_clean());
+    }
+
+    // ---- R7 threads-wiring -----------------------------------------
+
+    #[test]
+    fn r7_fires_when_ctx_threads_unread() {
+        let src = r#"
+pub struct P;
+impl crate::stage::Partitioner for P {
+    fn partition(&self) -> u32 { 0 }
+}
+"#;
+        assert_eq!(unwaived_rules(&lint_one("src/mapping/a.rs", src)), vec!["threads-wiring"]);
+    }
+
+    #[test]
+    fn r7_clean_when_ctx_threads_read_and_for_other_impls() {
+        let src = r#"
+pub struct P;
+impl crate::stage::Partitioner for P {
+    fn partition(&self, ctx: &StageCtx) -> u32 { ctx.threads as u32 }
+}
+impl Clone for P {
+    fn clone(&self) -> P { P }
+}
+"#;
+        assert!(lint_one("src/mapping/a.rs", src).is_clean());
+    }
+
+    #[test]
+    fn r7_waived() {
+        let src = r#"
+pub struct P;
+// snn-lint: allow(threads-wiring) — inherently sequential stage
+impl crate::stage::Placer for P {
+    fn place(&self) -> u32 { 0 }
+}
+"#;
+        assert!(lint_one("src/mapping/a.rs", src).is_clean());
+    }
+
+    // ---- waiver parser ---------------------------------------------
+
+    #[test]
+    fn waiver_without_reason_is_rejected_and_does_not_waive() {
+        let src = r#"
+pub fn f(x: Option<u32>) -> u32 {
+    // snn-lint: allow(unwrap-ban)
+    x.unwrap()
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        let mut rules = unwaived_rules(&r);
+        rules.sort();
+        assert_eq!(rules, vec!["bad-waiver", "unwrap-ban"]);
+    }
+
+    #[test]
+    fn waiver_with_separator_but_empty_reason_is_rejected() {
+        let src = "// snn-lint: allow(unwrap-ban) —\npub fn f() {}\n";
+        let r = lint_one("src/a.rs", src);
+        assert_eq!(unwaived_rules(&r), vec!["bad-waiver"]);
+    }
+
+    #[test]
+    fn waiver_with_unknown_rule_id_is_rejected() {
+        let src = "// snn-lint: allow(no-such-rule) — because reasons\npub fn f() {}\n";
+        let r = lint_one("src/a.rs", src);
+        assert_eq!(unwaived_rules(&r), vec!["bad-waiver"]);
+        assert!(r.findings[0].msg.contains("no-such-rule"), "{}", r.findings[0].msg);
+    }
+
+    #[test]
+    fn malformed_waiver_marker_is_rejected() {
+        let src = "// snn-lint: disallow(unwrap-ban) — nope\npub fn f() {}\n";
+        assert_eq!(unwaived_rules(&lint_one("src/a.rs", src)), vec!["bad-waiver"]);
+    }
+
+    #[test]
+    fn bad_waiver_cannot_itself_be_waived() {
+        // `bad-waiver` is not a waivable rule id, so naming it is itself bad
+        let src =
+            "// snn-lint: allow(bad-waiver) — trying to silence the silencer\npub fn f() {}\n";
+        assert_eq!(unwaived_rules(&lint_one("src/a.rs", src)), vec!["bad-waiver"]);
+    }
+
+    #[test]
+    fn multi_rule_waiver_and_alternate_separators() {
+        let src = r#"
+pub fn f(x: Option<u32>) -> u32 {
+    // snn-lint: allow(unwrap-ban, timing-gate) - plain-dash separator, both ids valid
+    x.unwrap()
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn trailing_waiver_covers_its_own_line_only() {
+        let src = r#"
+pub fn f(x: Option<u32>, y: Option<u32>) -> u32 {
+    let a = x.unwrap(); // snn-lint: allow(unwrap-ban) — covered inline
+    let b = y.unwrap();
+    a + b
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert_eq!(unwaived_rules(&r), vec!["unwrap-ban"]);
+        assert_eq!(r.waived().count(), 1);
+    }
+
+    #[test]
+    fn standalone_waiver_does_not_leak_past_next_line() {
+        let src = r#"
+pub fn f(x: Option<u32>, y: Option<u32>) -> u32 {
+    // snn-lint: allow(unwrap-ban) — only the next line
+    let a = x.unwrap();
+    let b = y.unwrap();
+    a + b
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert_eq!(unwaived_rules(&r), vec!["unwrap-ban"]);
+    }
+
+    #[test]
+    fn unused_waiver_is_advisory_not_failing() {
+        let src = "// snn-lint: allow(unwrap-ban) — nothing here needs it\npub fn f() {}\n";
+        let r = lint_one("src/a.rs", src);
+        assert!(r.is_clean());
+        assert_eq!(r.unused_waivers.len(), 1);
+    }
+
+    #[test]
+    fn doc_prose_mentioning_the_marker_is_not_a_waiver() {
+        let src = "/// Waivers look like `// snn-lint: allow(rule)` in this repo.\npub fn f() {}\n";
+        let r = lint_one("src/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+        assert!(r.unused_waivers.is_empty());
+    }
+
+    // ---- report shape ----------------------------------------------
+
+    #[test]
+    fn report_groups_by_rule_and_counts() {
+        let src = "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let r = lint_one("src/a.rs", src);
+        let text = r.render();
+        assert!(text.contains("[unwrap-ban]"), "{text}");
+        assert!(text.contains("src/a.rs:1"), "{text}");
+        assert!(text.contains("1 unwaived finding(s)"), "{text}");
+    }
+}

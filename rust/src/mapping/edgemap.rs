@@ -45,6 +45,8 @@ pub fn partition(g: &Hypergraph, hw: &NmhConfig) -> Result<Partitioning, MapErro
             }
         }
         let mut cands: Vec<(u32, f64)> = conn_weight.iter().map(|(&p, &w)| (p, w)).collect();
+        // snn-lint: allow(unwrap-ban) — connection weights are finite sums of finite f32
+        // edge weights, so partial_cmp is total here
         cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
         // fallback: the most recently opened partition
         if let Some(last) = parts.len().checked_sub(1) {
@@ -199,6 +201,9 @@ impl EdgeMapPartitioner {
     }
 }
 
+// snn-lint: allow(threads-wiring) — greedy edge-by-edge assignment is inherently
+// sequential: every admission depends on all prior ones, so a worker budget has no
+// sound decomposition (DESIGN.md §10's two-phase recipe does not apply to this stage)
 impl crate::stage::Partitioner for EdgeMapPartitioner {
     fn name(&self) -> &str {
         "edgemap"

@@ -189,6 +189,8 @@ pub fn partition_with_stats(
     let mut coarsen_base = 0.0f64;
     if let Some(pol) = policy {
         if pol.resume {
+            // snn-lint: allow(unwrap-ban) — spec_hash is computed whenever a checkpoint
+            // policy is present, and this branch requires one
             let want = spec_hash.unwrap();
             let rec = checkpoint::load_latest(&pol.dir, want).map_err(|e| {
                 MapError::Checkpoint(format!("scanning {}: {e}", pol.dir.display()))
@@ -247,6 +249,8 @@ pub fn partition_with_stats(
     let mut props: Vec<NodeProposal> = Vec::new();
     let t_coarsen = std::time::Instant::now();
     loop {
+        // snn-lint: allow(unwrap-ban) — levels is seeded with the input graph before the
+        // loop and only ever grows
         let top = levels.last().unwrap();
         let graph: &Hypergraph = &top.graph;
         let cur_n = graph.num_nodes();
@@ -295,6 +299,7 @@ pub fn partition_with_stats(
             node_count[c] += top.agg.node_count[fine];
             syn_count[c] += top.agg.syn_count[fine];
         }
+        // snn-lint: allow(unwrap-ban) — levels is seeded before the loop and only grows
         levels.last_mut().unwrap().to_coarse = Some(rho.assign);
         levels.push(Level {
             graph: Cow::Owned(qg),
@@ -310,6 +315,8 @@ pub fn partition_with_stats(
                 // The RNG state is captured *after* this round, so replay
                 // continues exactly where the interrupted run would have.
                 let view = checkpoint::RunStateView {
+                    // snn-lint: allow(unwrap-ban) — spec_hash is computed whenever a
+                    // checkpoint policy is present, and this branch requires one
                     spec_hash: spec_hash.unwrap(),
                     seed: params.seed,
                     round,
@@ -340,6 +347,7 @@ pub fn partition_with_stats(
     stats.peak_hierarchy_bytes = stats.peak_hierarchy_bytes.max(hierarchy_bytes(&levels));
 
     // ---- initial partitioning: coarsest node == partition ----
+    // snn-lint: allow(unwrap-ban) — levels is seeded before the coarsening loop, never drained
     let coarsest_n = levels.last().unwrap().graph.num_nodes();
     if coarsest_n > hw.num_cores() {
         return Err(MapError::TooManyPartitions {
@@ -368,6 +376,8 @@ pub fn partition_with_stats(
         assign = refiner.assign;
         // project to the finer level, whose to_coarse points here
         if let Some(finer) = levels.last() {
+            // snn-lint: allow(unwrap-ban) — every level below the coarsest had to_coarse
+            // set when its coarser neighbor was pushed; uncoarsening only visits those
             let map = finer.to_coarse.as_ref().expect("hierarchy link missing");
             let mut fine_assign = vec![0u32; finer.graph.num_nodes()];
             for (f, &c) in map.iter().enumerate() {
@@ -498,6 +508,8 @@ fn select_top_by_score(touched: &mut Vec<u32>, score: &[f64], k: usize) {
     let cmp = |a: &u32, b: &u32| {
         score[*b as usize]
             .partial_cmp(&score[*a as usize])
+            // snn-lint: allow(unwrap-ban) — scores are finite products of finite weights,
+            // so partial_cmp is total; total_cmp would reorder ±0.0 against the tested order
             .unwrap()
             .then(a.cmp(b))
     };

@@ -121,6 +121,7 @@ impl AddressableHeap {
         }
         let top = self.heap[0];
         self.pos[top as usize] = u32::MAX;
+        // snn-lint: allow(unwrap-ban) — guarded by the is_empty() early return above
         let last = self.heap.pop().unwrap();
         if !self.heap.is_empty() {
             self.heap[0] = last;
@@ -422,6 +423,9 @@ pub fn auto_order(g: &Hypergraph) -> Vec<u32> {
 
 /// [`auto_order`] with a worker budget for the greedy branch (Kahn is
 /// O(e·d) and stays serial). Performance knob only — thread-invariant.
+// snn-lint: allow(parallel-serial-pairing) — dispatcher, not an algorithm: it picks
+// kahn_order (serial by design) or greedy_order_threads, whose serial twin carries the
+// equality tests (prop_greedy_order_edge_cases_serial_equals_parallel)
 pub fn auto_order_threads(g: &Hypergraph, threads: usize) -> Vec<u32> {
     kahn_order(g).unwrap_or_else(|| greedy_order_threads(g, threads))
 }

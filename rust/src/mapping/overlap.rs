@@ -199,10 +199,16 @@ impl Scoreboard {
             return None;
         }
         loop {
-            while self.buckets[self.cur_min].is_empty() {
+            while self.cur_min < self.buckets.len() && self.buckets[self.cur_min].is_empty() {
                 self.cur_min += 1;
             }
-            let &(rank, n) = self.buckets[self.cur_min].last().unwrap();
+            // `live > 0` guarantees a non-empty bucket exists; degrade to
+            // None (scan exhausted) rather than panicking if it ever
+            // doesn't, so the partitioner surfaces an error, not an abort
+            let &(rank, n) = match self.buckets.get(self.cur_min).and_then(|b| b.last()) {
+                Some(top) => top,
+                None => return None,
+            };
             if self.sel_min {
                 let f = fresh(n);
                 if f as usize != self.cur_min {
@@ -295,6 +301,9 @@ fn grow_serial(
 /// insertion in frontier order replays [`grow_serial`] exactly. Only
 /// dispatched with the argmin-new-axons policy on (`sel_min`); the
 /// ablation path has nothing to score.
+// snn-lint: allow(parallel-serial-pairing) — grow_serial runs via the threads<=1 dispatch
+// in the growth step; overlap_parallel_equals_serial_exactly asserts the two paths produce
+// bit-identical partitions, it just reaches them through the public partition entry point
 fn grow_parallel(
     g: &Hypergraph,
     tracker: &ConstraintTracker,
@@ -450,8 +459,11 @@ pub fn partition_with_stats(
 
     while seen_count < e_total {
         // ---- pick the next h-edge (lines 13-16) ----
+        // pop-first (peek would return the same entry pop removes, so
+        // checking staleness after the pop is behavior-identical and
+        // leaves no unwrap on the re-pop)
         let e = if !params.use_queue { None } else { loop {
-            match heap.peek() {
+            match heap.pop() {
                 Some(entry) => {
                     let stale = seen[entry.edge as usize]
                         || entry.epoch != epoch
@@ -460,10 +472,9 @@ pub fn partition_with_stats(
                             (cur - entry.prio).abs() > 1e-12
                         };
                     if stale {
-                        heap.pop();
                         continue;
                     }
-                    break Some(heap.pop().unwrap().edge);
+                    break Some(entry.edge);
                 }
                 None => break None,
             }

@@ -77,6 +77,8 @@ pub fn prune_fraction(g: &Hypergraph, fraction: f64) -> (Hypergraph, PruneReport
     order.sort_by(|&a, &b| {
         g.weight(a)
             .partial_cmp(&g.weight(b))
+            // snn-lint: allow(unwrap-ban) — edge weights are finite f32 by construction,
+            // so partial_cmp is total; total_cmp would reorder ±0.0 against the tested order
             .unwrap()
             .then(a.cmp(&b))
     });

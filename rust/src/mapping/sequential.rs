@@ -36,6 +36,8 @@ pub fn partition(
 /// [`crate::stage::StageCtx::threads`] by [`SequentialPartitioner`]).
 /// Performance knob only: `greedy_order_threads` is bit-for-bit
 /// thread-invariant, so the partitioning is too.
+// snn-lint: allow(parallel-serial-pairing) — worker-budget wrapper: the only parallelism
+// is inside greedy_order_threads, which owns the serial twin and its equality tests
 pub fn partition_threads(
     g: &Hypergraph,
     hw: &NmhConfig,

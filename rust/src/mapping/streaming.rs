@@ -271,6 +271,8 @@ impl StreamingPartitioner {
     }
 }
 
+// snn-lint: allow(threads-wiring) — one-pass streaming admission is order-dependent and
+// serial by design (the paper's §V baseline); parallelizing it would change semantics
 impl crate::stage::Partitioner for StreamingPartitioner {
     fn name(&self) -> &str {
         "streaming"

@@ -111,7 +111,9 @@ pub fn lattice_points_in_hull(pts: &[(i64, i64)]) -> usize {
     // Interior + boundary count by Pick-style scanline: for each y in the
     // bbox, intersect the polygon with the horizontal line and count the
     // integer x in [xmin_y, xmax_y].
+    // snn-lint: allow(unwrap-ban) — hull has >= 3 vertices here: len 0/1/2 returned earlier
     let ymin = hull.iter().map(|p| p.1).min().unwrap();
+    // snn-lint: allow(unwrap-ban) — hull has >= 3 vertices here: len 0/1/2 returned earlier
     let ymax = hull.iter().map(|p| p.1).max().unwrap();
     let mut count = 0usize;
     for y in ymin..=ymax {

@@ -142,6 +142,8 @@ fn balance_chips(
     }
     loop {
         let Some(over) = (0..chips).find(|&c| load[c] > capacity) else { break };
+        // snn-lint: allow(unwrap-ban) — chips >= 1 is validated by the chip-grid config,
+        // so the range is never empty
         let under = (0..chips).min_by_key(|&c| load[c]).unwrap();
         // spill the member with the least inbound weight (cheapest to move)
         let victim = (0..assign.len() as u32)
@@ -149,8 +151,12 @@ fn balance_chips(
             .min_by(|&a, &b| {
                 gp.inbound_weight(a)
                     .partial_cmp(&gp.inbound_weight(b))
+                    // snn-lint: allow(unwrap-ban) — inbound weights are finite sums of
+                    // finite f32 edge weights, so partial_cmp is total
                     .unwrap()
             })
+            // snn-lint: allow(unwrap-ban) — `over` was selected by load > capacity >= 0,
+            // so at least one node is assigned to it
             .expect("overfull chip has members");
         assign[victim as usize] = under as u32;
         load[over] -= 1;

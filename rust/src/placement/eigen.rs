@@ -33,6 +33,8 @@ impl SparseSym {
     /// independent dot product computed in the same index order as the
     /// serial sweep, so the result is bit-for-bit identical for every
     /// worker count (tested by `matvec_parallel_equals_serial_exactly`).
+    // snn-lint: allow(parallel-serial-pairing) — the threads<=1 branch below IS the serial
+    // path; matvec_parallel_equals_serial_exactly asserts exact equality against it
     pub fn matvec_threads(&self, x: &[f64], y: &mut [f64], threads: usize) {
         debug_assert_eq!(x.len(), self.n);
         debug_assert_eq!(y.len(), self.n);
@@ -159,6 +161,8 @@ pub fn smallest_nontrivial_eigs(
 /// sweeps (the iteration's dominant cost). Bit-for-bit identical results
 /// for every `threads` value — the Gram–Schmidt stays serial and the
 /// parallel matvec is row-exact.
+// snn-lint: allow(parallel-serial-pairing) — worker-budget wrapper: all parallelism lives
+// in matvec_threads, which carries the in-fn serial path and the equality test
 pub fn smallest_nontrivial_eigs_threads(
     prob: &LaplacianProblem,
     iters: usize,

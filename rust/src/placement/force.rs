@@ -194,6 +194,8 @@ pub fn refine_with_threads(
         }
         // stable sort: equal gains keep scan order, which both scan
         // paths produce identically (ascending partition, DIRS order)
+        // snn-lint: allow(unwrap-ban) — gains are finite f64 (differences of finite costs),
+        // so partial_cmp is total here; total_cmp would reorder ±0.0 against the tested order
         cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
 
         // ---- commit: serial, best-gain-first, re-verifying each gain
@@ -337,6 +339,9 @@ fn scan_serial(
 /// vector is bit-for-bit identical to [`scan_serial`]'s for any worker
 /// count.
 #[allow(clippy::too_many_arguments)]
+// snn-lint: allow(parallel-serial-pairing) — scan_serial runs via the threads<=1 dispatch;
+// force_parallel_equals_serial_exactly asserts bit-identical refinement through the public
+// entry point rather than naming the private twin
 fn scan_parallel(
     adj: &PartitionAdjacency,
     coords: &[(u16, u16)],

@@ -93,6 +93,8 @@ pub fn place(gp: &Hypergraph, hw: &NmhConfig) -> Placement {
 /// [`crate::stage::StageCtx::threads`] by [`HilbertPlacer`]).
 /// Performance knob only — the order, and hence the placement, is
 /// bit-for-bit thread-invariant.
+// snn-lint: allow(parallel-serial-pairing) — worker-budget wrapper over the ordering pass;
+// the placement walk itself is serial, and the ordering owns the serial twin + tests
 pub fn place_threads(gp: &Hypergraph, hw: &NmhConfig, threads: usize) -> Placement {
     let order = ordering::auto_order_threads(gp, threads);
     place_with_order(gp, hw, &order)

@@ -24,6 +24,8 @@ pub fn place(gp: &Hypergraph, hw: &NmhConfig) -> Placement {
 /// [`crate::stage::StageCtx::threads`] by [`MinDistPlacer`]).
 /// Performance knob only — the order, and hence the placement, is
 /// bit-for-bit thread-invariant.
+// snn-lint: allow(parallel-serial-pairing) — worker-budget wrapper over the ordering pass;
+// the frontier walk itself is serial, and the ordering owns the serial twin + tests
 pub fn place_threads(gp: &Hypergraph, hw: &NmhConfig, threads: usize) -> Placement {
     let n = gp.num_nodes();
     assert!(n <= hw.num_cores(), "more partitions than cores");
@@ -86,6 +88,8 @@ pub fn place_threads(gp: &Hypergraph, hw: &NmhConfig, threads: usize) -> Placeme
         };
         let cell = best.unwrap_or_else(|| {
             // frontier exhausted (isolated islands): first free core
+            // snn-lint: allow(unwrap-ban) — n <= num_cores is asserted at fn entry, so a
+            // free core exists while unplaced partitions remain
             used.iter().position(|&u| !u).expect("lattice full")
         });
         let (x, y) = hw.coord(cell);
@@ -143,6 +147,8 @@ fn spread_grid(k: usize, hw: &NmhConfig) -> Vec<(u16, u16)> {
     let mut gf = super::gridfind::GridFinder::new(hw);
     for c in out.iter_mut() {
         if !seen.insert(*c) || gf.is_used(c.0, c.1) {
+            // snn-lint: allow(unwrap-ban) — at most n <= num_cores cells are ever taken, so
+            // take_nearest always finds a free cell
             *c = gf.take_nearest(c.0 as f64, c.1 as f64).expect("lattice full");
         } else {
             gf.take(c.0, c.1);

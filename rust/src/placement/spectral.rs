@@ -123,6 +123,8 @@ pub fn discretize_with(
         let ty = y0 + (ey - ymin) / yspan * (rh.saturating_sub(1)) as f64;
         coords[p as usize] = gf
             .take_nearest(tx, ty)
+            // snn-lint: allow(unwrap-ban) — the lattice-capacity assert at fn entry
+            // guarantees a free cell for every partition
             .expect("lattice has >= n cores by the assert above");
     }
     Placement { coords }

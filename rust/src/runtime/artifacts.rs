@@ -87,10 +87,11 @@ mod tests {
     use super::*;
 
     fn fixture(dir: &Path) {
-        std::fs::create_dir_all(dir).unwrap();
-        std::fs::write(
-            dir.join("manifest.json"),
-            r#"{"format":"hlo-text","subspace_k":8,
+        // atomic_write creates the parent dir itself and leaves no tmp
+        // residue behind (asserted by fixture_write_leaves_no_tmp_residue)
+        crate::runtime::checkpoint::atomic_write(
+            &dir.join("manifest.json"),
+            br#"{"format":"hlo-text","subspace_k":8,
                 "artifacts":[
                   {"kind":"spectral","n":128,"iters":300,"path":"spectral_128.hlo.txt"},
                   {"kind":"spectral","n":512,"iters":400,"path":"spectral_512.hlo.txt"},
@@ -98,6 +99,19 @@ mod tests {
                 ]}"#,
         )
         .unwrap();
+    }
+
+    #[test]
+    fn fixture_write_leaves_no_tmp_residue() {
+        let dir = std::env::temp_dir().join("snnmap_manifest_residue_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        fixture(&dir);
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["manifest.json"], "tmp residue left behind: {names:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

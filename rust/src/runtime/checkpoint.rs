@@ -327,6 +327,7 @@ pub fn encode(state: &RunStateView) -> Vec<u8> {
         p.push(flags);
         if let Some(g) = lv.graph {
             let mut gb = Vec::new();
+            // snn-lint: allow(unwrap-ban) — io::Write on Vec<u8> cannot fail
             hgio::write_binary(g, &mut gb).expect("Vec write is infallible");
             put_u64(&mut p, gb.len() as u64);
             p.extend_from_slice(&gb);
@@ -371,10 +372,14 @@ impl<'a> Reader<'a> {
     }
 
     fn u32(&mut self) -> Result<u32, String> {
+        // snn-lint: allow(unwrap-ban) — bytes(4) returns exactly 4 bytes, conversion to
+        // [u8; 4] cannot fail
         Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
     }
 
     fn u64(&mut self) -> Result<u64, String> {
+        // snn-lint: allow(unwrap-ban) — bytes(8) returns exactly 8 bytes, conversion to
+        // [u8; 8] cannot fail
         Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
     }
 
@@ -385,12 +390,16 @@ impl<'a> Reader<'a> {
     fn u32_vec(&mut self) -> Result<Vec<u32>, String> {
         let n = self.read_len()?;
         let raw = self.bytes(n.checked_mul(4).ok_or("length overflow")?)?;
+        // snn-lint: allow(unwrap-ban) — chunks_exact(4) yields 4-byte slices, conversion
+        // to [u8; 4] cannot fail
         Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
     fn u64_vec(&mut self) -> Result<Vec<u64>, String> {
         let n = self.read_len()?;
         let raw = self.bytes(n.checked_mul(8).ok_or("length overflow")?)?;
+        // snn-lint: allow(unwrap-ban) — chunks_exact(8) yields 8-byte slices, conversion
+        // to [u8; 8] cannot fail
         Ok(raw.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect())
     }
 

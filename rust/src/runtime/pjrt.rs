@@ -152,7 +152,9 @@ mod backend {
 
     // xla's client handles are not Sync-annotated; the coordinator only
     // uses the runtime behind a single-threaded handle or external
-    // synchronization.
+    // synchronization. The crate denies unsafe_code (Cargo.toml
+    // [lints.rust]); this FFI Send impl is the one sanctioned exception.
+    #[allow(unsafe_code)]
     unsafe impl Send for PjrtRuntime {}
 
     impl PjrtRuntime {
@@ -190,6 +192,8 @@ mod backend {
                 .ok_or_else(|| anyhow!("no '{kind}' artifact bucket for size {need}"))?
                 .clone();
             let key = (kind.to_string(), spec.n);
+            // snn-lint: allow(unwrap-ban) — mutex poisoning only follows a panic in
+            // another thread; propagating it as a panic is the intended failure mode
             let mut cache = self.cache.lock().unwrap();
             if let Some(exe) = cache.get(&key) {
                 return Ok((exe.clone(), spec.n));

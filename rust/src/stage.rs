@@ -127,6 +127,8 @@ pub trait Refiner: Send + Sync {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NoRefiner;
 
+// snn-lint: allow(threads-wiring) — the identity refiner does no work; there is nothing
+// for a worker budget to parallelize
 impl Refiner for NoRefiner {
     fn name(&self) -> &str {
         "none"

@@ -29,6 +29,8 @@ impl Args {
                     if v.starts_with("--") {
                         out.flags.push(body.to_string());
                     } else {
+                        // snn-lint: allow(unwrap-ban) — peek() returned Some on this
+                        // iterator, so next() is Some
                         out.options.insert(body.to_string(), it.next().unwrap());
                     }
                 } else {
@@ -56,6 +58,8 @@ impl Args {
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key)
             .map(|v| {
+                // snn-lint: allow(unwrap-ban) — CLI argument validation: aborting with a
+                // message is the contract for malformed invocations
                 v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'"))
             })
             .unwrap_or(default)
@@ -63,6 +67,8 @@ impl Args {
 
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key)
+            // snn-lint: allow(unwrap-ban) — CLI argument validation: aborting with a
+            // message is the contract for malformed invocations
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
             .unwrap_or(default)
     }
@@ -70,6 +76,8 @@ impl Args {
     pub fn get_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key)
             .map(|v| {
+                // snn-lint: allow(unwrap-ban) — CLI argument validation: aborting with a
+                // message is the contract for malformed invocations
                 v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'"))
             })
             .unwrap_or(default)

@@ -27,11 +27,15 @@ static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 
 /// Pin the default worker count for all subsequent parallel calls
 /// (coordinator config and tests). `0` restores auto-detection.
+// snn-lint: allow(parallel-serial-pairing) — pool-size accessor, not a parallel algorithm;
+// the `_threads` suffix names the quantity, there is no serial counterpart to pair
 pub fn set_max_threads(n: usize) {
     OVERRIDE.store(n, Ordering::Relaxed);
 }
 
 /// Default worker count: override > `SNNMAP_THREADS` > hardware threads.
+// snn-lint: allow(parallel-serial-pairing) — pool-size accessor, not a parallel algorithm;
+// the `_threads` suffix names the quantity, there is no serial counterpart to pair
 pub fn max_threads() -> usize {
     let o = OVERRIDE.load(Ordering::Relaxed);
     if o > 0 {
@@ -86,11 +90,15 @@ where
                     break;
                 }
                 let v = f(i); // compute outside the lock
+                // snn-lint: allow(unwrap-ban) — mutex poisoning only follows a panic in a
+                // worker; propagating it as a panic is the intended failure mode
                 slots.lock().unwrap()[i] = Some(v);
             });
         }
     });
     out.into_iter()
+        // snn-lint: allow(unwrap-ban) — every index < n is claimed exactly once via
+        // fetch_add, so each slot is written before the scope joins
         .map(|v| v.expect("par_map worker filled every slot"))
         .collect()
 }
@@ -155,6 +163,8 @@ where
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                // snn-lint: allow(unwrap-ban) — mutex poisoning only follows a panic in a
+                // worker; propagating it as a panic is the intended failure mode
                 let next = jobs.lock().unwrap().next();
                 match next {
                     Some((i, s)) => f(i, s),

@@ -131,6 +131,8 @@ fn corrupted_newest_falls_back_to_previous_and_stays_exact() {
     let mut bytes = std::fs::read(&newest).unwrap();
     let mid = bytes.len() / 2;
     bytes[mid] ^= 0x01;
+    // snn-lint: allow(no-raw-writes) — deliberately corrupts a checkpoint in place to
+    // exercise recovery; atomicity is the property under test, not a harness requirement
     std::fs::write(&newest, &bytes).unwrap();
 
     // The recovery scan must skip it (with a reason) and land on round 2.
@@ -162,6 +164,8 @@ fn corrupted_newest_falls_back_to_previous_and_stays_exact() {
         let mut bytes = std::fs::read(f).unwrap();
         let mid = bytes.len() / 3;
         bytes[mid] ^= 0xFF;
+        // snn-lint: allow(no-raw-writes) — corrupts every checkpoint on purpose to prove
+        // recovery degrades to a fresh start; atomicity is the property under test
         std::fs::write(f, &bytes).unwrap();
     }
     let (rho, _) =

@@ -1,0 +1,39 @@
+//! snn-lint run over the committed tree itself: the tree must be clean —
+//! zero unwaived findings, zero malformed waivers, zero stale waivers —
+//! which is exactly what the CI `lint` job enforces through the
+//! `snn_lint` binary. Keeping it as a `cargo test` too means a plain
+//! local test run catches a new violation before CI does.
+
+use snnmap::lint;
+
+#[test]
+fn committed_tree_has_zero_unwaived_findings() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = lint::lint_tree(root).expect("lint walk over the crate tree");
+
+    // Sanity: the walk actually saw the crate, not an empty directory.
+    assert!(report.files_scanned > 50, "walk found only {} files", report.files_scanned);
+
+    assert!(
+        report.unwaived().next().is_none(),
+        "unwaived lint findings in the committed tree:\n{}",
+        report.render()
+    );
+
+    // The baseline carries real waivers; every one must have a written
+    // reason (a reasonless waiver is rejected at parse time, so this is
+    // a belt-and-braces check on the report itself).
+    assert!(report.waived().count() > 0, "expected a nonzero waiver baseline");
+    for f in report.waived() {
+        let reason = f.waived.as_deref().unwrap_or("");
+        assert!(!reason.trim().is_empty(), "waiver without reason at {}:{}", f.path, f.line);
+    }
+
+    // A waiver that no longer suppresses anything is stale and must be
+    // deleted, otherwise waivers rot into noise.
+    assert!(
+        report.unused_waivers.is_empty(),
+        "stale waivers (suppress nothing): {:?}",
+        report.unused_waivers
+    );
+}
