@@ -10,6 +10,7 @@ use super::pipeline::{MapperPipeline, PartitionerKind};
 use super::registry::StageRegistry;
 use super::report::csv_escape;
 use super::spec::{PipelineSpec, StageSpec};
+use crate::hw::faults::{FaultRates, FaultSpec};
 use crate::hw::NmhConfig;
 use crate::snn::{self, Network};
 use std::time::Duration;
@@ -23,6 +24,9 @@ pub struct ExperimentRow {
     pub partitioner: String,
     pub placer: String,
     pub refiner: String,
+    /// Uniform dead-core/dead-link rate of the cell's sampled fault mask
+    /// (0.0 = fault-free cell).
+    pub fault_rate: f64,
     pub partitions: usize,
     pub connectivity: f64,
     pub energy: f64,
@@ -41,13 +45,14 @@ pub struct ExperimentRow {
 impl ExperimentRow {
     /// Column names — the single source of truth for header/row arity
     /// (the field array below is the same fixed size by construction).
-    pub const COLUMNS: [&'static str; 19] = [
+    pub const COLUMNS: [&'static str; 20] = [
         "network",
         "nodes",
         "connections",
         "partitioner",
         "placer",
         "refiner",
+        "fault_rate",
         "partitions",
         "connectivity",
         "energy",
@@ -69,7 +74,7 @@ impl ExperimentRow {
     }
 
     /// Row fields in [`Self::COLUMNS`] order, unescaped.
-    pub fn csv_fields(&self) -> [String; 19] {
+    pub fn csv_fields(&self) -> [String; 20] {
         [
             self.network.clone(),
             self.nodes.to_string(),
@@ -77,6 +82,7 @@ impl ExperimentRow {
             self.partitioner.clone(),
             self.placer.clone(),
             self.refiner.clone(),
+            format!("{:.4}", self.fault_rate),
             self.partitions.to_string(),
             format!("{:.6e}", self.connectivity),
             format!("{:.6e}", self.energy),
@@ -124,6 +130,10 @@ pub struct GridSpec {
     /// constraints scaled alongside the network so partition counts stay
     /// representative (DESIGN.md §5).
     pub hw: Option<NmhConfig>,
+    /// Fault-rate axis (DESIGN.md §15): each rate r multiplies the grid
+    /// with a cell mapped under a seeded uniform-rate fault mask
+    /// (`FaultSpec::Sampled` at the grid seed). Empty = fault-free only.
+    pub fault_rates: Vec<f64>,
 }
 
 impl GridSpec {
@@ -138,6 +148,7 @@ impl GridSpec {
             combos: vec![(StageSpec::new("hilbert"), StageSpec::new("none"))],
             threads: 1,
             hw: None,
+            fault_rates: vec![],
         }
     }
 
@@ -161,8 +172,16 @@ impl GridSpec {
     pub fn from_json(doc: &crate::util::json::Json) -> Result<GridSpec, String> {
         let registry = StageRegistry::global();
         if let Some(obj) = doc.as_obj() {
-            const KNOWN: [&str; 7] =
-                ["networks", "scale", "seed", "partitioners", "combos", "threads", "hw"];
+            const KNOWN: [&str; 8] = [
+                "networks",
+                "scale",
+                "seed",
+                "partitioners",
+                "combos",
+                "threads",
+                "hw",
+                "fault_rates",
+            ];
             for key in obj.keys() {
                 if !KNOWN.contains(&key.as_str()) {
                     return Err(format!(
@@ -218,6 +237,18 @@ impl GridSpec {
         if hw_doc.as_obj().is_some() {
             spec.hw = Some(NmhConfig::from_json(hw_doc)?);
         }
+        if let Some(rates) = doc.get("fault_rates").as_arr() {
+            spec.fault_rates = rates
+                .iter()
+                .map(|r| {
+                    let v = r.as_f64().ok_or("fault_rates entries must be numbers")?;
+                    if !(0.0..=1.0).contains(&v) {
+                        return Err(format!("fault rate must be in [0, 1], got {v}"));
+                    }
+                    Ok(v)
+                })
+                .collect::<Result<_, String>>()?;
+        }
         if spec.networks.is_empty() {
             return Err("config selects no networks".into());
         }
@@ -244,6 +275,7 @@ impl GridSpec {
             ],
             threads: 1,
             hw: None,
+            fault_rates: vec![],
         }
     }
 }
@@ -287,65 +319,79 @@ fn run_network(spec: &GridSpec, name: &str) -> Vec<ExperimentRow> {
     let grid_workers = spec.threads.clamp(1, spec.networks.len().max(1));
     let inner_threads = (crate::util::par::max_threads() / grid_workers).max(1);
     let registry = StageRegistry::global();
+    // fault axis: a fault-free pass by default, one extra pass per rate
+    let fault_axis: Vec<Option<f64>> = if spec.fault_rates.is_empty() {
+        vec![None]
+    } else {
+        spec.fault_rates.iter().copied().map(Some).collect()
+    };
     let mut rows = Vec::new();
     for pk in &spec.partitioners {
         for (pl, rf) in &spec.combos {
-            // each cell is one PipelineSpec — the single source of truth
-            let cell = PipelineSpec {
-                hw,
-                partitioner: pk.clone(),
-                placer: pl.clone(),
-                refiner: rf.clone(),
-                seed: spec.seed,
-                threads: inner_threads,
-            };
-            let outcome = MapperPipeline::from_spec_with(registry, &cell)
-                .and_then(|p| p.run(&net.graph, net.layer_ranges.as_deref()));
-            let row = match outcome {
-                Ok(res) => ExperimentRow {
-                    network: net.name.clone(),
-                    nodes: net.graph.num_nodes(),
-                    connections: net.graph.num_connections(),
-                    partitioner: pk.name.clone(),
-                    placer: pl.name.clone(),
-                    refiner: rf.name.clone(),
-                    partitions: res.rho.num_parts,
-                    connectivity: res.metrics.connectivity,
-                    energy: res.metrics.energy,
-                    latency: res.metrics.latency,
-                    congestion: res.metrics.congestion,
-                    elp: res.metrics.elp,
-                    sr_arith: res.sr.0,
-                    sr_geo: res.sr.1,
-                    cl_arith: res.cl.0,
-                    cl_geo: res.cl.1,
-                    partition_time: res.partition_time,
-                    placement_time: res.placement_time,
-                    error: None,
-                },
-                Err(e) => ExperimentRow {
-                    network: net.name.clone(),
-                    nodes: net.graph.num_nodes(),
-                    connections: net.graph.num_connections(),
-                    partitioner: pk.name.clone(),
-                    placer: pl.name.clone(),
-                    refiner: rf.name.clone(),
-                    partitions: 0,
-                    connectivity: f64::NAN,
-                    energy: f64::NAN,
-                    latency: f64::NAN,
-                    congestion: f64::NAN,
-                    elp: f64::NAN,
-                    sr_arith: f64::NAN,
-                    sr_geo: f64::NAN,
-                    cl_arith: f64::NAN,
-                    cl_geo: f64::NAN,
-                    partition_time: Duration::ZERO,
-                    placement_time: Duration::ZERO,
-                    error: Some(e.to_string()),
-                },
-            };
-            rows.push(row);
+            for &rate in &fault_axis {
+                // each cell is one PipelineSpec — the single source of truth
+                let cell = PipelineSpec {
+                    hw,
+                    partitioner: pk.clone(),
+                    placer: pl.clone(),
+                    refiner: rf.clone(),
+                    seed: spec.seed,
+                    threads: inner_threads,
+                    faults: rate.map(|r| FaultSpec::Sampled {
+                        rates: FaultRates::uniform(r),
+                        seed: spec.seed,
+                    }),
+                };
+                let outcome = MapperPipeline::from_spec_with(registry, &cell)
+                    .and_then(|p| p.run(&net.graph, net.layer_ranges.as_deref()));
+                let row = match outcome {
+                    Ok(res) => ExperimentRow {
+                        network: net.name.clone(),
+                        nodes: net.graph.num_nodes(),
+                        connections: net.graph.num_connections(),
+                        partitioner: pk.name.clone(),
+                        placer: pl.name.clone(),
+                        refiner: rf.name.clone(),
+                        fault_rate: rate.unwrap_or(0.0),
+                        partitions: res.rho.num_parts,
+                        connectivity: res.metrics.connectivity,
+                        energy: res.metrics.energy,
+                        latency: res.metrics.latency,
+                        congestion: res.metrics.congestion,
+                        elp: res.metrics.elp,
+                        sr_arith: res.sr.0,
+                        sr_geo: res.sr.1,
+                        cl_arith: res.cl.0,
+                        cl_geo: res.cl.1,
+                        partition_time: res.partition_time,
+                        placement_time: res.placement_time,
+                        error: None,
+                    },
+                    Err(e) => ExperimentRow {
+                        network: net.name.clone(),
+                        nodes: net.graph.num_nodes(),
+                        connections: net.graph.num_connections(),
+                        partitioner: pk.name.clone(),
+                        placer: pl.name.clone(),
+                        refiner: rf.name.clone(),
+                        fault_rate: rate.unwrap_or(0.0),
+                        partitions: 0,
+                        connectivity: f64::NAN,
+                        energy: f64::NAN,
+                        latency: f64::NAN,
+                        congestion: f64::NAN,
+                        elp: f64::NAN,
+                        sr_arith: f64::NAN,
+                        sr_geo: f64::NAN,
+                        cl_arith: f64::NAN,
+                        cl_geo: f64::NAN,
+                        partition_time: Duration::ZERO,
+                        placement_time: Duration::ZERO,
+                        error: Some(e.to_string()),
+                    },
+                };
+                rows.push(row);
+            }
         }
     }
     rows
@@ -436,6 +482,7 @@ mod tests {
             combos: vec![(StageSpec::new("hilbert"), StageSpec::new("none"))],
             threads: 1,
             hw: Some(NmhConfig::small().scaled(0.05)),
+            fault_rates: vec![],
         }
     }
 
@@ -472,7 +519,43 @@ mod tests {
         let fields = csv_split(&line);
         assert_eq!(fields.len(), ExperimentRow::COLUMNS.len());
         assert_eq!(fields[0], row.network);
-        assert_eq!(fields[18], row.error.clone().unwrap());
+        assert_eq!(fields[19], row.error.clone().unwrap());
+    }
+
+    #[test]
+    fn fault_axis_multiplies_cells() {
+        let mut spec = tiny_spec();
+        spec.partitioners = vec![StageSpec::new("sequential")];
+        spec.fault_rates = vec![0.0, 0.05];
+        let rows = run_grid(&spec);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].fault_rate, 0.0);
+        assert_eq!(rows[1].fault_rate, 0.05);
+        for r in &rows {
+            assert!(r.error.is_none(), "{:?}", r.error);
+            assert!(r.elp.is_finite());
+        }
+        // rate 0.0 samples an all-healthy mask — bit-identical metrics to
+        // the fault-free pass (the zero-cost-default guarantee end to end)
+        spec.fault_rates = vec![];
+        let plain = run_grid(&spec);
+        assert_eq!(plain.len(), 1);
+        assert_eq!(plain[0].energy.to_bits(), rows[0].energy.to_bits());
+        assert_eq!(plain[0].partitions, rows[0].partitions);
+    }
+
+    #[test]
+    fn json_config_parses_fault_rates() {
+        let doc = Json::parse(r#"{"scale": 0.05, "fault_rates": [0.0, 0.1]}"#).unwrap();
+        let spec = GridSpec::from_json(&doc).unwrap();
+        assert_eq!(spec.fault_rates, vec![0.0, 0.1]);
+        for bad in [
+            r#"{"fault_rates": [1.5]}"#,
+            r#"{"fault_rates": ["high"]}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(GridSpec::from_json(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use super::registry::StageRegistry;
 use super::spec::PipelineSpec;
+use crate::hw::faults::FaultMask;
 use crate::hw::NmhConfig;
 use crate::hypergraph::quotient::{push_forward, Partitioning};
 use crate::hypergraph::Hypergraph;
@@ -19,7 +20,7 @@ use crate::metrics::MappingMetrics;
 use crate::placement::force::{ForceParams, ForceRefiner, RefineStats};
 use crate::placement::Placement;
 use crate::runtime::PjrtRuntime;
-use crate::stage::{Partitioner, Placer, Refiner, StageCtx, StageParams};
+use crate::stage::{NoRefiner, Partitioner, Placer, Refiner, StageCtx};
 use std::time::Duration;
 
 /// Partitioning algorithms (paper Table IV + baselines). Kept as a thin
@@ -75,13 +76,24 @@ impl PartitionerKind {
         PartitionerKind::Streaming,
     ];
 
-    /// Instantiate the stage through the built-in registry.
+    /// Instantiate the stage with default parameters. Constructed
+    /// directly (not through the registry) so the enum shim is
+    /// infallible by construction; `from_spec` round-trip tests pin the
+    /// equivalence with the registry's parameter-free constructors.
     pub fn to_stage(&self) -> Box<dyn Partitioner> {
-        StageRegistry::global()
-            .partitioner(self.name(), &StageParams::empty())
-            // snn-lint: allow(unwrap-ban) — name() enumerates compiled-in builtins and
-            // StageRegistry::global() registers every one (spec round-trip tests cover all)
-            .expect("builtin partitioner")
+        use crate::mapping::{edgemap, hierarchical, overlap, sequential, streaming};
+        match self {
+            PartitionerKind::Hierarchical => {
+                Box::new(hierarchical::HierarchicalPartitioner::new())
+            }
+            PartitionerKind::HyperedgeOverlap => Box::new(overlap::OverlapPartitioner::new()),
+            PartitionerKind::Sequential => Box::new(sequential::SequentialPartitioner::auto()),
+            PartitionerKind::SequentialUnordered => {
+                Box::new(sequential::SequentialPartitioner::unordered())
+            }
+            PartitionerKind::EdgeMap => Box::new(edgemap::EdgeMapPartitioner),
+            PartitionerKind::Streaming => Box::new(streaming::StreamingPartitioner::new()),
+        }
     }
 }
 
@@ -118,13 +130,15 @@ impl PlacerKind {
     pub const ALL: [PlacerKind; 3] =
         [PlacerKind::Hilbert, PlacerKind::Spectral, PlacerKind::MinDistance];
 
-    /// Instantiate the stage through the built-in registry.
+    /// Instantiate the stage with default parameters (directly, like
+    /// [`PartitionerKind::to_stage`] — infallible by construction).
     pub fn to_stage(&self) -> Box<dyn Placer> {
-        StageRegistry::global()
-            .placer(self.name(), &StageParams::empty())
-            // snn-lint: allow(unwrap-ban) — name() enumerates compiled-in builtins and
-            // StageRegistry::global() registers every one (spec round-trip tests cover all)
-            .expect("builtin placer")
+        use crate::placement::{hilbert, mindist, spectral};
+        match self {
+            PlacerKind::Hilbert => Box::new(hilbert::HilbertPlacer),
+            PlacerKind::Spectral => Box::new(spectral::SpectralPlacer::new()),
+            PlacerKind::MinDistance => Box::new(mindist::MinDistPlacer),
+        }
     }
 }
 
@@ -152,13 +166,13 @@ impl RefinerKind {
         })
     }
 
-    /// Instantiate the stage through the built-in registry.
+    /// Instantiate the stage with default parameters (directly, like
+    /// [`PartitionerKind::to_stage`] — infallible by construction).
     pub fn to_stage(&self) -> Box<dyn Refiner> {
-        StageRegistry::global()
-            .refiner(self.name(), &StageParams::empty())
-            // snn-lint: allow(unwrap-ban) — name() enumerates compiled-in builtins and
-            // StageRegistry::global() registers every one (spec round-trip tests cover all)
-            .expect("builtin refiner")
+        match self {
+            RefinerKind::None => Box::new(NoRefiner),
+            RefinerKind::ForceDirected => Box::new(ForceRefiner::new()),
+        }
     }
 }
 
@@ -233,6 +247,13 @@ pub struct MapperPipeline {
     /// [`StageCtx::checkpoint`] (DESIGN.md §13). Run-environment, not
     /// part of the spec: results are identical with or without it.
     pub checkpoint: Option<crate::runtime::CheckpointPolicy>,
+    /// Hardware fault mask the run must respect (DESIGN.md §15):
+    /// partition and validation run against the derated capacities
+    /// ([`FaultMask::effective_hw`]), placers skip dead cores through
+    /// [`StageCtx::faults`], and a post-placement check rejects any
+    /// assignment to a dead core. `None` — and an all-healthy mask —
+    /// are bit-identical to the pre-fault pipeline.
+    pub faults: Option<FaultMask>,
 }
 
 impl MapperPipeline {
@@ -245,6 +266,7 @@ impl MapperPipeline {
             seed: 42,
             threads: crate::util::par::max_threads(),
             checkpoint: None,
+            faults: None,
         }
     }
 
@@ -257,6 +279,10 @@ impl MapperPipeline {
     /// Build a pipeline from a spec via a caller-supplied registry
     /// (downstream algorithms included).
     pub fn from_spec_with(registry: &StageRegistry, spec: &PipelineSpec) -> Result<Self, MapError> {
+        let faults = match &spec.faults {
+            None => None,
+            Some(fs) => Some(fs.realize(&spec.hw).map_err(MapError::BadSpec)?),
+        };
         Ok(MapperPipeline {
             hw: spec.hw,
             partitioner: registry.partitioner(&spec.partitioner.name, &spec.partitioner.params)?,
@@ -265,6 +291,7 @@ impl MapperPipeline {
             seed: spec.seed,
             threads: spec.threads.max(1),
             checkpoint: None,
+            faults,
         })
     }
 
@@ -325,6 +352,15 @@ impl MapperPipeline {
         self
     }
 
+    /// Map around hardware faults: dead cores and links are avoided,
+    /// derated cores shrink the effective capacities (DESIGN.md §15).
+    /// The mask must describe this pipeline's lattice — `run` rejects a
+    /// dimension mismatch as `BadSpec`.
+    pub fn with_faults(mut self, mask: FaultMask) -> Self {
+        self.faults = Some(mask);
+        self
+    }
+
     /// Shim: switch to a force-directed refiner with explicit
     /// parameters (the typed form of refiner `params` in a spec).
     ///
@@ -364,13 +400,34 @@ impl MapperPipeline {
             layer_ranges,
             runtime,
             checkpoint: self.checkpoint.clone(),
+            faults: self.faults.as_ref(),
+        };
+
+        // Partitioning and validation see the *derated* capacities so no
+        // partition exceeds what a degraded core can actually hold; the
+        // lattice geometry (and the evaluation model) keep the physical
+        // config. For `None` this is `self.hw` verbatim.
+        let eff_hw = match &self.faults {
+            Some(m) => {
+                m.check_matches(&self.hw).map_err(MapError::BadSpec)?;
+                m.effective_hw(&self.hw)
+            }
+            None => self.hw,
         };
 
         // ---- partition ----
         let t0 = std::time::Instant::now();
-        let rho = self.partitioner.partition(g, &self.hw, &ctx)?;
+        let rho = self.partitioner.partition(g, &eff_hw, &ctx)?;
         let partition_time = t0.elapsed();
-        crate::mapping::validate(g, &rho, &self.hw)?;
+        crate::mapping::validate(g, &rho, &eff_hw)?;
+        if let Some(m) = &self.faults {
+            // dead cores shrink the lattice below num_cores(); the
+            // per-partition validation above can't see that
+            let alive = m.alive_count();
+            if rho.num_parts > alive {
+                return Err(MapError::TooManyPartitions { got: rho.num_parts, limit: alive });
+            }
+        }
 
         // ---- quotient ----
         let gp = push_forward(g, &rho).graph;
@@ -387,6 +444,18 @@ impl MapperPipeline {
         placement
             .validate(&self.hw)
             .map_err(MapError::ConstraintViolated)?;
+        if let Some(m) = &self.faults {
+            // defense in depth: every placer honors ctx.faults, but a
+            // downstream stage that forgot must fail loudly, not map
+            // traffic onto a dead core
+            for &(x, y) in &placement.coords {
+                if m.is_core_dead(x, y) {
+                    return Err(MapError::ConstraintViolated(format!(
+                        "placement assigned a partition to dead core ({x},{y})"
+                    )));
+                }
+            }
+        }
 
         // ---- evaluate ----
         let metrics = evaluate_with_threads(&gp, &placement, &self.hw, self.threads);
@@ -653,6 +722,78 @@ mod tests {
         let mut spec = PipelineSpec::new(small_hw());
         spec.partitioner = StageSpec::new("does-not-exist");
         let err = MapperPipeline::from_spec(&spec).unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                MapError::UnknownStage { kind: "partitioner", name, .. }
+                    if name == "does-not-exist"
+            ),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn healthy_fault_mask_is_bit_identical_to_none() {
+        // acceptance criterion: an all-healthy FaultMask is a zero-cost
+        // default — every output matches the no-mask run bit for bit
+        use crate::hw::faults::FaultMask;
+        let net = small_net();
+        let build = || {
+            MapperPipeline::new(small_hw())
+                .partitioner(PartitionerKind::HyperedgeOverlap)
+                .placer(PlacerKind::Spectral)
+                .refiner(RefinerKind::ForceDirected)
+                .seed(7)
+        };
+        let base = build().run(&net.graph, net.layer_ranges.as_deref()).unwrap();
+        let masked = build()
+            .with_faults(FaultMask::healthy(&small_hw()))
+            .run(&net.graph, net.layer_ranges.as_deref())
+            .unwrap();
+        assert_eq!(base.rho.assign, masked.rho.assign);
+        assert_eq!(base.placement.coords, masked.placement.coords);
+        assert_eq!(base.metrics, masked.metrics);
+    }
+
+    #[test]
+    fn faulty_pipeline_avoids_dead_cores_for_every_stage_combo() {
+        // acceptance criterion: under a seeded fault mask the mapping
+        // avoids 100% of dead cores, whichever algorithms run
+        use crate::hw::faults::{FaultMask, FaultRates};
+        let net = small_net();
+        let hw = small_hw();
+        let mask = FaultMask::sample(&hw, &FaultRates::uniform(0.05), 13);
+        assert!(mask.dead_core_count() > 0, "seed produced no dead cores");
+        for pk in [PartitionerKind::HyperedgeOverlap, PartitionerKind::Sequential] {
+            for pl in PlacerKind::ALL {
+                let res = MapperPipeline::new(hw)
+                    .partitioner(pk)
+                    .placer(pl)
+                    .refiner(RefinerKind::ForceDirected)
+                    .with_faults(mask.clone())
+                    .run(&net.graph, net.layer_ranges.as_deref())
+                    .unwrap_or_else(|e| panic!("{}+{}: {e}", pk.name(), pl.name()));
+                for &(x, y) in &res.placement.coords {
+                    assert!(
+                        !mask.is_core_dead(x, y),
+                        "{}+{} placed a partition on dead core ({x},{y})",
+                        pk.name(),
+                        pl.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fault_mask_dimension_mismatch_is_bad_spec() {
+        use crate::hw::faults::FaultMask;
+        let net = small_net();
+        let wrong = FaultMask::healthy(&NmhConfig::small()); // unscaled dims
+        let err = MapperPipeline::new(small_hw())
+            .with_faults(wrong)
+            .run(&net.graph, None)
+            .unwrap_err();
         assert!(matches!(err, MapError::BadSpec(_)), "{err}");
     }
 }

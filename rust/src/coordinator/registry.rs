@@ -164,10 +164,11 @@ impl StageRegistry {
         params: &StageParams,
     ) -> Result<Box<dyn Partitioner>, MapError> {
         let ctor = self.partitioners.get(self.resolve(name)).ok_or_else(|| {
-            MapError::BadSpec(format!(
-                "unknown partitioner '{name}' (known: {})",
-                self.partitioner_names().join(", ")
-            ))
+            MapError::UnknownStage {
+                kind: "partitioner",
+                name: name.to_string(),
+                known: self.partitioner_names(),
+            }
         })?;
         ctor(params).map_err(|e| MapError::BadSpec(format!("partitioner '{name}': {e}")))
     }
@@ -175,10 +176,11 @@ impl StageRegistry {
     /// Instantiate a placer by name.
     pub fn placer(&self, name: &str, params: &StageParams) -> Result<Box<dyn Placer>, MapError> {
         let ctor = self.placers.get(self.resolve(name)).ok_or_else(|| {
-            MapError::BadSpec(format!(
-                "unknown placer '{name}' (known: {})",
-                self.placer_names().join(", ")
-            ))
+            MapError::UnknownStage {
+                kind: "placer",
+                name: name.to_string(),
+                known: self.placer_names(),
+            }
         })?;
         ctor(params).map_err(|e| MapError::BadSpec(format!("placer '{name}': {e}")))
     }
@@ -186,10 +188,11 @@ impl StageRegistry {
     /// Instantiate a refiner by name.
     pub fn refiner(&self, name: &str, params: &StageParams) -> Result<Box<dyn Refiner>, MapError> {
         let ctor = self.refiners.get(self.resolve(name)).ok_or_else(|| {
-            MapError::BadSpec(format!(
-                "unknown refiner '{name}' (known: {})",
-                self.refiner_names().join(", ")
-            ))
+            MapError::UnknownStage {
+                kind: "refiner",
+                name: name.to_string(),
+                known: self.refiner_names(),
+            }
         })?;
         ctor(params).map_err(|e| MapError::BadSpec(format!("refiner '{name}': {e}")))
     }
@@ -249,13 +252,30 @@ mod tests {
 
     #[test]
     fn unknown_names_and_bad_params_error() {
+        use crate::mapping::MapError;
         let r = StageRegistry::builtin();
-        assert!(r.partitioner("nope", &StageParams::empty()).is_err());
-        assert!(r.placer("nope", &StageParams::empty()).is_err());
-        assert!(r.refiner("nope", &StageParams::empty()).is_err());
-        // unknown key
+        // unknown names surface as the dedicated UnknownStage variant,
+        // with the stage kind and the known-name list attached
+        let err = r.partitioner("nope", &StageParams::empty()).unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                MapError::UnknownStage { kind: "partitioner", name, known }
+                    if name == "nope" && known.contains(&"overlap".to_string())
+            ),
+            "{err}"
+        );
+        assert!(matches!(
+            r.placer("nope", &StageParams::empty()),
+            Err(MapError::UnknownStage { kind: "placer", .. })
+        ));
+        assert!(matches!(
+            r.refiner("nope", &StageParams::empty()),
+            Err(MapError::UnknownStage { kind: "refiner", .. })
+        ));
+        // bad parameters for a *known* stage stay BadSpec
         let p = StageParams::empty().set("typo", Json::Num(1.0));
-        assert!(r.partitioner("overlap", &p).is_err());
+        assert!(matches!(r.partitioner("overlap", &p), Err(MapError::BadSpec(_))));
         // wrong type
         let p = StageParams::empty().set("window", Json::Str("big".into()));
         assert!(r.partitioner("streaming", &p).is_err());

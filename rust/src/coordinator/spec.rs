@@ -21,6 +21,7 @@
 //! }
 //! ```
 
+use crate::hw::faults::FaultSpec;
 use crate::hw::NmhConfig;
 use crate::stage::StageParams;
 use crate::util::json::Json;
@@ -86,6 +87,11 @@ pub struct PipelineSpec {
     /// Worker-pool width for the parallel stages (performance knob only,
     /// never observable in results — DESIGN.md §6).
     pub threads: usize,
+    /// Optional hardware fault description (DESIGN.md §15) — explicit
+    /// mask or seeded sampling model, resolved against `hw` at pipeline
+    /// construction. `None` (the default, and what pre-fault spec
+    /// documents parse to) is the pristine lattice.
+    pub faults: Option<FaultSpec>,
 }
 
 impl PipelineSpec {
@@ -98,6 +104,7 @@ impl PipelineSpec {
             refiner: StageSpec::new("force"),
             seed: 42,
             threads: crate::util::par::max_threads(),
+            faults: None,
         }
     }
 
@@ -125,15 +132,26 @@ impl PipelineSpec {
         self
     }
 
+    /// Builder-style fault-model override.
+    pub fn faults(mut self, f: FaultSpec) -> PipelineSpec {
+        self.faults = Some(f);
+        self
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("partitioner", self.partitioner.to_json()),
             ("placer", self.placer.to_json()),
             ("refiner", self.refiner.to_json()),
             ("hw", self.hw.to_json()),
             ("seed", Json::Num(self.seed as f64)),
             ("threads", Json::Num(self.threads as f64)),
-        ])
+        ];
+        // omitted when None so pre-fault documents round-trip unchanged
+        if let Some(f) = &self.faults {
+            fields.push(("faults", f.to_json()));
+        }
+        Json::obj(fields)
     }
 
     /// Parse a spec document; missing fields fall back to the
@@ -145,7 +163,8 @@ impl PipelineSpec {
         let Some(obj) = doc.as_obj() else {
             return Err("pipeline spec must be a JSON object".to_string());
         };
-        const KNOWN: [&str; 6] = ["partitioner", "placer", "refiner", "hw", "seed", "threads"];
+        const KNOWN: [&str; 7] =
+            ["partitioner", "placer", "refiner", "hw", "seed", "threads", "faults"];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
                 return Err(format!("unknown spec field '{key}' (accepted: {})", KNOWN.join(", ")));
@@ -178,6 +197,10 @@ impl PipelineSpec {
         }
         if let Some(threads) = doc.get("threads").as_usize() {
             spec.threads = threads.max(1);
+        }
+        let faults_doc = doc.get("faults");
+        if *faults_doc != Json::Null {
+            spec.faults = Some(FaultSpec::from_json(faults_doc).map_err(|e| format!("faults: {e}"))?);
         }
         Ok(spec)
     }
@@ -239,5 +262,26 @@ mod tests {
         assert!(PipelineSpec::from_json_str(r#"{"seed": 1.5}"#).is_err());
         assert!(PipelineSpec::from_json_str(r#"{"hw": {"c_ncp": 9}}"#).is_err());
         assert!(PipelineSpec::from_json_str(r#"{"seed": 7}"#).is_ok());
+        assert!(PipelineSpec::from_json_str(r#"{"faults": {"mode": "nope"}}"#).is_err());
+    }
+
+    #[test]
+    fn spec_faults_roundtrip_and_default_to_none() {
+        use crate::hw::faults::{FaultMask, FaultRates, FaultSpec};
+        // pre-fault documents parse to None and re-serialize without the key
+        let spec = PipelineSpec::from_json_str(r#"{"seed": 7}"#).unwrap();
+        assert_eq!(spec.faults, None);
+        assert!(!spec.to_json().to_string().contains("faults"));
+        // sampled form
+        let spec = PipelineSpec::new(NmhConfig::small())
+            .faults(FaultSpec::Sampled { rates: FaultRates::uniform(0.05), seed: 7 });
+        let back = PipelineSpec::from_json_str(&spec.to_json().to_pretty()).unwrap();
+        assert_eq!(back, spec);
+        // explicit-mask form
+        let mut mask = FaultMask::healthy(&NmhConfig::small());
+        mask.kill_core(5, 9);
+        let spec = PipelineSpec::new(NmhConfig::small()).faults(FaultSpec::Explicit(mask));
+        let back = PipelineSpec::from_json_str(&spec.to_json().to_pretty()).unwrap();
+        assert_eq!(back, spec);
     }
 }

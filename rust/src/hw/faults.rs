@@ -1,0 +1,618 @@
+//! Hardware fault model: dead cores, dead directed NoC links, and
+//! per-core capacity derating over an [`NmhConfig`] lattice.
+//!
+//! Real neuromorphic chips ship with and accumulate faulty cores and
+//! links; a mapping that ignores them either fails outright or routes
+//! traffic through dead regions. A [`FaultMask`] records which cores and
+//! directed links are unusable and which cores run with reduced
+//! `c_npc/c_apc/c_spc` capacity. Masks are constructed explicitly (test
+//! scenarios, field reports) or sampled from a seeded fault-rate model
+//! ([`FaultMask::sample`] — fixed draw order over cores then links, so an
+//! identical seed yields a bit-identical mask on any machine), and a
+//! [`FaultSpec`] is the JSON-round-trippable description that rides
+//! [`crate::coordinator::spec::PipelineSpec`] like every other knob.
+//!
+//! Directed links are identified by `core_index * 4 + dir` with
+//! `dir` ∈ {E=0, W=1, N=2, S=3} — the same scheme as the NoC
+//! simulator's per-link load accounting, so a mask's dead-link set and
+//! the simulator's link loads index the same id space.
+
+use super::NmhConfig;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Link direction east (+x).
+pub const DIR_E: usize = 0;
+/// Link direction west (-x).
+pub const DIR_W: usize = 1;
+/// Link direction north (+y).
+pub const DIR_N: usize = 2;
+/// Link direction south (-y).
+pub const DIR_S: usize = 3;
+
+/// `(dx, dy)` step for each direction id, in id order E, W, N, S.
+pub const DIR_STEPS: [(i32, i32); 4] = [(1, 0), (-1, 0), (0, 1), (0, -1)];
+
+/// A fault mask over a `width × height` core lattice: dead cores, dead
+/// directed links and per-core capacity derate factors in `[0, 1]`
+/// (1.0 = full capacity). All-healthy masks are behaviorally invisible:
+/// every consumer is required to produce bit-identical results with an
+/// all-healthy mask and with no mask at all (tested).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultMask {
+    /// Lattice width the mask was built for.
+    pub width: usize,
+    /// Lattice height the mask was built for.
+    pub height: usize,
+    dead_cores: Vec<bool>,
+    dead_links: Vec<bool>,
+    derate: Vec<f64>,
+}
+
+/// Per-element fault probabilities for [`FaultMask::sample`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultRates {
+    /// P(a core is dead).
+    pub core_rate: f64,
+    /// P(a directed link is dead).
+    pub link_rate: f64,
+    /// P(an alive core is capacity-derated).
+    pub derate_rate: f64,
+    /// Sampled derate factors are uniform in `[derate_floor, 1)`.
+    pub derate_floor: f64,
+}
+
+impl Default for FaultRates {
+    fn default() -> Self {
+        FaultRates { core_rate: 0.05, link_rate: 0.05, derate_rate: 0.0, derate_floor: 0.5 }
+    }
+}
+
+impl FaultRates {
+    /// Uniform dead-core/dead-link rate `r`, no derating — the CLI's
+    /// `--fault-rate` shorthand.
+    pub fn uniform(r: f64) -> Self {
+        FaultRates { core_rate: r, link_rate: r, derate_rate: 0.0, derate_floor: 0.5 }
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        for (name, v) in [
+            ("core_rate", self.core_rate),
+            ("link_rate", self.link_rate),
+            ("derate_rate", self.derate_rate),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("fault {name} must be in [0, 1], got {v}"));
+            }
+        }
+        if !(0.0..=1.0).contains(&self.derate_floor) {
+            return Err(format!("fault derate_floor must be in [0, 1], got {}", self.derate_floor));
+        }
+        Ok(())
+    }
+}
+
+impl FaultMask {
+    /// All-healthy mask over `hw`'s lattice.
+    pub fn healthy(hw: &NmhConfig) -> Self {
+        let n = hw.num_cores();
+        FaultMask {
+            width: hw.width,
+            height: hw.height,
+            dead_cores: vec![false; n],
+            dead_links: vec![false; n * 4],
+            derate: vec![1.0; n],
+        }
+    }
+
+    /// Sample a mask from per-element fault rates with a dedicated
+    /// seeded RNG stream. The draw order is fixed — cores in linear
+    /// index order, then directed links in link-id order, then derates
+    /// in core order — so the mask is a pure function of
+    /// `(hw dims, rates, seed)` regardless of threads or platform.
+    pub fn sample(hw: &NmhConfig, rates: &FaultRates, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 0xFA17);
+        let mut m = FaultMask::healthy(hw);
+        for c in m.dead_cores.iter_mut() {
+            *c = rng.bernoulli(rates.core_rate);
+        }
+        for l in m.dead_links.iter_mut() {
+            *l = rng.bernoulli(rates.link_rate);
+        }
+        for i in 0..m.derate.len() {
+            // draw unconditionally per core so the stream position never
+            // depends on earlier outcomes' interpretation
+            let hit = rng.bernoulli(rates.derate_rate);
+            if hit && !m.dead_cores[i] {
+                m.derate[i] = rates.derate_floor + rng.next_f64() * (1.0 - rates.derate_floor);
+            } else if hit {
+                rng.next_f64(); // keep the stream aligned for dead cores
+            }
+        }
+        m
+    }
+
+    /// Linear core index (row-major, mask dimensions).
+    #[inline]
+    fn idx(&self, x: u16, y: u16) -> usize {
+        debug_assert!((x as usize) < self.width && (y as usize) < self.height);
+        y as usize * self.width + x as usize
+    }
+
+    /// Directed-link id for the link leaving `(x, y)` towards `dir`.
+    #[inline]
+    pub fn link_id(&self, x: u16, y: u16, dir: usize) -> usize {
+        self.idx(x, y) * 4 + dir
+    }
+
+    /// Is the core at `(x, y)` dead?
+    #[inline]
+    pub fn is_core_dead(&self, x: u16, y: u16) -> bool {
+        self.dead_cores[self.idx(x, y)]
+    }
+
+    /// Is the core at linear index `i` dead?
+    #[inline]
+    pub fn core_dead_idx(&self, i: usize) -> bool {
+        self.dead_cores[i]
+    }
+
+    /// Is the directed link leaving `(x, y)` towards `dir` dead?
+    #[inline]
+    pub fn is_link_dead(&self, x: u16, y: u16, dir: usize) -> bool {
+        self.dead_links[self.link_id(x, y, dir)]
+    }
+
+    /// Capacity derate factor of the core at linear index `i`.
+    #[inline]
+    pub fn derate_idx(&self, i: usize) -> f64 {
+        self.derate[i]
+    }
+
+    /// Mark the core at `(x, y)` dead (idempotent).
+    pub fn kill_core(&mut self, x: u16, y: u16) {
+        let i = self.idx(x, y);
+        self.dead_cores[i] = true;
+    }
+
+    /// Mark the directed link leaving `(x, y)` towards `dir` dead.
+    pub fn kill_link(&mut self, x: u16, y: u16, dir: usize) {
+        debug_assert!(dir < 4);
+        let l = self.link_id(x, y, dir);
+        self.dead_links[l] = true;
+    }
+
+    /// Set the capacity derate factor of the core at `(x, y)`.
+    pub fn set_derate(&mut self, x: u16, y: u16, f: f64) {
+        debug_assert!((0.0..=1.0).contains(&f));
+        let i = self.idx(x, y);
+        self.derate[i] = f;
+    }
+
+    /// Number of alive (non-dead) cores.
+    pub fn alive_count(&self) -> usize {
+        self.dead_cores.iter().filter(|&&d| !d).count()
+    }
+
+    /// Number of dead cores.
+    pub fn dead_core_count(&self) -> usize {
+        self.dead_cores.len() - self.alive_count()
+    }
+
+    /// Number of dead directed links.
+    pub fn dead_link_count(&self) -> usize {
+        self.dead_links.iter().filter(|&&d| d).count()
+    }
+
+    /// True when the mask expresses no fault at all — no dead cores, no
+    /// dead links and every derate factor exactly 1.0.
+    pub fn is_all_healthy(&self) -> bool {
+        self.dead_cores.iter().all(|&d| !d)
+            && self.dead_links.iter().all(|&d| !d)
+            && self.derate.iter().all(|&f| f == 1.0)
+    }
+
+    /// Check the mask's dimensions against a hardware config.
+    pub fn check_matches(&self, hw: &NmhConfig) -> Result<(), String> {
+        if self.width != hw.width || self.height != hw.height {
+            return Err(format!(
+                "fault mask is {}x{} but hw lattice is {}x{}",
+                self.width, self.height, hw.width, hw.height
+            ));
+        }
+        Ok(())
+    }
+
+    /// Hardware config with per-core capacities scaled by the minimum
+    /// derate factor among alive cores — the uniform-capacity
+    /// conservative view the capacity-only partitioners run against
+    /// (they know core *counts*, not core *positions*, so the weakest
+    /// surviving core bounds every core). A mask with all derates at
+    /// 1.0 returns `hw` unchanged, bit for bit.
+    pub fn effective_hw(&self, hw: &NmhConfig) -> NmhConfig {
+        let mut f = 1.0f64;
+        for i in 0..self.dead_cores.len() {
+            if !self.dead_cores[i] && self.derate[i] < f {
+                f = self.derate[i];
+            }
+        }
+        if f >= 1.0 {
+            return *hw;
+        }
+        let mut out = *hw;
+        // floor, no max(1) clamp: a derate small enough to zero a
+        // capacity surfaces as NodeUnmappable downstream, never a panic
+        out.c_npc = (hw.c_npc as f64 * f) as usize;
+        out.c_apc = (hw.c_apc as f64 * f) as usize;
+        out.c_spc = (hw.c_spc as f64 * f) as usize;
+        out
+    }
+
+    /// Sparse JSON form: dead cores and links as id lists, derates as
+    /// `[index, factor]` pairs (only factors ≠ 1.0).
+    pub fn to_json(&self) -> Json {
+        let dead_cores: Vec<Json> = (0..self.dead_cores.len())
+            .filter(|&i| self.dead_cores[i])
+            .map(|i| Json::Num(i as f64))
+            .collect();
+        let dead_links: Vec<Json> = (0..self.dead_links.len())
+            .filter(|&l| self.dead_links[l])
+            .map(|l| Json::Num(l as f64))
+            .collect();
+        let derate: Vec<Json> = (0..self.derate.len())
+            .filter(|&i| self.derate[i] != 1.0)
+            .map(|i| Json::Arr(vec![Json::Num(i as f64), Json::Num(self.derate[i])]))
+            .collect();
+        Json::obj(vec![
+            ("width", Json::Num(self.width as f64)),
+            ("height", Json::Num(self.height as f64)),
+            ("dead_cores", Json::Arr(dead_cores)),
+            ("dead_links", Json::Arr(dead_links)),
+            ("derate", Json::Arr(derate)),
+        ])
+    }
+
+    /// Parse the [`Self::to_json`] form. Strict: unknown keys, missing
+    /// dimensions, out-of-range ids and out-of-range factors are errors.
+    pub fn from_json(doc: &Json) -> Result<Self, String> {
+        let obj = doc.as_obj().ok_or("fault mask must be a JSON object")?;
+        const KNOWN: [&str; 5] = ["width", "height", "dead_cores", "dead_links", "derate"];
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(format!(
+                    "unknown fault mask field '{key}' (accepted: {})",
+                    KNOWN.join(", ")
+                ));
+            }
+        }
+        let width = doc
+            .get("width")
+            .as_usize()
+            .ok_or("fault mask needs an integer 'width'")?;
+        let height = doc
+            .get("height")
+            .as_usize()
+            .ok_or("fault mask needs an integer 'height'")?;
+        if width == 0 || height == 0 {
+            return Err("fault mask dimensions must be positive".to_string());
+        }
+        let n = width * height;
+        let mut m = FaultMask {
+            width,
+            height,
+            dead_cores: vec![false; n],
+            dead_links: vec![false; n * 4],
+            derate: vec![1.0; n],
+        };
+        if let Some(arr) = doc.get("dead_cores").as_arr() {
+            for v in arr {
+                let i = v.as_usize().ok_or("dead_cores entries must be integers")?;
+                if i >= n {
+                    return Err(format!("dead core index {i} out of range (lattice has {n})"));
+                }
+                m.dead_cores[i] = true;
+            }
+        } else if !matches!(doc.get("dead_cores"), Json::Null) {
+            return Err("dead_cores must be an array".to_string());
+        }
+        if let Some(arr) = doc.get("dead_links").as_arr() {
+            for v in arr {
+                let l = v.as_usize().ok_or("dead_links entries must be integers")?;
+                if l >= n * 4 {
+                    return Err(format!("dead link id {l} out of range ({} links)", n * 4));
+                }
+                m.dead_links[l] = true;
+            }
+        } else if !matches!(doc.get("dead_links"), Json::Null) {
+            return Err("dead_links must be an array".to_string());
+        }
+        if let Some(arr) = doc.get("derate").as_arr() {
+            for v in arr {
+                let pair = v.as_arr().ok_or("derate entries must be [index, factor] pairs")?;
+                if pair.len() != 2 {
+                    return Err("derate entries must be [index, factor] pairs".to_string());
+                }
+                let i = pair[0].as_usize().ok_or("derate index must be an integer")?;
+                let f = pair[1].as_f64().ok_or("derate factor must be a number")?;
+                if i >= n {
+                    return Err(format!("derate index {i} out of range (lattice has {n})"));
+                }
+                if !(0.0..=1.0).contains(&f) {
+                    return Err(format!("derate factor must be in [0, 1], got {f}"));
+                }
+                m.derate[i] = f;
+            }
+        } else if !matches!(doc.get("derate"), Json::Null) {
+            return Err("derate must be an array".to_string());
+        }
+        Ok(m)
+    }
+}
+
+/// The plain-data fault description that rides a pipeline spec: either
+/// an explicit mask, or the parameters of the seeded sampling model
+/// (resolved against the spec's hardware at pipeline construction, so
+/// the spec stays small and the realization deterministic).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultSpec {
+    /// A fully explicit mask.
+    Explicit(FaultMask),
+    /// Sample from per-element rates with the given seed.
+    Sampled {
+        /// Per-element fault probabilities.
+        rates: FaultRates,
+        /// Seed of the mask's dedicated RNG stream.
+        seed: u64,
+    },
+}
+
+impl FaultSpec {
+    /// Resolve the spec into a concrete mask for `hw`. Explicit masks
+    /// must match the lattice dimensions; sampling is a pure function
+    /// of `(hw dims, rates, seed)`.
+    pub fn realize(&self, hw: &NmhConfig) -> Result<FaultMask, String> {
+        match self {
+            FaultSpec::Explicit(m) => {
+                m.check_matches(hw)?;
+                Ok(m.clone())
+            }
+            FaultSpec::Sampled { rates, seed } => {
+                rates.validate()?;
+                Ok(FaultMask::sample(hw, rates, *seed))
+            }
+        }
+    }
+
+    /// Serialize (mode-tagged object).
+    pub fn to_json(&self) -> Json {
+        match self {
+            FaultSpec::Explicit(m) => Json::obj(vec![
+                ("mode", Json::Str("explicit".to_string())),
+                ("mask", m.to_json()),
+            ]),
+            FaultSpec::Sampled { rates, seed } => Json::obj(vec![
+                ("mode", Json::Str("sampled".to_string())),
+                ("core_rate", Json::Num(rates.core_rate)),
+                ("link_rate", Json::Num(rates.link_rate)),
+                ("derate_rate", Json::Num(rates.derate_rate)),
+                ("derate_floor", Json::Num(rates.derate_floor)),
+                ("seed", Json::Num(*seed as f64)),
+            ]),
+        }
+    }
+
+    /// Parse the [`Self::to_json`] form (strict per mode).
+    pub fn from_json(doc: &Json) -> Result<Self, String> {
+        let obj = doc.as_obj().ok_or("fault spec must be a JSON object")?;
+        let mode = doc.get("mode").as_str().ok_or("fault spec needs a string 'mode'")?;
+        match mode {
+            "explicit" => {
+                const KNOWN: [&str; 2] = ["mode", "mask"];
+                for key in obj.keys() {
+                    if !KNOWN.contains(&key.as_str()) {
+                        return Err(format!(
+                            "unknown fault spec field '{key}' (accepted: {})",
+                            KNOWN.join(", ")
+                        ));
+                    }
+                }
+                Ok(FaultSpec::Explicit(FaultMask::from_json(doc.get("mask"))?))
+            }
+            "sampled" => {
+                const KNOWN: [&str; 6] =
+                    ["mode", "core_rate", "link_rate", "derate_rate", "derate_floor", "seed"];
+                for key in obj.keys() {
+                    if !KNOWN.contains(&key.as_str()) {
+                        return Err(format!(
+                            "unknown fault spec field '{key}' (accepted: {})",
+                            KNOWN.join(", ")
+                        ));
+                    }
+                }
+                let mut rates = FaultRates::default();
+                if let Some(v) = doc.get("core_rate").as_f64() {
+                    rates.core_rate = v;
+                }
+                if let Some(v) = doc.get("link_rate").as_f64() {
+                    rates.link_rate = v;
+                }
+                if let Some(v) = doc.get("derate_rate").as_f64() {
+                    rates.derate_rate = v;
+                }
+                if let Some(v) = doc.get("derate_floor").as_f64() {
+                    rates.derate_floor = v;
+                }
+                rates.validate()?;
+                let seed = doc
+                    .get("seed")
+                    .as_f64()
+                    .ok_or("sampled fault spec needs a numeric 'seed'")?;
+                if seed < 0.0 || seed.fract() != 0.0 || seed > 9e15 {
+                    return Err(format!("fault seed must be a non-negative integer, got {seed}"));
+                }
+                Ok(FaultSpec::Sampled { rates, seed: seed as u64 })
+            }
+            other => Err(format!("unknown fault spec mode '{other}' (accepted: explicit, sampled)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hw8() -> NmhConfig {
+        let mut hw = NmhConfig::small();
+        hw.width = 8;
+        hw.height = 8;
+        hw
+    }
+
+    #[test]
+    fn healthy_mask_is_invisible() {
+        let hw = hw8();
+        let m = FaultMask::healthy(&hw);
+        assert!(m.is_all_healthy());
+        assert_eq!(m.alive_count(), 64);
+        assert_eq!(m.dead_core_count(), 0);
+        assert_eq!(m.dead_link_count(), 0);
+        assert_eq!(m.effective_hw(&hw), hw);
+    }
+
+    #[test]
+    fn kill_and_query() {
+        let hw = hw8();
+        let mut m = FaultMask::healthy(&hw);
+        m.kill_core(3, 4);
+        m.kill_link(0, 0, DIR_E);
+        m.set_derate(1, 1, 0.5);
+        assert!(m.is_core_dead(3, 4));
+        assert!(!m.is_core_dead(4, 3));
+        assert!(m.is_link_dead(0, 0, DIR_E));
+        assert!(!m.is_link_dead(0, 0, DIR_N));
+        assert_eq!(m.alive_count(), 63);
+        assert!(!m.is_all_healthy());
+        let eff = m.effective_hw(&hw);
+        assert_eq!(eff.c_npc, hw.c_npc / 2);
+        assert_eq!(eff.c_apc, hw.c_apc / 2);
+        assert_eq!(eff.c_spc, hw.c_spc / 2);
+        // geometry fields are untouched by derating
+        assert_eq!((eff.width, eff.height), (hw.width, hw.height));
+    }
+
+    #[test]
+    fn derate_on_dead_core_does_not_bound_capacity() {
+        let hw = hw8();
+        let mut m = FaultMask::healthy(&hw);
+        m.kill_core(0, 0);
+        m.set_derate(0, 0, 0.01); // dead core's derate is irrelevant
+        assert_eq!(m.effective_hw(&hw), hw);
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic_and_rate_sensitive() {
+        let hw = NmhConfig::small();
+        let rates = FaultRates::uniform(0.05);
+        let a = FaultMask::sample(&hw, &rates, 7);
+        let b = FaultMask::sample(&hw, &rates, 7);
+        assert_eq!(a, b);
+        let c = FaultMask::sample(&hw, &rates, 8);
+        assert_ne!(a, c, "different seeds should differ at 5% over 4096 cores");
+        // ~5% of 4096 cores — loose envelope, but zero would mean broken
+        let dead = a.dead_core_count();
+        assert!(dead > 100 && dead < 320, "dead cores = {dead}");
+        let zero = FaultMask::sample(&hw, &FaultRates::uniform(0.0), 7);
+        assert!(zero.is_all_healthy());
+    }
+
+    #[test]
+    fn sampled_derates_stay_in_range() {
+        let hw = hw8();
+        let rates =
+            FaultRates { core_rate: 0.1, link_rate: 0.0, derate_rate: 0.5, derate_floor: 0.25 };
+        let m = FaultMask::sample(&hw, &rates, 3);
+        let mut seen_derated = false;
+        for i in 0..64 {
+            let f = m.derate_idx(i);
+            assert!((0.25..=1.0).contains(&f), "derate {f}");
+            if m.core_dead_idx(i) {
+                assert_eq!(f, 1.0, "dead cores keep derate 1.0");
+            } else if f < 1.0 {
+                seen_derated = true;
+            }
+        }
+        assert!(seen_derated);
+    }
+
+    #[test]
+    fn mask_json_roundtrip_exact() {
+        let hw = hw8();
+        let mut m = FaultMask::healthy(&hw);
+        m.kill_core(2, 5);
+        m.kill_core(7, 7);
+        m.kill_link(1, 1, DIR_S);
+        m.set_derate(4, 0, 0.75);
+        let text = m.to_json().to_string();
+        let back = FaultMask::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(m, back);
+        // sampled masks roundtrip too
+        let s = FaultMask::sample(&hw, &FaultRates::uniform(0.2), 11);
+        let back = FaultMask::from_json(&Json::parse(&s.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn mask_json_rejects_bad_docs() {
+        for bad in [
+            r#"{"width": 8}"#,                                        // missing height
+            r#"{"width": 8, "height": 8, "dead_cards": []}"#,         // typo'd key
+            r#"{"width": 8, "height": 8, "dead_cores": [64]}"#,       // core id out of range
+            r#"{"width": 8, "height": 8, "dead_links": [256]}"#,      // link id out of range
+            r#"{"width": 8, "height": 8, "derate": [[0, 1.5]]}"#,     // factor out of range
+            r#"{"width": 8, "height": 8, "derate": [[0]]}"#,          // malformed pair
+            r#"{"width": 0, "height": 8}"#,                           // degenerate lattice
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(FaultMask::from_json(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn spec_json_roundtrip_both_modes() {
+        let hw = hw8();
+        let mut m = FaultMask::healthy(&hw);
+        m.kill_core(0, 3);
+        for spec in [
+            FaultSpec::Explicit(m),
+            FaultSpec::Sampled { rates: FaultRates::uniform(0.07), seed: 99 },
+        ] {
+            let text = spec.to_json().to_string();
+            let back = FaultSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(spec, back);
+        }
+    }
+
+    #[test]
+    fn spec_realize_checks_dimensions_and_rates() {
+        let hw = hw8();
+        let other = NmhConfig::small(); // 64x64
+        let m = FaultMask::healthy(&hw);
+        assert!(FaultSpec::Explicit(m.clone()).realize(&hw).is_ok());
+        assert!(FaultSpec::Explicit(m).realize(&other).is_err());
+        let bad = FaultSpec::Sampled { rates: FaultRates::uniform(1.5), seed: 0 };
+        assert!(bad.realize(&hw).is_err());
+        let ok = FaultSpec::Sampled { rates: FaultRates::uniform(0.5), seed: 0 };
+        let realized = ok.realize(&hw).unwrap();
+        assert_eq!(realized, FaultMask::sample(&hw, &FaultRates::uniform(0.5), 0));
+    }
+
+    #[test]
+    fn link_ids_cover_the_scheme() {
+        let hw = hw8();
+        let m = FaultMask::healthy(&hw);
+        assert_eq!(m.link_id(0, 0, DIR_E), 0);
+        assert_eq!(m.link_id(0, 0, DIR_S), 3);
+        assert_eq!(m.link_id(1, 0, DIR_E), 4);
+        assert_eq!(m.link_id(0, 1, DIR_E), 32);
+    }
+}

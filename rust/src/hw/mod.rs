@@ -4,6 +4,12 @@
 //! neurons, `c_apc` distinct inbound axons (h-edges), and `c_spc` total
 //! inbound synapses (connections). Spike movement costs come from Intel
 //! Loihi measurements ("small") and from [7] ("large").
+//!
+//! [`faults`] extends the pristine lattice with a fault mask — dead
+//! cores, dead directed NoC links and per-core capacity derating — so
+//! mapping and simulation can model degraded chips.
+
+pub mod faults;
 
 /// Per-hop router/wire energy and latency (Table II left).
 #[derive(Clone, Copy, Debug, PartialEq)]

@@ -27,7 +27,15 @@
 //!   and resumes bit-for-bit — even across thread counts (DESIGN.md
 //!   §13). CLI: `--checkpoint-dir DIR` to save, `--resume` to continue;
 //!   in code, [`CheckpointPolicy`](runtime::CheckpointPolicy) via
-//!   `MapperPipeline::with_checkpoint`.
+//!   `MapperPipeline::with_checkpoint`;
+//! * mapping is fault-aware (DESIGN.md §15): a seeded or explicit
+//!   [`hw::faults::FaultMask`] derates capacities, steers every placer
+//!   off dead cores, reroutes simulator traffic around dead links
+//!   (XY → YX → BFS detour, deterministically), and
+//!   [`mapping::repair`] re-maps after a core/link death with minimal
+//!   neuron churn. `None`/all-healthy masks are bit-identical to the
+//!   fault-free pipeline. CLI: `--fault-rate F` / `--fault-spec FILE`
+//!   and the `repair` subcommand.
 //!
 //! Quick tour — the enum-builder shims and the spec form drive the same
 //! registry-backed pipeline:
@@ -78,9 +86,11 @@ pub mod prelude {
     };
     pub use crate::coordinator::registry::StageRegistry;
     pub use crate::coordinator::spec::{PipelineSpec, StageSpec};
+    pub use crate::hw::faults::{FaultMask, FaultRates, FaultSpec};
     pub use crate::hw::{NmhConfig, NocCosts};
     pub use crate::hypergraph::quotient::{push_forward, Partitioning};
     pub use crate::hypergraph::{Hypergraph, HypergraphBuilder};
+    pub use crate::mapping::repair::{repair, FaultEvent, RepairOutcome};
     pub use crate::metrics::MappingMetrics;
     pub use crate::placement::Placement;
     pub use crate::runtime::CheckpointPolicy;

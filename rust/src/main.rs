@@ -22,18 +22,20 @@
 use snnmap::coordinator::{
     ensemble, experiment, MapperPipeline, PipelineSpec, StageRegistry, StageSpec,
 };
+use snnmap::hw::faults::{FaultMask, FaultRates, FaultSpec};
 use snnmap::hw::NmhConfig;
 use snnmap::hypergraph::{io as hgio, stats};
+use snnmap::mapping::repair::{self, FaultEvent};
 use snnmap::metrics::evaluate;
 use snnmap::runtime::{checkpoint, PjrtRuntime};
-use snnmap::sim::{simulate, SimParams};
+use snnmap::sim::{simulate_faulty, SimParams};
 use snnmap::snn::{self, spikefreq};
 use snnmap::stage::{StageCtx, StageParams};
 use snnmap::util::cli::Args;
 use std::path::Path;
 use std::time::Duration;
 
-const USAGE: &str = "snnmap <gen|info|partition|map|simulate|ensemble|experiment|multichip|stages|runtime> [options]
+const USAGE: &str = "snnmap <gen|info|partition|map|simulate|repair|ensemble|experiment|multichip|stages|runtime> [options]
 
 common options:
   --network NAME     suite network (16k_model, lenet, alexnet, vgg11,
@@ -67,7 +69,18 @@ checkpoint options (partition/map, hierarchical partitioner; DESIGN.md §13):
   --out-assign FILE          write the final assignment, one core id per
                              line (atomic write)
 
+fault options (map/partition/simulate/repair; DESIGN.md §15):
+  --fault-rate F     sample dead cores/links/derating uniformly at rate F
+  --fault-seed N     fault-sampling seed (default: the pipeline seed)
+  --fault-spec FILE  load a FaultSpec JSON (explicit mask or sampled
+                     rates) instead of --fault-rate
 simulate options: --steps N (default 200)
+                  --out-report FILE  write the SimReport as JSON (atomic)
+repair options (one event, applied to the mapped network):
+  --kill-core X,Y    core (X,Y) dies: relocate or redistribute its
+                     partition with minimal neuron churn
+  --kill-link X,Y,D  link at (X,Y) toward D in {E,W,N,S} dies: traffic
+                     reroutes in the simulator, no remap needed
 ensemble options: --budget-secs N (default 60)
 experiment options: --grid fig9|fig10 | --config FILE.json
                     --out FILE.csv --threads N
@@ -89,6 +102,7 @@ fn main() {
         "partition" => cmd_partition(&args),
         "map" => cmd_map(&args),
         "simulate" => cmd_simulate(&args),
+        "repair" => cmd_repair(&args),
         "ensemble" => cmd_ensemble(&args),
         "experiment" => cmd_experiment(&args),
         "multichip" => cmd_multichip(&args),
@@ -164,7 +178,9 @@ fn build_spec(args: &Args, hw: NmhConfig) -> PipelineSpec {
     if let Some(path) = args.get("spec") {
         // the file is the whole pipeline truth: flag-based overrides
         // would make the archived spec a lie, so they are ignored loudly
-        for flag in ["partitioner", "placer", "refiner", "hw", "hw-scale"] {
+        for flag in
+            ["partitioner", "placer", "refiner", "hw", "hw-scale", "fault-rate", "fault-spec"]
+        {
             if args.get(flag).is_some() {
                 eprintln!("[spec] --{flag} ignored: pipeline comes from --spec {path}");
             }
@@ -184,12 +200,50 @@ fn build_spec(args: &Args, hw: NmhConfig) -> PipelineSpec {
             std::process::exit(1);
         })
     } else {
-        PipelineSpec::new(hw)
+        let spec = PipelineSpec::new(hw)
             .partitioner(StageSpec::new(args.get_or("partitioner", "overlap")))
             .placer(StageSpec::new(args.get_or("placer", "spectral")))
             .refiner(StageSpec::new(args.get_or("refiner", "force")))
-            .seed(args.get_u64("seed", 42))
+            .seed(args.get_u64("seed", 42));
+        match resolve_faults(args) {
+            Some(f) => spec.faults(f),
+            None => spec,
+        }
     }
+}
+
+/// `--fault-spec FILE` (a FaultSpec JSON document — explicit mask or
+/// sampled rates) or `--fault-rate F` (uniform rates sampled with
+/// `--fault-seed`, defaulting to the pipeline seed). `None` when neither
+/// flag is given: the pipeline is then bit-identical to a fault-free run.
+fn resolve_faults(args: &Args) -> Option<FaultSpec> {
+    if let Some(path) = args.get("fault-spec") {
+        if args.get("fault-rate").is_some() {
+            eprintln!("[faults] --fault-rate ignored: faults come from --fault-spec {path}");
+        }
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("cannot read {path}: {e}");
+            std::process::exit(1);
+        });
+        let doc = snnmap::util::json::Json::parse(&text).unwrap_or_else(|e| {
+            eprintln!("bad JSON in {path}: {e}");
+            std::process::exit(1);
+        });
+        let fs = FaultSpec::from_json(&doc).unwrap_or_else(|e| {
+            eprintln!("bad fault spec {path}: {e}");
+            std::process::exit(1);
+        });
+        return Some(fs);
+    }
+    let rate = args.get_f64("fault-rate", 0.0);
+    if !(0.0..=1.0).contains(&rate) {
+        eprintln!("--fault-rate must be in [0, 1], got {rate}");
+        std::process::exit(2);
+    }
+    (rate > 0.0).then(|| FaultSpec::Sampled {
+        rates: FaultRates::uniform(rate),
+        seed: args.get_u64("fault-seed", args.get_u64("seed", 42)),
+    })
 }
 
 /// `--emit-spec FILE`: archive the spec a subcommand is about to run.
@@ -417,11 +471,12 @@ fn cmd_simulate(args: &Args) {
             std::process::exit(1);
         });
     let steps = args.get_usize("steps", 200);
-    let rep = simulate(
+    let rep = simulate_faulty(
         &res.gp,
         &res.placement,
         &pipeline.hw,
         SimParams { timesteps: steps, seed: args.get_u64("seed", 42), poisson_spikes: true },
+        pipeline.faults.as_ref(),
     );
     let analytic = evaluate(&res.gp, &res.placement, &pipeline.hw);
     println!(
@@ -439,6 +494,106 @@ fn cmd_simulate(args: &Args) {
         "peak router load {}   analytic congestion {:.2}",
         rep.peak_router_load, analytic.congestion
     );
+    if pipeline.faults.is_some() {
+        println!(
+            "faults           {} dropped spike copies   {} detour hops",
+            rep.dropped_spikes, rep.detour_hops
+        );
+    }
+    if let Some(out) = args.get("out-report") {
+        checkpoint::atomic_write(Path::new(out), rep.to_json().to_pretty().as_bytes())
+            .unwrap_or_else(|e| {
+                eprintln!("cannot write {out}: {e}");
+                std::process::exit(1);
+            });
+        eprintln!("[sim] wrote {out}");
+    }
+}
+
+/// Parse `--kill-core X,Y` / `--kill-link X,Y,D` into a [`FaultEvent`].
+fn parse_event(args: &Args) -> FaultEvent {
+    fn bad(flag: &str, val: &str) -> ! {
+        eprintln!("bad --{flag} '{val}' (expected X,Y or X,Y,D with D in E/W/N/S)");
+        std::process::exit(2);
+    }
+    if let Some(s) = args.get("kill-core") {
+        let parts: Vec<&str> = s.split(',').collect();
+        let (Some(x), Some(y)) = (
+            parts.first().and_then(|p| p.trim().parse::<u16>().ok()),
+            parts.get(1).and_then(|p| p.trim().parse::<u16>().ok()),
+        ) else {
+            bad("kill-core", s)
+        };
+        if parts.len() != 2 {
+            bad("kill-core", s);
+        }
+        return FaultEvent::CoreDeath { x, y };
+    }
+    if let Some(s) = args.get("kill-link") {
+        let parts: Vec<&str> = s.split(',').collect();
+        let (Some(x), Some(y), Some(d)) = (
+            parts.first().and_then(|p| p.trim().parse::<u16>().ok()),
+            parts.get(1).and_then(|p| p.trim().parse::<u16>().ok()),
+            parts.get(2).and_then(|p| match p.trim() {
+                "E" | "e" | "0" => Some(0usize),
+                "W" | "w" | "1" => Some(1),
+                "N" | "n" | "2" => Some(2),
+                "S" | "s" | "3" => Some(3),
+                _ => None,
+            }),
+        ) else {
+            bad("kill-link", s)
+        };
+        if parts.len() != 3 {
+            bad("kill-link", s);
+        }
+        return FaultEvent::LinkDeath { x, y, dir: d };
+    }
+    eprintln!("repair needs --kill-core X,Y or --kill-link X,Y,D\n{USAGE}");
+    std::process::exit(2);
+}
+
+fn cmd_repair(args: &Args) {
+    let net = load_network(args);
+    let hw = resolve_hw(args, &net);
+    let pipeline = resolve_pipeline(args, hw);
+    let runtime = resolve_runtime(args);
+    let res = unwrap_mapping(
+        pipeline.run_with(&net.graph, net.layer_ranges.as_deref(), runtime.as_ref()),
+        "mapping",
+    );
+    let event = parse_event(args);
+    // the pre-event mask: whatever the pipeline already mapped around
+    // (so repair composes with --fault-rate), healthy otherwise
+    let mask = pipeline.faults.clone().unwrap_or_else(|| FaultMask::healthy(&pipeline.hw));
+    let out = repair::repair(&net.graph, &res.rho, &res.placement, &pipeline.hw, &mask, event)
+        .unwrap_or_else(|e| {
+            eprintln!("repair failed: {e}");
+            std::process::exit(1);
+        });
+    println!(
+        "mapped {} ({} nodes) into {} partitions on {}x{}",
+        net.name,
+        net.graph.num_nodes(),
+        res.rho.num_parts,
+        pipeline.hw.width,
+        pipeline.hw.height
+    );
+    println!(
+        "after event: {} partitions, {} dead cores, {} dead links",
+        out.rho.num_parts,
+        out.mask.dead_core_count(),
+        out.mask.dead_link_count()
+    );
+    println!("moved neurons    {}", out.moved_neurons);
+    if let Some(s) = out.scratch_moved {
+        let ratio = if s > 0 { out.moved_neurons as f64 / s as f64 } else { 0.0 };
+        println!("from-scratch     {s} moved (repair churn ratio {ratio:.3})");
+    }
+    if let Some(d) = out.cost_delta {
+        println!("energy delta     {d:+.4e} pJ vs from-scratch remap");
+    }
+    write_assignment(args, &out.rho);
 }
 
 fn cmd_ensemble(args: &Args) {

@@ -45,9 +45,7 @@ pub fn partition(g: &Hypergraph, hw: &NmhConfig) -> Result<Partitioning, MapErro
             }
         }
         let mut cands: Vec<(u32, f64)> = conn_weight.iter().map(|(&p, &w)| (p, w)).collect();
-        // snn-lint: allow(unwrap-ban) — connection weights are finite sums of finite f32
-        // edge weights, so partial_cmp is total here
-        cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        cands.sort_by(|a, b| crate::util::cmp_non_nan(&b.1, &a.1).then(a.0.cmp(&b.0)));
         // fallback: the most recently opened partition
         if let Some(last) = parts.len().checked_sub(1) {
             if !cands.iter().any(|&(p, _)| p as usize == last) {

@@ -506,12 +506,7 @@ fn score_comembers<F: Fn(u32) -> bool>(
 /// what makes "filter a sorted superset" == "sort the filtered subset".
 fn select_top_by_score(touched: &mut Vec<u32>, score: &[f64], k: usize) {
     let cmp = |a: &u32, b: &u32| {
-        score[*b as usize]
-            .partial_cmp(&score[*a as usize])
-            // snn-lint: allow(unwrap-ban) — scores are finite products of finite weights,
-            // so partial_cmp is total; total_cmp would reorder ±0.0 against the tested order
-            .unwrap()
-            .then(a.cmp(b))
+        crate::util::cmp_non_nan(&score[*b as usize], &score[*a as usize]).then(a.cmp(b))
     };
     if touched.len() > k {
         touched.select_nth_unstable_by(k - 1, cmp);

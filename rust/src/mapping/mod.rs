@@ -10,6 +10,7 @@ pub mod hierarchical;
 pub mod ordering;
 pub mod overlap;
 pub mod pruning;
+pub mod repair;
 pub mod sequential;
 pub mod streaming;
 
@@ -30,6 +31,17 @@ pub enum MapError {
     /// A pipeline spec names an unknown stage or carries bad parameters
     /// (registry/spec layer, see `coordinator::registry`).
     BadSpec(String),
+    /// A stage name has no registry entry. Split out of [`Self::BadSpec`]
+    /// so callers (the experiment grid, CLI exit paths) can distinguish
+    /// "no such algorithm" from "bad parameters for a known algorithm".
+    UnknownStage {
+        /// Stage kind: "partitioner", "placer" or "refiner".
+        kind: &'static str,
+        /// The name the spec asked for.
+        name: String,
+        /// The registered names (canonical, sorted).
+        known: Vec<String>,
+    },
     /// Checkpoint subsystem failure or a deliberate round-limit stop (the
     /// latter carries the [`crate::runtime::checkpoint::ROUND_LIMIT_PREFIX`]
     /// message prefix and maps to CLI exit code 3).
@@ -47,6 +59,9 @@ impl std::fmt::Display for MapError {
             }
             MapError::ConstraintViolated(m) => write!(f, "constraint violated: {m}"),
             MapError::BadSpec(m) => write!(f, "bad pipeline spec: {m}"),
+            MapError::UnknownStage { kind, name, known } => {
+                write!(f, "unknown {kind} '{name}' (known: {})", known.join(", "))
+            }
             MapError::Checkpoint(m) => write!(f, "checkpoint: {m}"),
         }
     }

@@ -71,9 +71,7 @@ impl PartialOrd for Entry {
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
         // max-heap by priority; tie-break by node id for determinism
-        self.prio
-            .partial_cmp(&other.prio)
-            .unwrap_or(Ordering::Equal)
+        crate::util::cmp_non_nan(&self.prio, &other.prio)
             .then_with(|| other.node.cmp(&self.node))
     }
 }
@@ -396,10 +394,7 @@ pub fn kahn_order(g: &Hypergraph) -> Option<Vec<u32>> {
         out_edges.clear();
         out_edges.extend_from_slice(g.outbound(u));
         out_edges.sort_by(|&a, &b| {
-            g.weight(b)
-                .partial_cmp(&g.weight(a))
-                .unwrap_or(Ordering::Equal)
-                .then(a.cmp(&b))
+            crate::util::cmp_non_nan(&g.weight(b), &g.weight(a)).then(a.cmp(&b))
         });
         for &e in &out_edges {
             for &d in g.dsts(e) {

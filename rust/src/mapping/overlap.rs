@@ -80,9 +80,7 @@ impl PartialOrd for EdgeEntry {
 }
 impl Ord for EdgeEntry {
     fn cmp(&self, other: &Self) -> Ordering {
-        self.prio
-            .partial_cmp(&other.prio)
-            .unwrap_or(Ordering::Equal)
+        crate::util::cmp_non_nan(&self.prio, &other.prio)
             .then_with(|| other.edge.cmp(&self.edge))
     }
 }

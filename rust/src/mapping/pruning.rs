@@ -75,12 +75,7 @@ pub fn prune_fraction(g: &Hypergraph, fraction: f64) -> (Hypergraph, PruneReport
     }
     let mut order: Vec<u32> = g.edge_ids().collect();
     order.sort_by(|&a, &b| {
-        g.weight(a)
-            .partial_cmp(&g.weight(b))
-            // snn-lint: allow(unwrap-ban) — edge weights are finite f32 by construction,
-            // so partial_cmp is total; total_cmp would reorder ±0.0 against the tested order
-            .unwrap()
-            .then(a.cmp(&b))
+        crate::util::cmp_non_nan(&g.weight(a), &g.weight(b)).then(a.cmp(&b))
     });
     let total: f64 = order.iter().map(|&e| g.weight(e) as f64).sum();
     let budget = total * fraction;

@@ -1,0 +1,514 @@
+//! Minimal-churn remap repair after a runtime hardware fault
+//! (DESIGN.md §15).
+//!
+//! A from-scratch remap after a single core or link death reshuffles
+//! nearly every neuron — on real deployments that means rewriting every
+//! core's synapse tables. [`repair`] instead perturbs the existing
+//! mapping as little as possible:
+//!
+//! - **Link death** keeps ρ and γ untouched — the NoC simulator reroutes
+//!   around dead links ([`crate::sim::noc::simulate_faulty`]), so no
+//!   neuron state moves at all.
+//! - **Core death** first tries to relocate the victim partition *whole*
+//!   to a free alive core, chosen to minimize the weighted Manhattan
+//!   distance to its placed quotient neighbors (ties resolve to the
+//!   smaller `(y, x)` — deterministic). Only when the lattice has no
+//!   free alive core are the victim's neurons redistributed one by one
+//!   (ascending node id) to the surviving partition of highest hyperedge
+//!   co-membership affinity that still satisfies the derated capacity
+//!   constraints.
+//!
+//! The outcome reports the moved-neuron count next to what a
+//! from-scratch remap (sequential partition + masked min-dist placement)
+//! would have moved, plus the energy delta against that baseline — the
+//! churn/quality trade-off in two numbers.
+
+use crate::hw::faults::FaultMask;
+use crate::hw::NmhConfig;
+use crate::hypergraph::quotient::{push_forward, Partitioning};
+use crate::hypergraph::{EdgeId, Hypergraph};
+use crate::mapping::MapError;
+use crate::placement::{mindist, Placement};
+use std::collections::HashSet;
+
+/// A single runtime fault event to repair around.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// The core at `(x, y)` died.
+    CoreDeath { x: u16, y: u16 },
+    /// The directed link leaving `(x, y)` towards `dir` (E=0, W=1, N=2,
+    /// S=3) died.
+    LinkDeath { x: u16, y: u16, dir: usize },
+}
+
+/// Result of one [`repair`] call.
+#[derive(Clone, Debug)]
+pub struct RepairOutcome {
+    /// Repaired partitioning (unchanged unless neurons redistributed).
+    pub rho: Partitioning,
+    /// Repaired placement over the surviving cores.
+    pub placement: Placement,
+    /// Input mask plus the repaired event.
+    pub mask: FaultMask,
+    /// Neurons whose core coordinate changed.
+    pub moved_neurons: usize,
+    /// Neurons a from-scratch remap (sequential partition + masked
+    /// min-dist placement) would have moved; `None` when that baseline
+    /// itself fails on the degraded lattice.
+    pub scratch_moved: Option<usize>,
+    /// Repaired energy minus from-scratch energy (positive = the cheap
+    /// repair pays this much mapping quality for its low churn).
+    pub cost_delta: Option<f64>,
+}
+
+/// Repair a valid `(ρ, γ)` mapping of `g` after `event`, moving as few
+/// neurons as possible. `mask` holds the faults already known *before*
+/// the event (pass an all-healthy mask for the first failure).
+pub fn repair(
+    g: &Hypergraph,
+    rho: &Partitioning,
+    placement: &Placement,
+    hw: &NmhConfig,
+    mask: &FaultMask,
+    event: FaultEvent,
+) -> Result<RepairOutcome, MapError> {
+    mask.check_matches(hw).map_err(MapError::BadSpec)?;
+    if rho.num_parts != placement.len() {
+        return Err(MapError::ConstraintViolated(format!(
+            "placement covers {} of {} partitions",
+            placement.len(),
+            rho.num_parts
+        )));
+    }
+    let mut mask2 = mask.clone();
+    let (x, y) = match event {
+        FaultEvent::LinkDeath { x, y, dir } => {
+            if (x as usize) >= hw.width || (y as usize) >= hw.height || dir >= 4 {
+                return Err(MapError::BadSpec(format!(
+                    "link ({x}, {y}, dir {dir}) outside the {}x{} lattice",
+                    hw.width, hw.height
+                )));
+            }
+            mask2.kill_link(x, y, dir);
+            // the simulator reroutes; neuron state stays where it is
+            return Ok(RepairOutcome {
+                rho: rho.clone(),
+                placement: placement.clone(),
+                mask: mask2,
+                moved_neurons: 0,
+                scratch_moved: None,
+                cost_delta: None,
+            });
+        }
+        FaultEvent::CoreDeath { x, y } => {
+            if (x as usize) >= hw.width || (y as usize) >= hw.height {
+                return Err(MapError::BadSpec(format!(
+                    "core ({x}, {y}) outside the {}x{} lattice",
+                    hw.width, hw.height
+                )));
+            }
+            (x, y)
+        }
+    };
+    mask2.kill_core(x, y);
+
+    let victim = match placement.coords.iter().position(|&c| c == (x, y)) {
+        Some(p) => p,
+        None => {
+            // the dead core carried no partition: nothing to move
+            return Ok(RepairOutcome {
+                rho: rho.clone(),
+                placement: placement.clone(),
+                mask: mask2,
+                moved_neurons: 0,
+                scratch_moved: None,
+                cost_delta: None,
+            });
+        }
+    };
+    let eff_hw = mask2.effective_hw(hw);
+
+    let (rho2, pl2, moved) = match free_alive_core(hw, &mask2, placement, victim) {
+        Some(_) => relocate_partition(g, rho, placement, hw, &mask2, victim),
+        None => redistribute_neurons(g, rho, placement, &eff_hw, victim)?,
+    };
+
+    // churn + quality vs a from-scratch remap on the degraded lattice
+    let (scratch_moved, cost_delta) = match scratch_baseline(g, rho, placement, hw, &eff_hw, &mask2)
+    {
+        Some((s_moved, s_energy)) => {
+            let qg = push_forward(g, &rho2).graph;
+            let energy = crate::metrics::evaluate_serial(&qg, &pl2, hw).energy;
+            (Some(s_moved), Some(energy - s_energy))
+        }
+        None => (None, None),
+    };
+
+    Ok(RepairOutcome {
+        rho: rho2,
+        placement: pl2,
+        mask: mask2,
+        moved_neurons: moved,
+        scratch_moved,
+        cost_delta,
+    })
+}
+
+/// First free alive core in row-major `(y, x)` order, skipping cells any
+/// partition other than `victim` occupies.
+fn free_alive_core(
+    hw: &NmhConfig,
+    mask: &FaultMask,
+    placement: &Placement,
+    victim: usize,
+) -> Option<(u16, u16)> {
+    let mut occupied = vec![false; hw.num_cores()];
+    for (p, &(cx, cy)) in placement.coords.iter().enumerate() {
+        if p != victim {
+            occupied[hw.index(cx, cy)] = true;
+        }
+    }
+    for i in 0..hw.num_cores() {
+        if !occupied[i] && !mask.core_dead_idx(i) {
+            return Some(hw.coord(i));
+        }
+    }
+    None
+}
+
+/// Move the whole victim partition to the free alive core minimizing the
+/// weighted Manhattan distance to its placed quotient neighbors. Only the
+/// victim's neurons move; ρ is untouched.
+fn relocate_partition(
+    g: &Hypergraph,
+    rho: &Partitioning,
+    placement: &Placement,
+    hw: &NmhConfig,
+    mask: &FaultMask,
+    victim: usize,
+) -> (Partitioning, Placement, usize) {
+    // traffic-weighted quotient neighbors of the victim: source→dst
+    // terms of every quotient h-edge touching it
+    let qg = push_forward(g, rho).graph;
+    let mut nbw = vec![0.0f64; rho.num_parts];
+    for e in qg.edge_ids() {
+        let s = qg.source(e) as usize;
+        let w = qg.weight(e) as f64;
+        if s == victim {
+            for &d in qg.dsts(e) {
+                if d as usize != victim {
+                    nbw[d as usize] += w;
+                }
+            }
+        } else if qg.dsts(e).contains(&(victim as u32)) {
+            nbw[s] += w;
+        }
+    }
+
+    let mut occupied = vec![false; hw.num_cores()];
+    for (p, &(cx, cy)) in placement.coords.iter().enumerate() {
+        if p != victim {
+            occupied[hw.index(cx, cy)] = true;
+        }
+    }
+    // row-major scan with strict improvement keeps the first (smallest
+    // (y, x)) of any tied score — deterministic on every platform
+    let mut best: Option<((u16, u16), f64)> = None;
+    for i in 0..hw.num_cores() {
+        if occupied[i] || mask.core_dead_idx(i) {
+            continue;
+        }
+        let c = hw.coord(i);
+        let mut score = 0.0f64;
+        for (q, &w) in nbw.iter().enumerate() {
+            if w > 0.0 {
+                score += w * NmhConfig::manhattan(c, placement.coords[q]) as f64;
+            }
+        }
+        if !matches!(best, Some((_, b)) if b <= score) {
+            best = Some((c, score));
+        }
+    }
+    // free_alive_core() returned Some, so at least one candidate scored
+    let target = match best {
+        Some((c, _)) => c,
+        None => placement.coords[victim],
+    };
+    let mut coords = placement.coords.clone();
+    coords[victim] = target;
+    let moved = rho.sizes()[victim];
+    (rho.clone(), Placement { coords }, moved)
+}
+
+/// Hyperedge co-membership affinity of neuron `n` to partition `q`:
+/// Σ over h-edges incident to `n` of `w(e) · |members(e) ∩ q|`, under
+/// the current (partially updated) assignment.
+fn affinity(g: &Hypergraph, assign: &[u32], n: u32, q: u32) -> f64 {
+    let mut a = 0.0f64;
+    for &e in g.inbound(n).iter().chain(g.outbound(n).iter()) {
+        let w = g.weight(e) as f64;
+        let mut members = 0usize;
+        let s = g.source(e);
+        if s != n && assign[s as usize] == q {
+            members += 1;
+        }
+        for &d in g.dsts(e) {
+            if d != n && assign[d as usize] == q {
+                members += 1;
+            }
+        }
+        a += w * members as f64;
+    }
+    a
+}
+
+/// No free core left: dissolve the victim partition, sending each neuron
+/// (ascending id) to the surviving partition of highest affinity that
+/// still fits the derated capacities. The victim's partition id is then
+/// compacted away so the placement stays one-coordinate-per-partition.
+fn redistribute_neurons(
+    g: &Hypergraph,
+    rho: &Partitioning,
+    placement: &Placement,
+    eff_hw: &NmhConfig,
+    victim: usize,
+) -> Result<(Partitioning, Placement, usize), MapError> {
+    // per-partition usage mirroring mapping::validate's three counters
+    let mut npc = rho.sizes();
+    let mut spc = vec![0usize; rho.num_parts];
+    let mut axons: Vec<HashSet<EdgeId>> = vec![HashSet::new(); rho.num_parts];
+    for e in g.edge_ids() {
+        for &d in g.dsts(e) {
+            let p = rho.assign[d as usize] as usize;
+            spc[p] += 1;
+            axons[p].insert(e);
+        }
+    }
+
+    let mut assign = rho.assign.clone();
+    let members: Vec<u32> = (0..g.num_nodes() as u32)
+        .filter(|&n| rho.assign[n as usize] == victim as u32)
+        .collect();
+    for &n in &members {
+        let inb = g.inbound(n);
+        let mut best: Option<(u32, f64)> = None;
+        for q in 0..rho.num_parts as u32 {
+            if q as usize == victim {
+                continue;
+            }
+            let qi = q as usize;
+            let new_axons = inb.iter().filter(|e| !axons[qi].contains(e)).count();
+            if npc[qi] + 1 > eff_hw.c_npc
+                || spc[qi] + inb.len() > eff_hw.c_spc
+                || axons[qi].len() + new_axons > eff_hw.c_apc
+            {
+                continue;
+            }
+            let a = affinity(g, &assign, n, q);
+            // strict improvement: the smallest q of any tied affinity wins
+            if !matches!(best, Some((_, b)) if b >= a) {
+                best = Some((q, a));
+            }
+        }
+        let q = match best {
+            Some((q, _)) => q,
+            None => {
+                return Err(MapError::NodeUnmappable {
+                    node: n,
+                    reason: "no surviving partition can absorb it within derated capacity"
+                        .to_string(),
+                })
+            }
+        };
+        let qi = q as usize;
+        assign[n as usize] = q;
+        npc[qi] += 1;
+        spc[qi] += inb.len();
+        axons[qi].extend(inb.iter().copied());
+    }
+
+    // drop the now-empty victim id; partitions above it shift down by one,
+    // and the placement row for the victim disappears with it
+    for a in assign.iter_mut() {
+        if *a > victim as u32 {
+            *a -= 1;
+        }
+    }
+    let mut coords = placement.coords.clone();
+    coords.remove(victim);
+    Ok((
+        Partitioning::new(assign, rho.num_parts - 1),
+        Placement { coords },
+        members.len(),
+    ))
+}
+
+/// From-scratch baseline on the degraded lattice: sequential partition
+/// under the derated capacities, masked min-dist placement over the alive
+/// cores. Returns (neurons moved vs the old mapping, energy), or `None`
+/// when the baseline itself cannot map the degraded hardware.
+fn scratch_baseline(
+    g: &Hypergraph,
+    old_rho: &Partitioning,
+    old_placement: &Placement,
+    hw: &NmhConfig,
+    eff_hw: &NmhConfig,
+    mask: &FaultMask,
+) -> Option<(usize, f64)> {
+    let rho = crate::mapping::sequential::partition(
+        g,
+        eff_hw,
+        crate::mapping::sequential::SeqOrder::Natural,
+    )
+    .ok()?;
+    let qg = push_forward(g, &rho).graph;
+    let pl = mindist::place_masked(&qg, hw, 1, Some(mask)).ok()?;
+    let moved = (0..g.num_nodes())
+        .filter(|&n| {
+            old_placement.coords[old_rho.assign[n] as usize] != pl.coords[rho.assign[n] as usize]
+        })
+        .count();
+    let energy = crate::metrics::evaluate_serial(&qg, &pl, hw).energy;
+    Some((moved, energy))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hypergraph::HypergraphBuilder;
+
+    /// 6-node chain partitioned pairwise onto the bottom row of a 3×3
+    /// lattice with room to spare.
+    fn chain_mapping() -> (Hypergraph, Partitioning, Placement, NmhConfig) {
+        let mut b = HypergraphBuilder::new(6);
+        for i in 0..5u32 {
+            b.add_edge(i, vec![i + 1], 1.0);
+        }
+        let g = b.build();
+        let rho = Partitioning::new(vec![0, 0, 1, 1, 2, 2], 3);
+        let pl = Placement { coords: vec![(0, 0), (1, 0), (2, 0)] };
+        let mut hw = NmhConfig::small();
+        hw.width = 3;
+        hw.height = 3;
+        (g, rho, pl, hw)
+    }
+
+    #[test]
+    fn link_death_moves_nothing() {
+        let (g, rho, pl, hw) = chain_mapping();
+        let mask = FaultMask::healthy(&hw);
+        let out =
+            repair(&g, &rho, &pl, &hw, &mask, FaultEvent::LinkDeath { x: 1, y: 0, dir: 0 })
+                .unwrap();
+        assert_eq!(out.moved_neurons, 0);
+        assert_eq!(out.rho.assign, rho.assign);
+        assert_eq!(out.placement.coords, pl.coords);
+        assert!(out.mask.is_link_dead(1, 0, 0));
+        assert_eq!(out.mask.dead_core_count(), 0);
+    }
+
+    #[test]
+    fn core_death_relocates_whole_partition() {
+        let (g, rho, pl, hw) = chain_mapping();
+        let mask = FaultMask::healthy(&hw);
+        let out =
+            repair(&g, &rho, &pl, &hw, &mask, FaultEvent::CoreDeath { x: 1, y: 0 }).unwrap();
+        // only partition 1's two neurons move, ρ is untouched
+        assert_eq!(out.moved_neurons, 2);
+        assert_eq!(out.rho.assign, rho.assign);
+        assert_eq!(out.placement.coords[0], (0, 0));
+        assert_eq!(out.placement.coords[2], (2, 0));
+        let new = out.placement.coords[1];
+        assert_ne!(new, (1, 0));
+        assert!(!out.mask.is_core_dead(new.0, new.1));
+        // neighbors sit at (0,0) and (2,0): row 1 ties at total distance
+        // 4, and the row-major scan keeps the smallest (y, x) — (0,1)
+        assert_eq!(new, (0, 1));
+        // churn beats (or ties) the from-scratch baseline on this lattice
+        let scratch = out.scratch_moved.expect("baseline maps the degraded lattice");
+        assert!(out.moved_neurons <= scratch, "repair {} vs scratch {scratch}", out.moved_neurons);
+        assert!(out.cost_delta.is_some());
+        // repeatability: same inputs, same outcome
+        let again =
+            repair(&g, &rho, &pl, &hw, &mask, FaultEvent::CoreDeath { x: 1, y: 0 }).unwrap();
+        assert_eq!(again.placement.coords, out.placement.coords);
+    }
+
+    #[test]
+    fn core_death_redistributes_when_lattice_is_full() {
+        // 2×2 lattice fully occupied by 4 partitions: no free core, so
+        // the victim's neurons spread over the survivors by affinity
+        let mut b = HypergraphBuilder::new(8);
+        for i in 0..7u32 {
+            b.add_edge(i, vec![i + 1], 1.0);
+        }
+        let g = b.build();
+        let rho = Partitioning::new(vec![0, 0, 1, 1, 2, 2, 3, 3], 4);
+        let pl = Placement { coords: vec![(0, 0), (1, 0), (0, 1), (1, 1)] };
+        let mut hw = NmhConfig::small();
+        hw.width = 2;
+        hw.height = 2;
+        let mask = FaultMask::healthy(&hw);
+        let out =
+            repair(&g, &rho, &pl, &hw, &mask, FaultEvent::CoreDeath { x: 1, y: 0 }).unwrap();
+        assert_eq!(out.moved_neurons, 2); // partition 1 = {2, 3}
+        assert_eq!(out.rho.num_parts, 3);
+        assert_eq!(out.placement.coords, vec![(0, 0), (0, 1), (1, 1)]);
+        crate::mapping::validate(&g, &out.rho, &hw).unwrap();
+        for &(cx, cy) in &out.placement.coords {
+            assert!(!out.mask.is_core_dead(cx, cy));
+        }
+        // chain affinity pulls 2 and 3 towards partitions holding 1 or 4
+        let p2 = out.rho.assign[2];
+        let p3 = out.rho.assign[3];
+        assert!(p2 == out.rho.assign[1] || p3 == out.rho.assign[4]);
+    }
+
+    #[test]
+    fn redistribute_respects_capacity() {
+        // survivors are all full (c_npc = 2): the victim's neurons have
+        // nowhere to go and repair reports the node, never panics
+        let mut b = HypergraphBuilder::new(8);
+        for i in 0..7u32 {
+            b.add_edge(i, vec![i + 1], 1.0);
+        }
+        let g = b.build();
+        let rho = Partitioning::new(vec![0, 0, 1, 1, 2, 2, 3, 3], 4);
+        let pl = Placement { coords: vec![(0, 0), (1, 0), (0, 1), (1, 1)] };
+        let mut hw = NmhConfig::small();
+        hw.width = 2;
+        hw.height = 2;
+        hw.c_npc = 2;
+        let mask = FaultMask::healthy(&hw);
+        let err = repair(&g, &rho, &pl, &hw, &mask, FaultEvent::CoreDeath { x: 1, y: 0 })
+            .unwrap_err();
+        assert!(matches!(err, MapError::NodeUnmappable { node: 2, .. }), "{err}");
+    }
+
+    #[test]
+    fn unoccupied_core_death_is_a_no_op() {
+        let (g, rho, pl, hw) = chain_mapping();
+        let mask = FaultMask::healthy(&hw);
+        let out =
+            repair(&g, &rho, &pl, &hw, &mask, FaultEvent::CoreDeath { x: 2, y: 2 }).unwrap();
+        assert_eq!(out.moved_neurons, 0);
+        assert_eq!(out.placement.coords, pl.coords);
+        assert!(out.mask.is_core_dead(2, 2));
+    }
+
+    #[test]
+    fn out_of_lattice_events_are_bad_spec() {
+        let (g, rho, pl, hw) = chain_mapping();
+        let mask = FaultMask::healthy(&hw);
+        for ev in [
+            FaultEvent::CoreDeath { x: 3, y: 0 },
+            FaultEvent::LinkDeath { x: 0, y: 3, dir: 0 },
+            FaultEvent::LinkDeath { x: 0, y: 0, dir: 4 },
+        ] {
+            assert!(matches!(
+                repair(&g, &rho, &pl, &hw, &mask, ev),
+                Err(MapError::BadSpec(_))
+            ));
+        }
+    }
+}

@@ -149,11 +149,7 @@ fn balance_chips(
         let victim = (0..assign.len() as u32)
             .filter(|&v| assign[v as usize] == over as u32)
             .min_by(|&a, &b| {
-                gp.inbound_weight(a)
-                    .partial_cmp(&gp.inbound_weight(b))
-                    // snn-lint: allow(unwrap-ban) — inbound weights are finite sums of
-                    // finite f32 edge weights, so partial_cmp is total
-                    .unwrap()
+                crate::util::cmp_non_nan(&gp.inbound_weight(a), &gp.inbound_weight(b))
             })
             // snn-lint: allow(unwrap-ban) — `over` was selected by load > capacity >= 0,
             // so at least one node is assigned to it

@@ -23,6 +23,7 @@
 //! identical ([`refine_serial`] is the tested reference).
 
 use super::{PartitionAdjacency, Placement};
+use crate::hw::faults::FaultMask;
 use crate::hw::NmhConfig;
 use crate::hypergraph::Hypergraph;
 
@@ -36,6 +37,14 @@ pub const PAR_MIN_PARTS: usize = 96;
 
 /// The four cardinal one-core moves of Eq. 13.
 const DIRS: [(i32, i32); 4] = [(1, 0), (-1, 0), (0, 1), (0, -1)];
+
+/// Occupancy sentinel for empty cores.
+const EMPTY: u32 = u32::MAX;
+/// Occupancy sentinel for dead cores (DESIGN.md §15): looks occupied to
+/// the candidate scan (never a swap target) but is excluded from the
+/// a<b occupied-pair dedup and the commit loop. Distinct from [`EMPTY`]
+/// so an all-healthy mask changes no branch outcome.
+const DEAD: u32 = u32::MAX - 1;
 
 /// Refinement statistics for EXPERIMENTS.md and early-stop tuning.
 #[derive(Debug, Clone, Default)]
@@ -134,6 +143,23 @@ pub fn refine_with_threads(
     batch: Option<&BatchPotentialFn>,
     threads: usize,
 ) -> RefineStats {
+    refine_masked(gp, hw, placement, params, batch, threads, None)
+}
+
+/// [`refine_with_threads`] under an optional hardware fault mask
+/// (DESIGN.md §15): dead cores carry the [`DEAD`] occupancy sentinel, so
+/// no swap or empty-core move ever targets one. `faults: None` is
+/// bit-identical to [`refine_with_threads`].
+#[allow(clippy::too_many_arguments)]
+pub fn refine_masked(
+    gp: &Hypergraph,
+    hw: &NmhConfig,
+    placement: &mut Placement,
+    params: ForceParams,
+    batch: Option<&BatchPotentialFn>,
+    threads: usize,
+    faults: Option<&FaultMask>,
+) -> RefineStats {
     let n = placement.len();
     let threads = threads.max(1);
     let mut stats = RefineStats {
@@ -146,8 +172,15 @@ pub fn refine_with_threads(
     }
     let adj = PartitionAdjacency::build(gp);
 
-    // occupancy map: core -> partition (u32::MAX = empty)
-    let mut occ = vec![u32::MAX; hw.num_cores()];
+    // occupancy map: core -> partition (EMPTY = free, DEAD = faulted)
+    let mut occ = vec![EMPTY; hw.num_cores()];
+    if let Some(m) = faults {
+        for (i, o) in occ.iter_mut().enumerate() {
+            if m.core_dead_idx(i) {
+                *o = DEAD;
+            }
+        }
+    }
     for (p, &(x, y)) in placement.coords.iter().enumerate() {
         occ[hw.index(x, y)] = p as u32;
     }
@@ -193,10 +226,10 @@ pub fn refine_with_threads(
             break;
         }
         // stable sort: equal gains keep scan order, which both scan
-        // paths produce identically (ascending partition, DIRS order)
-        // snn-lint: allow(unwrap-ban) — gains are finite f64 (differences of finite costs),
-        // so partial_cmp is total here; total_cmp would reorder ±0.0 against the tested order
-        cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        // paths produce identically (ascending partition, DIRS order);
+        // gains are finite, and cmp_non_nan preserves ±0.0 equality
+        // where total_cmp would reorder against the tested order
+        cands.sort_by(|a, b| crate::util::cmp_non_nan(&b.0, &a.0));
 
         // ---- commit: serial, best-gain-first, re-verifying each gain
         // against the *current* coordinates (gains go stale as earlier
@@ -207,7 +240,12 @@ pub fn refine_with_threads(
         for &(_, a, b) in &cands {
             let pa = occ[a];
             let pb = occ[b];
-            if pa == u32::MAX && pb == u32::MAX {
+            // dead cores never enter candidates, but earlier commits
+            // can't create them either — this guard is pure defense
+            if pa == DEAD || pb == DEAD {
+                continue;
+            }
+            if pa == EMPTY && pb == EMPTY {
                 continue;
             }
             let ca = hw.coord(a);
@@ -217,15 +255,15 @@ pub fn refine_with_threads(
                 continue;
             }
             // apply swap
-            if pa != u32::MAX {
+            if pa != EMPTY {
                 placement.coords[pa as usize] = cb;
             }
-            if pb != u32::MAX {
+            if pb != EMPTY {
                 placement.coords[pb as usize] = ca;
             }
             occ.swap(a, b);
             applied += 1;
-            if pa == u32::MAX || pb == u32::MAX {
+            if pa == EMPTY || pb == EMPTY {
                 stats.moves_to_empty += 1;
             } else {
                 stats.swaps += 1;
@@ -284,11 +322,15 @@ fn scan_one(
             continue;
         }
         let bidx = hw.index(nx as u16, ny as u16);
-        if occ[bidx] == u32::MAX && !params.allow_empty_moves {
+        // dead cores are neither swap partners nor empty-move targets
+        if occ[bidx] == DEAD {
+            continue;
+        }
+        if occ[bidx] == EMPTY && !params.allow_empty_moves {
             continue;
         }
         // visit each occupied-occupied pair once (a < b)
-        if occ[bidx] != u32::MAX && bidx < a {
+        if occ[bidx] != EMPTY && bidx < a {
             continue;
         }
         let gain = swap_gain(
@@ -392,10 +434,10 @@ fn swap_gain(
     clamp: bool,
 ) -> f64 {
     let mut gain = 0.0;
-    if pa != u32::MAX {
+    if pa != EMPTY {
         gain += move_delta(adj, coords, pa, ca, cb, pb, clamp);
     }
-    if pb != u32::MAX {
+    if pb != EMPTY {
         gain += move_delta(adj, coords, pb, cb, ca, pa, clamp);
     }
     gain
@@ -566,6 +608,43 @@ mod tests {
     }
 
     #[test]
+    fn masked_refiner_avoids_dead_cores_and_none_is_identity() {
+        let n = 16;
+        let gp = ring(n);
+        let hw = NmhConfig::small();
+        let mut rng = Pcg64::seeded(3);
+        let mut cells: Vec<usize> = (0..hw.num_cores()).collect();
+        rng.shuffle(&mut cells);
+        let start = Placement { coords: (0..n).map(|i| hw.coord(cells[i])).collect() };
+
+        // faults: None is bit-identical to the unmasked entry point
+        let mut pl_plain = start.clone();
+        refine(&gp, &hw, &mut pl_plain, ForceParams::default(), None);
+        let mut pl_none = start.clone();
+        refine_masked(&gp, &hw, &mut pl_none, ForceParams::default(), None, 1, None);
+        assert_eq!(pl_plain.coords, pl_none.coords);
+
+        // kill a third of the free cores: refinement must still improve
+        // while never moving a partition onto a dead core
+        let mut mask = FaultMask::healthy(&hw);
+        for x in 0..hw.width as u16 {
+            for y in 0..hw.height as u16 {
+                if !start.coords.contains(&(x, y)) && (x + y) % 3 == 0 {
+                    mask.kill_core(x, y);
+                }
+            }
+        }
+        let mut pl = start.clone();
+        let stats =
+            refine_masked(&gp, &hw, &mut pl, ForceParams::default(), None, 1, Some(&mask));
+        pl.validate(&hw).unwrap();
+        for &(x, y) in &pl.coords {
+            assert!(!mask.is_core_dead(x, y), "moved onto dead core ({x},{y})");
+        }
+        assert!(stats.final_wirelength <= stats.initial_wirelength + 1e-9);
+    }
+
+    #[test]
     fn force_parallel_equals_serial_exactly() {
         // random quotient-like graphs large enough that the parallel
         // dispatch threshold is genuinely crossed, at several worker
@@ -687,8 +766,10 @@ impl crate::stage::Refiner for ForceRefiner {
             .map(|s| move |coords: &[(u16, u16)]| s.eval(coords).ok());
         let threads = ctx.threads.max(1);
         let stats = match &batch {
-            Some(b) => refine_with_threads(gp, hw, placement, self.params, Some(b), threads),
-            None => refine_with_threads(gp, hw, placement, self.params, None, threads),
+            Some(b) => {
+                refine_masked(gp, hw, placement, self.params, Some(b), threads, ctx.faults)
+            }
+            None => refine_masked(gp, hw, placement, self.params, None, threads, ctx.faults),
         };
         Ok(Some(stats))
     }

@@ -27,6 +27,24 @@ impl GridFinder {
         }
     }
 
+    /// Like [`Self::new`] but with dead cores pre-marked occupied, so
+    /// every `take_nearest` transparently lands on an alive core — the
+    /// single masking primitive shared by the spectral discretization
+    /// and the minimum-distance input spreading (zero per-placer fault
+    /// logic). `faults: None` is exactly [`Self::new`].
+    pub fn with_faults(hw: &NmhConfig, faults: Option<&crate::hw::faults::FaultMask>) -> Self {
+        let mut gf = GridFinder::new(hw);
+        if let Some(m) = faults {
+            for (i, u) in gf.used.iter_mut().enumerate() {
+                if m.core_dead_idx(i) {
+                    *u = true;
+                    gf.free_count -= 1;
+                }
+            }
+        }
+        gf
+    }
+
     #[inline]
     fn idx(&self, x: i32, y: i32) -> usize {
         (y * self.width + x) as usize
@@ -188,6 +206,23 @@ mod tests {
         }
         assert_eq!(gf.take_nearest(4.0, 4.0), None);
         assert_eq!(gf.free_count(), 0);
+    }
+
+    #[test]
+    fn masked_constructor_skips_dead_cores() {
+        let hw = hw8();
+        let mut mask = crate::hw::faults::FaultMask::healthy(&hw);
+        mask.kill_core(4, 4);
+        mask.kill_core(3, 4);
+        let mut gf = GridFinder::with_faults(&hw, Some(&mask));
+        assert_eq!(gf.free_count(), 62);
+        let got = gf.take_nearest(4.0, 4.0).unwrap();
+        assert_ne!(got, (4, 4));
+        assert_ne!(got, (3, 4));
+        assert_eq!(NmhConfig::manhattan(got, (4, 4)), 1);
+        // None delegates to the unmasked constructor exactly
+        let gf = GridFinder::with_faults(&hw, None);
+        assert_eq!(gf.free_count(), 64);
     }
 
     #[test]

@@ -7,9 +7,10 @@
 //! otherwise — exactly §IV-B1's dispatch.
 
 use super::Placement;
+use crate::hw::faults::FaultMask;
 use crate::hw::NmhConfig;
 use crate::hypergraph::Hypergraph;
-use crate::mapping::ordering;
+use crate::mapping::{ordering, MapError};
 
 /// Convert Hilbert-curve index `d` to (x, y) on a 2^order × 2^order grid.
 /// Iterative bit-twiddling formulation (Wikipedia's d2xy).
@@ -64,23 +65,50 @@ pub fn xy2d(order: u32, x: u32, y: u32) -> u64 {
 /// (explicit node order; see [`place`] for the §IV-B1 dispatch).
 pub fn place_with_order(_gp: &Hypergraph, hw: &NmhConfig, order: &[u32]) -> Placement {
     assert!(order.len() <= hw.num_cores(), "more partitions than cores");
+    // with no mask the asserted bound rules out every error path, so the
+    // fallback placement is unreachable
+    place_with_order_masked(_gp, hw, order, None).unwrap_or(Placement { coords: Vec::new() })
+}
+
+/// [`place_with_order`] under an optional hardware fault mask (DESIGN.md
+/// §15): the curve walk skips dead cells exactly like out-of-lattice
+/// cells, so partitions stay in curve order over the alive cores.
+/// `faults: None` is bit-identical to [`place_with_order`].
+pub fn place_with_order_masked(
+    _gp: &Hypergraph,
+    hw: &NmhConfig,
+    order: &[u32],
+    faults: Option<&FaultMask>,
+) -> Result<Placement, MapError> {
+    let alive = match faults {
+        Some(m) => m.alive_count(),
+        None => hw.num_cores(),
+    };
+    if order.len() > alive {
+        return Err(MapError::TooManyPartitions { got: order.len(), limit: alive });
+    }
     let side = hw.width.max(hw.height).next_power_of_two();
     let bits = side.trailing_zeros();
     let mut coords = vec![(0u16, 0u16); order.len()];
     let mut cursor: u64 = 0;
     for &p in order {
-        // advance along the curve to the next point inside the lattice
+        // advance along the curve to the next alive point in the lattice
         let (x, y) = loop {
             let (x, y) = d2xy(bits, cursor);
             cursor += 1;
-            if (x as usize) < hw.width && (y as usize) < hw.height {
+            if (x as usize) < hw.width
+                && (y as usize) < hw.height
+                && !matches!(faults, Some(m) if m.is_core_dead(x as u16, y as u16))
+            {
                 break (x, y);
             }
+            // the curve visits side*side distinct cells; the alive bound
+            // above guarantees enough of them before exhaustion
             assert!(cursor < (side * side) as u64 * 2, "curve exhausted");
         };
         coords[p as usize] = (x as u16, y as u16);
     }
-    Placement { coords }
+    Ok(Placement { coords })
 }
 
 /// §IV-B1 placement: Kahn topological order when `gp` is acyclic, else
@@ -98,6 +126,19 @@ pub fn place(gp: &Hypergraph, hw: &NmhConfig) -> Placement {
 pub fn place_threads(gp: &Hypergraph, hw: &NmhConfig, threads: usize) -> Placement {
     let order = ordering::auto_order_threads(gp, threads);
     place_with_order(gp, hw, &order)
+}
+
+/// [`place_threads`] under an optional hardware fault mask; see
+/// [`place_with_order_masked`]. `faults: None` is bit-identical to
+/// [`place_threads`].
+pub fn place_masked(
+    gp: &Hypergraph,
+    hw: &NmhConfig,
+    threads: usize,
+    faults: Option<&FaultMask>,
+) -> Result<Placement, MapError> {
+    let order = ordering::auto_order_threads(gp, threads);
+    place_with_order_masked(gp, hw, &order, faults)
 }
 
 #[cfg(test)]
@@ -155,6 +196,44 @@ mod tests {
     }
 
     #[test]
+    fn masked_walk_skips_dead_cells_and_keeps_curve_order() {
+        let mut hw = NmhConfig::small();
+        hw.width = 4;
+        hw.height = 4;
+        let mut b = HypergraphBuilder::new(15);
+        for i in 0..14u32 {
+            b.add_edge(i, vec![i + 1], 1.0);
+        }
+        let gp = b.build();
+        // None is bit-identical to the unmasked walk
+        let plain = place(&gp, &hw);
+        let masked_none = place_masked(&gp, &hw, 1, None).unwrap();
+        assert_eq!(plain.coords, masked_none.coords);
+        // kill one mid-curve cell: the walk must skip it and still fill
+        // the 15 partitions into the remaining 15 cells
+        let mut mask = crate::hw::faults::FaultMask::healthy(&hw);
+        let dead = plain.coords[7];
+        mask.kill_core(dead.0, dead.1);
+        let pl = place_masked(&gp, &hw, 1, Some(&mask)).unwrap();
+        pl.validate(&hw).unwrap();
+        for &(x, y) in &pl.coords {
+            assert!(!mask.is_core_dead(x, y));
+        }
+        // one more partition than alive cores fails cleanly
+        let big = {
+            let mut b = HypergraphBuilder::new(16);
+            for i in 0..15u32 {
+                b.add_edge(i, vec![i + 1], 1.0);
+            }
+            b.build()
+        };
+        assert!(matches!(
+            place_masked(&big, &hw, 1, Some(&mask)),
+            Err(MapError::TooManyPartitions { got: 16, limit: 15 })
+        ));
+    }
+
+    #[test]
     fn non_square_lattice_skips_outside_points() {
         let mut hw = NmhConfig::small();
         hw.width = 5;
@@ -193,6 +272,6 @@ impl crate::stage::Placer for HilbertPlacer {
         hw: &NmhConfig,
         ctx: &crate::stage::StageCtx,
     ) -> Result<Placement, crate::mapping::MapError> {
-        Ok(place_threads(gp, hw, ctx.threads.max(1)))
+        place_masked(gp, hw, ctx.threads.max(1), ctx.faults)
     }
 }

@@ -10,9 +10,10 @@
 //! improvement over scanning all |H| cores).
 
 use super::{PartitionAdjacency, Placement};
+use crate::hw::faults::FaultMask;
 use crate::hw::NmhConfig;
 use crate::hypergraph::Hypergraph;
-use crate::mapping::ordering;
+use crate::mapping::{ordering, MapError};
 use std::collections::BTreeSet;
 
 /// Minimum-distance placement of the quotient h-graph `gp`.
@@ -27,10 +28,32 @@ pub fn place(gp: &Hypergraph, hw: &NmhConfig) -> Placement {
 // snn-lint: allow(parallel-serial-pairing) — worker-budget wrapper over the ordering pass;
 // the frontier walk itself is serial, and the ordering owns the serial twin + tests
 pub fn place_threads(gp: &Hypergraph, hw: &NmhConfig, threads: usize) -> Placement {
+    assert!(gp.num_nodes() <= hw.num_cores(), "more partitions than cores");
+    // with no mask the asserted bound rules out every error path, so the
+    // fallback placement is unreachable
+    place_masked(gp, hw, threads, None).unwrap_or(Placement { coords: Vec::new() })
+}
+
+/// [`place_threads`] under an optional hardware fault mask (DESIGN.md
+/// §15): dead cores are pre-marked occupied — never spread onto, never
+/// entering the frontier — and the capacity bound counts alive cores
+/// only. `faults: None` is bit-identical to [`place_threads`].
+pub fn place_masked(
+    gp: &Hypergraph,
+    hw: &NmhConfig,
+    threads: usize,
+    faults: Option<&FaultMask>,
+) -> Result<Placement, MapError> {
     let n = gp.num_nodes();
-    assert!(n <= hw.num_cores(), "more partitions than cores");
+    let alive = match faults {
+        Some(m) => m.alive_count(),
+        None => hw.num_cores(),
+    };
+    if n > alive {
+        return Err(MapError::TooManyPartitions { got: n, limit: alive });
+    }
     if n == 0 {
-        return Placement { coords: vec![] };
+        return Ok(Placement { coords: vec![] });
     }
     let adj = PartitionAdjacency::build(gp);
     let order = ordering::auto_order_threads(gp, threads);
@@ -40,11 +63,19 @@ pub fn place_threads(gp: &Hypergraph, hw: &NmhConfig, threads: usize) -> Placeme
 
     let mut coords = vec![(u16::MAX, u16::MAX); n];
     let mut used = vec![false; hw.num_cores()];
+    if let Some(m) = faults {
+        // dead cores look permanently occupied to the whole sweep
+        for (i, u) in used.iter_mut().enumerate() {
+            if m.core_dead_idx(i) {
+                *u = true;
+            }
+        }
+    }
     // frontier: empty cores adjacent to used cores
     let mut frontier: BTreeSet<usize> = BTreeSet::new();
 
     // --- spread input partitions over a centered, evenly spaced grid ---
-    let spread = spread_grid(inputs.len().max(1), hw);
+    let spread = spread_grid(inputs.len().max(1), hw, faults);
     for (i, &p) in inputs.iter().enumerate() {
         let (x, y) = spread[i];
         place_one(p, (x, y), hw, &mut coords, &mut used, &mut frontier);
@@ -52,7 +83,18 @@ pub fn place_threads(gp: &Hypergraph, hw: &NmhConfig, threads: usize) -> Placeme
     // networks with no pure input partition: seed the first node centrally
     if inputs.is_empty() {
         let p = order[0];
-        let c = ((hw.width / 2) as u16, (hw.height / 2) as u16);
+        let center = ((hw.width / 2) as u16, (hw.height / 2) as u16);
+        let c = if matches!(faults, Some(m) if m.is_core_dead(center.0, center.1)) {
+            let mut gf = super::gridfind::GridFinder::with_faults(hw, faults);
+            gf.take_nearest(center.0 as f64, center.1 as f64).ok_or_else(|| {
+                MapError::NodeUnmappable {
+                    node: p,
+                    reason: "no alive core for the seed partition".to_string(),
+                }
+            })?
+        } else {
+            center
+        };
         place_one(p, c, hw, &mut coords, &mut used, &mut frontier);
     }
 
@@ -86,17 +128,21 @@ pub fn place_threads(gp: &Hypergraph, hw: &NmhConfig, threads: usize) -> Placeme
             }
             best.map(|(_, cell)| cell)
         };
-        let cell = best.unwrap_or_else(|| {
-            // frontier exhausted (isolated islands): first free core
-            // snn-lint: allow(unwrap-ban) — n <= num_cores is asserted at fn entry, so a
-            // free core exists while unplaced partitions remain
-            used.iter().position(|&u| !u).expect("lattice full")
-        });
+        let cell = match best {
+            Some(c) => c,
+            // frontier exhausted (isolated islands): first free alive core
+            // (one exists while unplaced partitions remain, by the
+            // n <= alive bound at fn entry — the error is defensive)
+            None => used.iter().position(|&u| !u).ok_or_else(|| MapError::NodeUnmappable {
+                node: p,
+                reason: "no free alive core left".to_string(),
+            })?,
+        };
         let (x, y) = hw.coord(cell);
         place_one(p, (x, y), hw, &mut coords, &mut used, &mut frontier);
     }
 
-    Placement { coords }
+    Ok(Placement { coords })
 }
 
 /// Claim `c` for partition `p` and update the frontier.
@@ -128,7 +174,8 @@ fn place_one(
 /// Evenly spaced k positions on a centered sub-grid (the TrueNorth input
 /// spreading rule: "spread out as much as possible while remaining
 /// centered and evenly spaced between themselves and the borders").
-fn spread_grid(k: usize, hw: &NmhConfig) -> Vec<(u16, u16)> {
+/// Positions landing on dead cores are nudged to the nearest alive one.
+fn spread_grid(k: usize, hw: &NmhConfig, faults: Option<&FaultMask>) -> Vec<(u16, u16)> {
     let cols = (k as f64).sqrt().ceil() as usize;
     let rows = crate::util::div_ceil(k, cols);
     let mut out = Vec::with_capacity(k);
@@ -142,13 +189,13 @@ fn spread_grid(k: usize, hw: &NmhConfig) -> Vec<(u16, u16)> {
         let y = y.clamp(0, hw.height as i64 - 1) as u16;
         out.push((x, y));
     }
-    // de-collide (tiny lattices): nudge duplicates to free cells
+    // de-collide (tiny lattices, dead cores): nudge to free alive cells
     let mut seen = std::collections::HashSet::new();
-    let mut gf = super::gridfind::GridFinder::new(hw);
+    let mut gf = super::gridfind::GridFinder::with_faults(hw, faults);
     for c in out.iter_mut() {
         if !seen.insert(*c) || gf.is_used(c.0, c.1) {
-            // snn-lint: allow(unwrap-ban) — at most n <= num_cores cells are ever taken, so
-            // take_nearest always finds a free cell
+            // snn-lint: allow(unwrap-ban) — at most n <= alive cells are ever taken
+            // (checked by every caller), so take_nearest always finds a free cell
             *c = gf.take_nearest(c.0 as f64, c.1 as f64).expect("lattice full");
         } else {
             gf.take(c.0, c.1);
@@ -222,7 +269,7 @@ mod tests {
     #[test]
     fn spread_grid_even_and_centered() {
         let hw = NmhConfig::small();
-        let pts = spread_grid(4, &hw);
+        let pts = spread_grid(4, &hw, None);
         assert_eq!(pts.len(), 4);
         // 2x2 arrangement at thirds of the lattice: x in {21,43}, y likewise
         for &(x, y) in &pts {
@@ -231,6 +278,45 @@ mod tests {
         }
         let set: std::collections::HashSet<_> = pts.iter().collect();
         assert_eq!(set.len(), 4);
+    }
+
+    #[test]
+    fn masked_none_is_bit_identical_and_dead_cores_avoided() {
+        let gp = layered_quotient();
+        let hw = NmhConfig::small();
+        let plain = place_threads(&gp, &hw, 1);
+        let masked_none = place_masked(&gp, &hw, 1, None).unwrap();
+        assert_eq!(plain.coords, masked_none.coords);
+        // kill the cells the unmasked run chose: the masked run must
+        // route around every one of them and stay valid
+        let mut mask = FaultMask::healthy(&hw);
+        for &(x, y) in &plain.coords {
+            mask.kill_core(x, y);
+        }
+        let pl = place_masked(&gp, &hw, 1, Some(&mask)).unwrap();
+        pl.validate(&hw).unwrap();
+        for &(x, y) in &pl.coords {
+            assert!(!mask.is_core_dead(x, y), "placed on dead core ({x},{y})");
+        }
+    }
+
+    #[test]
+    fn masked_rejects_more_partitions_than_alive_cores() {
+        let mut hw = NmhConfig::small();
+        hw.width = 3;
+        hw.height = 3;
+        let mut b = HypergraphBuilder::new(9);
+        for i in 0..8u32 {
+            b.add_edge(i, vec![i + 1], 1.0);
+        }
+        let gp = b.build();
+        let mut mask = FaultMask::healthy(&hw);
+        mask.kill_core(1, 1);
+        let err = place_masked(&gp, &hw, 1, Some(&mask)).unwrap_err();
+        assert!(
+            matches!(err, MapError::TooManyPartitions { got: 9, limit: 8 }),
+            "{err}"
+        );
     }
 
     #[test]
@@ -273,7 +359,7 @@ impl crate::stage::Placer for MinDistPlacer {
         hw: &NmhConfig,
         ctx: &crate::stage::StageCtx,
     ) -> Result<Placement, crate::mapping::MapError> {
-        Ok(place_threads(gp, hw, ctx.threads.max(1)))
+        place_masked(gp, hw, ctx.threads.max(1), ctx.faults)
     }
 
     fn is_direct(&self) -> bool {

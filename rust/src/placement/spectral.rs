@@ -14,8 +14,10 @@
 use super::eigen::{self, LaplacianProblem};
 use super::gridfind::GridFinder;
 use super::Placement;
+use crate::hw::faults::FaultMask;
 use crate::hw::NmhConfig;
 use crate::hypergraph::Hypergraph;
+use crate::mapping::MapError;
 
 /// Eigensolver engine: continuous 2D embedding of the quotient h-graph.
 /// Implemented natively here and by `runtime::SpectralEngine` over PJRT.
@@ -51,17 +53,51 @@ pub fn place_with_engine(
     hw: &NmhConfig,
     engine: &dyn EmbeddingEngine,
 ) -> Placement {
+    assert!(gp.num_nodes() <= hw.num_cores(), "more partitions than cores");
+    // with no mask the asserted bound rules out every error path, so the
+    // fallback placement is unreachable
+    place_with_engine_masked(gp, hw, engine, None).unwrap_or(Placement { coords: Vec::new() })
+}
+
+/// [`place_with_engine`] under an optional hardware fault mask
+/// (DESIGN.md §15): the discretization's nearest-free-core search simply
+/// never sees dead cores, so the embedding distorts minimally around
+/// them. `faults: None` is bit-identical to [`place_with_engine`].
+pub fn place_with_engine_masked(
+    gp: &Hypergraph,
+    hw: &NmhConfig,
+    engine: &dyn EmbeddingEngine,
+    faults: Option<&FaultMask>,
+) -> Result<Placement, MapError> {
     let n = gp.num_nodes();
-    assert!(n <= hw.num_cores(), "more partitions than cores");
+    let alive = match faults {
+        Some(m) => m.alive_count(),
+        None => hw.num_cores(),
+    };
+    if n > alive {
+        return Err(MapError::TooManyPartitions { got: n, limit: alive });
+    }
     if n == 0 {
-        return Placement { coords: vec![] };
+        return Ok(Placement { coords: vec![] });
     }
     if n == 1 {
-        return Placement { coords: vec![((hw.width / 2) as u16, (hw.height / 2) as u16)] };
+        let center = ((hw.width / 2) as u16, (hw.height / 2) as u16);
+        let c = if matches!(faults, Some(m) if m.is_core_dead(center.0, center.1)) {
+            let mut gf = GridFinder::with_faults(hw, faults);
+            gf.take_nearest(center.0 as f64, center.1 as f64).ok_or_else(|| {
+                MapError::NodeUnmappable {
+                    node: 0,
+                    reason: "no alive core for the single partition".to_string(),
+                }
+            })?
+        } else {
+            center
+        };
+        return Ok(Placement { coords: vec![c] });
     }
     let prob = eigen::build_laplacian(gp);
     let embedding = engine.embed(&prob);
-    discretize(&embedding, &prob.wdeg, hw)
+    Ok(discretize_masked(&embedding, &prob.wdeg, hw, true, faults))
 }
 
 /// Spectral placement with the native engine.
@@ -82,6 +118,20 @@ pub fn discretize_with(
     wdeg: &[f64],
     hw: &NmhConfig,
     heavy_first: bool,
+) -> Placement {
+    discretize_masked(embedding, wdeg, hw, heavy_first, None)
+}
+
+/// [`discretize_with`] under an optional hardware fault mask: dead cores
+/// are pre-marked occupied in the nearest-free-core finder, so every
+/// partition transparently lands on the nearest *alive* core.
+/// `faults: None` is bit-identical to [`discretize_with`].
+pub fn discretize_masked(
+    embedding: &[[f64; 2]],
+    wdeg: &[f64],
+    hw: &NmhConfig,
+    heavy_first: bool,
+    faults: Option<&FaultMask>,
 ) -> Placement {
     let n = embedding.len();
     // bounding box -> unit square (degenerate axes collapse to 0.5)
@@ -108,14 +158,11 @@ pub fn discretize_with(
     let mut order: Vec<u32> = (0..n as u32).collect();
     if heavy_first {
         order.sort_by(|&a, &b| {
-            wdeg[b as usize]
-                .partial_cmp(&wdeg[a as usize])
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(&b))
+            crate::util::cmp_non_nan(&wdeg[b as usize], &wdeg[a as usize]).then(a.cmp(&b))
         });
     }
 
-    let mut gf = GridFinder::new(hw);
+    let mut gf = GridFinder::with_faults(hw, faults);
     let mut coords = vec![(0u16, 0u16); n];
     for &p in &order {
         let [ex, ey] = embedding[p as usize];
@@ -123,9 +170,9 @@ pub fn discretize_with(
         let ty = y0 + (ey - ymin) / yspan * (rh.saturating_sub(1)) as f64;
         coords[p as usize] = gf
             .take_nearest(tx, ty)
-            // snn-lint: allow(unwrap-ban) — the lattice-capacity assert at fn entry
-            // guarantees a free cell for every partition
-            .expect("lattice has >= n cores by the assert above");
+            // snn-lint: allow(unwrap-ban) — every caller bounds n by the free (alive)
+            // core count, so a free cell exists for each partition
+            .expect("lattice has >= n free cores by the callers' bound");
     }
     Placement { coords }
 }
@@ -231,6 +278,27 @@ mod tests {
     }
 
     #[test]
+    fn masked_none_is_bit_identical_and_dead_cores_avoided() {
+        let gp = two_communities(18);
+        let hw = NmhConfig::small();
+        let engine = NativeEigen::default();
+        let plain = place(&gp, &hw);
+        let masked_none = place_with_engine_masked(&gp, &hw, &engine, None).unwrap();
+        assert_eq!(plain.coords, masked_none.coords);
+        // kill every cell the unmasked run chose: the masked
+        // discretization must land all 36 partitions elsewhere
+        let mut mask = crate::hw::faults::FaultMask::healthy(&hw);
+        for &(x, y) in &plain.coords {
+            mask.kill_core(x, y);
+        }
+        let pl = place_with_engine_masked(&gp, &hw, &engine, Some(&mask)).unwrap();
+        pl.validate(&hw).unwrap();
+        for &(x, y) in &pl.coords {
+            assert!(!mask.is_core_dead(x, y), "placed on dead core ({x},{y})");
+        }
+    }
+
+    #[test]
     fn discretize_no_collisions_under_duplicates() {
         // identical embedding coordinates must still place injectively
         let emb = vec![[0.5, 0.5]; 9];
@@ -293,11 +361,14 @@ impl crate::stage::Placer for SpectralPlacer {
         hw: &NmhConfig,
         ctx: &crate::stage::StageCtx,
     ) -> Result<Placement, crate::mapping::MapError> {
-        let pl = match ctx.runtime {
-            Some(rt) => {
-                place_with_engine(gp, hw, &crate::runtime::SpectralEngine { runtime: rt })
-            }
-            None => place_with_engine(
+        match ctx.runtime {
+            Some(rt) => place_with_engine_masked(
+                gp,
+                hw,
+                &crate::runtime::SpectralEngine { runtime: rt },
+                ctx.faults,
+            ),
+            None => place_with_engine_masked(
                 gp,
                 hw,
                 &NativeEigen {
@@ -305,8 +376,8 @@ impl crate::stage::Placer for SpectralPlacer {
                     subspace: self.subspace,
                     threads: ctx.threads.max(1),
                 },
+                ctx.faults,
             ),
-        };
-        Ok(pl)
+        }
     }
 }

@@ -11,4 +11,4 @@
 
 pub mod noc;
 
-pub use noc::{simulate, SimParams, SimReport};
+pub use noc::{simulate, simulate_faulty, SimParams, SimReport};

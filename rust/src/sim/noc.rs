@@ -1,5 +1,17 @@
 //! Discrete-timestep mesh NoC simulator with XY routing.
+//!
+//! Fault injection (DESIGN.md §15): under a
+//! [`crate::hw::faults::FaultMask`] every (h-edge, destination) copy
+//! stream is classified once — healthy XY path, deterministic YX
+//! fallback, shortest alive BFS detour (neighbor order E, W, N, S), or
+//! dropped when no alive path exists. Dead links and dead cores carry
+//! zero traffic; [`SimReport::dropped_spikes`] and
+//! [`SimReport::detour_hops`] quantify the degradation. `faults: None`
+//! and an all-healthy mask reproduce the pre-fault simulation bit for
+//! bit (every stream classifies as the verbatim XY path, and the spike
+//! RNG is consumed per h-edge regardless of routing).
 
+use crate::hw::faults::{FaultMask, DIR_STEPS};
 use crate::hw::NmhConfig;
 use crate::hypergraph::Hypergraph;
 use crate::placement::Placement;
@@ -42,6 +54,13 @@ pub struct SimReport {
     pub peak_router_load: u64,
     /// Mean (over timesteps) of the per-step max link load.
     pub mean_peak_link_load: f64,
+    /// Spike copies that could not be delivered under the fault mask
+    /// (dead endpoint, or no alive path). Always 0 without faults.
+    pub dropped_spikes: u64,
+    /// Hops in excess of the Manhattan distance, summed over detoured
+    /// copies. Always 0 without faults (and for YX fallbacks, which stay
+    /// minimal).
+    pub detour_hops: u64,
 }
 
 impl SimReport {
@@ -49,6 +68,24 @@ impl SimReport {
     /// Table I energy expectation.
     pub fn energy_per_step(&self) -> f64 {
         self.energy / self.timesteps.max(1) as f64
+    }
+
+    /// Serialize every report column (the CLI's `--out-report` artifact).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("timesteps", Json::Num(self.timesteps as f64)),
+            ("spikes", Json::Num(self.spikes as f64)),
+            ("copies", Json::Num(self.copies as f64)),
+            ("hops", Json::Num(self.hops as f64)),
+            ("energy", Json::Num(self.energy)),
+            ("mean_makespan", Json::Num(self.mean_makespan)),
+            ("max_makespan", Json::Num(self.max_makespan)),
+            ("peak_router_load", Json::Num(self.peak_router_load as f64)),
+            ("mean_peak_link_load", Json::Num(self.mean_peak_link_load)),
+            ("dropped_spikes", Json::Num(self.dropped_spikes as f64)),
+            ("detour_hops", Json::Num(self.detour_hops as f64)),
+        ])
     }
 }
 
@@ -75,6 +112,132 @@ fn xy_step(cur: (u16, u16), dst: (u16, u16)) -> ((u16, u16), usize) {
     }
 }
 
+/// One hop of YX routing (y first, then x) — the first-choice fault
+/// fallback because it turns at the opposite corner of the XY rectangle.
+#[inline]
+fn yx_step(cur: (u16, u16), dst: (u16, u16)) -> ((u16, u16), usize) {
+    if cur.1 != dst.1 {
+        if dst.1 > cur.1 {
+            ((cur.0, cur.1 + 1), 2) // N
+        } else {
+            ((cur.0, cur.1 - 1), 3) // S
+        }
+    } else if dst.0 > cur.0 {
+        ((cur.0 + 1, cur.1), 0) // E
+    } else {
+        ((cur.0 - 1, cur.1), 1) // W
+    }
+}
+
+/// Static route of one (h-edge, destination) copy stream under a fault
+/// mask. Faults are static, so classification happens once per stream,
+/// outside the timestep loop.
+enum Route {
+    /// Healthy XY path — simulated with the pre-fault accounting code,
+    /// verbatim (bit-identity for all-healthy masks).
+    Xy,
+    /// Precomputed alive path: one (from-cell, link direction) per hop,
+    /// plus the hop excess over the Manhattan distance.
+    Path(Vec<((u16, u16), usize)>, u64),
+    /// Dead endpoint or no alive path: every copy drops.
+    Drop,
+}
+
+/// Walk `step` from `src` to `dst`, collecting (cell, dir) hops; `None`
+/// as soon as a dead link or dead intermediate core is hit.
+fn walk_alive(
+    m: &FaultMask,
+    src: (u16, u16),
+    dst: (u16, u16),
+    step: fn((u16, u16), (u16, u16)) -> ((u16, u16), usize),
+) -> Option<Vec<((u16, u16), usize)>> {
+    let mut hops = Vec::new();
+    let mut cur = src;
+    while cur != dst {
+        let (next, dir) = step(cur, dst);
+        if m.is_link_dead(cur.0, cur.1, dir) {
+            return None;
+        }
+        if next != dst && m.is_core_dead(next.0, next.1) {
+            return None;
+        }
+        hops.push((cur, dir));
+        cur = next;
+    }
+    Some(hops)
+}
+
+/// Shortest alive path by BFS over alive cores and links, neighbor order
+/// E, W, N, S (deterministic; ties resolve to the first-discovered
+/// parent, so identical masks give identical detours).
+fn bfs_route(
+    hw: &NmhConfig,
+    m: &FaultMask,
+    src: (u16, u16),
+    dst: (u16, u16),
+) -> Option<Vec<((u16, u16), usize)>> {
+    let s = hw.index(src.0, src.1);
+    let d = hw.index(dst.0, dst.1);
+    let mut prev = vec![u32::MAX; hw.num_cores()];
+    let mut prev_dir = vec![0u8; hw.num_cores()];
+    let mut queue = std::collections::VecDeque::new();
+    prev[s] = s as u32;
+    queue.push_back(s);
+    while let Some(c) = queue.pop_front() {
+        if c == d {
+            break;
+        }
+        let (x, y) = hw.coord(c);
+        for (dir, &(dx, dy)) in DIR_STEPS.iter().enumerate() {
+            let nx = x as i32 + dx;
+            let ny = y as i32 + dy;
+            if !hw.contains(nx, ny) || m.is_link_dead(x, y, dir) {
+                continue;
+            }
+            let ni = hw.index(nx as u16, ny as u16);
+            if prev[ni] != u32::MAX || m.is_core_dead(nx as u16, ny as u16) {
+                continue;
+            }
+            prev[ni] = c as u32;
+            prev_dir[ni] = dir as u8;
+            queue.push_back(ni);
+        }
+    }
+    if prev[d] == u32::MAX {
+        return None;
+    }
+    let mut hops = Vec::new();
+    let mut c = d;
+    while c != s {
+        let p = prev[c] as usize;
+        hops.push((hw.coord(p), prev_dir[c] as usize));
+        c = p;
+    }
+    hops.reverse();
+    Some(hops)
+}
+
+/// Classify one copy stream: XY when fully alive, else YX, else the
+/// shortest alive detour, else drop.
+fn classify_route(hw: &NmhConfig, m: &FaultMask, src: (u16, u16), dst: (u16, u16)) -> Route {
+    if m.is_core_dead(src.0, src.1) || m.is_core_dead(dst.0, dst.1) {
+        return Route::Drop;
+    }
+    if src == dst || walk_alive(m, src, dst, xy_step).is_some() {
+        return Route::Xy;
+    }
+    if let Some(hops) = walk_alive(m, src, dst, yx_step) {
+        return Route::Path(hops, 0); // YX is Manhattan-minimal too
+    }
+    match bfs_route(hw, m, src, dst) {
+        Some(hops) => {
+            let extra = hops.len() as u64 - NmhConfig::manhattan(src, dst) as u64;
+            Route::Path(hops, extra)
+        }
+        None => Route::Drop,
+    }
+}
+
 /// Run the simulator over a mapped SNN.
 ///
 /// `gp` is the quotient h-graph (one node per partition — its edges carry
@@ -85,6 +248,22 @@ pub fn simulate(
     hw: &NmhConfig,
     params: SimParams,
 ) -> SimReport {
+    simulate_faulty(gp, placement, hw, params, None)
+}
+
+/// [`simulate`] under an optional hardware fault mask (DESIGN.md §15).
+///
+/// With `faults: None` (or an all-healthy mask) this is bit-identical to
+/// the fault-free simulator. Under faults, each (h-edge, destination)
+/// stream routes per its static [`Route`] classification; dead links and
+/// dead cores carry zero traffic.
+pub fn simulate_faulty(
+    gp: &Hypergraph,
+    placement: &Placement,
+    hw: &NmhConfig,
+    params: SimParams,
+    faults: Option<&FaultMask>,
+) -> SimReport {
     assert_eq!(gp.num_nodes(), placement.len());
     let costs = hw.costs;
     let mut rng = Pcg64::new(params.seed, 41);
@@ -92,6 +271,20 @@ pub fn simulate(
         timesteps: params.timesteps,
         ..Default::default()
     };
+
+    // static fault classification, once per (edge, dst) stream in edge
+    // order then dsts order — indexed by the same walk in the step loop
+    let routes: Option<Vec<Route>> = faults.map(|m| {
+        let mut r = Vec::new();
+        for e in gp.edge_ids() {
+            let src = placement.coords[gp.source(e) as usize];
+            for &d in gp.dsts(e) {
+                let dst = placement.coords[d as usize];
+                r.push(classify_route(hw, m, src, dst));
+            }
+        }
+        r
+    });
 
     let num_links = hw.num_cores() * 4;
     let mut link_load = vec![0u32; num_links];
@@ -102,6 +295,7 @@ pub fn simulate(
         link_load.iter_mut().for_each(|l| *l = 0);
         router_load.iter_mut().for_each(|l| *l = 0);
 
+        let mut route_idx = 0usize;
         for e in gp.edge_ids() {
             let w = gp.weight(e) as f64;
             let fires = if params.poisson_spikes {
@@ -110,24 +304,46 @@ pub fn simulate(
                 usize::from(rng.bernoulli(w.min(1.0)))
             };
             if fires == 0 {
+                route_idx += gp.dsts(e).len();
                 continue;
             }
             report.spikes += fires as u64;
             let src = placement.coords[gp.source(e) as usize];
             for &d in gp.dsts(e) {
                 let dst = placement.coords[d as usize];
-                report.copies += fires as u64;
-                // destination router always pays one routing event
-                router_load[hw.index(dst.0, dst.1)] += fires as u32;
-                report.energy += fires as f64 * costs.e_r;
-                let mut cur = src;
-                while cur != dst {
-                    let (next, dir) = xy_step(cur, dst);
-                    link_load[link_id(hw, cur.0, cur.1, dir)] += fires as u32;
-                    router_load[hw.index(cur.0, cur.1)] += fires as u32;
-                    report.energy += fires as f64 * (costs.e_r + costs.e_t);
-                    report.hops += fires as u64;
-                    cur = next;
+                let route = routes.as_ref().map(|r| &r[route_idx]);
+                route_idx += 1;
+                match route {
+                    None | Some(Route::Xy) => {
+                        report.copies += fires as u64;
+                        // destination router always pays one routing event
+                        router_load[hw.index(dst.0, dst.1)] += fires as u32;
+                        report.energy += fires as f64 * costs.e_r;
+                        let mut cur = src;
+                        while cur != dst {
+                            let (next, dir) = xy_step(cur, dst);
+                            link_load[link_id(hw, cur.0, cur.1, dir)] += fires as u32;
+                            router_load[hw.index(cur.0, cur.1)] += fires as u32;
+                            report.energy += fires as f64 * (costs.e_r + costs.e_t);
+                            report.hops += fires as u64;
+                            cur = next;
+                        }
+                    }
+                    Some(Route::Path(hops, extra)) => {
+                        report.copies += fires as u64;
+                        router_load[hw.index(dst.0, dst.1)] += fires as u32;
+                        report.energy += fires as f64 * costs.e_r;
+                        for &((cx, cy), dir) in hops {
+                            link_load[link_id(hw, cx, cy, dir)] += fires as u32;
+                            router_load[hw.index(cx, cy)] += fires as u32;
+                            report.energy += fires as f64 * (costs.e_r + costs.e_t);
+                            report.hops += fires as u64;
+                        }
+                        report.detour_hops += extra * fires as u64;
+                    }
+                    Some(Route::Drop) => {
+                        report.dropped_spikes += fires as u64;
+                    }
                 }
             }
         }
@@ -222,6 +438,61 @@ mod tests {
         assert!(sim.copies > 0);
         // only router energy
         assert!((sim.energy - sim.copies as f64 * hw.costs.e_r).abs() < 1e-9);
+    }
+
+    #[test]
+    fn healthy_mask_is_bit_identical_to_none() {
+        let (gp, pl) = line_mapping();
+        let hw = NmhConfig::small();
+        let mask = FaultMask::healthy(&hw);
+        let plain = simulate(&gp, &pl, &hw, SimParams::default());
+        let masked = simulate_faulty(&gp, &pl, &hw, SimParams::default(), Some(&mask));
+        assert_eq!(plain.spikes, masked.spikes);
+        assert_eq!(plain.copies, masked.copies);
+        assert_eq!(plain.hops, masked.hops);
+        assert_eq!(plain.energy.to_bits(), masked.energy.to_bits());
+        assert_eq!(plain.mean_makespan.to_bits(), masked.mean_makespan.to_bits());
+        assert_eq!(plain.max_makespan.to_bits(), masked.max_makespan.to_bits());
+        assert_eq!(plain.peak_router_load, masked.peak_router_load);
+        assert_eq!(plain.mean_peak_link_load.to_bits(), masked.mean_peak_link_load.to_bits());
+        assert_eq!(masked.dropped_spikes, 0);
+        assert_eq!(masked.detour_hops, 0);
+    }
+
+    #[test]
+    fn dead_link_forces_deterministic_detour() {
+        // (0,0) -> (4,0): killing the east link out of (1,0) blocks both
+        // XY and YX (same row), so every copy takes a minimal BFS detour
+        // of 6 hops (Manhattan 4 + 2 extra).
+        let (gp, pl) = line_mapping();
+        let hw = NmhConfig::small();
+        let mut mask = FaultMask::healthy(&hw);
+        mask.kill_link(1, 0, 0); // E out of (1,0)
+        let a = simulate_faulty(&gp, &pl, &hw, SimParams::default(), Some(&mask));
+        assert!(a.copies > 0);
+        assert_eq!(a.dropped_spikes, 0);
+        assert_eq!(a.hops, a.copies * 6, "detour path length");
+        assert_eq!(a.detour_hops, a.copies * 2, "excess over Manhattan");
+        // detours are statically classified: rerun is bit-identical
+        let b = simulate_faulty(&gp, &pl, &hw, SimParams::default(), Some(&mask));
+        assert_eq!(a.hops, b.hops);
+        assert_eq!(a.energy.to_bits(), b.energy.to_bits());
+    }
+
+    #[test]
+    fn dead_destination_core_drops_all_copies() {
+        let (gp, pl) = line_mapping();
+        let hw = NmhConfig::small();
+        let mut mask = FaultMask::healthy(&hw);
+        mask.kill_core(4, 0);
+        let sim = simulate_faulty(&gp, &pl, &hw, SimParams::default(), Some(&mask));
+        assert!(sim.dropped_spikes > 0);
+        assert_eq!(sim.copies, 0);
+        assert_eq!(sim.hops, 0);
+        assert_eq!(sim.energy, 0.0);
+        // spike generation itself is unaffected (same RNG draw order)
+        let plain = simulate(&gp, &pl, &hw, SimParams::default());
+        assert_eq!(sim.spikes, plain.spikes);
     }
 
     #[test]

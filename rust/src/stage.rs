@@ -59,6 +59,14 @@ pub struct StageCtx<'a> {
     /// hierarchical partitioner) must produce bit-identical results with
     /// or without it, resumed or not.
     pub checkpoint: Option<crate::runtime::checkpoint::CheckpointPolicy>,
+    /// Hardware fault mask (DESIGN.md §15): dead cores / links and
+    /// capacity derating the run must respect. Placers skip dead cores
+    /// (the shared [`crate::placement::gridfind::GridFinder`] masked
+    /// constructor and occupancy pre-marking); partitioners see the
+    /// capacity effect through the derated hardware config the pipeline
+    /// hands them instead. `None` — and an all-healthy mask — must be
+    /// bit-identical to the pre-fault behavior.
+    pub faults: Option<&'a crate::hw::faults::FaultMask>,
 }
 
 impl<'a> StageCtx<'a> {
@@ -71,6 +79,7 @@ impl<'a> StageCtx<'a> {
             layer_ranges: None,
             runtime: None,
             checkpoint: None,
+            faults: None,
         }
     }
 }

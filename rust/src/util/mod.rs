@@ -25,6 +25,24 @@ pub fn timing_enabled() -> bool {
     *ENABLED.get_or_init(|| std::env::var("SNNMAP_TIMING").is_ok())
 }
 
+/// Total order over values the caller guarantees are non-NaN (scores,
+/// weights, gains — all finite by construction in this codebase).
+///
+/// Replaces the `partial_cmp().unwrap()` idiom: same result for every
+/// non-NaN pair — including `-0.0 == 0.0`, which `f64::total_cmp` would
+/// order and thereby reorder existing sorts — but structurally panic-free
+/// (incomparable pairs collapse to `Equal` instead of aborting).
+#[inline]
+pub fn cmp_non_nan<T: PartialOrd>(a: &T, b: &T) -> std::cmp::Ordering {
+    if a < b {
+        std::cmp::Ordering::Less
+    } else if a > b {
+        std::cmp::Ordering::Greater
+    } else {
+        std::cmp::Ordering::Equal
+    }
+}
+
 /// Arithmetic mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -55,6 +73,18 @@ mod tests {
         assert_eq!(div_ceil(9, 3), 3);
         assert_eq!(div_ceil(1, 1024), 1);
         assert_eq!(div_ceil(0, 7), 0);
+    }
+
+    #[test]
+    fn cmp_non_nan_matches_partial_cmp_for_non_nan() {
+        use std::cmp::Ordering::*;
+        for (a, b) in [(1.0f64, 2.0), (2.0, 1.0), (3.5, 3.5), (-0.0, 0.0), (0.0, -0.0)] {
+            assert_eq!(cmp_non_nan(&a, &b), a.partial_cmp(&b).unwrap(), "({a}, {b})");
+        }
+        // tuples (the (cost, cell) lexicographic pattern) work too
+        assert_eq!(cmp_non_nan(&(1.0, 5usize), &(1.0, 3usize)), Greater);
+        // incomparable pairs collapse to Equal instead of panicking
+        assert_eq!(cmp_non_nan(&f64::NAN, &1.0), Equal);
     }
 
     #[test]
