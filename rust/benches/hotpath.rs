@@ -5,9 +5,11 @@
 //! quotient construction plus the pooled push-forward's serial-vs-
 //! parallel sweep pair, greedy ordering plus its serial-vs-parallel
 //! fan-out pair (over the quotient graph, whose hub fan-outs clear the
-//! dispatch threshold), the PJRT-vs-native spectral engine, and the
+//! dispatch threshold), the PJRT-vs-native spectral engine, the
 //! multilevel hierarchical engine (serial vs two-phase parallel
-//! coarsen/refine/end2end rows with peak hierarchy memory_bytes). Every
+//! coarsen/refine/end2end rows with peak hierarchy memory_bytes), and
+//! the NoC simulator (serial vs two-phase parallel step pair plus the
+//! batched trace replay, all with pooled-scratch memory_bytes). Every
 //! serial/parallel pair asserts bit-identical outputs before recording.
 //!
 //! `--json <path>` additionally writes the numbers machine-readably so the
@@ -27,6 +29,10 @@ use snnmap::mapping::{self, sequential::SeqOrder};
 use snnmap::metrics::{evaluate, evaluate_serial};
 use snnmap::placement::{eigen, force, hilbert, spectral};
 use snnmap::runtime::PjrtRuntime;
+use snnmap::sim::{
+    simulate_batch_with_stats, simulate_serial, simulate_with_stats, SimConfig, SimParams,
+    SimReport, SimScratch, PAR_MIN_STREAMS,
+};
 use snnmap::util::cli::Args;
 use snnmap::util::json::Json;
 use snnmap::util::par;
@@ -420,6 +426,119 @@ fn main() {
         st_par.mean_secs(),
         st_ser.mean_secs() / st_par.mean_secs(),
         rho_par.num_parts
+    );
+
+    // 10. NoC simulator: serial reference step vs two-phase parallel
+    // accumulation, plus the batched trace replay, over the quotient
+    // mapping from sections 4-5. Every pair is asserted bit-identical on
+    // the full report before recording (DESIGN.md §16); memory_bytes is
+    // the pooled SimScratch high-water mark.
+    fn assert_sim_eq(a: &SimReport, b: &SimReport, what: &str) {
+        assert_eq!(a.spikes, b.spikes, "{what}: spikes");
+        assert_eq!(a.copies, b.copies, "{what}: copies");
+        assert_eq!(a.hops, b.hops, "{what}: hops");
+        assert_eq!(a.dropped_spikes, b.dropped_spikes, "{what}: dropped_spikes");
+        assert_eq!(a.detour_hops, b.detour_hops, "{what}: detour_hops");
+        assert_eq!(a.peak_router_load, b.peak_router_load, "{what}: peak_router_load");
+        assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "{what}: energy");
+        assert_eq!(
+            a.mean_makespan.to_bits(),
+            b.mean_makespan.to_bits(),
+            "{what}: mean_makespan"
+        );
+        assert_eq!(a.max_makespan.to_bits(), b.max_makespan.to_bits(), "{what}: max_makespan");
+        assert_eq!(
+            a.mean_peak_link_load.to_bits(),
+            b.mean_peak_link_load.to_bits(),
+            "{what}: mean_peak_link_load"
+        );
+        assert_eq!(a.timesteps, b.timesteps, "{what}: timesteps");
+    }
+    let sim_params = SimParams { timesteps: 200, seed: 17, poisson_spikes: true };
+    let sim_streams = gp.num_connections();
+    let mut sim_scratch = SimScratch::new();
+    let mut run_sim = |threads: usize| {
+        simulate_with_stats(&gp, &pl, &hw, sim_params, None, threads, &mut sim_scratch)
+    };
+    let ((rep_s_ser, ss_ser), st_s_ser) = bench(2, min_t, || run_sim(1));
+    let ((rep_s_par, ss_par), st_s_par) = bench(2, min_t, || run_sim(par::max_threads()));
+    let ref_rep = simulate_serial(&gp, &pl, &hw, sim_params, None);
+    assert_sim_eq(&ref_rep, &rep_s_ser, "pooled serial sim vs simulate_serial");
+    assert_sim_eq(&rep_s_ser, &rep_s_par, "parallel sim vs serial");
+    // At smoke scales the quotient may sit below the dispatch threshold;
+    // only then is the parallel row allowed to fall back to the serial step.
+    if sim_streams >= PAR_MIN_STREAMS && par::max_threads() > 1 {
+        assert!(
+            ss_par.par_steps > 0,
+            "parallel sim row never dispatched the two-phase step \
+             ({sim_streams} streams >= {PAR_MIN_STREAMS})"
+        );
+    }
+    for (name, st, ss) in [
+        ("sim_step_serial", &st_s_ser, &ss_ser),
+        ("sim_step_parallel", &st_s_par, &ss_par),
+    ] {
+        kernels.push((
+            name.to_string(),
+            Json::obj(vec![
+                ("secs_per_iter", Json::Num(st.mean_secs())),
+                (
+                    "steps_per_s",
+                    Json::Num(sim_params.timesteps as f64 / st.mean_secs().max(1e-12)),
+                ),
+                ("memory_bytes", Json::Num(ss.peak_scratch_bytes as f64)),
+            ]),
+        ));
+    }
+    println!(
+        "sim step (serial)      {:>10.3}s/iter  ({} streams, {} steps)",
+        st_s_ser.mean_secs(),
+        sim_streams,
+        sim_params.timesteps
+    );
+    println!(
+        "sim step ({} thr)       {:>9.3}s/iter  ({:.2}x, {} par steps, bit-identical to serial)",
+        par::max_threads(),
+        st_s_par.mean_secs(),
+        st_s_ser.mean_secs() / st_s_par.mean_secs(),
+        ss_par.par_steps
+    );
+    let batch_cfgs: Vec<SimConfig> = (0..4u64)
+        .map(|i| SimConfig {
+            params: SimParams { timesteps: 50, seed: 100 + i, poisson_spikes: true },
+            rate_scale: 1.0,
+            faults: None,
+        })
+        .collect();
+    let ((batch_reps, bs), st_b) = bench(2, min_t, || {
+        simulate_batch_with_stats(&gp, &pl, &hw, &batch_cfgs, par::max_threads(), &mut sim_scratch)
+    });
+    for (i, cfg) in batch_cfgs.iter().enumerate() {
+        let solo = snnmap::sim::simulate_with_threads(
+            &gp,
+            &pl,
+            &hw,
+            cfg.params,
+            cfg.faults,
+            par::max_threads(),
+        );
+        assert_sim_eq(&solo, &batch_reps[i], "batched replay vs one-by-one");
+    }
+    kernels.push((
+        "sim_batch".to_string(),
+        Json::obj(vec![
+            ("secs_per_iter", Json::Num(st_b.mean_secs())),
+            (
+                "configs_per_s",
+                Json::Num(batch_cfgs.len() as f64 / st_b.mean_secs().max(1e-12)),
+            ),
+            ("memory_bytes", Json::Num(bs.peak_scratch_bytes as f64)),
+        ]),
+    ));
+    println!(
+        "sim batch ({} cfgs)     {:>9.3}s/iter  (bit-identical to one-by-one replay)",
+        batch_cfgs.len(),
+        st_b.mean_secs()
     );
     common::hr();
     println!("targets (DESIGN.md §8): overlap >= 5e6 conn/s; metrics >= 1e7 synapse-visits/s.");

@@ -58,6 +58,9 @@ const EXPECTED_ROWS: &[&str] = &[
     "quotient_push_parallel",
     "quotient_push_serial",
     "sequential_ordered",
+    "sim_batch",
+    "sim_step_parallel",
+    "sim_step_serial",
     "spectral_native",
     "spectral_placement",
 ];

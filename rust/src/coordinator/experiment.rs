@@ -5,6 +5,12 @@
 //! Grid cells are [`StageSpec`] references resolved through the stage
 //! registry — the grid is `PipelineSpec`-driven and accepts any
 //! registered algorithm, not just the built-in enums.
+//!
+//! With [`GridSpec::sim_steps`] > 0 every successful cell additionally
+//! replays NoC traffic over its mapping: the (sim seed × rate scale)
+//! configurations run through one [`crate::sim::simulate_batch`] call
+//! per cell, so streams are built once and the cell's fault mask is
+//! route-classified once for the whole sweep (DESIGN.md §16).
 
 use super::pipeline::{MapperPipeline, PartitionerKind};
 use super::registry::StageRegistry;
@@ -37,6 +43,13 @@ pub struct ExperimentRow {
     pub sr_geo: f64,
     pub cl_arith: f64,
     pub cl_geo: f64,
+    /// Mean simulated energy per timestep (pJ) over the cell's replay
+    /// batch; `None` when the grid runs without simulation.
+    pub sim_energy_per_step: Option<f64>,
+    /// Mean of the batch's per-replay mean makespans (ns).
+    pub sim_makespan: Option<f64>,
+    /// Mean dropped-spike count per replay (0 for fault-free cells).
+    pub sim_dropped: Option<f64>,
     pub partition_time: Duration,
     pub placement_time: Duration,
     pub error: Option<String>,
@@ -45,7 +58,7 @@ pub struct ExperimentRow {
 impl ExperimentRow {
     /// Column names — the single source of truth for header/row arity
     /// (the field array below is the same fixed size by construction).
-    pub const COLUMNS: [&'static str; 20] = [
+    pub const COLUMNS: [&'static str; 23] = [
         "network",
         "nodes",
         "connections",
@@ -63,6 +76,9 @@ impl ExperimentRow {
         "sr_geo",
         "cl_arith",
         "cl_geo",
+        "sim_energy_per_step",
+        "sim_makespan",
+        "sim_dropped",
         "partition_time_s",
         "placement_time_s",
         "error",
@@ -73,8 +89,14 @@ impl ExperimentRow {
         Self::COLUMNS.join(",")
     }
 
+    /// Format an optional simulation metric: empty cell when the grid
+    /// ran without simulation.
+    fn sim_field(v: Option<f64>) -> String {
+        v.map(|x| format!("{x:.6e}")).unwrap_or_default()
+    }
+
     /// Row fields in [`Self::COLUMNS`] order, unescaped.
-    pub fn csv_fields(&self) -> [String; 20] {
+    pub fn csv_fields(&self) -> [String; 23] {
         [
             self.network.clone(),
             self.nodes.to_string(),
@@ -93,6 +115,9 @@ impl ExperimentRow {
             format!("{:.4}", self.sr_geo),
             format!("{:.4}", self.cl_arith),
             format!("{:.4}", self.cl_geo),
+            Self::sim_field(self.sim_energy_per_step),
+            Self::sim_field(self.sim_makespan),
+            Self::sim_field(self.sim_dropped),
             format!("{:.4}", self.partition_time.as_secs_f64()),
             format!("{:.4}", self.placement_time.as_secs_f64()),
             self.error.clone().unwrap_or_default(),
@@ -134,6 +159,16 @@ pub struct GridSpec {
     /// with a cell mapped under a seeded uniform-rate fault mask
     /// (`FaultSpec::Sampled` at the grid seed). Empty = fault-free only.
     pub fault_rates: Vec<f64>,
+    /// NoC-replay timesteps per simulation config; 0 disables the
+    /// post-mapping simulation pass (the sim_* CSV columns stay empty).
+    pub sim_steps: usize,
+    /// Spike-RNG seeds of the per-cell replay batch; empty = the grid
+    /// seed alone.
+    pub sim_seeds: Vec<u64>,
+    /// Spike-rate multipliers of the per-cell replay batch; empty =
+    /// `[1.0]`. The batch is the (seed × rate-scale) cross product, fed
+    /// to [`crate::sim::simulate_batch`] in that fixed order.
+    pub sim_rate_scales: Vec<f64>,
 }
 
 impl GridSpec {
@@ -149,6 +184,9 @@ impl GridSpec {
             threads: 1,
             hw: None,
             fault_rates: vec![],
+            sim_steps: 0,
+            sim_seeds: vec![],
+            sim_rate_scales: vec![],
         }
     }
 
@@ -172,7 +210,7 @@ impl GridSpec {
     pub fn from_json(doc: &crate::util::json::Json) -> Result<GridSpec, String> {
         let registry = StageRegistry::global();
         if let Some(obj) = doc.as_obj() {
-            const KNOWN: [&str; 8] = [
+            const KNOWN: [&str; 11] = [
                 "networks",
                 "scale",
                 "seed",
@@ -181,6 +219,9 @@ impl GridSpec {
                 "threads",
                 "hw",
                 "fault_rates",
+                "sim_steps",
+                "sim_seeds",
+                "sim_rate_scales",
             ];
             for key in obj.keys() {
                 if !KNOWN.contains(&key.as_str()) {
@@ -249,6 +290,31 @@ impl GridSpec {
                 })
                 .collect::<Result<_, String>>()?;
         }
+        if let Some(steps) = doc.get("sim_steps").as_usize() {
+            spec.sim_steps = steps;
+        }
+        if let Some(seeds) = doc.get("sim_seeds").as_arr() {
+            spec.sim_seeds = seeds
+                .iter()
+                .map(|s| {
+                    s.as_f64()
+                        .map(|v| v as u64)
+                        .ok_or_else(|| "sim_seeds entries must be numbers".to_string())
+                })
+                .collect::<Result<_, String>>()?;
+        }
+        if let Some(scales) = doc.get("sim_rate_scales").as_arr() {
+            spec.sim_rate_scales = scales
+                .iter()
+                .map(|r| {
+                    let v = r.as_f64().ok_or("sim_rate_scales entries must be numbers")?;
+                    if !(v.is_finite() && v > 0.0) {
+                        return Err(format!("sim rate scale must be finite and > 0, got {v}"));
+                    }
+                    Ok(v)
+                })
+                .collect::<Result<_, String>>()?;
+        }
         if spec.networks.is_empty() {
             return Err("config selects no networks".into());
         }
@@ -276,6 +342,9 @@ impl GridSpec {
             threads: 1,
             hw: None,
             fault_rates: vec![],
+            sim_steps: 0,
+            sim_seeds: vec![],
+            sim_rate_scales: vec![],
         }
     }
 }
@@ -343,30 +412,37 @@ fn run_network(spec: &GridSpec, name: &str) -> Vec<ExperimentRow> {
                     }),
                 };
                 let outcome = MapperPipeline::from_spec_with(registry, &cell)
-                    .and_then(|p| p.run(&net.graph, net.layer_ranges.as_deref()));
+                    .and_then(|p| p.run(&net.graph, net.layer_ranges.as_deref()).map(|r| (p, r)));
                 let row = match outcome {
-                    Ok(res) => ExperimentRow {
-                        network: net.name.clone(),
-                        nodes: net.graph.num_nodes(),
-                        connections: net.graph.num_connections(),
-                        partitioner: pk.name.clone(),
-                        placer: pl.name.clone(),
-                        refiner: rf.name.clone(),
-                        fault_rate: rate.unwrap_or(0.0),
-                        partitions: res.rho.num_parts,
-                        connectivity: res.metrics.connectivity,
-                        energy: res.metrics.energy,
-                        latency: res.metrics.latency,
-                        congestion: res.metrics.congestion,
-                        elp: res.metrics.elp,
-                        sr_arith: res.sr.0,
-                        sr_geo: res.sr.1,
-                        cl_arith: res.cl.0,
-                        cl_geo: res.cl.1,
-                        partition_time: res.partition_time,
-                        placement_time: res.placement_time,
-                        error: None,
-                    },
+                    Ok((pipeline, res)) => {
+                        let (sim_energy_per_step, sim_makespan, sim_dropped) =
+                            simulate_cell(spec, &pipeline, &res, inner_threads);
+                        ExperimentRow {
+                            network: net.name.clone(),
+                            nodes: net.graph.num_nodes(),
+                            connections: net.graph.num_connections(),
+                            partitioner: pk.name.clone(),
+                            placer: pl.name.clone(),
+                            refiner: rf.name.clone(),
+                            fault_rate: rate.unwrap_or(0.0),
+                            partitions: res.rho.num_parts,
+                            connectivity: res.metrics.connectivity,
+                            energy: res.metrics.energy,
+                            latency: res.metrics.latency,
+                            congestion: res.metrics.congestion,
+                            elp: res.metrics.elp,
+                            sr_arith: res.sr.0,
+                            sr_geo: res.sr.1,
+                            cl_arith: res.cl.0,
+                            cl_geo: res.cl.1,
+                            sim_energy_per_step,
+                            sim_makespan,
+                            sim_dropped,
+                            partition_time: res.partition_time,
+                            placement_time: res.placement_time,
+                            error: None,
+                        }
+                    }
                     Err(e) => ExperimentRow {
                         network: net.name.clone(),
                         nodes: net.graph.num_nodes(),
@@ -385,6 +461,9 @@ fn run_network(spec: &GridSpec, name: &str) -> Vec<ExperimentRow> {
                         sr_geo: f64::NAN,
                         cl_arith: f64::NAN,
                         cl_geo: f64::NAN,
+                        sim_energy_per_step: None,
+                        sim_makespan: None,
+                        sim_dropped: None,
                         partition_time: Duration::ZERO,
                         placement_time: Duration::ZERO,
                         error: Some(e.to_string()),
@@ -395,6 +474,53 @@ fn run_network(spec: &GridSpec, name: &str) -> Vec<ExperimentRow> {
         }
     }
     rows
+}
+
+/// Replay the cell's (seed × rate-scale) simulation batch and reduce it
+/// to the three sim_* columns. One [`crate::sim::simulate_batch`] call
+/// per cell: streams are built once and the cell's fault mask (shared
+/// by every config) is route-classified once. Means are accumulated in
+/// the fixed config order, so they are thread-count-invariant like the
+/// per-replay reports themselves.
+fn simulate_cell(
+    spec: &GridSpec,
+    pipeline: &MapperPipeline,
+    res: &crate::coordinator::pipeline::MappingResult,
+    threads: usize,
+) -> (Option<f64>, Option<f64>, Option<f64>) {
+    if spec.sim_steps == 0 {
+        return (None, None, None);
+    }
+    let seeds: Vec<u64> =
+        if spec.sim_seeds.is_empty() { vec![spec.seed] } else { spec.sim_seeds.clone() };
+    let scales: Vec<f64> =
+        if spec.sim_rate_scales.is_empty() { vec![1.0] } else { spec.sim_rate_scales.clone() };
+    let mut configs = Vec::with_capacity(seeds.len() * scales.len());
+    for &seed in &seeds {
+        for &rate_scale in &scales {
+            configs.push(crate::sim::SimConfig {
+                params: crate::sim::SimParams {
+                    timesteps: spec.sim_steps,
+                    seed,
+                    poisson_spikes: true,
+                },
+                rate_scale,
+                faults: pipeline.faults.as_ref(),
+            });
+        }
+    }
+    let reports =
+        crate::sim::simulate_batch(&res.gp, &res.placement, &pipeline.hw, &configs, threads);
+    let n = reports.len().max(1) as f64;
+    let mut energy_per_step = 0.0;
+    let mut makespan = 0.0;
+    let mut dropped = 0.0;
+    for r in &reports {
+        energy_per_step += r.energy_per_step();
+        makespan += r.mean_makespan;
+        dropped += r.dropped_spikes as f64;
+    }
+    (Some(energy_per_step / n), Some(makespan / n), Some(dropped / n))
 }
 
 #[cfg(test)]
@@ -483,6 +609,9 @@ mod tests {
             threads: 1,
             hw: Some(NmhConfig::small().scaled(0.05)),
             fault_rates: vec![],
+            sim_steps: 0,
+            sim_seeds: vec![],
+            sim_rate_scales: vec![],
         }
     }
 
@@ -519,7 +648,63 @@ mod tests {
         let fields = csv_split(&line);
         assert_eq!(fields.len(), ExperimentRow::COLUMNS.len());
         assert_eq!(fields[0], row.network);
-        assert_eq!(fields[19], row.error.clone().unwrap());
+        assert_eq!(fields[22], row.error.clone().unwrap());
+    }
+
+    #[test]
+    fn sim_columns_empty_when_simulation_is_off() {
+        let rows = run_grid(&tiny_spec());
+        for r in &rows {
+            assert!(r.sim_energy_per_step.is_none());
+            assert!(r.sim_makespan.is_none());
+            assert!(r.sim_dropped.is_none());
+            let fields = r.csv_fields();
+            assert_eq!(fields[17], "", "sim_energy_per_step cell");
+            assert_eq!(fields[18], "", "sim_makespan cell");
+            assert_eq!(fields[19], "", "sim_dropped cell");
+        }
+    }
+
+    #[test]
+    fn sim_columns_populate_from_batched_replay() {
+        let mut spec = tiny_spec();
+        spec.partitioners = vec![StageSpec::new("sequential")];
+        spec.sim_steps = 20;
+        spec.sim_seeds = vec![1, 2];
+        spec.sim_rate_scales = vec![1.0, 2.0];
+        let rows = run_grid(&spec);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert!(r.error.is_none(), "{:?}", r.error);
+        let e = r.sim_energy_per_step.expect("sim energy");
+        let m = r.sim_makespan.expect("sim makespan");
+        assert!(e.is_finite() && e > 0.0, "energy/step {e}");
+        assert!(m.is_finite() && m > 0.0, "makespan {m}");
+        assert_eq!(r.sim_dropped, Some(0.0), "fault-free cell drops nothing");
+        // deterministic: a rerun reproduces the aggregates bit for bit
+        let again = run_grid(&spec);
+        assert_eq!(again[0].sim_energy_per_step.unwrap().to_bits(), e.to_bits());
+        assert_eq!(again[0].sim_makespan.unwrap().to_bits(), m.to_bits());
+    }
+
+    #[test]
+    fn json_config_parses_sim_fields() {
+        let doc = Json::parse(
+            r#"{"scale": 0.05, "sim_steps": 50, "sim_seeds": [3, 4], "sim_rate_scales": [0.5, 1.0]}"#,
+        )
+        .unwrap();
+        let spec = GridSpec::from_json(&doc).unwrap();
+        assert_eq!(spec.sim_steps, 50);
+        assert_eq!(spec.sim_seeds, vec![3, 4]);
+        assert_eq!(spec.sim_rate_scales, vec![0.5, 1.0]);
+        for bad in [
+            r#"{"sim_rate_scales": [0.0]}"#,
+            r#"{"sim_rate_scales": ["fast"]}"#,
+            r#"{"sim_seeds": ["a"]}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(GridSpec::from_json(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -480,6 +480,25 @@ impl MapperPipeline {
             refine_stats,
         })
     }
+
+    /// Replay NoC traffic over a completed mapping (DESIGN.md §16),
+    /// honoring this pipeline's worker count and fault mask the same
+    /// way the mapping stages receive them through [`StageCtx`]. The
+    /// report is bit-for-bit identical for every `threads` value.
+    pub fn simulate(
+        &self,
+        res: &MappingResult,
+        params: crate::sim::SimParams,
+    ) -> crate::sim::SimReport {
+        crate::sim::simulate_with_threads(
+            &res.gp,
+            &res.placement,
+            &self.hw,
+            params,
+            self.faults.as_ref(),
+            self.threads,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -511,6 +530,30 @@ mod tests {
             assert!(res.metrics.energy > 0.0);
             assert!(res.sr.0 >= 1.0, "{} reuse {}", pk.name(), res.sr.0);
         }
+    }
+
+    #[test]
+    fn pipeline_simulate_matches_serial_reference() {
+        // pipeline.simulate wires self.threads + self.faults through to
+        // the simulator; the result must equal the serial oracle bitwise
+        let net = small_net();
+        let hw = small_hw();
+        let mask = crate::hw::faults::FaultMask::healthy(&hw);
+        let pipeline = MapperPipeline::new(hw)
+            .partitioner(PartitionerKind::Sequential)
+            .placer(PlacerKind::Hilbert)
+            .refiner(RefinerKind::None)
+            .threads(4)
+            .with_faults(mask.clone());
+        let res = pipeline.run(&net.graph, net.layer_ranges.as_deref()).unwrap();
+        let params = crate::sim::SimParams { timesteps: 20, seed: 5, poisson_spikes: true };
+        let got = pipeline.simulate(&res, params);
+        let want =
+            crate::sim::simulate_serial(&res.gp, &res.placement, &pipeline.hw, params, Some(&mask));
+        assert_eq!(got.spikes, want.spikes);
+        assert_eq!(got.hops, want.hops);
+        assert_eq!(got.energy.to_bits(), want.energy.to_bits());
+        assert_eq!(got.mean_makespan.to_bits(), want.mean_makespan.to_bits());
     }
 
     #[test]

@@ -35,7 +35,14 @@
 //!   [`mapping::repair`] re-maps after a core/link death with minimal
 //!   neuron churn. `None`/all-healthy masks are bit-identical to the
 //!   fault-free pipeline. CLI: `--fault-rate F` / `--fault-spec FILE`
-//!   and the `repair` subcommand.
+//!   and the `repair` subcommand;
+//! * the NoC simulator follows the same two-phase discipline (DESIGN.md
+//!   §16): [`sim::simulate_with_threads`] is bit-identical across
+//!   worker counts (integer-only chunk accumulators, serial merge), and
+//!   [`sim::simulate_batch`] replays many (seed, rate-scale,
+//!   fault-mask) configs through shared streams/routes/scratch — the
+//!   experiment grid's `--sim-steps`/`--sim-seeds`/`--sim-rate-scales`
+//!   axes ride it.
 //!
 //! Quick tour — the enum-builder shims and the spec form drive the same
 //! registry-backed pipeline:

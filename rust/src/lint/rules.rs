@@ -326,7 +326,11 @@ pub fn run(files: &[(String, String)]) -> LintReport {
                                 "unordered-iteration",
                                 &f.path,
                                 line,
-                                format!("hash-ordered `{name}` iteration can leak into results"),
+                                format!(
+                                    "hash-ordered `{name}` iteration can leak into results — \
+                                     collect into a Vec and sort before iterating, or switch \
+                                     to a BTreeMap/BTreeSet"
+                                ),
                             );
                         }
                     }

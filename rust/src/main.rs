@@ -18,6 +18,27 @@
 //! actually used. A spec plus the same input network (same
 //! `--network/--scale/--seed` or `--in` file) reproduces the mapping
 //! bit for bit; the network itself is not part of the spec.
+//!
+//! Simulate / repair quickstart (DESIGN.md §15-§16):
+//!
+//! ```text
+//! # map lenet, then replay 500 NoC timesteps over the mapping
+//! snnmap simulate --network lenet --scale 0.1 --steps 500 --out-report sim.json
+//!
+//! # the same lattice with 5% sampled faults: traffic detours (YX, then
+//! # BFS) around dead links and drops at dead cores; the report's
+//! # dropped_spikes / detour_hops columns quantify the degradation
+//! snnmap simulate --network lenet --scale 0.1 --steps 500 \
+//!     --fault-rate 0.05 --fault-seed 13
+//!
+//! # post-deployment core death: remap core (0,0)'s partition with
+//! # minimal neuron churn, keeping every healthy placement in place
+//! snnmap repair --network lenet --scale 0.1 --kill-core 0,0
+//! ```
+//!
+//! The simulator honors the pipeline worker count and is bit-for-bit
+//! thread-invariant (DESIGN.md §16); `simulate` replays over the exact
+//! mapping the flags reproduce.
 
 use snnmap::coordinator::{
     ensemble, experiment, MapperPipeline, PipelineSpec, StageRegistry, StageSpec,
@@ -28,7 +49,7 @@ use snnmap::hypergraph::{io as hgio, stats};
 use snnmap::mapping::repair::{self, FaultEvent};
 use snnmap::metrics::evaluate;
 use snnmap::runtime::{checkpoint, PjrtRuntime};
-use snnmap::sim::{simulate_faulty, SimParams};
+use snnmap::sim::SimParams;
 use snnmap::snn::{self, spikefreq};
 use snnmap::stage::{StageCtx, StageParams};
 use snnmap::util::cli::Args;
@@ -84,6 +105,10 @@ repair options (one event, applied to the mapped network):
 ensemble options: --budget-secs N (default 60)
 experiment options: --grid fig9|fig10 | --config FILE.json
                     --out FILE.csv --threads N
+                    --sim-steps N        replay N NoC timesteps per cell
+                                         (batched; fills the sim_* columns)
+                    --sim-seeds A,B,..   replay seeds (default: grid seed)
+                    --sim-rate-scales F,..  spike-rate multipliers (default 1.0)
 multichip options: --chips-x N --chips-y N (default 2x2)
                    --off-chip-factor F (default 10)
                    --local-placer NAME (default spectral)";
@@ -471,12 +496,11 @@ fn cmd_simulate(args: &Args) {
             std::process::exit(1);
         });
     let steps = args.get_usize("steps", 200);
-    let rep = simulate_faulty(
-        &res.gp,
-        &res.placement,
-        &pipeline.hw,
+    // threads + faults flow through the pipeline exactly as they did to
+    // the mapping stages; the report is identical for any worker count
+    let rep = pipeline.simulate(
+        &res,
         SimParams { timesteps: steps, seed: args.get_u64("seed", 42), poisson_spikes: true },
-        pipeline.faults.as_ref(),
     );
     let analytic = evaluate(&res.gp, &res.placement, &pipeline.hw);
     println!(
@@ -652,6 +676,36 @@ fn cmd_experiment(args: &Args) {
     spec.threads = args.get_usize("threads", 1);
     if let Some(nets) = args.get("networks") {
         spec.networks = nets.split(',').map(String::from).collect();
+    }
+    if let Some(steps) = args.get("sim-steps") {
+        spec.sim_steps = steps.parse().unwrap_or_else(|_| {
+            eprintln!("bad --sim-steps '{steps}' (expected a count)");
+            std::process::exit(2);
+        });
+    }
+    if let Some(seeds) = args.get("sim-seeds") {
+        spec.sim_seeds = seeds
+            .split(',')
+            .map(|s| {
+                s.trim().parse().unwrap_or_else(|_| {
+                    eprintln!("bad --sim-seeds entry '{s}' (expected integers)");
+                    std::process::exit(2);
+                })
+            })
+            .collect();
+    }
+    if let Some(scales) = args.get("sim-rate-scales") {
+        spec.sim_rate_scales = scales
+            .split(',')
+            .map(|s| {
+                let v: f64 = s.trim().parse().unwrap_or(f64::NAN);
+                if !(v.is_finite() && v > 0.0) {
+                    eprintln!("bad --sim-rate-scales entry '{s}' (expected > 0)");
+                    std::process::exit(2);
+                }
+                v
+            })
+            .collect();
     }
     let rows = experiment::run_grid(&spec);
     match args.get("out") {

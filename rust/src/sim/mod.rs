@@ -3,12 +3,25 @@
 //! The paper (like [7]) scores mappings with the *analytic* Table I model.
 //! This module provides the executable counterpart: a discrete-timestep
 //! simulator that draws spikes per h-edge, routes each copy over the 2D
-//! mesh with dimension-ordered (XY) routing, and accounts energy, per-link
-//! and per-router traffic, and makespan latency. It validates the analytic
+//! mesh with dimension-ordered (XY) routing — or the YX / BFS-detour
+//! fault fallbacks of DESIGN.md §15 — and accounts energy, per-link and
+//! per-router traffic, and makespan latency. It validates the analytic
 //! metrics (expected simulated energy equals Table I energy exactly) and
 //! exposes congestion behaviour an expectation model can't (hot links,
 //! tail timesteps).
+//!
+//! Since DESIGN.md §16 the per-step accumulation is parallel under the
+//! repo's two-phase propose/commit discipline and bit-for-bit
+//! thread-invariant: [`simulate_with_threads`] honors an explicit worker
+//! count, [`simulate_serial`] is the tested single-worker reference, and
+//! [`simulate_batch`] replays many (seed, rate-scale, fault-mask)
+//! configurations through one pooled [`SimScratch`] with shared route
+//! classification.
 
 pub mod noc;
 
-pub use noc::{simulate, simulate_faulty, SimParams, SimReport};
+pub use noc::{
+    simulate, simulate_batch, simulate_batch_with_stats, simulate_faulty, simulate_serial,
+    simulate_with_stats, simulate_with_threads, SimConfig, SimParams, SimReport, SimScratch,
+    SimStats, PAR_MIN_STREAMS,
+};

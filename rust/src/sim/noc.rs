@@ -1,30 +1,81 @@
-//! Discrete-timestep mesh NoC simulator with XY routing.
+//! Discrete-timestep mesh NoC simulator with XY routing — parallel
+//! two-phase edition (DESIGN.md §16).
 //!
-//! Fault injection (DESIGN.md §15): under a
-//! [`crate::hw::faults::FaultMask`] every (h-edge, destination) copy
-//! stream is classified once — healthy XY path, deterministic YX
-//! fallback, shortest alive BFS detour (neighbor order E, W, N, S), or
-//! dropped when no alive path exists. Dead links and dead cores carry
-//! zero traffic; [`SimReport::dropped_spikes`] and
-//! [`SimReport::detour_hops`] quantify the degradation. `faults: None`
-//! and an all-healthy mask reproduce the pre-fault simulation bit for
-//! bit (every stream classifies as the verbatim XY path, and the spike
-//! RNG is consumed per h-edge regardless of routing).
+//! # Model
+//!
+//! Each simulated timestep draws a spike count per h-edge (Poisson with
+//! the edge weight as its mean, or Bernoulli for sub-unit rates), then
+//! walks every (h-edge, destination) *copy stream* over the mesh,
+//! accumulating per-link and per-router flit loads plus event totals.
+//! Energy prices those totals with the Table I constants (per-routing
+//! event `e_r`, per-wire-hop `e_t`); makespan serializes the hottest
+//! link per step (`peak_link * (l_r + l_t) + l_r`, in ns).
+//!
+//! # Two-phase parallel stepping
+//!
+//! The per-step accumulation follows the repo's propose/commit
+//! discipline (DESIGN.md §10-§12, §16): copy streams are split into
+//! fixed chunks by [`crate::util::par::fixed_chunk`] — a pure function
+//! of `(stream count, threads)`, never of scheduling — and each chunk
+//! fills a private **integer** accumulator ([`ChunkAcc`]) against
+//! step-start state. The serial commit then merges chunk accumulators
+//! in ascending link-id / router-id / chunk order. Because the propose
+//! phase is integer-only (exact, associative), and every `f64` in the
+//! report is derived from those exactly-summed integers in one fixed
+//! serial expression, the output is bit-for-bit identical for any
+//! worker count. [`simulate_serial`] is the tested reference
+//! (`sim_parallel_equals_serial_exactly`).
+//!
+//! # Batched trace replay
+//!
+//! [`simulate_batch`] replays many [`SimConfig`] variations — seed,
+//! spike-rate scale, fault mask — through one pooled [`SimScratch`]:
+//! copy streams are built once per (graph, placement) and fault-route
+//! classification is shared between consecutive configs that reference
+//! the same mask, so grid sweeps stop re-deriving routes per cell.
+//!
+//! # Fault injection
+//!
+//! Fault routing (DESIGN.md §15) classifies every copy stream once,
+//! statically, with the precedence **XY → YX → BFS detour → drop**:
+//! healthy XY path first, deterministic YX fallback second, shortest
+//! alive BFS detour (neighbor order E, W, N, S) third, dropped when no
+//! alive path exists. Dead links and dead cores carry zero traffic;
+//! [`SimReport::dropped_spikes`] and [`SimReport::detour_hops`]
+//! quantify the degradation. `faults: None` and an all-healthy mask
+//! reproduce the fault-free simulation bit for bit (every stream
+//! classifies as the verbatim XY path, and the spike RNG is consumed
+//! per h-edge regardless of routing).
+
+use std::time::Instant;
 
 use crate::hw::faults::{FaultMask, DIR_STEPS};
 use crate::hw::NmhConfig;
 use crate::hypergraph::Hypergraph;
 use crate::placement::Placement;
+use crate::util::par;
 use crate::util::rng::Pcg64;
 
-/// Simulation parameters.
+/// Minimum copy-stream count before a step dispatches to the parallel
+/// propose phase; below it, chunk bookkeeping costs more than the walk.
+/// The dispatch (like every two-phase stage) depends only on this
+/// constant and the requested worker count — never on scheduling.
+pub const PAR_MIN_STREAMS: usize = 1024;
+
+/// Simulation parameters for one trace replay.
 #[derive(Clone, Copy, Debug)]
 pub struct SimParams {
+    /// Number of discrete timesteps to simulate. Each step draws fresh
+    /// spike counts and re-accumulates link/router loads from zero.
     pub timesteps: usize,
+    /// Spike-RNG seed (stream 41 of [`Pcg64`]); two runs with equal
+    /// seeds draw identical spike trains regardless of fault mask.
     pub seed: u64,
     /// Spike count per h-edge per timestep ~ Poisson(w) so the expected
     /// traffic matches the analytic model exactly (w is a frequency, not
     /// a probability — biological rates exceed 1 spike/step in the tail).
+    /// When `false`, draws Bernoulli(min(w, 1)) instead: at most one
+    /// spike per edge per step.
     pub poisson_spikes: bool,
 }
 
@@ -34,19 +85,52 @@ impl Default for SimParams {
     }
 }
 
+/// One batched-replay configuration: parameters plus the two axes the
+/// experiment grid sweeps, spike-rate scale and fault mask.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig<'a> {
+    /// Timesteps / seed / spike-distribution knobs.
+    pub params: SimParams,
+    /// Multiplier applied to every edge weight before the spike draw
+    /// (a whole-network firing-rate profile). `1.0` is bit-identical to
+    /// the unscaled simulator (IEEE `x * 1.0 == x`).
+    pub rate_scale: f64,
+    /// Optional hardware fault mask. Consecutive batch configs that
+    /// borrow the *same* mask share one route classification.
+    pub faults: Option<&'a FaultMask>,
+}
+
+impl SimConfig<'_> {
+    /// A fault-free, unscaled configuration.
+    pub fn new(params: SimParams) -> Self {
+        SimConfig { params, rate_scale: 1.0, faults: None }
+    }
+}
+
 /// Aggregated simulation results.
+///
+/// All `f64` fields are derived from exactly-summed integer event
+/// counts in a fixed serial expression order, so reports are
+/// bit-for-bit comparable across worker counts (DESIGN.md §16).
 #[derive(Clone, Debug, Default)]
 pub struct SimReport {
+    /// Timesteps simulated (copied from [`SimParams::timesteps`]).
     pub timesteps: usize,
-    /// Total spikes generated (axon firings).
+    /// Total spikes generated (axon firings), summed over h-edges.
     pub spikes: u64,
-    /// Total inter/intra-core spike copies delivered.
+    /// Total inter/intra-core spike copies delivered (one per alive
+    /// (h-edge, destination) stream per firing).
     pub copies: u64,
-    /// Total hop count across all copies.
+    /// Total link traversals (hops) across all delivered copies.
     pub hops: u64,
-    /// Total energy, pJ (per Table I per-copy pricing).
+    /// Total energy in pJ: `copies * e_r + hops * (e_r + e_t)` with the
+    /// Table I per-event costs (`e_r` per routing event — every copy
+    /// pays one at the destination router and one per transit router;
+    /// `e_t` per wire hop).
     pub energy: f64,
-    /// Mean per-timestep makespan latency, ns (serialized hottest link).
+    /// Mean per-timestep makespan latency, ns: the hottest link
+    /// serializes its flits (`peak_link * (l_r + l_t)`) plus one router
+    /// pass `l_r`, per Table I latency costs.
     pub mean_makespan: f64,
     /// Worst per-timestep makespan, ns.
     pub max_makespan: f64,
@@ -130,8 +214,9 @@ fn yx_step(cur: (u16, u16), dst: (u16, u16)) -> ((u16, u16), usize) {
 }
 
 /// Static route of one (h-edge, destination) copy stream under a fault
-/// mask. Faults are static, so classification happens once per stream,
-/// outside the timestep loop.
+/// mask, per the XY → YX → BFS detour → drop precedence. Faults are
+/// static, so classification happens once per stream, outside the
+/// timestep loop — and in batched replay, once per distinct mask.
 enum Route {
     /// Healthy XY path — simulated with the pre-fault accounting code,
     /// verbatim (bit-identity for all-healthy masks).
@@ -238,7 +323,393 @@ fn classify_route(hw: &NmhConfig, m: &FaultMask, src: (u16, u16), dst: (u16, u16
     }
 }
 
-/// Run the simulator over a mapped SNN.
+/// One (h-edge, destination) copy stream, flattened from the nested
+/// edge → dsts walk in that exact order so `streams[i]` pairs with the
+/// `i`-th classified [`Route`].
+#[derive(Clone, Copy)]
+struct Stream {
+    /// Source h-edge (indexes the per-step spike-draw table).
+    edge: u32,
+    src: (u16, u16),
+    dst: (u16, u16),
+}
+
+/// Flatten the (edge, dst) streams of a mapped graph, in edge order then
+/// dsts order — the accounting order of the serial reference.
+fn build_streams(gp: &Hypergraph, placement: &Placement, out: &mut Vec<Stream>) {
+    out.clear();
+    for e in gp.edge_ids() {
+        let src = placement.coords[gp.source(e) as usize];
+        for &d in gp.dsts(e) {
+            out.push(Stream { edge: e, src, dst: placement.coords[d as usize] });
+        }
+    }
+}
+
+/// Classify every stream under `m` into `out` (index-aligned with
+/// `streams`). Classification is pure per stream, so the parallel path
+/// via [`par::par_map`] — which returns results in index order — is
+/// trivially identical to the serial loop.
+fn classify_routes(
+    hw: &NmhConfig,
+    m: &FaultMask,
+    streams: &[Stream],
+    threads: usize,
+    out: &mut Vec<Route>,
+) {
+    out.clear();
+    if threads > 1 && streams.len() >= PAR_MIN_STREAMS {
+        out.extend(par::par_map(streams.len(), threads, |i| {
+            classify_route(hw, m, streams[i].src, streams[i].dst)
+        }));
+    } else {
+        out.reserve(streams.len());
+        for s in streams {
+            out.push(classify_route(hw, m, s.src, s.dst));
+        }
+    }
+}
+
+/// Integer event totals of one simulated step — exact, so any summation
+/// order (chunk merge vs serial walk) yields identical values.
+#[derive(Clone, Copy, Default)]
+struct StepTotals {
+    copies: u64,
+    hops: u64,
+    dropped: u64,
+    detour: u64,
+}
+
+/// Per-chunk propose-phase accumulator: link/router flit loads plus the
+/// step totals of this chunk's streams. Integer-only by design — the
+/// commit merge is exact regardless of chunk count (DESIGN.md §16).
+#[derive(Default)]
+struct ChunkAcc {
+    link: Vec<u32>,
+    router: Vec<u32>,
+    totals: StepTotals,
+}
+
+impl ChunkAcc {
+    fn reset(&mut self, num_links: usize, num_cores: usize) {
+        self.link.clear();
+        self.link.resize(num_links, 0);
+        self.router.clear();
+        self.router.resize(num_cores, 0);
+        self.totals = StepTotals::default();
+    }
+}
+
+/// Pooled per-run working state: spike draws, merged per-step loads,
+/// chunk accumulators, and the makespan trace. Split out of
+/// [`SimScratch`] so the route table can stay borrowed while the core
+/// is mutated.
+#[derive(Default)]
+struct CoreScratch {
+    fires: Vec<u32>,
+    link_load: Vec<u32>,
+    router_load: Vec<u32>,
+    chunks: Vec<ChunkAcc>,
+    makespans: Vec<f64>,
+}
+
+impl CoreScratch {
+    fn memory_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let mut b = self.fires.capacity() * size_of::<u32>()
+            + self.link_load.capacity() * size_of::<u32>()
+            + self.router_load.capacity() * size_of::<u32>()
+            + self.makespans.capacity() * size_of::<f64>();
+        for c in &self.chunks {
+            b += c.link.capacity() * size_of::<u32>() + c.router.capacity() * size_of::<u32>();
+        }
+        b
+    }
+}
+
+/// Reusable simulator scratch: copy streams, the fault-route table, and
+/// the per-step working state. One `SimScratch` serves an entire
+/// [`simulate_batch`] sweep — allocations are made once and recycled.
+#[derive(Default)]
+pub struct SimScratch {
+    streams: Vec<Stream>,
+    routes: Vec<Route>,
+    core: CoreScratch,
+}
+
+impl SimScratch {
+    /// An empty scratch; buffers grow on first use and are then reused.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current heap footprint of every pooled buffer (capacities, not
+    /// lengths) — the bench rows' `memory_bytes` high-water mark.
+    pub fn memory_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let mut b = self.streams.capacity() * size_of::<Stream>()
+            + self.routes.capacity() * size_of::<Route>();
+        for r in &self.routes {
+            if let Route::Path(hops, _) = r {
+                b += hops.capacity() * size_of::<((u16, u16), usize)>();
+            }
+        }
+        b + self.core.memory_bytes()
+    }
+}
+
+/// Instrumentation for one simulator invocation (reset per call, summed
+/// across a batch): phase timings, the parallel-dispatch counter the
+/// equality tests assert non-vacuous, and the scratch high-water mark.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimStats {
+    /// Seconds in the serial spike-draw pre-pass (RNG order is part of
+    /// the determinism contract, so draws never run in parallel).
+    pub draw_secs: f64,
+    /// Seconds in the accumulation scan (parallel propose or the serial
+    /// walk, whichever the dispatch chose).
+    pub scan_secs: f64,
+    /// Seconds in the serial commit merge (parallel steps only).
+    pub commit_secs: f64,
+    /// Steps that dispatched to the parallel propose phase.
+    pub par_steps: u64,
+    /// High-water heap footprint of the pooled [`SimScratch`].
+    pub peak_scratch_bytes: usize,
+}
+
+/// Account one firing copy stream into link/router loads and step
+/// totals. Shared verbatim by [`sim_step_serial`] and the per-chunk
+/// propose phase of [`sim_step_parallel`] — the two paths cannot
+/// diverge on per-stream arithmetic.
+#[inline]
+fn account_stream(
+    hw: &NmhConfig,
+    s: &Stream,
+    fires: u32,
+    route: Option<&Route>,
+    link: &mut [u32],
+    router: &mut [u32],
+    t: &mut StepTotals,
+) {
+    match route {
+        None | Some(Route::Xy) => {
+            t.copies += fires as u64;
+            // destination router always pays one routing event
+            router[hw.index(s.dst.0, s.dst.1)] += fires;
+            let mut cur = s.src;
+            while cur != s.dst {
+                let (next, dir) = xy_step(cur, s.dst);
+                link[link_id(hw, cur.0, cur.1, dir)] += fires;
+                router[hw.index(cur.0, cur.1)] += fires;
+                t.hops += fires as u64;
+                cur = next;
+            }
+        }
+        Some(Route::Path(hops, extra)) => {
+            t.copies += fires as u64;
+            router[hw.index(s.dst.0, s.dst.1)] += fires;
+            for &((cx, cy), dir) in hops {
+                link[link_id(hw, cx, cy, dir)] += fires;
+                router[hw.index(cx, cy)] += fires;
+                t.hops += fires as u64;
+            }
+            t.detour += *extra * fires as u64;
+        }
+        Some(Route::Drop) => t.dropped += fires as u64,
+    }
+}
+
+/// Serial reference step: zero the load arrays, walk every stream in
+/// order. The twin kept honest by `sim_parallel_equals_serial_exactly`.
+fn sim_step_serial(
+    hw: &NmhConfig,
+    streams: &[Stream],
+    routes: Option<&[Route]>,
+    fires: &[u32],
+    link_load: &mut [u32],
+    router_load: &mut [u32],
+) -> StepTotals {
+    link_load.iter_mut().for_each(|l| *l = 0);
+    router_load.iter_mut().for_each(|l| *l = 0);
+    let mut t = StepTotals::default();
+    for (i, s) in streams.iter().enumerate() {
+        let f = fires[s.edge as usize];
+        if f == 0 {
+            continue;
+        }
+        account_stream(hw, s, f, routes.map(|r| &r[i]), link_load, router_load, &mut t);
+    }
+    t
+}
+
+/// Parallel two-phase step. Propose: each fixed stream chunk fills its
+/// private integer [`ChunkAcc`] (one chunk per [`par_chunks_mut`] slot,
+/// dynamic scheduling over disjoint slots). Commit: merge per link id,
+/// then per router id, then scalar totals, always in ascending chunk
+/// order. Integer addition is associative and commutative, so the merge
+/// equals the serial walk exactly — bit-identity holds without any
+/// float ever entering the propose phase.
+///
+/// [`par_chunks_mut`]: par::par_chunks_mut
+// snn-lint: allow(parallel-serial-pairing) — sim_step_serial runs via the threads<=1 /
+// below-PAR_MIN_STREAMS dispatch in run_sim; sim_parallel_equals_serial_exactly asserts
+// bit-identical reports across thread counts through the public API
+fn sim_step_parallel(
+    hw: &NmhConfig,
+    streams: &[Stream],
+    routes: Option<&[Route]>,
+    chunk: usize,
+    threads: usize,
+    core: &mut CoreScratch,
+    stats: &mut SimStats,
+) -> StepTotals {
+    let CoreScratch { fires, link_load, router_load, chunks, .. } = core;
+    let n_chunks = crate::util::div_ceil(streams.len(), chunk);
+    chunks.resize_with(n_chunks, ChunkAcc::default);
+    let num_links = link_load.len();
+    let num_cores = router_load.len();
+    let fires: &[u32] = fires;
+
+    let t0 = Instant::now();
+    par::par_chunks_mut(&mut chunks[..n_chunks], 1, threads, |ci, slot| {
+        let acc = &mut slot[0];
+        acc.reset(num_links, num_cores);
+        let lo = ci * chunk;
+        let hi = (lo + chunk).min(streams.len());
+        let mut t = StepTotals::default();
+        for (i, s) in streams[lo..hi].iter().enumerate() {
+            let f = fires[s.edge as usize];
+            if f == 0 {
+                continue;
+            }
+            let route = routes.map(|r| &r[lo + i]);
+            account_stream(hw, s, f, route, &mut acc.link, &mut acc.router, &mut t);
+        }
+        acc.totals = t;
+    });
+    stats.scan_secs += t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let active = &chunks[..n_chunks];
+    for (l, slot) in link_load.iter_mut().enumerate() {
+        let mut v = 0u32;
+        for c in active {
+            v += c.link[l];
+        }
+        *slot = v;
+    }
+    for (r, slot) in router_load.iter_mut().enumerate() {
+        let mut v = 0u32;
+        for c in active {
+            v += c.router[r];
+        }
+        *slot = v;
+    }
+    let mut totals = StepTotals::default();
+    for c in active {
+        totals.copies += c.totals.copies;
+        totals.hops += c.totals.hops;
+        totals.dropped += c.totals.dropped;
+        totals.detour += c.totals.detour;
+    }
+    stats.commit_secs += t1.elapsed().as_secs_f64();
+    totals
+}
+
+/// Core replay loop shared by every public entry point: serial spike
+/// draw (RNG order is the contract), dispatched serial/parallel step
+/// accumulation, and a serial epilogue that derives every `f64` from
+/// the step's exact integer totals in one fixed expression order.
+#[allow(clippy::too_many_arguments)]
+fn run_sim(
+    gp: &Hypergraph,
+    hw: &NmhConfig,
+    params: SimParams,
+    rate_scale: f64,
+    streams: &[Stream],
+    routes: Option<&[Route]>,
+    core: &mut CoreScratch,
+    threads: usize,
+    stats: &mut SimStats,
+) -> SimReport {
+    let costs = hw.costs;
+    let mut rng = Pcg64::new(params.seed, 41);
+    let mut report = SimReport { timesteps: params.timesteps, ..Default::default() };
+
+    let num_links = hw.num_cores() * 4;
+    core.fires.clear();
+    core.fires.resize(gp.num_edges(), 0);
+    core.link_load.clear();
+    core.link_load.resize(num_links, 0);
+    core.router_load.clear();
+    core.router_load.resize(hw.num_cores(), 0);
+    core.makespans.clear();
+    core.makespans.reserve(params.timesteps);
+
+    let parallel = threads > 1 && streams.len() >= PAR_MIN_STREAMS;
+    let chunk = par::fixed_chunk(streams.len(), threads);
+
+    for _step in 0..params.timesteps {
+        // spike draws stay serial: the RNG is consumed once per h-edge
+        // in edge order, independent of routing or worker count
+        let t0 = Instant::now();
+        for e in gp.edge_ids() {
+            let w = gp.weight(e) as f64 * rate_scale;
+            let fires = if params.poisson_spikes {
+                rng.poisson(w)
+            } else {
+                usize::from(rng.bernoulli(w.min(1.0)))
+            };
+            core.fires[e as usize] = fires as u32;
+            report.spikes += fires as u64;
+        }
+        stats.draw_secs += t0.elapsed().as_secs_f64();
+
+        let totals = if parallel {
+            stats.par_steps += 1;
+            sim_step_parallel(hw, streams, routes, chunk, threads, core, stats)
+        } else {
+            let t1 = Instant::now();
+            let t = sim_step_serial(
+                hw,
+                streams,
+                routes,
+                &core.fires,
+                &mut core.link_load,
+                &mut core.router_load,
+            );
+            stats.scan_secs += t1.elapsed().as_secs_f64();
+            t
+        };
+
+        report.copies += totals.copies;
+        report.hops += totals.hops;
+        report.dropped_spikes += totals.dropped;
+        report.detour_hops += totals.detour;
+        // Table I pricing over the step's exact integer totals: one
+        // routing event per delivered copy (destination router) plus one
+        // routing event and one wire traversal per hop
+        report.energy +=
+            totals.copies as f64 * costs.e_r + totals.hops as f64 * (costs.e_r + costs.e_t);
+
+        let peak_link = core.link_load.iter().copied().max().unwrap_or(0);
+        let peak_router = core.router_load.iter().copied().max().unwrap_or(0);
+        report.peak_router_load = report.peak_router_load.max(peak_router as u64);
+        // makespan: hottest link serializes its flits, plus one router pass
+        let makespan = peak_link as f64 * (costs.l_r + costs.l_t) + costs.l_r;
+        core.makespans.push(makespan);
+        report.mean_peak_link_load += peak_link as f64;
+    }
+
+    report.mean_peak_link_load /= params.timesteps.max(1) as f64;
+    report.mean_makespan =
+        core.makespans.iter().sum::<f64>() / core.makespans.len().max(1) as f64;
+    report.max_makespan = core.makespans.iter().copied().fold(0.0, f64::max);
+    report
+}
+
+/// Run the simulator over a mapped SNN at the process-default worker
+/// count ([`par::max_threads`]).
 ///
 /// `gp` is the quotient h-graph (one node per partition — its edges carry
 /// the merged spike frequencies), `placement` its γ.
@@ -264,103 +735,137 @@ pub fn simulate_faulty(
     params: SimParams,
     faults: Option<&FaultMask>,
 ) -> SimReport {
+    simulate_with_threads(gp, placement, hw, params, faults, par::max_threads())
+}
+
+/// [`simulate_faulty`] with an explicit worker count — the entry point
+/// `StageCtx.threads` consumers (pipeline, experiment grid) use. The
+/// report is bit-for-bit identical for every `threads` value
+/// (DESIGN.md §16); [`simulate_serial`] is the tested reference.
+pub fn simulate_with_threads(
+    gp: &Hypergraph,
+    placement: &Placement,
+    hw: &NmhConfig,
+    params: SimParams,
+    faults: Option<&FaultMask>,
+    threads: usize,
+) -> SimReport {
+    let mut scratch = SimScratch::new();
+    simulate_with_stats(gp, placement, hw, params, faults, threads, &mut scratch).0
+}
+
+/// Serial reference simulator: the exact single-worker walk, kept as
+/// the oracle the thread-invariance tests compare against.
+pub fn simulate_serial(
+    gp: &Hypergraph,
+    placement: &Placement,
+    hw: &NmhConfig,
+    params: SimParams,
+    faults: Option<&FaultMask>,
+) -> SimReport {
+    let mut scratch = SimScratch::new();
+    simulate_with_stats(gp, placement, hw, params, faults, 1, &mut scratch).0
+}
+
+/// Full-control entry point: explicit worker count, caller-pooled
+/// [`SimScratch`], and [`SimStats`] instrumentation (phase timings, the
+/// `par_steps` dispatch counter, scratch high-water mark).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_with_stats(
+    gp: &Hypergraph,
+    placement: &Placement,
+    hw: &NmhConfig,
+    params: SimParams,
+    faults: Option<&FaultMask>,
+    threads: usize,
+    scratch: &mut SimScratch,
+) -> (SimReport, SimStats) {
     assert_eq!(gp.num_nodes(), placement.len());
-    let costs = hw.costs;
-    let mut rng = Pcg64::new(params.seed, 41);
-    let mut report = SimReport {
-        timesteps: params.timesteps,
-        ..Default::default()
+    let mut stats = SimStats::default();
+    build_streams(gp, placement, &mut scratch.streams);
+    let routes = match faults {
+        Some(m) => {
+            classify_routes(hw, m, &scratch.streams, threads, &mut scratch.routes);
+            Some(&scratch.routes[..])
+        }
+        None => None,
     };
+    let report = run_sim(
+        gp,
+        hw,
+        params,
+        1.0,
+        &scratch.streams,
+        routes,
+        &mut scratch.core,
+        threads,
+        &mut stats,
+    );
+    stats.peak_scratch_bytes = stats.peak_scratch_bytes.max(scratch.memory_bytes());
+    (report, stats)
+}
 
-    // static fault classification, once per (edge, dst) stream in edge
-    // order then dsts order — indexed by the same walk in the step loop
-    let routes: Option<Vec<Route>> = faults.map(|m| {
-        let mut r = Vec::new();
-        for e in gp.edge_ids() {
-            let src = placement.coords[gp.source(e) as usize];
-            for &d in gp.dsts(e) {
-                let dst = placement.coords[d as usize];
-                r.push(classify_route(hw, m, src, dst));
-            }
-        }
-        r
-    });
+/// Batched trace replay: run every [`SimConfig`] over one mapped graph
+/// through a single pooled scratch. Streams are built once; consecutive
+/// configs borrowing the same [`FaultMask`] share one route
+/// classification. Each returned report is bit-identical to the
+/// corresponding standalone [`simulate_with_threads`] call.
+pub fn simulate_batch(
+    gp: &Hypergraph,
+    placement: &Placement,
+    hw: &NmhConfig,
+    configs: &[SimConfig<'_>],
+    threads: usize,
+) -> Vec<SimReport> {
+    let mut scratch = SimScratch::new();
+    simulate_batch_with_stats(gp, placement, hw, configs, threads, &mut scratch).0
+}
 
-    let num_links = hw.num_cores() * 4;
-    let mut link_load = vec![0u32; num_links];
-    let mut router_load = vec![0u32; hw.num_cores()];
-    let mut makespans = Vec::with_capacity(params.timesteps);
-
-    for _step in 0..params.timesteps {
-        link_load.iter_mut().for_each(|l| *l = 0);
-        router_load.iter_mut().for_each(|l| *l = 0);
-
-        let mut route_idx = 0usize;
-        for e in gp.edge_ids() {
-            let w = gp.weight(e) as f64;
-            let fires = if params.poisson_spikes {
-                rng.poisson(w)
-            } else {
-                usize::from(rng.bernoulli(w.min(1.0)))
-            };
-            if fires == 0 {
-                route_idx += gp.dsts(e).len();
-                continue;
-            }
-            report.spikes += fires as u64;
-            let src = placement.coords[gp.source(e) as usize];
-            for &d in gp.dsts(e) {
-                let dst = placement.coords[d as usize];
-                let route = routes.as_ref().map(|r| &r[route_idx]);
-                route_idx += 1;
-                match route {
-                    None | Some(Route::Xy) => {
-                        report.copies += fires as u64;
-                        // destination router always pays one routing event
-                        router_load[hw.index(dst.0, dst.1)] += fires as u32;
-                        report.energy += fires as f64 * costs.e_r;
-                        let mut cur = src;
-                        while cur != dst {
-                            let (next, dir) = xy_step(cur, dst);
-                            link_load[link_id(hw, cur.0, cur.1, dir)] += fires as u32;
-                            router_load[hw.index(cur.0, cur.1)] += fires as u32;
-                            report.energy += fires as f64 * (costs.e_r + costs.e_t);
-                            report.hops += fires as u64;
-                            cur = next;
-                        }
-                    }
-                    Some(Route::Path(hops, extra)) => {
-                        report.copies += fires as u64;
-                        router_load[hw.index(dst.0, dst.1)] += fires as u32;
-                        report.energy += fires as f64 * costs.e_r;
-                        for &((cx, cy), dir) in hops {
-                            link_load[link_id(hw, cx, cy, dir)] += fires as u32;
-                            router_load[hw.index(cx, cy)] += fires as u32;
-                            report.energy += fires as f64 * (costs.e_r + costs.e_t);
-                            report.hops += fires as u64;
-                        }
-                        report.detour_hops += extra * fires as u64;
-                    }
-                    Some(Route::Drop) => {
-                        report.dropped_spikes += fires as u64;
-                    }
+/// [`simulate_batch`] with a caller-pooled scratch and accumulated
+/// [`SimStats`] across the whole batch.
+///
+/// Route-classification sharing is keyed by mask address, which is
+/// sound here because every mask in `configs` stays borrowed for the
+/// whole call — no allocation can reuse a key'd address mid-batch.
+pub fn simulate_batch_with_stats(
+    gp: &Hypergraph,
+    placement: &Placement,
+    hw: &NmhConfig,
+    configs: &[SimConfig<'_>],
+    threads: usize,
+    scratch: &mut SimScratch,
+) -> (Vec<SimReport>, SimStats) {
+    assert_eq!(gp.num_nodes(), placement.len());
+    let mut stats = SimStats::default();
+    build_streams(gp, placement, &mut scratch.streams);
+    let mut reports = Vec::with_capacity(configs.len());
+    let mut cached_mask: Option<*const FaultMask> = None;
+    for cfg in configs {
+        let routes = match cfg.faults {
+            None => None,
+            Some(m) => {
+                let key: *const FaultMask = m;
+                if cached_mask != Some(key) {
+                    classify_routes(hw, m, &scratch.streams, threads, &mut scratch.routes);
+                    cached_mask = Some(key);
                 }
+                Some(&scratch.routes[..])
             }
-        }
-
-        let peak_link = link_load.iter().cloned().max().unwrap_or(0);
-        let peak_router = router_load.iter().cloned().max().unwrap_or(0);
-        report.peak_router_load = report.peak_router_load.max(peak_router as u64);
-        // makespan: hottest link serializes its flits, plus one router pass
-        let makespan = peak_link as f64 * (costs.l_r + costs.l_t) + costs.l_r;
-        makespans.push(makespan);
-        report.mean_peak_link_load += peak_link as f64;
+        };
+        reports.push(run_sim(
+            gp,
+            hw,
+            cfg.params,
+            cfg.rate_scale,
+            &scratch.streams,
+            routes,
+            &mut scratch.core,
+            threads,
+            &mut stats,
+        ));
     }
-
-    report.mean_peak_link_load /= params.timesteps.max(1) as f64;
-    report.mean_makespan = makespans.iter().sum::<f64>() / makespans.len().max(1) as f64;
-    report.max_makespan = makespans.iter().cloned().fold(0.0, f64::max);
-    report
+    stats.peak_scratch_bytes = stats.peak_scratch_bytes.max(scratch.memory_bytes());
+    (reports, stats)
 }
 
 #[cfg(test)]
@@ -376,6 +881,41 @@ mod tests {
             b.build(),
             Placement { coords: vec![(0, 0), (4, 0)] },
         )
+    }
+
+    /// A graph wide enough to cross [`PAR_MIN_STREAMS`]: 2 h-edges with
+    /// 512 destinations each → 1024 copy streams.
+    fn wide_mapping(hw: &NmhConfig) -> (Hypergraph, Placement) {
+        let n = 2 + 1024;
+        let mut b = HypergraphBuilder::new(n);
+        b.add_edge(0, (2..514).collect(), 1.3);
+        b.add_edge(1, (514..1026).collect(), 0.7);
+        let gp = b.build();
+        let coords = (0..n)
+            .map(|i| {
+                let c = (i * 7) % hw.num_cores();
+                hw.coord(c)
+            })
+            .collect();
+        (gp, Placement { coords })
+    }
+
+    fn assert_reports_bit_identical(a: &SimReport, b: &SimReport, what: &str) {
+        assert_eq!(a.timesteps, b.timesteps, "{what}: timesteps");
+        assert_eq!(a.spikes, b.spikes, "{what}: spikes");
+        assert_eq!(a.copies, b.copies, "{what}: copies");
+        assert_eq!(a.hops, b.hops, "{what}: hops");
+        assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "{what}: energy");
+        assert_eq!(a.mean_makespan.to_bits(), b.mean_makespan.to_bits(), "{what}: mean_makespan");
+        assert_eq!(a.max_makespan.to_bits(), b.max_makespan.to_bits(), "{what}: max_makespan");
+        assert_eq!(a.peak_router_load, b.peak_router_load, "{what}: peak_router_load");
+        assert_eq!(
+            a.mean_peak_link_load.to_bits(),
+            b.mean_peak_link_load.to_bits(),
+            "{what}: mean_peak_link_load"
+        );
+        assert_eq!(a.dropped_spikes, b.dropped_spikes, "{what}: dropped_spikes");
+        assert_eq!(a.detour_hops, b.detour_hops, "{what}: detour_hops");
     }
 
     #[test]
@@ -447,14 +987,7 @@ mod tests {
         let mask = FaultMask::healthy(&hw);
         let plain = simulate(&gp, &pl, &hw, SimParams::default());
         let masked = simulate_faulty(&gp, &pl, &hw, SimParams::default(), Some(&mask));
-        assert_eq!(plain.spikes, masked.spikes);
-        assert_eq!(plain.copies, masked.copies);
-        assert_eq!(plain.hops, masked.hops);
-        assert_eq!(plain.energy.to_bits(), masked.energy.to_bits());
-        assert_eq!(plain.mean_makespan.to_bits(), masked.mean_makespan.to_bits());
-        assert_eq!(plain.max_makespan.to_bits(), masked.max_makespan.to_bits());
-        assert_eq!(plain.peak_router_load, masked.peak_router_load);
-        assert_eq!(plain.mean_peak_link_load.to_bits(), masked.mean_peak_link_load.to_bits());
+        assert_reports_bit_identical(&plain, &masked, "healthy mask vs none");
         assert_eq!(masked.dropped_spikes, 0);
         assert_eq!(masked.detour_hops, 0);
     }
@@ -517,6 +1050,83 @@ mod tests {
             "shared {} vs apart {}",
             s_shared.mean_makespan,
             s_apart.mean_makespan
+        );
+    }
+
+    #[test]
+    fn parallel_step_dispatches_and_matches_serial() {
+        // wide graph crosses PAR_MIN_STREAMS, so threads>1 must take the
+        // two-phase path (par_steps non-vacuous) and stay bit-identical
+        let hw = NmhConfig::small();
+        let (gp, pl) = wide_mapping(&hw);
+        let params = SimParams { timesteps: 6, seed: 21, poisson_spikes: true };
+        let reference = simulate_serial(&gp, &pl, &hw, params, None);
+        let mut scratch = SimScratch::new();
+        let (par_rep, stats) =
+            simulate_with_stats(&gp, &pl, &hw, params, None, 4, &mut scratch);
+        assert_eq!(stats.par_steps, params.timesteps as u64, "parallel path not taken");
+        assert!(stats.peak_scratch_bytes > 0);
+        assert_reports_bit_identical(&reference, &par_rep, "threads=4 vs serial");
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // the pooled scratch must carry no state between runs
+        let hw = NmhConfig::small();
+        let (gp, pl) = wide_mapping(&hw);
+        let params = SimParams { timesteps: 4, seed: 3, poisson_spikes: true };
+        let mut scratch = SimScratch::new();
+        let (first, _) = simulate_with_stats(&gp, &pl, &hw, params, None, 2, &mut scratch);
+        let (second, _) = simulate_with_stats(&gp, &pl, &hw, params, None, 2, &mut scratch);
+        assert_reports_bit_identical(&first, &second, "fresh vs reused scratch");
+    }
+
+    #[test]
+    fn batch_matches_one_by_one() {
+        let hw = NmhConfig::small();
+        let (gp, pl) = line_mapping();
+        let mut mask = FaultMask::healthy(&hw);
+        mask.kill_link(1, 0, 0);
+        let configs = [
+            SimConfig::new(SimParams { timesteps: 50, seed: 1, poisson_spikes: true }),
+            SimConfig {
+                params: SimParams { timesteps: 50, seed: 2, poisson_spikes: true },
+                rate_scale: 1.0,
+                faults: Some(&mask),
+            },
+            SimConfig {
+                params: SimParams { timesteps: 50, seed: 2, poisson_spikes: true },
+                rate_scale: 1.0,
+                faults: Some(&mask), // same mask: shares one classification
+            },
+        ];
+        let batch = simulate_batch(&gp, &pl, &hw, &configs, 1);
+        assert_eq!(batch.len(), configs.len());
+        for (i, cfg) in configs.iter().enumerate() {
+            let solo = simulate_with_threads(&gp, &pl, &hw, cfg.params, cfg.faults, 1);
+            assert_reports_bit_identical(&solo, &batch[i], "batch config");
+        }
+        // identical (seed, mask) configs must produce identical reports
+        assert_reports_bit_identical(&batch[1], &batch[2], "route-cache reuse");
+    }
+
+    #[test]
+    fn rate_scale_one_is_identity_and_scaling_raises_traffic() {
+        let hw = NmhConfig::small();
+        let (gp, pl) = line_mapping();
+        let params = SimParams { timesteps: 400, seed: 11, poisson_spikes: true };
+        let base = simulate(&gp, &pl, &hw, params);
+        let cfgs = [
+            SimConfig { params, rate_scale: 1.0, faults: None },
+            SimConfig { params, rate_scale: 3.0, faults: None },
+        ];
+        let batch = simulate_batch(&gp, &pl, &hw, &cfgs, 1);
+        assert_reports_bit_identical(&base, &batch[0], "rate_scale=1.0");
+        assert!(
+            batch[1].spikes > batch[0].spikes * 2,
+            "3x rate should roughly triple traffic: {} vs {}",
+            batch[1].spikes,
+            batch[0].spikes
         );
     }
 }

@@ -45,8 +45,10 @@ pub struct StageCtx<'a> {
     /// frontier scoring and the force refiner's candidate scan (§11),
     /// the quotient push-forward's parallel scan and the greedy
     /// ordering's fan-out propagation behind the sequential partitioner
-    /// and the Hilbert/minimum-distance placers (§12) all honor this
-    /// bit-for-bit.
+    /// and the Hilbert/minimum-distance placers (§12), and the NoC
+    /// simulator's two-phase step accumulation behind
+    /// [`crate::sim::simulate_with_threads`] and the batched replay
+    /// (§16) all honor this bit-for-bit.
     pub threads: usize,
     /// Layer ranges of layered (ANN-derived) networks, `None` for cyclic
     /// nets; order-sensitive partitioners may exploit this.

@@ -1,0 +1,130 @@
+//! Thread-invariance and batched-replay equivalence for the NoC
+//! simulator (DESIGN.md §16, ISSUE 9 acceptance criteria):
+//!
+//! * the two-phase parallel step is *bit-identical* to the serial
+//!   reference — every [`SimReport`] field, f64s compared by `to_bits` —
+//!   across seeds and thread counts {1, 2, 4, 8}, and the comparison is
+//!   non-vacuous (the wide graph clears `PAR_MIN_STREAMS`, so
+//!   `SimStats::par_steps` counts every timestep at > 1 thread);
+//! * `simulate_batch` over a mixed (seed, rate-scale, fault-mask)
+//!   config list reproduces the one-by-one replay bit-for-bit,
+//!   including under a randomly sampled degraded mask.
+
+use snnmap::hw::faults::{FaultMask, FaultRates};
+use snnmap::hw::NmhConfig;
+use snnmap::hypergraph::{Hypergraph, HypergraphBuilder};
+use snnmap::placement::Placement;
+use snnmap::sim::{
+    simulate_batch, simulate_serial, simulate_with_stats, simulate_with_threads, SimConfig,
+    SimParams, SimReport, SimScratch, PAR_MIN_STREAMS,
+};
+
+/// A mapping wide enough to force the parallel dispatch: 64 h-edges with
+/// 32 destinations each = 2048 copy streams, scattered over the mesh.
+fn wide_mapping(hw: &NmhConfig) -> (Hypergraph, Placement) {
+    let sources = 64u32;
+    let fanout = 32u32;
+    let n = (sources + sources * fanout) as usize;
+    let mut b = HypergraphBuilder::new(n);
+    for s in 0..sources {
+        let lo = sources + s * fanout;
+        b.add_edge(s, (lo..lo + fanout).collect(), 0.4 + 0.01 * s as f32);
+    }
+    let gp = b.build();
+    let coords = (0..n).map(|i| hw.coord((i * 131) % hw.num_cores())).collect();
+    (gp, Placement { coords })
+}
+
+fn assert_bit_identical(a: &SimReport, b: &SimReport, what: &str) {
+    assert_eq!(a.timesteps, b.timesteps, "{what}: timesteps");
+    assert_eq!(a.spikes, b.spikes, "{what}: spikes");
+    assert_eq!(a.copies, b.copies, "{what}: copies");
+    assert_eq!(a.hops, b.hops, "{what}: hops");
+    assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "{what}: energy");
+    assert_eq!(a.mean_makespan.to_bits(), b.mean_makespan.to_bits(), "{what}: mean_makespan");
+    assert_eq!(a.max_makespan.to_bits(), b.max_makespan.to_bits(), "{what}: max_makespan");
+    assert_eq!(a.peak_router_load, b.peak_router_load, "{what}: peak_router_load");
+    assert_eq!(
+        a.mean_peak_link_load.to_bits(),
+        b.mean_peak_link_load.to_bits(),
+        "{what}: mean_peak_link_load"
+    );
+    assert_eq!(a.dropped_spikes, b.dropped_spikes, "{what}: dropped_spikes");
+    assert_eq!(a.detour_hops, b.detour_hops, "{what}: detour_hops");
+}
+
+#[test]
+fn sim_parallel_equals_serial_exactly() {
+    let hw = NmhConfig::small();
+    let (gp, pl) = wide_mapping(&hw);
+    assert!(
+        gp.num_connections() >= PAR_MIN_STREAMS,
+        "test graph must clear the dispatch threshold ({} < {PAR_MIN_STREAMS})",
+        gp.num_connections()
+    );
+    for seed in [3u64, 77, 4096] {
+        let params = SimParams { timesteps: 40, seed, poisson_spikes: true };
+        let reference = simulate_serial(&gp, &pl, &hw, params, None);
+        assert!(reference.spikes > 0, "seed {seed}: silent network is a vacuous comparison");
+        for threads in [1usize, 2, 4, 8] {
+            let mut scratch = SimScratch::new();
+            let (rep, stats) =
+                simulate_with_stats(&gp, &pl, &hw, params, None, threads, &mut scratch);
+            assert_bit_identical(&reference, &rep, &format!("seed {seed}, {threads} threads"));
+            if threads > 1 {
+                // Non-vacuous: above the threshold, every step must take
+                // the two-phase path.
+                assert_eq!(
+                    stats.par_steps, params.timesteps as u64,
+                    "seed {seed}, {threads} threads: parallel step never dispatched"
+                );
+            } else {
+                assert_eq!(stats.par_steps, 0, "seed {seed}: 1 thread must stay serial");
+            }
+        }
+    }
+}
+
+#[test]
+fn sim_batch_equals_one_by_one_replay() {
+    let hw = NmhConfig::small();
+    let (gp, pl) = wide_mapping(&hw);
+    let degraded = FaultMask::sample(&hw, &FaultRates::uniform(0.05), 913);
+    assert!(!degraded.is_all_healthy(), "sampled mask must actually degrade the mesh");
+    let healthy = FaultMask::healthy(&hw);
+
+    let mut configs = Vec::new();
+    for (seed, rate_scale) in [(5u64, 1.0f64), (5, 2.5), (11, 1.0), (11, 0.25)] {
+        for faults in [None, Some(&degraded), Some(&healthy)] {
+            configs.push(SimConfig {
+                params: SimParams { timesteps: 25, seed, poisson_spikes: true },
+                rate_scale,
+                faults,
+            });
+        }
+    }
+
+    for threads in [1usize, 4] {
+        let batch = simulate_batch(&gp, &pl, &hw, &configs, threads);
+        assert_eq!(batch.len(), configs.len());
+        for (i, cfg) in configs.iter().enumerate() {
+            // rate_scale == 1.0 configs are exactly reproducible through
+            // the single-run entry points; scaled ones replay against a
+            // fresh batch of size one.
+            let solo = if cfg.rate_scale == 1.0 {
+                simulate_with_threads(&gp, &pl, &hw, cfg.params, cfg.faults, threads)
+            } else {
+                let one = simulate_batch(&gp, &pl, &hw, std::slice::from_ref(cfg), threads);
+                one.into_iter().next().unwrap()
+            };
+            assert_bit_identical(&solo, &batch[i], &format!("config {i}, {threads} threads"));
+        }
+        // The healthy mask must be indistinguishable from no mask at all.
+        assert_bit_identical(&batch[0], &batch[2], "healthy mask vs None (seed 5, rate 1.0)");
+        // The degraded mask must actually change the traffic it drops.
+        assert!(
+            batch[1].dropped_spikes > 0 || batch[1].detour_hops > 0,
+            "degraded mask produced neither drops nor detours — mask too weak to test precedence"
+        );
+    }
+}
