@@ -1,19 +1,31 @@
 //! `snn_lint` — run the repo's invariant lint (DESIGN.md §14) over the
-//! crate tree and exit nonzero on unwaived findings.
+//! crate tree and exit nonzero when the gate fails.
 //!
-//! Usage: `cargo run --release --bin snn_lint [-- --root <crate-dir>]`
+//! Usage: `cargo run --release --bin snn_lint [-- --root <crate-dir>]
+//!         [--format text|json|sarif]`
 //!
 //! The root defaults to `CARGO_MANIFEST_DIR` (set by cargo), falling
 //! back to the current directory, so both `cargo run` and a bare binary
-//! invocation from `rust/` work. Exit codes: 0 clean, 1 unwaived
-//! findings, 2 usage or I/O error.
+//! invocation from `rust/` work. `--format sarif` emits a SARIF 2.1.0
+//! log (for CI artifact upload / code-scanning ingestion), `--format
+//! json` a compact machine-readable report; both still gate. Exit
+//! codes: 0 gate passes, 1 unwaived findings or unused waivers, 2 usage
+//! or I/O error. Unused waivers are hard errors: a stale waiver is a
+//! standing invitation to reintroduce the violation it once covered.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
+enum Format {
+    Text,
+    Json,
+    Sarif,
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut root: Option<PathBuf> = None;
+    let mut format = Format::Text;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -23,6 +35,22 @@ fn main() -> ExitCode {
                     Some(p) => root = Some(PathBuf::from(p)),
                     None => {
                         eprintln!("snn_lint: --root expects a path");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            "--format" => {
+                i += 1;
+                match args.get(i).map(|s| s.as_str()) {
+                    Some("text") => format = Format::Text,
+                    Some("json") => format = Format::Json,
+                    Some("sarif") => format = Format::Sarif,
+                    Some(other) => {
+                        eprintln!("snn_lint: unknown format `{other}` (text|json|sarif)");
+                        return ExitCode::from(2);
+                    }
+                    None => {
+                        eprintln!("snn_lint: --format expects text|json|sarif");
                         return ExitCode::from(2);
                     }
                 }
@@ -40,8 +68,16 @@ fn main() -> ExitCode {
 
     match snnmap::lint::lint_tree(&root) {
         Ok(report) => {
-            print!("{}", report.render());
-            if report.is_clean() {
+            match format {
+                Format::Text => print!("{}", report.render()),
+                Format::Json => {
+                    println!("{}", snnmap::lint::sarif::to_json(&report).to_pretty())
+                }
+                Format::Sarif => {
+                    println!("{}", snnmap::lint::sarif::to_sarif(&report).to_pretty())
+                }
+            }
+            if report.gate_ok() {
                 ExitCode::SUCCESS
             } else {
                 ExitCode::from(1)

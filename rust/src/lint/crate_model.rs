@@ -1,0 +1,252 @@
+//! Whole-crate symbol index for cross-module rules. Per-file models
+//! ([`super::model::FileModel`]) only see one file; R1's twin resolution
+//! and R8's float-flow reasoning need crate-wide facts: which fn names
+//! exist (and where), which fns return floats, which struct fields are
+//! float-typed, and which idents are referenced from test/bench context.
+//!
+//! Resolution is *lexical*, by bare name: a call `score(x)` resolves to
+//! every non-test lib fn named `score`, wherever it lives. That is
+//! deliberately conservative — with no type checker, a name match is
+//! the strongest link available, and the rules that consume it (R8
+//! one-hop) only use it to *add* evidence, never to exonerate.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{float_lit_at, ident_at, match_delim, punct_at, Token, TokKind};
+use super::model::{FileModel, FnInfo};
+use super::parse::{scan_use_paths, UseImport};
+use super::FileClass;
+
+/// One lexed + modeled file, the unit the crate model is built from.
+pub struct FileCtx {
+    pub path: String,
+    pub class: FileClass,
+    pub toks: Vec<Token>,
+    pub model: FileModel,
+}
+
+/// A reference into `files[file].model.fns[fn_idx]`.
+#[derive(Debug, Clone, Copy)]
+pub struct FnRef {
+    pub file: usize,
+    pub fn_idx: usize,
+}
+
+/// Crate-wide lexical index over a file set.
+pub struct CrateModel {
+    /// Non-test lib fns by bare name, in file order. Multiple entries
+    /// mean the name is ambiguous; consumers take the first or all.
+    pub fn_index: BTreeMap<String, Vec<FnRef>>,
+    /// Names of lib fns whose return type mentions `f32`/`f64`.
+    pub float_fns: BTreeSet<String>,
+    /// Names of struct fields whose declared type mentions `f32`/`f64`.
+    pub float_fields: BTreeSet<String>,
+    /// Every ident that appears in test/bench context anywhere.
+    pub test_referenced: BTreeSet<String>,
+    /// Per-file `use` imports (parallel to the input file slice).
+    pub uses: Vec<Vec<UseImport>>,
+}
+
+impl CrateModel {
+    pub fn build(files: &[FileCtx]) -> CrateModel {
+        let mut fn_index: BTreeMap<String, Vec<FnRef>> = BTreeMap::new();
+        let mut float_fns = BTreeSet::new();
+        let mut float_fields = BTreeSet::new();
+        let mut test_referenced = BTreeSet::new();
+        let mut uses = Vec::with_capacity(files.len());
+
+        for (fi, f) in files.iter().enumerate() {
+            uses.push(scan_use_paths(&f.toks));
+            let whole_file_is_test = matches!(f.class, FileClass::Test | FileClass::Bench);
+            for (i, t) in f.toks.iter().enumerate() {
+                if let TokKind::Ident(id) = &t.kind {
+                    if whole_file_is_test || f.model.in_test(i) {
+                        test_referenced.insert(id.clone());
+                    }
+                }
+            }
+            if f.class != FileClass::Lib {
+                continue;
+            }
+            let n = f.toks.len();
+            for (xi, func) in f.model.fns.iter().enumerate() {
+                if !f.model.in_test(func.kw_idx) {
+                    fn_index
+                        .entry(func.name.clone())
+                        .or_default()
+                        .push(FnRef { file: fi, fn_idx: xi });
+                }
+                // return type: the span between `->` and the body open
+                let sig_end = func.body.map(|(s, _)| s).unwrap_or(n);
+                let mut j = func.kw_idx;
+                while j + 1 < sig_end {
+                    if punct_at(&f.toks, j, '-') && punct_at(&f.toks, j + 1, '>') {
+                        let floaty = (j + 2..sig_end).any(|m| {
+                            matches!(ident_at(&f.toks, m), Some("f32") | Some("f64"))
+                        });
+                        if floaty {
+                            float_fns.insert(func.name.clone());
+                        }
+                        break;
+                    }
+                    j += 1;
+                }
+            }
+            struct_float_fields(&f.toks, &mut float_fields);
+        }
+        CrateModel { fn_index, float_fns, float_fields, test_referenced, uses }
+    }
+
+    /// Float-typed names scoped to one fn: float-ascribed params plus
+    /// `let` bindings in the body that are float by ascription or by a
+    /// float-shaped initializer. Scoping per fn (not per file) is what
+    /// keeps an integer-only closure clean in a file that also handles
+    /// floats — the §16 NoC accounting path depends on this.
+    pub fn fn_float_names(&self, file: &FileCtx, func: &FnInfo) -> BTreeSet<String> {
+        let mut out = BTreeSet::new();
+        let Some((body_s, body_e)) = func.body else { return out };
+        let toks = &file.toks;
+        // params: `name: …f32/f64…` up to the matching `,`/`)`
+        for j in func.kw_idx..body_s {
+            if !punct_at(toks, j + 1, ':') || punct_at(toks, j + 2, ':') {
+                continue;
+            }
+            let Some(name) = ident_at(toks, j) else { continue };
+            let mut depth = 0isize;
+            let mut m = j + 2;
+            while m < body_s {
+                match toks[m].kind {
+                    TokKind::Punct(c) if c == '<' || c == '(' => depth += 1,
+                    TokKind::Punct(c) if c == '>' || c == ')' => {
+                        depth -= 1;
+                        if depth < 0 {
+                            break;
+                        }
+                    }
+                    TokKind::Punct(',') if depth <= 0 => break,
+                    _ => {}
+                }
+                if matches!(ident_at(toks, m), Some("f32") | Some("f64")) {
+                    out.insert(name.to_string());
+                    break;
+                }
+                m += 1;
+            }
+        }
+        span_float_lets(toks, body_s, body_e, &self.float_fns, &mut out);
+        out
+    }
+}
+
+/// Add to `out` every `let`-bound name in `[lo, hi]` that is float by
+/// type ascription or whose initializer expression mentions `f32`/`f64`,
+/// a float literal, or a call-position float-returning fn name.
+pub fn span_float_lets(
+    toks: &[Token],
+    lo: usize,
+    hi: usize,
+    float_fns: &BTreeSet<String>,
+    out: &mut BTreeSet<String>,
+) {
+    let n = toks.len().min(hi + 1);
+    for i in lo..n {
+        if ident_at(toks, i) != Some("let") {
+            continue;
+        }
+        let mut k = i + 1;
+        if ident_at(toks, k) == Some("mut") {
+            k += 1;
+        }
+        let Some(name) = ident_at(toks, k) else { continue };
+        let mut j = k + 1;
+        let mut floaty = false;
+        if punct_at(toks, j, ':') && !punct_at(toks, j + 1, ':') {
+            let mut m = j + 1;
+            while m < n && !punct_at(toks, m, '=') && !punct_at(toks, m, ';') {
+                if matches!(ident_at(toks, m), Some("f32") | Some("f64")) {
+                    floaty = true;
+                }
+                m += 1;
+            }
+            j = m;
+        }
+        while j < n && !punct_at(toks, j, '=') && !punct_at(toks, j, ';') {
+            j += 1;
+        }
+        if punct_at(toks, j, '=') && !punct_at(toks, j + 1, '=') {
+            // initializer: scan to the statement's `;` at depth 0
+            let mut depth = 0isize;
+            let mut m = j + 1;
+            while m < n {
+                match toks[m].kind {
+                    TokKind::Punct(c) if c == '(' || c == '[' || c == '{' => depth += 1,
+                    TokKind::Punct(c) if c == ')' || c == ']' || c == '}' => {
+                        depth -= 1;
+                        if depth < 0 {
+                            break;
+                        }
+                    }
+                    TokKind::Punct(';') if depth == 0 => break,
+                    _ => {}
+                }
+                if let Some(id) = ident_at(toks, m) {
+                    if id == "f32" || id == "f64" || float_fns.contains(id) {
+                        floaty = true;
+                    }
+                }
+                if float_lit_at(toks, m) {
+                    floaty = true;
+                }
+                m += 1;
+            }
+        }
+        if floaty {
+            out.insert(name.to_string());
+        }
+    }
+}
+
+/// Add to `out` the names of struct fields whose declared type mentions
+/// `f32`/`f64` (depth-1 fields of `struct S { … }` declarations).
+fn struct_float_fields(toks: &[Token], out: &mut BTreeSet<String>) {
+    let n = toks.len();
+    for i in 0..n {
+        if ident_at(toks, i) != Some("struct") || ident_at(toks, i + 1).is_none() {
+            continue;
+        }
+        let mut k = i + 2;
+        while k < n && !punct_at(toks, k, '{') && !punct_at(toks, k, ';') && !punct_at(toks, k, '(')
+        {
+            k += 1;
+        }
+        if !punct_at(toks, k, '{') {
+            continue;
+        }
+        let end = match_delim(toks, k, '{', '}');
+        let mut depth = 0isize;
+        for j in k..end {
+            if punct_at(toks, j, '{') {
+                depth += 1;
+            } else if punct_at(toks, j, '}') {
+                depth -= 1;
+            } else if depth == 1 && punct_at(toks, j + 1, ':') && !punct_at(toks, j + 2, ':') {
+                let Some(name) = ident_at(toks, j) else { continue };
+                let mut fdepth = 0isize;
+                let mut m = j + 2;
+                while m < end {
+                    match toks[m].kind {
+                        TokKind::Punct(c) if c == '<' || c == '(' || c == '[' => fdepth += 1,
+                        TokKind::Punct(c) if c == '>' || c == ')' || c == ']' => fdepth -= 1,
+                        TokKind::Punct(',') if fdepth <= 0 => break,
+                        _ => {}
+                    }
+                    if matches!(ident_at(toks, m), Some("f32") | Some("f64")) {
+                        out.insert(name.to_string());
+                        break;
+                    }
+                    m += 1;
+                }
+            }
+        }
+    }
+}

@@ -14,6 +14,9 @@
 
 /// Token kind. Literal payloads are dropped deliberately — no rule may
 /// depend on literal contents, which keeps fixtures-in-strings inert.
+/// The one exception is a single *shape* bit on numeric literals: R8
+/// (float-merge-order) needs to know that `0.0f64` is a float without
+/// ever seeing its value.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum TokKind {
     /// Identifier or keyword (`fn`, `impl`, `unwrap`, …).
@@ -21,7 +24,9 @@ pub enum TokKind {
     /// Single punctuation byte (`.`, `:`, `{`, …).
     Punct(char),
     /// Any literal: string, raw string, byte string, char, number.
-    Lit,
+    /// `float` is true only for numeric literals with a decimal point or
+    /// an `f32`/`f64` suffix (hex/binary/octal never count).
+    Lit { float: bool },
     /// A lifetime such as `'a` or `'static`.
     Lifetime,
 }
@@ -45,6 +50,28 @@ pub struct Comment {
 
 fn is_ident_byte(b: u8) -> bool {
     b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Index just past the closing quote of a char literal whose opening `'`
+/// is at `start`. Escape-aware, so `'\''` and `'\\'` terminate at the
+/// real closing quote instead of the escaped one. Stops at end-of-line
+/// on malformed input rather than swallowing the rest of the file.
+fn scan_char_lit(b: &[u8], start: usize) -> usize {
+    let n = b.len();
+    let mut j = start + 1;
+    if j < n && b[j] == b'\\' {
+        j += 2; // consume the escape introducer and the escaped byte
+    } else if j < n {
+        j += 1;
+    }
+    while j < n && b[j] != b'\'' && b[j] != b'\n' {
+        j += 1;
+    }
+    if j < n && b[j] == b'\'' {
+        j + 1
+    } else {
+        j
+    }
 }
 
 /// Lex `src` into tokens plus out-of-band comments. Never fails: bytes
@@ -172,6 +199,11 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
                     // escape-aware byte string
                     while j < n {
                         if b[j] == b'\\' {
+                            // an escaped newline (line continuation) still
+                            // advances the source line counter
+                            if j + 1 < n && b[j + 1] == b'\n' {
+                                line += 1;
+                            }
                             j += 2;
                             continue;
                         }
@@ -185,7 +217,16 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
                         j += 1;
                     }
                 }
-                toks.push(Token { kind: TokKind::Lit, line: start_line });
+                toks.push(Token { kind: TokKind::Lit { float: false }, line: start_line });
+                tokens_on_line = true;
+                i = j;
+                continue;
+            }
+            // byte-char literal b'x' / b'\n' — without this, `b'a'` would
+            // lex as Ident("b") + char literal and desync waiver lines
+            if c == b'b' && i + 1 < n && b[i + 1] == b'\'' {
+                let j = scan_char_lit(b, i + 1);
+                toks.push(Token { kind: TokKind::Lit { float: false }, line });
                 tokens_on_line = true;
                 i = j;
                 continue;
@@ -223,6 +264,9 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
             let mut j = i + 1;
             while j < n {
                 if b[j] == b'\\' {
+                    if j + 1 < n && b[j + 1] == b'\n' {
+                        line += 1;
+                    }
                     j += 2;
                     continue;
                 }
@@ -235,27 +279,18 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
                 }
                 j += 1;
             }
-            toks.push(Token { kind: TokKind::Lit, line: start_line });
+            toks.push(Token { kind: TokKind::Lit { float: false }, line: start_line });
             tokens_on_line = true;
             i = j;
             continue;
         }
         // char literal vs lifetime
         if c == b'\'' {
-            if i + 1 < n && b[i + 1] == b'\\' {
-                let mut j = i + 2;
-                while j < n && b[j] != b'\'' {
-                    j += 1;
-                }
-                toks.push(Token { kind: TokKind::Lit, line });
+            if (i + 1 < n && b[i + 1] == b'\\') || (i + 2 < n && b[i + 2] == b'\'') {
+                let j = scan_char_lit(b, i);
+                toks.push(Token { kind: TokKind::Lit { float: false }, line });
                 tokens_on_line = true;
-                i = j + 1;
-                continue;
-            }
-            if i + 2 < n && b[i + 2] == b'\'' {
-                toks.push(Token { kind: TokKind::Lit, line });
-                tokens_on_line = true;
-                i += 3;
+                i = j;
                 continue;
             }
             let mut j = i + 1;
@@ -284,7 +319,13 @@ pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
                 }
                 break;
             }
-            toks.push(Token { kind: TokKind::Lit, line });
+            let text = &b[i..j];
+            let prefixed = text.len() > 1
+                && text[0] == b'0'
+                && matches!(text[1] | 0x20, b'x' | b'b' | b'o');
+            let float = !prefixed
+                && (text.contains(&b'.') || text.ends_with(b"f32") || text.ends_with(b"f64"));
+            toks.push(Token { kind: TokKind::Lit { float }, line });
             tokens_on_line = true;
             i = j;
             continue;
@@ -307,6 +348,12 @@ pub fn ident_at(toks: &[Token], i: usize) -> Option<&str> {
 /// True iff token `i` is the punctuation byte `c`.
 pub fn punct_at(toks: &[Token], i: usize, c: char) -> bool {
     matches!(toks.get(i), Some(Token { kind: TokKind::Punct(p), .. }) if *p == c)
+}
+
+/// True iff token `i` is a float-shaped numeric literal (`1.5`, `0.0f64`,
+/// `2f32` — never hex/binary/octal or integer literals).
+pub fn float_lit_at(toks: &[Token], i: usize) -> bool {
+    matches!(toks.get(i), Some(Token { kind: TokKind::Lit { float: true }, .. }))
 }
 
 /// True iff tokens at `i..` spell the path segment pair `a::b`.

@@ -16,10 +16,24 @@
 //! own line covers the next code line; a trailing waiver covers its own
 //! line. Malformed waivers (missing reason, unknown rule id) are
 //! themselves findings — rule id `bad-waiver` — and cannot be waived.
+//! A waiver that suppresses nothing is a hard error too: the gate
+//! ([`LintReport::gate_ok`]) requires zero unwaived findings *and* zero
+//! unused waivers, so stale waivers get deleted instead of rotting.
+//!
+//! The flow-aware rules (R8 `float-merge-order`, R9
+//! `shared-mut-in-propose`) stand on [`parse`] (item-level structure:
+//! parallel regions, closures, bindings, compound ops) and
+//! [`crate_model`] (whole-crate symbol index: fn definitions,
+//! float-returning fns, float fields, test-referenced idents), which
+//! also lets R1 resolve serial twins across modules. [`sarif`] renders
+//! a report as SARIF 2.1.0 or compact JSON for machine consumers.
 
+pub mod crate_model;
 pub mod lexer;
 pub mod model;
+pub mod parse;
 pub mod rules;
+pub mod sarif;
 
 use std::path::Path;
 
@@ -31,7 +45,7 @@ pub struct Rule {
 }
 
 /// The rule catalogue, in reporting order (DESIGN.md §14).
-pub const RULES: [Rule; 7] = [
+pub const RULES: [Rule; 9] = [
     Rule {
         id: "parallel-serial-pairing",
         summary: "every *_parallel/*_threads fn needs a *_serial twin referenced from tests",
@@ -59,6 +73,14 @@ pub const RULES: [Rule; 7] = [
     Rule {
         id: "threads-wiring",
         summary: "every impl Partitioner/Placer/Refiner must read ctx.threads",
+    },
+    Rule {
+        id: "float-merge-order",
+        summary: "no raw f32/f64 accumulation in parallel closures — use fixed-chunk ordered merge",
+    },
+    Rule {
+        id: "shared-mut-in-propose",
+        summary: "parallel closures write captured state only via index-disjoint slot writes",
     },
 ];
 
@@ -107,7 +129,9 @@ pub struct Finding {
 pub struct LintReport {
     /// All findings (waived and unwaived), sorted by rule, path, line.
     pub findings: Vec<Finding>,
-    /// Waivers that suppressed nothing — advisory (stale or mis-placed).
+    /// Waivers that suppressed nothing. These fail the gate: a stale
+    /// waiver is a standing invitation to reintroduce the violation it
+    /// once covered, so it must be deleted (or re-aimed) immediately.
     pub unused_waivers: Vec<(String, u32)>,
     pub files_scanned: usize,
 }
@@ -127,8 +151,13 @@ impl LintReport {
         self.unwaived().next().is_none()
     }
 
+    /// The CI gate: no unwaived findings AND no unused waivers.
+    pub fn gate_ok(&self) -> bool {
+        self.is_clean() && self.unused_waivers.is_empty()
+    }
+
     /// Human-readable report: unwaived findings grouped by rule with
-    /// `path:line`, then a summary line, then advisory notes.
+    /// `path:line`, then a summary line, then unused-waiver errors.
     pub fn render(&self) -> String {
         let mut out = String::new();
         let mut total_unwaived = 0usize;
@@ -153,11 +182,16 @@ impl LintReport {
         }
         let waived = self.waived().count();
         out.push_str(&format!(
-            "{} file(s) scanned: {} unwaived finding(s), {} waived\n",
-            self.files_scanned, total_unwaived, waived
+            "{} file(s) scanned: {} unwaived finding(s), {} waived, {} unused waiver(s)\n",
+            self.files_scanned,
+            total_unwaived,
+            waived,
+            self.unused_waivers.len()
         ));
         for (path, line) in &self.unused_waivers {
-            out.push_str(&format!("note: unused waiver at {path}:{line}\n"));
+            out.push_str(&format!(
+                "error: unused waiver at {path}:{line} — delete it or re-aim it at a real finding\n"
+            ));
         }
         out
     }

@@ -1,0 +1,347 @@
+//! Item-level parsing on top of the lexer: parallel-combinator call
+//! regions, closure heads, in-scope bindings, compound assignments,
+//! statement spans, lexically-resolvable calls and `use` imports. This
+//! is the structural vocabulary the flow-aware rules (R8/R9) and the
+//! crate model are written in — [`super::model::FileModel`] stays the
+//! per-file item index (fns, impls, test regions, waivers), while this
+//! module answers expression-shaped questions inside those items.
+//!
+//! Everything here is lexical: spans are inclusive token-index ranges,
+//! possibly empty (`start > end`), and every walk degrades to
+//! over-scanning on malformed input rather than panicking.
+
+use std::collections::BTreeSet;
+
+use super::lexer::{ident_at, match_delim, punct_at, Token, TokKind};
+
+/// The crate's parallel entry points (`util::par` plus `scope.spawn`):
+/// a call to any of these opens a *parallel region* whose closure body
+/// runs concurrently and is subject to the propose/commit discipline.
+pub const PAR_COMBINATORS: [&str; 4] = ["par_map", "chunked_fold", "par_chunks_mut", "spawn"];
+
+/// Rust keywords and path roots that can never be a captured binding.
+const KEYWORDS: [&str; 34] = [
+    "if", "else", "while", "for", "in", "loop", "match", "return", "break", "continue", "let",
+    "mut", "fn", "move", "ref", "pub", "use", "mod", "impl", "struct", "enum", "trait", "type",
+    "const", "static", "where", "unsafe", "as", "dyn", "crate", "super", "self", "Self", "true",
+];
+
+/// Methods that mutate (or unlock mutation of) their receiver — calling
+/// one on captured state inside a parallel closure is a shared write.
+const MUT_METHODS: [&str; 36] = [
+    "push", "push_str", "insert", "remove", "extend", "clear", "pop", "drain", "append", "retain",
+    "truncate", "resize", "resize_with", "fill", "set", "sort", "sort_by", "sort_by_key",
+    "sort_unstable", "sort_unstable_by", "sort_unstable_by_key", "store", "fetch_add",
+    "fetch_sub", "fetch_and", "fetch_or", "fetch_xor", "compare_exchange", "swap", "replace",
+    "take", "lock", "borrow_mut", "get_mut", "write", "next",
+];
+
+pub fn is_keyword(name: &str) -> bool {
+    KEYWORDS.contains(&name) || name == "false"
+}
+
+pub fn is_mut_method(name: &str) -> bool {
+    MUT_METHODS.contains(&name)
+}
+
+/// One parallel-combinator call site: the combinator name, the line of
+/// the call, the token index of the combinator ident, and the inclusive
+/// token span of the call's argument list (excluding the parens —
+/// possibly empty, in which case `args.0 > args.1`).
+#[derive(Debug, Clone)]
+pub struct ParRegion {
+    pub combinator: String,
+    pub line: u32,
+    pub call_idx: usize,
+    pub args: (usize, usize),
+}
+
+/// Every parallel-combinator *call* in the token stream. Definitions
+/// (`fn par_map(…)` in `util/par.rs` itself) are skipped via the
+/// preceding-`fn` check.
+pub fn parallel_regions(toks: &[Token]) -> Vec<ParRegion> {
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        let Some(name) = ident_at(toks, i) else { continue };
+        if !PAR_COMBINATORS.contains(&name) || !punct_at(toks, i + 1, '(') {
+            continue;
+        }
+        if i > 0 && ident_at(toks, i - 1) == Some("fn") {
+            continue;
+        }
+        let close = match_delim(toks, i + 1, '(', ')');
+        out.push(ParRegion {
+            combinator: name.to_string(),
+            line: toks[i].line,
+            call_idx: i,
+            args: (i + 2, close.saturating_sub(1)),
+        });
+    }
+    out
+}
+
+/// True iff the `|` at `k` opens a closure head (rather than being a
+/// binary/bitwise or-pattern `|`): it must follow a call/list/statement
+/// boundary, an `=`, or the `move` keyword.
+fn closure_bar_at(toks: &[Token], k: usize, span_start: usize, allow_return: bool) -> bool {
+    if !punct_at(toks, k, '|') {
+        return false;
+    }
+    if k == span_start || k == 0 {
+        return true;
+    }
+    punct_at(toks, k - 1, '(')
+        || punct_at(toks, k - 1, ',')
+        || punct_at(toks, k - 1, '{')
+        || punct_at(toks, k - 1, ';')
+        || punct_at(toks, k - 1, '=')
+        || ident_at(toks, k - 1) == Some("move")
+        || (allow_return && ident_at(toks, k - 1) == Some("return"))
+}
+
+/// Token index of the first closure-opening `|` in `[s, e]`, if any.
+/// Rules that only govern the concurrent body (R8/R9) scan from here so
+/// arguments *before* the closure (`&mut data`, chunk sizes) stay out
+/// of scope.
+pub fn closure_start(toks: &[Token], s: usize, e: usize) -> Option<usize> {
+    let mut k = s;
+    while k <= e && k < toks.len() {
+        if closure_bar_at(toks, k, s, false) {
+            return Some(k);
+        }
+        k += 1;
+    }
+    None
+}
+
+/// Names bound *inside* `[s, e]`: closure parameters, `let` bindings,
+/// `for` loop variables and `match`-arm pattern idents. Writes to these
+/// are closure-local and therefore never shared mutation.
+pub fn region_bindings(toks: &[Token], s: usize, e: usize) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    let hi = e.min(toks.len().saturating_sub(1));
+    let mut k = s;
+    while k <= hi {
+        // closure head: everything between the bars is a binding
+        if closure_bar_at(toks, k, s, true) {
+            let mut j = k + 1;
+            while j <= hi && !punct_at(toks, j, '|') {
+                if let Some(id) = ident_at(toks, j) {
+                    names.insert(id.to_string());
+                }
+                j += 1;
+            }
+            k = j + 1;
+            continue;
+        }
+        if ident_at(toks, k) == Some("let") {
+            let mut j = k + 1;
+            while j <= hi && !punct_at(toks, j, '=') && !punct_at(toks, j, ';') {
+                if punct_at(toks, j, ':') {
+                    // type ascription: skip to `=`/`;` so type names
+                    // are not mistaken for bindings
+                    while j <= hi && !punct_at(toks, j, '=') && !punct_at(toks, j, ';') {
+                        j += 1;
+                    }
+                    break;
+                }
+                if let Some(id) = ident_at(toks, j) {
+                    if id != "mut" {
+                        names.insert(id.to_string());
+                    }
+                }
+                j += 1;
+            }
+            k = j;
+            continue;
+        }
+        if ident_at(toks, k) == Some("for") {
+            let mut j = k + 1;
+            while j <= hi && ident_at(toks, j) != Some("in") {
+                if let Some(id) = ident_at(toks, j) {
+                    names.insert(id.to_string());
+                }
+                j += 1;
+            }
+            k = j;
+            continue;
+        }
+        // match arm: idents in the pattern before `=>` (walk back to
+        // the previous arm/brace boundary, bounded)
+        if punct_at(toks, k, '=') && punct_at(toks, k + 1, '>') {
+            let mut j = k;
+            let mut steps = 0;
+            while j > s && steps < 24 {
+                j -= 1;
+                steps += 1;
+                if matches!(toks[j].kind, TokKind::Punct(c) if c == ',' || c == '{' || c == '}') {
+                    break;
+                }
+                if let Some(id) = ident_at(toks, j) {
+                    if !is_keyword(id) {
+                        names.insert(id.to_string());
+                    }
+                }
+            }
+        }
+        k += 1;
+    }
+    names
+}
+
+/// One compound-assignment site inside a span: the token index of the
+/// operator, the (best-effort) target name — the ident immediately left
+/// of the op, or left of a bracketed index/paren chain — and its line.
+#[derive(Debug, Clone)]
+pub struct CompoundOp {
+    pub op_idx: usize,
+    pub target: Option<String>,
+    pub line: u32,
+}
+
+/// All `+=`/`-=`/`*=`/`/=` sites in `[s, e)`.
+pub fn compound_ops(toks: &[Token], s: usize, e: usize) -> Vec<CompoundOp> {
+    let mut out = Vec::new();
+    let hi = e.min(toks.len().saturating_sub(1));
+    let mut k = s;
+    while k < hi {
+        let is_arith = matches!(toks[k].kind, TokKind::Punct(c) if "+-*/".contains(c));
+        if !is_arith || !punct_at(toks, k + 1, '=') {
+            k += 1;
+            continue;
+        }
+        let mut target = None;
+        if k > 0 {
+            if let Some(id) = ident_at(toks, k - 1) {
+                target = Some(id.to_string());
+            } else if matches!(toks[k - 1].kind, TokKind::Punct(c) if c == ']' || c == ')') {
+                // `name[…] +=` / `name(…).x +=`: walk back over the
+                // balanced bracket chain to the head ident
+                let mut depth = 0isize;
+                let mut j = k - 1;
+                loop {
+                    match toks[j].kind {
+                        TokKind::Punct(c) if c == ']' || c == ')' => depth += 1,
+                        TokKind::Punct(c) if c == '[' || c == '(' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    if j == 0 {
+                        break;
+                    }
+                    j -= 1;
+                }
+                if j > 0 {
+                    if let Some(id) = ident_at(toks, j - 1) {
+                        target = Some(id.to_string());
+                    }
+                }
+            }
+        }
+        out.push(CompoundOp { op_idx: k, target, line: toks[k].line });
+        k += 1;
+    }
+    out
+}
+
+/// The statement containing `op_idx`, clamped to `[s, e]`: expands in
+/// both directions until a `;`, `{` or `}` boundary.
+pub fn stmt_span(toks: &[Token], op_idx: usize, s: usize, e: usize) -> (usize, usize) {
+    let boundary =
+        |i: usize| matches!(toks[i].kind, TokKind::Punct(c) if c == ';' || c == '{' || c == '}');
+    let mut a = op_idx;
+    while a > s && !boundary(a - 1) {
+        a -= 1;
+    }
+    let mut b = op_idx;
+    let hi = e.min(toks.len().saturating_sub(1));
+    while b < hi && !boundary(b + 1) {
+        b += 1;
+    }
+    (a, b)
+}
+
+/// Lexically-resolvable calls in `[s, e]`: `name(…)` where `name` is
+/// not preceded by `.` (method) or `:` (path segment) — exactly the
+/// calls the crate model can resolve by bare fn name.
+pub fn direct_calls(toks: &[Token], s: usize, e: usize) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let hi = e.min(toks.len().saturating_sub(1));
+    for k in s..=hi {
+        let Some(name) = ident_at(toks, k) else { continue };
+        if is_keyword(name) || !punct_at(toks, k + 1, '(') {
+            continue;
+        }
+        if k > 0 && (punct_at(toks, k - 1, '.') || punct_at(toks, k - 1, ':')) {
+            continue;
+        }
+        out.push((name.to_string(), k));
+    }
+    out
+}
+
+/// One name a `use` declaration brings into file scope: the binding
+/// name (the alias after `as`, else the last path segment) and the line
+/// of the declaration.
+#[derive(Debug, Clone)]
+pub struct UseImport {
+    pub name: String,
+    pub line: u32,
+}
+
+/// All names imported by `use` declarations, including grouped imports
+/// (`use a::{b, c as d};`). Glob imports (`use a::*;`) contribute
+/// nothing — they bind no resolvable name.
+pub fn scan_use_paths(toks: &[Token]) -> Vec<UseImport> {
+    let mut out = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if ident_at(toks, i) != Some("use") {
+            i += 1;
+            continue;
+        }
+        let line = toks[i].line;
+        // find the end of the declaration
+        let mut end = i + 1;
+        let mut depth = 0isize;
+        while end < n {
+            match toks[end].kind {
+                TokKind::Punct('{') => depth += 1,
+                TokKind::Punct('}') => depth -= 1,
+                TokKind::Punct(';') if depth <= 0 => break,
+                _ => {}
+            }
+            end += 1;
+        }
+        // within [i+1, end): a name is bound wherever a segment is
+        // followed by `,`, `}` or the terminating `;` — unless the
+        // previous meaningful token path continues. `as` aliases win.
+        let mut k = i + 1;
+        while k < end {
+            if let Some(id) = ident_at(toks, k) {
+                if id == "as" {
+                    k += 1;
+                    continue;
+                }
+                let aliased = ident_at(toks, k + 1) == Some("as");
+                let terminal = !aliased
+                    && !punct_at(toks, k + 1, ':')
+                    && (k + 1 >= end
+                        || punct_at(toks, k + 1, ',')
+                        || punct_at(toks, k + 1, '}'));
+                let alias_binding = k > 0 && ident_at(toks, k - 1) == Some("as");
+                if alias_binding || terminal {
+                    out.push(UseImport { name: id.to_string(), line });
+                }
+            }
+            k += 1;
+        }
+        i = end + 1;
+    }
+    out
+}

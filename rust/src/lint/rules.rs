@@ -1,19 +1,20 @@
-//! The seven repo-invariant rules (R1–R7), run over the per-file models.
-//! Every rule is purely lexical/structural — see DESIGN.md §14 for each
-//! rule's rationale and the exact scope table.
+//! The nine repo-invariant rules (R1–R9), run over the per-file models
+//! plus the crate-wide symbol index. Every rule is purely
+//! lexical/structural — see DESIGN.md §14 for each rule's rationale and
+//! the exact scope table. R1 (twin resolution), R8 (float-merge-order)
+//! and R9 (shared-mut-in-propose) are cross-module/flow-aware and lean
+//! on [`super::crate_model::CrateModel`].
 
 use std::collections::BTreeSet;
 
+use super::crate_model::{CrateModel, FileCtx};
 use super::lexer::{ident_at, path2_at, punct_at, TokKind, Token};
 use super::model::FileModel;
+use super::parse::{
+    closure_start, compound_ops, direct_calls, is_keyword, is_mut_method, parallel_regions,
+    region_bindings, stmt_span, PAR_COMBINATORS,
+};
 use super::{classify, FileClass, Finding, LintReport, BAD_WAIVER};
-
-struct ParsedFile {
-    path: String,
-    class: FileClass,
-    toks: Vec<Token>,
-    model: FileModel,
-}
 
 /// Methods whose hash-ordered iteration order can leak into results.
 const ITER_METHODS: [&str; 11] = [
@@ -67,14 +68,15 @@ fn type_head(toks: &[Token], mut k: usize) -> Option<String> {
 /// Run all rules over `files` (path → source). Paths are relative to the
 /// crate root with `/` separators (`src/…`, `tests/…`, `benches/…`).
 pub fn run(files: &[(String, String)]) -> LintReport {
-    let parsed: Vec<ParsedFile> = files
+    let parsed: Vec<FileCtx> = files
         .iter()
         .map(|(path, src)| {
             let (toks, comments) = super::lexer::lex(src);
             let model = FileModel::build(&toks, &comments);
-            ParsedFile { path: path.clone(), class: classify(path), toks, model }
+            FileCtx { path: path.clone(), class: classify(path), toks, model }
         })
         .collect();
+    let cm = CrateModel::build(&parsed);
 
     let mut findings: Vec<Finding> = Vec::new();
     let mut push = |rule: &str, path: &str, line: u32, msg: String| {
@@ -87,55 +89,43 @@ pub fn run(files: &[(String, String)]) -> LintReport {
         });
     };
 
-    // ---- R1 parallel-serial-pairing --------------------------------
-    // Pass 1: every `*_parallel`/`*_threads` lib fn needs a local twin.
-    let mut twins_needed: Vec<(usize, u32, String, String)> = Vec::new();
-    for (fi, f) in parsed.iter().enumerate() {
+    // ---- R1 parallel-serial-pairing (cross-module) -----------------
+    // Pass 1: every `*_parallel`/`*_threads` lib fn needs a `*_serial`
+    // twin — anywhere in the crate, resolved through the fn index.
+    // Pass 2: the twin must be referenced from test/bench context
+    // somewhere in the tree (the equality test that keeps it honest).
+    for f in parsed.iter() {
         if f.class != FileClass::Lib {
             continue;
         }
-        let local: BTreeSet<&str> = f.model.fns.iter().map(|x| x.name.as_str()).collect();
         for func in &f.model.fns {
             if f.model.in_test(func.kw_idx) {
                 continue;
             }
             let Some(stem) = par_stem(&func.name) else { continue };
             let twin = format!("{stem}_serial");
-            if local.contains(twin.as_str()) {
-                twins_needed.push((fi, func.line, func.name.clone(), twin));
-            } else {
-                push(
+            match cm.fn_index.get(&twin).and_then(|v| v.first()) {
+                None => push(
                     "parallel-serial-pairing",
                     &f.path,
                     func.line,
-                    format!("`{}` has no `{twin}` twin in this module", func.name),
-                );
-            }
-        }
-    }
-    // Pass 2: the twin must be referenced from test/bench context
-    // somewhere in the tree (the equality test that keeps it honest).
-    let mut referenced: BTreeSet<String> = BTreeSet::new();
-    for f in &parsed {
-        let whole_file_is_test = matches!(f.class, FileClass::Test | FileClass::Bench);
-        for (i, t) in f.toks.iter().enumerate() {
-            if let TokKind::Ident(id) = &t.kind {
-                if whole_file_is_test || f.model.in_test(i) {
-                    referenced.insert(id.clone());
+                    format!("`{}` has no `{twin}` twin anywhere in the crate", func.name),
+                ),
+                Some(loc) => {
+                    if !cm.test_referenced.contains(&twin) {
+                        push(
+                            "parallel-serial-pairing",
+                            &f.path,
+                            func.line,
+                            format!(
+                                "serial twin `{twin}` of `{}` (in {}) is never referenced \
+                                 from a test or bench",
+                                func.name, parsed[loc.file].path
+                            ),
+                        );
+                    }
                 }
             }
-        }
-    }
-    for (fi, line, name, twin) in &twins_needed {
-        if !referenced.contains(twin) {
-            push(
-                "parallel-serial-pairing",
-                &parsed[*fi].path,
-                *line,
-                format!(
-                    "serial twin `{twin}` of `{name}` is never referenced from a test or bench"
-                ),
-            );
         }
     }
 
@@ -337,6 +327,179 @@ pub fn run(files: &[(String, String)]) -> LintReport {
                 }
             }
         }
+
+        // ---- R8 float-merge-order / R9 shared-mut-in-propose -------
+        // Flow-aware propose/commit discipline over parallel regions.
+        // One R8 finding per region (the fix is per-region: route the
+        // reduction through the integer-accumulator/ordered-merge
+        // discipline); R9 dedupes per (region, captured name).
+        if f.class == FileClass::Lib {
+            for region in parallel_regions(toks) {
+                if f.model.in_test(region.call_idx) {
+                    continue;
+                }
+                let (s, e) = region.args;
+                let comb = region.combinator.as_str();
+                let fn_float = f
+                    .model
+                    .enclosing_fn(region.call_idx)
+                    .map(|func| cm.fn_float_names(f, func))
+                    .unwrap_or_default();
+                // only the closure body runs concurrently — leading
+                // args (`&mut data`, chunk sizes) are pre-spawn
+                let body_s = closure_start(toks, s, e).unwrap_or(s);
+                let binds = region_bindings(toks, s, e);
+
+                // R8 direct: a compound op whose statement is
+                // float-evidenced inside the closure itself
+                let mut r8: Option<String> = None;
+                if let Some((tgt, line, ev)) = region_r8_direct(toks, body_s, e, &fn_float, &cm) {
+                    r8 = Some(format!(
+                        "float accumulation inside `{comb}` closure (`{}` at line {line}; {ev})",
+                        tgt.as_deref().unwrap_or("?")
+                    ));
+                }
+                // R8 one-hop: a bare call to a crate fn whose own body
+                // accumulates floats (scored with the callee's scope)
+                if r8.is_none() {
+                    'calls: for (callee, _) in direct_calls(toks, body_s, e) {
+                        if PAR_COMBINATORS.contains(&callee.as_str())
+                            || binds.contains(callee.as_str())
+                        {
+                            continue;
+                        }
+                        let Some(refs) = cm.fn_index.get(&callee) else { continue };
+                        for r in refs {
+                            let cf = &parsed[r.file];
+                            let Some(cfn) = cf.model.fns.get(r.fn_idx) else { continue };
+                            let Some((cs, ce)) = cfn.body else { continue };
+                            let cfloat = cm.fn_float_names(cf, cfn);
+                            if let Some((_, _, ev)) =
+                                region_r8_direct(&cf.toks, cs, ce, &cfloat, &cm)
+                            {
+                                r8 = Some(format!(
+                                    "`{comb}` closure calls `{callee}` ({}:{}) which \
+                                     accumulates floats ({ev})",
+                                    cf.path, cfn.line
+                                ));
+                                break 'calls;
+                            }
+                        }
+                    }
+                }
+                if let Some(msg) = r8 {
+                    push("float-merge-order", &f.path, region.line, msg);
+                }
+
+                // R9: walk each head ident's postfix chain in the
+                // closure body; flag writes and mutating calls on
+                // captured (non-closure-local) names, exempting
+                // index-disjoint slot writes (`slots[i] = …` where `i`
+                // is closure-bound)
+                let mut seen_r9: BTreeSet<String> = BTreeSet::new();
+                let mut k = body_s;
+                while k <= e {
+                    let head = match ident_at(toks, k) {
+                        Some(id) if !is_keyword(id) => id.to_string(),
+                        _ => {
+                            k += 1;
+                            continue;
+                        }
+                    };
+                    let prev_blocks = k > 0
+                        && (punct_at(toks, k - 1, '.')
+                            || punct_at(toks, k - 1, ':')
+                            || matches!(
+                                ident_at(toks, k - 1),
+                                Some("let") | Some("mut") | Some("fn")
+                            ));
+                    if prev_blocks {
+                        k += 1;
+                        continue;
+                    }
+                    let mut j = k + 1;
+                    let mut last_index: Option<(usize, usize)> = None;
+                    let mut first_mut: Option<String> = None;
+                    while j <= e {
+                        if punct_at(toks, j, '.') {
+                            let Some(m) = ident_at(toks, j + 1) else { break };
+                            if punct_at(toks, j + 2, '(') {
+                                if first_mut.is_none() && is_mut_method(m) {
+                                    first_mut = Some(m.to_string());
+                                }
+                                j = super::lexer::match_delim(toks, j + 2, '(', ')') + 1;
+                            } else {
+                                j += 2;
+                            }
+                        } else if punct_at(toks, j, '[') {
+                            let close = super::lexer::match_delim(toks, j, '[', ']');
+                            last_index = Some((j + 1, close.saturating_sub(1)));
+                            j = close + 1;
+                        } else if punct_at(toks, j, '?') {
+                            j += 1;
+                        } else if punct_at(toks, j, '(') && j == k + 1 {
+                            j = super::lexer::match_delim(toks, j, '(', ')') + 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    let is_assign = punct_at(toks, j, '=')
+                        && !punct_at(toks, j + 1, '=')
+                        && !punct_at(toks, j + 1, '>');
+                    let is_comp = matches!(
+                        toks.get(j).map(|t| &t.kind),
+                        Some(TokKind::Punct(c)) if "+-*/%^&|".contains(*c)
+                    ) && punct_at(toks, j + 1, '=');
+                    let captured = !binds.contains(head.as_str());
+                    if is_assign || is_comp {
+                        let idx_ok = last_index.is_some_and(|(a, b)| {
+                            (a..=b).any(|m| {
+                                ident_at(toks, m).is_some_and(|id| binds.contains(id))
+                            })
+                        });
+                        if captured && !idx_ok && seen_r9.insert(head.clone()) {
+                            push(
+                                "shared-mut-in-propose",
+                                &f.path,
+                                toks[k].line,
+                                format!("write to captured `{head}` inside `{comb}` closure"),
+                            );
+                        }
+                    } else if let Some(m) = first_mut {
+                        if captured && seen_r9.insert(head.clone()) {
+                            push(
+                                "shared-mut-in-propose",
+                                &f.path,
+                                toks[k].line,
+                                format!(
+                                    "mutating call `.{m}()` on captured `{head}` inside \
+                                     `{comb}` closure"
+                                ),
+                            );
+                        }
+                    }
+                    k += 1;
+                }
+                // `&mut name` handing captured state to a callee
+                for k in body_s..e.min(n.saturating_sub(1)) {
+                    if !punct_at(toks, k, '&') || ident_at(toks, k + 1) != Some("mut") {
+                        continue;
+                    }
+                    let Some(nm) = ident_at(toks, k + 2) else { continue };
+                    if !is_keyword(nm)
+                        && !binds.contains(nm)
+                        && seen_r9.insert(nm.to_string())
+                    {
+                        push(
+                            "shared-mut-in-propose",
+                            &f.path,
+                            toks[k].line,
+                            format!("captured `{nm}` passed as `&mut` inside `{comb}` closure"),
+                        );
+                    }
+                }
+            }
+        }
     }
 
     // ---- waiver application ----------------------------------------
@@ -383,6 +546,71 @@ pub fn run(files: &[(String, String)]) -> LintReport {
     });
 
     LintReport { findings, unused_waivers, files_scanned: files.len() }
+}
+
+/// Float evidence inside one statement span `[a, b]`, as a short
+/// human-readable reason: a float literal, an `f32`/`f64` mention, a
+/// name that is float-typed in the enclosing fn's scope, a crate-known
+/// float struct field, or a call-position crate fn returning floats.
+fn stmt_float_evidence(
+    toks: &[Token],
+    a: usize,
+    b: usize,
+    fn_float: &BTreeSet<String>,
+    cm: &CrateModel,
+) -> Option<String> {
+    let hi = b.min(toks.len().saturating_sub(1));
+    for m in a..=hi {
+        if super::lexer::float_lit_at(toks, m) {
+            return Some("float literal".to_string());
+        }
+        let Some(id) = ident_at(toks, m) else { continue };
+        if id == "f32" || id == "f64" {
+            return Some(id.to_string());
+        }
+        if fn_float.contains(id) {
+            return Some(format!("`{id}` is float-typed"));
+        }
+        if m > 0 && punct_at(toks, m - 1, '.') && cm.float_fields.contains(id) {
+            return Some(format!("float field `.{id}`"));
+        }
+        if punct_at(toks, m + 1, '(')
+            && !(m > 0 && punct_at(toks, m - 1, '.'))
+            && cm.float_fns.contains(id)
+        {
+            return Some(format!("float-returning `{id}()`"));
+        }
+    }
+    None
+}
+
+/// The first compound-assignment in `[s, e]` whose *statement* carries
+/// float evidence (or whose target name is float-typed):
+/// `(target, line, evidence)`. Statement scoping is what keeps integer
+/// accumulators (`epoch += 1`) clean inside regions that also mention
+/// floats elsewhere.
+fn region_r8_direct(
+    toks: &[Token],
+    s: usize,
+    e: usize,
+    fn_float: &BTreeSet<String>,
+    cm: &CrateModel,
+) -> Option<(Option<String>, u32, String)> {
+    for op in compound_ops(toks, s, e) {
+        let (a, b) = stmt_span(toks, op.op_idx, s, e);
+        let mut ev = stmt_float_evidence(toks, a, b, fn_float, cm);
+        if ev.is_none() {
+            if let Some(t) = &op.target {
+                if fn_float.contains(t) || cm.float_fields.contains(t) {
+                    ev = Some(format!("target `{t}`"));
+                }
+            }
+        }
+        if let Some(ev) = ev {
+            return Some((op.target, op.line, ev));
+        }
+    }
+    None
 }
 
 /// File-local names (let bindings, struct fields, fn params) whose type
@@ -882,11 +1110,14 @@ pub fn f(x: Option<u32>, y: Option<u32>) -> u32 {
     }
 
     #[test]
-    fn unused_waiver_is_advisory_not_failing() {
+    fn unused_waiver_fails_the_gate() {
         let src = "// snn-lint: allow(unwrap-ban) — nothing here needs it\npub fn f() {}\n";
         let r = lint_one("src/a.rs", src);
+        // no unwaived findings, but the stale waiver is a hard error
         assert!(r.is_clean());
+        assert!(!r.gate_ok());
         assert_eq!(r.unused_waivers.len(), 1);
+        assert!(r.render().contains("error: unused waiver at src/a.rs:1"), "{}", r.render());
     }
 
     #[test]
@@ -907,5 +1138,315 @@ pub fn f(x: Option<u32>, y: Option<u32>) -> u32 {
         assert!(text.contains("[unwrap-ban]"), "{text}");
         assert!(text.contains("src/a.rs:1"), "{text}");
         assert!(text.contains("1 unwaived finding(s)"), "{text}");
+    }
+
+    // ---- R1 cross-module twin resolution ---------------------------
+
+    #[test]
+    fn r1_resolves_twin_in_another_module() {
+        let files = vec![
+            ("src/a.rs".to_string(), "pub fn foo_parallel(x: u32) -> u32 { x }\n".to_string()),
+            ("src/b.rs".to_string(), "pub fn foo_serial(x: u32) -> u32 { x }\n".to_string()),
+            (
+                "tests/eq.rs".to_string(),
+                "#[test]\nfn eq() { assert_eq!(foo_parallel(3), foo_serial(3)); }\n".to_string(),
+            ),
+        ];
+        let r = lint_sources(&files);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn r1_cross_module_untested_twin_names_its_module() {
+        let files = vec![
+            ("src/a.rs".to_string(), "pub fn foo_parallel(x: u32) -> u32 { x }\n".to_string()),
+            ("src/b.rs".to_string(), "pub fn foo_serial(x: u32) -> u32 { x }\n".to_string()),
+        ];
+        let r = lint_sources(&files);
+        assert_eq!(unwaived_rules(&r), vec!["parallel-serial-pairing"]);
+        let msg = &r.findings[0].msg;
+        assert!(msg.contains("(in src/b.rs)"), "{msg}");
+    }
+
+    #[test]
+    fn r1_missing_twin_message_says_anywhere_in_the_crate() {
+        let r = lint_one("src/a.rs", "pub fn foo_parallel(x: u32) -> u32 { x }\n");
+        assert!(r.findings[0].msg.contains("anywhere in the crate"), "{}", r.findings[0].msg);
+    }
+
+    // ---- R8 float-merge-order --------------------------------------
+
+    const R8_FIRING: &str = r#"
+pub fn total(xs: &[f64], threads: usize) -> f64 {
+    crate::util::par::chunked_fold(xs.len(), 64, threads, |chunk| {
+        let mut sum = 0.0f64;
+        for i in chunk {
+            sum += xs[i];
+        }
+        sum
+    })
+}
+"#;
+
+    #[test]
+    fn r8_fires_on_float_accumulation_in_parallel_closure() {
+        let r = lint_one("src/metrics/a.rs", R8_FIRING);
+        assert_eq!(unwaived_rules(&r), vec!["float-merge-order"]);
+        assert!(r.findings[0].msg.contains("chunked_fold"), "{}", r.findings[0].msg);
+    }
+
+    #[test]
+    fn r8_clean_on_integer_accumulation() {
+        // the §16 discipline: accumulate in integers inside the region,
+        // convert to floats only after the ordered merge
+        let src = r#"
+pub fn count(xs: &[u32], threads: usize) -> u64 {
+    crate::util::par::chunked_fold(xs.len(), 64, threads, |chunk| {
+        let mut n = 0u64;
+        for i in chunk {
+            n += u64::from(xs[i]);
+        }
+        n
+    })
+}
+"#;
+        let r = lint_one("src/metrics/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn r8_integer_op_stays_clean_beside_float_code_in_same_file() {
+        // per-fn float scoping: `w` is floaty in `weigh`, but the
+        // parallel closure in `count` only touches integers
+        let src = r#"
+pub fn weigh(x: u32) -> f64 {
+    let w = 0.5f64;
+    w * x as f64
+}
+pub fn count(xs: &[u32], threads: usize) -> u64 {
+    crate::util::par::chunked_fold(xs.len(), 64, threads, |chunk| {
+        let mut n = 0u64;
+        for i in chunk {
+            n += u64::from(xs[i]);
+        }
+        n
+    })
+}
+"#;
+        let r = lint_one("src/metrics/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn r8_one_hop_resolves_callee_across_modules() {
+        let files = vec![
+            (
+                "src/a.rs".to_string(),
+                "pub fn scan(props: &mut [f64], threads: usize) {\n\
+                 \x20   crate::util::par::par_chunks_mut(props, 8, threads, |ci, slice| {\n\
+                 \x20       score(ci, slice);\n\
+                 \x20   });\n\
+                 }\n"
+                    .to_string(),
+            ),
+            (
+                "src/b.rs".to_string(),
+                "pub fn score(ci: usize, out: &mut [f64]) {\n\
+                 \x20   let mut acc = 0.0;\n\
+                 \x20   for v in out.iter() {\n\
+                 \x20       acc += v;\n\
+                 \x20   }\n\
+                 \x20   let _ = (ci, acc);\n\
+                 }\n"
+                    .to_string(),
+            ),
+        ];
+        let r = lint_sources(&files);
+        assert_eq!(unwaived_rules(&r), vec!["float-merge-order"]);
+        let msg = &r.findings[0].msg;
+        assert!(msg.contains("calls `score` (src/b.rs:1)"), "{msg}");
+    }
+
+    #[test]
+    fn r8_waived_with_discipline_reason() {
+        let src = r#"
+pub fn total(xs: &[f64], threads: usize) -> f64 {
+    // snn-lint: allow(float-merge-order) — fixed chunking, serial in-order merge
+    crate::util::par::chunked_fold(xs.len(), 64, threads, |chunk| {
+        let mut sum = 0.0f64;
+        for i in chunk {
+            sum += xs[i];
+        }
+        sum
+    })
+}
+"#;
+        let r = lint_one("src/metrics/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+        assert_eq!(r.waived().count(), 1);
+    }
+
+    #[test]
+    fn r8_and_r9_skip_test_regions_and_non_lib_files() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t(threads: usize) -> f64 {\n        \
+                   crate::util::par::par_map(4, threads, |i| {\n            \
+                   let mut s = 0.0f64;\n            s += i as f64;\n            s\n        })\n    \
+                   }\n}\n";
+        assert!(lint_one("src/a.rs", src).is_clean());
+    }
+
+    // ---- R9 shared-mut-in-propose ----------------------------------
+
+    #[test]
+    fn r9_fires_on_write_to_captured_state() {
+        let src = r#"
+pub fn bad(xs: &[u32], threads: usize) -> u32 {
+    let mut total = 0u32;
+    crate::util::par::par_map(xs.len(), threads, |i| {
+        total += xs[i];
+        i as u32
+    });
+    total
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert_eq!(unwaived_rules(&r), vec!["shared-mut-in-propose"]);
+        assert!(r.findings[0].msg.contains("captured `total`"), "{}", r.findings[0].msg);
+    }
+
+    #[test]
+    fn r9_exempts_index_disjoint_slot_writes() {
+        let src = r#"
+pub fn good(xs: &[u32], slots: &mut [u32], threads: usize) {
+    crate::util::par::par_map(xs.len(), threads, |i| {
+        slots[i] = xs[i];
+        i as u32
+    });
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn r9_fires_on_mutating_method_on_captured_state() {
+        let src = r#"
+pub fn bad(xs: &[u32], log: &std::sync::Mutex<Vec<u32>>, threads: usize) {
+    crate::util::par::par_map(xs.len(), threads, |i| {
+        log.lock();
+        xs[i]
+    });
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert_eq!(unwaived_rules(&r), vec!["shared-mut-in-propose"]);
+        assert!(r.findings[0].msg.contains(".lock()"), "{}", r.findings[0].msg);
+    }
+
+    #[test]
+    fn r9_fires_on_captured_mut_borrow() {
+        let src = r#"
+pub fn bad(xs: &[u32], scratch: &mut Vec<u32>, threads: usize) {
+    crate::util::par::par_map(xs.len(), threads, |i| {
+        refill(&mut scratch, i);
+        xs[i]
+    });
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert_eq!(unwaived_rules(&r), vec!["shared-mut-in-propose"]);
+        assert!(r.findings[0].msg.contains("`&mut`"), "{}", r.findings[0].msg);
+    }
+
+    #[test]
+    fn r9_ignores_pre_closure_combinator_arguments() {
+        // the `&mut data` handed TO par_chunks_mut is pre-spawn plumbing,
+        // not a write from inside the concurrent closure
+        let src = r#"
+pub fn good(data: &mut [u32], threads: usize) {
+    crate::util::par::par_chunks_mut(&mut data[..], 8, threads, |ci, chunk| {
+        let _ = (ci, chunk);
+    });
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn r9_waived_with_scheduler_contract_reason() {
+        let src = r#"
+pub fn sched(xs: &[u32], next: &std::sync::atomic::AtomicUsize, threads: usize) {
+    crate::util::par::par_map(xs.len(), threads, |i| {
+        // snn-lint: allow(shared-mut-in-propose) — work-stealing counter only hands out unique indices
+        next.fetch_add(1, Relaxed);
+        i as u32
+    });
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+        assert_eq!(r.waived().count(), 1);
+    }
+
+    // ---- lexer hardening: rules cannot be dodged through literals ---
+
+    #[test]
+    fn rules_not_dodged_by_raw_strings_with_hashes() {
+        let src = "pub fn f() -> &'static str {\n    r##\"std::fs::write(p, x.unwrap())\"##\n}\n";
+        let r = lint_one("src/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn rules_not_dodged_by_nested_block_comments() {
+        let src = "/* outer /* std::fs::write(p, b) */ still a comment */\npub fn f() {}\n";
+        assert!(lint_one("src/a.rs", src).is_clean());
+    }
+
+    #[test]
+    fn escaped_quote_char_literal_does_not_swallow_code() {
+        // before the lexer fix, '\'' scanned to the NEXT quote and
+        // silently ate the unwrap() that follows
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n    let _q = '\\'';\n    x.unwrap()\n}\n";
+        let r = lint_one("src/a.rs", src);
+        assert_eq!(unwaived_rules(&r), vec!["unwrap-ban"]);
+        assert_eq!(r.findings[0].line, 3);
+    }
+
+    #[test]
+    fn byte_char_literal_does_not_desync_lines() {
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n    let _m = b'a';\n    x.unwrap()\n}\n";
+        let r = lint_one("src/a.rs", src);
+        assert_eq!(unwaived_rules(&r), vec!["unwrap-ban"]);
+        assert_eq!(r.findings[0].line, 3);
+    }
+
+    #[test]
+    fn escaped_newline_in_string_keeps_finding_lines_accurate() {
+        // a `\`-continued string spans two physical lines; the finding
+        // after it must land on the right line for waivers to match
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n    let _s = \"a\\\nb\";\n    x.unwrap()\n}\n";
+        let r = lint_one("src/a.rs", src);
+        assert_eq!(unwaived_rules(&r), vec!["unwrap-ban"]);
+        assert_eq!(r.findings[0].line, 4);
+    }
+
+    #[test]
+    fn float_literal_in_string_is_inert_for_r8() {
+        let src = r#"
+pub fn tag(xs: &[u32], threads: usize) -> u32 {
+    crate::util::par::chunked_fold(xs.len(), 64, threads, |chunk| {
+        let mut n = 0u32;
+        let _label = "weight 0.5f64";
+        for i in chunk {
+            n += xs[i];
+        }
+        n
+    })
+}
+"#;
+        let r = lint_one("src/a.rs", src);
+        assert!(r.is_clean(), "{}", r.render());
     }
 }

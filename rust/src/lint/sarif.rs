@@ -1,0 +1,176 @@
+//! Machine-readable lint output: SARIF 2.1.0 (the interchange format
+//! GitHub code scanning and most IDE SARIF viewers consume) plus a
+//! compact plain-JSON shape for scripting. Both are built on
+//! [`crate::util::json::Json`], whose BTreeMap-backed objects give
+//! byte-deterministic output — the SARIF snapshot test depends on that.
+//!
+//! Contract (pinned by `tests/lint_sarif.rs`):
+//! * `version` is exactly `"2.1.0"` and `$schema` points at the
+//!   canonical 2.1.0 schema URI;
+//! * the driver's rule array lists the nine catalogue rules in
+//!   reporting order, followed by `bad-waiver` and `unused-waiver`;
+//! * unwaived findings are `level: error`; waived findings are
+//!   `level: note` carrying an `inSource` suppression whose
+//!   justification is the waiver's reason verbatim;
+//! * unused waivers are `unused-waiver` errors (the gate fails on them).
+
+use super::{LintReport, BAD_WAIVER, RULES};
+use crate::util::json::Json;
+
+/// The SARIF spec version emitted — pinned, never inferred.
+pub const SARIF_VERSION: &str = "2.1.0";
+/// Canonical schema URI for SARIF 2.1.0.
+pub const SARIF_SCHEMA: &str =
+    "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/Schemata/sarif-schema-2.1.0.json";
+/// Pseudo-rule id for waivers that suppress nothing (enforced).
+pub const UNUSED_WAIVER: &str = "unused-waiver";
+
+/// All reportable rule ids in catalogue order: R1–R9, then the two
+/// pseudo-rules. `ruleIndex` in results indexes into this order.
+pub fn rule_ids() -> Vec<&'static str> {
+    RULES.iter().map(|r| r.id).chain([BAD_WAIVER, UNUSED_WAIVER]).collect()
+}
+
+fn rule_summary(id: &str) -> &'static str {
+    if id == BAD_WAIVER {
+        return "malformed `snn-lint:` waiver comment";
+    }
+    if id == UNUSED_WAIVER {
+        return "waiver that suppresses no finding — stale, must be deleted";
+    }
+    RULES.iter().find(|r| r.id == id).map(|r| r.summary).unwrap_or("")
+}
+
+fn location(path: &str, line: u32) -> Json {
+    Json::Arr(vec![Json::obj(vec![(
+        "physicalLocation",
+        Json::obj(vec![
+            (
+                "artifactLocation",
+                Json::obj(vec![("uri", Json::Str(path.to_string()))]),
+            ),
+            ("region", Json::obj(vec![("startLine", Json::Num(f64::from(line)))])),
+        ]),
+    )])])
+}
+
+/// Render a report as a SARIF 2.1.0 log with one run.
+pub fn to_sarif(report: &LintReport) -> Json {
+    let ids = rule_ids();
+    let rule_index = |id: &str| ids.iter().position(|r| *r == id);
+
+    let rules: Vec<Json> = ids
+        .iter()
+        .map(|id| {
+            Json::obj(vec![
+                ("id", Json::Str((*id).to_string())),
+                (
+                    "shortDescription",
+                    Json::obj(vec![("text", Json::Str(rule_summary(id).to_string()))]),
+                ),
+            ])
+        })
+        .collect();
+
+    let mut results: Vec<Json> = Vec::new();
+    for f in &report.findings {
+        let level = if f.waived.is_some() { "note" } else { "error" };
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("ruleId", Json::Str(f.rule.clone())),
+            ("level", Json::Str(level.to_string())),
+            ("message", Json::obj(vec![("text", Json::Str(f.msg.clone()))])),
+            ("locations", location(&f.path, f.line)),
+        ];
+        if let Some(idx) = rule_index(&f.rule) {
+            pairs.push(("ruleIndex", Json::Num(idx as f64)));
+        }
+        if let Some(reason) = &f.waived {
+            pairs.push((
+                "suppressions",
+                Json::Arr(vec![Json::obj(vec![
+                    ("kind", Json::Str("inSource".to_string())),
+                    ("justification", Json::Str(reason.clone())),
+                ])]),
+            ));
+        }
+        results.push(Json::obj(pairs));
+    }
+    for (path, line) in &report.unused_waivers {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("ruleId", Json::Str(UNUSED_WAIVER.to_string())),
+            ("level", Json::Str("error".to_string())),
+            (
+                "message",
+                Json::obj(vec![(
+                    "text",
+                    Json::Str(format!(
+                        "unused waiver at {path}:{line} — delete it or re-aim it at a real \
+                         finding"
+                    )),
+                )]),
+            ),
+            ("locations", location(path, *line)),
+        ];
+        if let Some(idx) = rule_index(UNUSED_WAIVER) {
+            pairs.push(("ruleIndex", Json::Num(idx as f64)));
+        }
+        results.push(Json::obj(pairs));
+    }
+
+    let driver = Json::obj(vec![
+        ("name", Json::Str("snn-lint".to_string())),
+        ("version", Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+        ("rules", Json::Arr(rules)),
+    ]);
+    let run = Json::obj(vec![
+        ("tool", Json::obj(vec![("driver", driver)])),
+        ("results", Json::Arr(results)),
+    ]);
+    Json::obj(vec![
+        ("$schema", Json::Str(SARIF_SCHEMA.to_string())),
+        ("version", Json::Str(SARIF_VERSION.to_string())),
+        ("runs", Json::Arr(vec![run])),
+    ])
+}
+
+/// Render a report as compact machine-readable JSON (not SARIF): the
+/// full finding list, unused waivers, counts and the gate verdict.
+pub fn to_json(report: &LintReport) -> Json {
+    let findings: Vec<Json> = report
+        .findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("rule", Json::Str(f.rule.clone())),
+                ("path", Json::Str(f.path.clone())),
+                ("line", Json::Num(f64::from(f.line))),
+                ("message", Json::Str(f.msg.clone())),
+                (
+                    "waived",
+                    match &f.waived {
+                        Some(r) => Json::Str(r.clone()),
+                        None => Json::Null,
+                    },
+                ),
+            ])
+        })
+        .collect();
+    let unused: Vec<Json> = report
+        .unused_waivers
+        .iter()
+        .map(|(path, line)| {
+            Json::obj(vec![
+                ("path", Json::Str(path.clone())),
+                ("line", Json::Num(f64::from(*line))),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("filesScanned", Json::Num(report.files_scanned as f64)),
+        ("unwaived", Json::Num(report.unwaived().count() as f64)),
+        ("waived", Json::Num(report.waived().count() as f64)),
+        ("findings", Json::Arr(findings)),
+        ("unusedWaivers", Json::Arr(unused)),
+        ("gateOk", Json::Bool(report.gate_ok())),
+    ])
+}

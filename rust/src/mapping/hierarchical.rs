@@ -667,6 +667,10 @@ fn coarsen_round_parallel(
     props.clear();
     props.resize(n, NodeProposal::default());
     let chunk = crate::util::par::fixed_chunk(n, threads);
+    // snn-lint: allow(float-merge-order) — propose phase: score_comembers accumulates
+    // f64 affinities in this closure's own scoreboard from pass-start state only, each
+    // node's proposal lands in its disjoint `props` slot, and the commit loop below is
+    // serial in seeded visit order (§12) — no cross-thread float merge exists
     crate::util::par::par_chunks_mut(props, chunk, threads, |ci, slice| {
         let base = ci * chunk;
         let mut score = vec![0.0f64; n];

@@ -103,6 +103,9 @@ pub fn evaluate_with_threads(
     let coords = &placement.coords;
 
     // ---- chunked h-edge sweep (energy / latency / wirelength / flows) ----
+    // snn-lint: allow(float-merge-order) — §6 discipline: chunk boundaries are fixed by
+    // EDGE_CHUNK (never by thread count) and chunk partials merge serially in chunk-id
+    // order, so the f64 reduction tree is identical for every thread count
     let acc = par::chunked_fold(
         gp.num_edges(),
         EDGE_CHUNK,
@@ -156,6 +159,9 @@ pub fn evaluate_with_threads(
 
     // ---- congestion: parallel per-core traffic accumulation ----
     let bin = Binomial::for_lattice(hw.width, hw.height);
+    // snn-lint: allow(float-merge-order) — §6 discipline: fixed FLOW_CHUNK chunking and
+    // in-order serial merge of the per-chunk traffic vectors keep the per-core f64 sums
+    // bit-identical across thread counts
     let core_traffic = par::chunked_fold(
         flows.len(),
         FLOW_CHUNK,

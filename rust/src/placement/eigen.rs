@@ -49,6 +49,9 @@ impl SparseSym {
             }
             return;
         }
+        // snn-lint: allow(float-merge-order) — each row's dot product accumulates in a
+        // closure-local `acc` in fixed CSR index order and writes exactly one disjoint
+        // `y` slot; there is no cross-row float merge to reorder (§10)
         crate::util::par::par_chunks_mut(y, MATVEC_ROW_CHUNK, threads, |ci, ys| {
             let base = ci * MATVEC_ROW_CHUNK;
             for (k, yr) in ys.iter_mut().enumerate() {

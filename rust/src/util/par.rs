@@ -85,6 +85,9 @@ where
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                // snn-lint: allow(shared-mut-in-propose) — scheduler contract: the shared
+                // atomic only hands out work indices; each claimed `i` is unique, results
+                // land in index-disjoint slots, so commit order never depends on workers
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
@@ -165,6 +168,9 @@ where
             scope.spawn(|| loop {
                 // snn-lint: allow(unwrap-ban) — mutex poisoning only follows a panic in a
                 // worker; propagating it as a panic is the intended failure mode
+                // snn-lint: allow(shared-mut-in-propose) — scheduler contract: the jobs
+                // iterator under the mutex only hands out disjoint (chunk id, &mut slice)
+                // pairs; all result state is written through those disjoint slices
                 let next = jobs.lock().unwrap().next();
                 match next {
                     Some((i, s)) => f(i, s),

@@ -1,0 +1,145 @@
+//! SARIF contract tests: the `--format sarif` output is consumed by
+//! external tooling (GitHub code scanning, SARIF viewers), so its shape
+//! is pinned here — schema version, rule metadata order, result levels,
+//! suppression carriage — by round-tripping the emitted text through
+//! the crate's own JSON parser. A change that breaks any of these
+//! assertions breaks downstream consumers, not just this repo.
+
+use snnmap::lint::{lint_sources, sarif};
+use snnmap::util::json::Json;
+
+fn fixture_report() -> snnmap::lint::LintReport {
+    // one unwaived finding (unwrap-ban), one waived finding, and one
+    // unused waiver — covers all three result shapes at once
+    let files = vec![
+        (
+            "src/a.rs".to_string(),
+            "pub fn f(x: Option<u32>) -> u32 { x.unwrap() }\n\
+             pub fn g(y: Option<u32>) -> u32 {\n\
+             \x20   // snn-lint: allow(unwrap-ban) — caller guarantees Some by construction\n\
+             \x20   y.unwrap()\n\
+             }\n"
+                .to_string(),
+        ),
+        (
+            "src/b.rs".to_string(),
+            "// snn-lint: allow(timing-gate) — stale, suppresses nothing\npub fn h() {}\n"
+                .to_string(),
+        ),
+    ];
+    lint_sources(&files)
+}
+
+#[test]
+fn sarif_snapshot_pins_schema_version_and_rule_metadata() {
+    let report = fixture_report();
+    let text = sarif::to_sarif(&report).to_pretty();
+
+    // raw-text pins: version string and schema URI must appear verbatim
+    assert!(text.contains("\"2.1.0\""), "{text}");
+    assert!(text.contains("sarif-schema-2.1.0.json"), "{text}");
+
+    let doc = Json::parse(&text).expect("emitted SARIF must re-parse");
+    assert_eq!(doc.get("version").as_str(), Some("2.1.0"));
+    assert_eq!(doc.get("$schema").as_str(), Some(sarif::SARIF_SCHEMA));
+
+    let runs = doc.get("runs").as_arr().expect("runs array");
+    assert_eq!(runs.len(), 1);
+    let driver = runs[0].get("tool").get("driver");
+    assert_eq!(driver.get("name").as_str(), Some("snn-lint"));
+
+    // rule metadata: the nine catalogue rules in reporting order,
+    // followed by the two pseudo-rules
+    let rules = driver.get("rules").as_arr().expect("rules array");
+    let ids: Vec<&str> = rules.iter().filter_map(|r| r.get("id").as_str()).collect();
+    assert_eq!(
+        ids,
+        vec![
+            "parallel-serial-pairing",
+            "unordered-iteration",
+            "no-raw-writes",
+            "unwrap-ban",
+            "env-discipline",
+            "timing-gate",
+            "threads-wiring",
+            "float-merge-order",
+            "shared-mut-in-propose",
+            "bad-waiver",
+            "unused-waiver",
+        ]
+    );
+    for r in rules {
+        let summary = r.get("shortDescription").get("text").as_str().unwrap_or("");
+        assert!(!summary.is_empty(), "rule {:?} has no shortDescription", r.get("id"));
+    }
+}
+
+#[test]
+fn sarif_results_carry_levels_locations_and_suppressions() {
+    let report = fixture_report();
+    let doc = Json::parse(&sarif::to_sarif(&report).to_pretty()).expect("parse");
+    let runs = doc.get("runs").as_arr().expect("runs");
+    let results = runs[0].get("results").as_arr().expect("results");
+    // unwaived + waived finding + unused waiver
+    assert_eq!(results.len(), 3);
+
+    let unwaived = &results[0];
+    assert_eq!(unwaived.get("ruleId").as_str(), Some("unwrap-ban"));
+    assert_eq!(unwaived.get("level").as_str(), Some("error"));
+    assert_eq!(unwaived.get("ruleIndex").as_usize(), Some(3));
+    let loc = &unwaived.get("locations").as_arr().expect("locations")[0];
+    let phys = loc.get("physicalLocation");
+    assert_eq!(phys.get("artifactLocation").get("uri").as_str(), Some("src/a.rs"));
+    assert_eq!(phys.get("region").get("startLine").as_usize(), Some(1));
+
+    let waived = &results[1];
+    assert_eq!(waived.get("level").as_str(), Some("note"));
+    let sup = &waived.get("suppressions").as_arr().expect("suppressions")[0];
+    assert_eq!(sup.get("kind").as_str(), Some("inSource"));
+    assert_eq!(
+        sup.get("justification").as_str(),
+        Some("caller guarantees Some by construction")
+    );
+
+    let stale = &results[2];
+    assert_eq!(stale.get("ruleId").as_str(), Some("unused-waiver"));
+    assert_eq!(stale.get("level").as_str(), Some("error"));
+    assert_eq!(stale.get("ruleIndex").as_usize(), Some(10));
+    let sloc = &stale.get("locations").as_arr().expect("locations")[0];
+    assert_eq!(
+        sloc.get("physicalLocation").get("artifactLocation").get("uri").as_str(),
+        Some("src/b.rs")
+    );
+}
+
+#[test]
+fn plain_json_format_reports_counts_and_gate() {
+    let report = fixture_report();
+    let doc = Json::parse(&sarif::to_json(&report).to_pretty()).expect("parse");
+    assert_eq!(doc.get("filesScanned").as_usize(), Some(2));
+    assert_eq!(doc.get("unwaived").as_usize(), Some(1));
+    assert_eq!(doc.get("waived").as_usize(), Some(1));
+    assert_eq!(doc.get("gateOk").as_bool(), Some(false));
+    let findings = doc.get("findings").as_arr().expect("findings");
+    assert_eq!(findings.len(), 2);
+    assert_eq!(findings[0].get("waived"), &Json::Null);
+    assert!(findings[1].get("waived").as_str().is_some());
+    let unused = doc.get("unusedWaivers").as_arr().expect("unusedWaivers");
+    assert_eq!(unused.len(), 1);
+    assert_eq!(unused[0].get("path").as_str(), Some("src/b.rs"));
+}
+
+#[test]
+fn sarif_of_clean_tree_run_is_well_formed() {
+    // the committed tree itself: all results must be notes (waived) —
+    // no errors — and the log must re-parse
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = snnmap::lint::lint_tree(root).expect("lint walk");
+    let doc = Json::parse(&sarif::to_sarif(&report).to_pretty()).expect("parse");
+    let runs = doc.get("runs").as_arr().expect("runs");
+    let results = runs[0].get("results").as_arr().expect("results");
+    assert!(!results.is_empty(), "baseline waivers should appear as suppressed results");
+    for r in results {
+        assert_eq!(r.get("level").as_str(), Some("note"), "unexpected error: {}", r.to_pretty());
+    }
+}

@@ -36,4 +36,19 @@ fn committed_tree_has_zero_unwaived_findings() {
         "stale waivers (suppress nothing): {:?}",
         report.unused_waivers
     );
+
+    // The flow-aware rules (R8/R9) must actually bite on the real tree:
+    // the parallel scheduler and the chunked float reductions are the
+    // very patterns they exist to police, so each rule must have at
+    // least one reasoned waiver in the baseline. Zero would mean the
+    // rule silently stopped matching.
+    for rule in ["float-merge-order", "shared-mut-in-propose"] {
+        assert!(
+            report.waived().any(|f| f.rule == rule),
+            "expected at least one waived `{rule}` finding in the committed tree"
+        );
+    }
+
+    // The gate the binary enforces is exactly this conjunction.
+    assert!(report.gate_ok(), "lint gate failed:\n{}", report.render());
 }
